@@ -1,0 +1,10 @@
+//! Bench harness for paper Fig 3 — runs the same regenerator as
+//! `repro experiment fig3` at reduced scale and reports wall-clock.
+use taynode::experiments::{run, Scale};
+use taynode::util::bench;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    run("fig3", Scale::quick()).expect("artifacts built? run `make artifacts`");
+    println!("\nfig3_mnist_training: total {}", bench::fmt_secs(t0.elapsed().as_secs_f64()));
+}

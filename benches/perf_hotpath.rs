@@ -1,0 +1,87 @@
+//! §Perf micro-benchmarks over the three layers' hot paths:
+//!
+//!   L3a  dynamics-executable invocation latency (one NFE), jnp vs pallas
+//!   L3b  adaptive-solver driver overhead (native dynamics, no XLA)
+//!   L3c  fixed-grid train-step latency per variant (jet cost vs K)
+//!   L3d  data-generator throughput
+//!
+//! Before/after numbers for the optimization pass are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use taynode::coordinator::{BatchInputs, Trainer};
+use taynode::data::synth_mnist;
+use taynode::experiments::common::{load_runtime, MnistHarness};
+use taynode::runtime::XlaDynamics;
+use taynode::solvers::adaptive::{solve_adaptive, AdaptiveOpts};
+use taynode::solvers::{tableau, Dynamics};
+use taynode::util::bench::{report, time_fn};
+use taynode::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let rt = load_runtime()?;
+    let h = MnistHarness::new(&rt, 256, 0)?;
+    let tr = Trainer::new(&rt, "mnist_train_unreg_s2", 0)?;
+    let (x, _) = h.eval_batch(&h.train, 0);
+
+    // L3a: one NFE = one PJRT execution of the dynamics over the batch
+    for exec in ["mnist_dynamics", "mnist_dynamics_pallas"] {
+        let mut dyn_f = XlaDynamics::from_store(&rt, exec, &tr.store, None)?;
+        let n = dyn_f.state_len();
+        let mut dy = vec![0.0f32; n];
+        let s = time_fn(5, 50, || dyn_f.eval(0.3, &x[..n], &mut dy));
+        report(&format!("L3a {exec} (one NFE, B=64)"), &s);
+    }
+
+    // L3b: pure solver-driver overhead on native dynamics (no XLA), so the
+    // axpy/controller cost is visible in isolation.
+    let tb = tableau::dopri5();
+    let dims = [64usize, 1024, 12544];
+    for d in dims {
+        let y0 = vec![0.1f32; d];
+        let s = time_fn(3, 30, || {
+            let res = solve_adaptive(
+                |t: f32, y: &[f32], dy: &mut [f32]| {
+                    for i in 0..y.len() {
+                        dy[i] = (t + y[i]).sin();
+                    }
+                },
+                0.0,
+                1.0,
+                &y0,
+                &tb,
+                &AdaptiveOpts::default(),
+            );
+            std::hint::black_box(res.stats.nfe);
+        });
+        report(&format!("L3b adaptive driver, native dyn, d={d}"), &s);
+    }
+
+    // L3c: full train-step latency — the price of the jet rises with K
+    // (paper §6.3 "ours is slower per step"; the payoff is test-time NFE).
+    for artifact in [
+        "mnist_train_unreg_s8",
+        "mnist_train_rnode_s8",
+        "mnist_train_k1_s8",
+        "mnist_train_k2_s8",
+        "mnist_train_k3_s8",
+    ] {
+        let mut t = Trainer::new(&rt, artifact, 0)?;
+        let raw = synth_mnist::generate(h.b, 3);
+        let inputs = BatchInputs::default()
+            .f("x", raw.images)
+            .i("labels", raw.labels);
+        let s = time_fn(2, 10, || {
+            t.step(&inputs, 0.01, 0.05).expect("step");
+        });
+        report(&format!("L3c train step {artifact}"), &s);
+    }
+
+    // L3d: data generation throughput
+    let mut rng = Pcg::new(0);
+    let s = time_fn(2, 20, || {
+        std::hint::black_box(synth_mnist::render(3, &mut rng));
+    });
+    report("L3d synth_mnist::render (one 14x14 digit)", &s);
+
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Bench harness for paper Table 2 — runs the same regenerator as
+//! `repro experiment table2` at reduced scale and reports wall-clock.
+use taynode::experiments::{run, Scale};
+use taynode::util::bench;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    run("table2", Scale::quick()).expect("artifacts built? run `make artifacts`");
+    println!("\ntable2_ffjord: total {}", bench::fmt_secs(t0.elapsed().as_secs_f64()));
+}

@@ -1,0 +1,48 @@
+//! FFJORD density estimation on synthetic tabular data (paper §5.3 /
+//! Table 4): unregularized vs RNODE (Finlay et al.) vs TayNODE R_2,
+//! evaluated with adaptive solvers (NFE + nats + integrated R_2/B/K).
+//!
+//! Run: `make artifacts && cargo run --release --example density_estimation`
+
+use taynode::coordinator::evaluator::cnf_eval;
+use taynode::experiments::common::{eval_opts, load_runtime, train_cnf, CnfHarness};
+use taynode::solvers::tableau;
+use taynode::util::bench::Table;
+use taynode::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let rt = load_runtime()?;
+    let h = CnfHarness::new(&rt, "cnf_tab", 768, 37)?;
+    println!("FFJORD on synthetic tabular data: d={}, batch {}\n", h.d, h.b);
+    let tb = tableau::dopri5();
+    let opts = eval_opts();
+    let iters = 150;
+
+    let mut table = Table::new(&["variant", "lambda", "secs", "test_nll",
+                                 "NFE", "R_2", "B", "K"]);
+    for (artifact, lam) in [
+        ("cnf_tab_train_unreg_s8", 0.0f32),
+        ("cnf_tab_train_rnode_s8", 0.05),
+        ("cnf_tab_train_k2_s8", 0.05),
+    ] {
+        let (tr, secs, _) = train_cnf(&rt, &h, artifact, iters, lam, 2)?;
+        let mut rng = Pcg::new(61);
+        let probe = rng.rademacher(h.b * h.d);
+        let ev = cnf_eval(&rt, "cnf_tab", &tr.store, &h.test, &probe, &tb, &opts)?;
+        println!("[{artifact}] nll {:.3}  NFE {}  R2 {:.2}  B {:.3}  K {:.3}",
+                 ev.nll, ev.nfe, ev.r2, ev.jacobian, ev.kinetic);
+        table.row(vec![
+            artifact.into(),
+            format!("{lam}"),
+            format!("{secs:.1}"),
+            format!("{:.3}", ev.nll),
+            format!("{}", ev.nfe),
+            format!("{:.2}", ev.r2),
+            format!("{:.3}", ev.jacobian),
+            format!("{:.3}", ev.kinetic),
+        ]);
+    }
+    println!();
+    table.print();
+    Ok(())
+}

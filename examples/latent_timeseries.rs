@@ -1,0 +1,48 @@
+//! Latent-ODE time-series modelling on synthetic ICU-style data
+//! (paper §5.2 / Fig 4): train the VAE with and without R_2 speed
+//! regularization, then measure trajectory NFE with the adaptive solver.
+//!
+//! Run: `make artifacts && cargo run --release --example latent_timeseries`
+
+use taynode::coordinator::evaluator::latent_eval;
+use taynode::experiments::common::{eval_opts, load_runtime, train_latent, LatentHarness};
+use taynode::solvers::tableau;
+use taynode::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let rt = load_runtime()?;
+    let h = LatentHarness::new(&rt, 23)?;
+    println!(
+        "latent ODE on synthetic clinical series: batch {}, {} grid points, \
+         {} features (mask rate {:.2})\n",
+        h.b,
+        h.t,
+        h.f,
+        h.mask.iter().sum::<f32>() / h.mask.len() as f32
+    );
+    let tb = tableau::dopri5();
+    let opts = eval_opts();
+    let iters = 200;
+
+    let mut table = Table::new(&["variant", "lambda", "train_loss",
+                                 "test_nll", "test_mse", "NFE"]);
+    for (artifact, lam) in [("latent_train_unreg", 0.0f32),
+                            ("latent_train_k2", 0.1)] {
+        let (tr, loss) = train_latent(&rt, &h, artifact, iters, lam, 0)?;
+        let ev = latent_eval(&rt, &tr.store, &h.x_test, &h.mask_test, h.t, &tb,
+                             &opts)?;
+        println!("[{artifact}] loss {loss:.4}  test nll {:.4}  mse {:.4}  NFE {}",
+                 ev.nll, ev.mse, ev.nfe);
+        table.row(vec![
+            artifact.into(),
+            format!("{lam}"),
+            format!("{loss:.4}"),
+            format!("{:.4}", ev.nll),
+            format!("{:.4}", ev.mse),
+            format!("{}", ev.nfe),
+        ]);
+    }
+    println!();
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! End-to-end driver (the repository's full-system validation run).
+//!
+//! Trains the ~42k-parameter MNIST ODE classifier for several hundred
+//! optimizer steps on the procedural digit corpus — unregularized and with
+//! TayNODE R_3 — logging the loss curve, and evaluating NFE / accuracy with
+//! the adaptive Rust solver throughout training (paper §5.1, Fig 3).
+//! Results land in results/e2e_mnist_*.csv and are summarized on stdout.
+//!
+//! Run: `make artifacts && cargo run --release --example mnist_classification`
+
+use taynode::experiments::common::{
+    eval_opts, load_runtime, results_dir, train_mnist, MnistHarness,
+};
+use taynode::solvers::tableau;
+use taynode::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let rt = load_runtime()?;
+    let harness = MnistHarness::new(&rt, 640, 0)?;
+    let tb = tableau::dopri5();
+    let iters = std::env::var("E2E_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300usize);
+    println!(
+        "training MNIST ODE classifier: {} train / {} test examples, \
+         batch {}, {iters} steps\n",
+        harness.train.n, harness.test.n, harness.b
+    );
+
+    let mut table = Table::new(&["variant", "final_loss", "train_err",
+                                 "test_err", "NFE", "secs"]);
+    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32),
+                            ("mnist_train_k3_s8", 0.03)] {
+        let t0 = std::time::Instant::now();
+        let (_tr, log) = train_mnist(&rt, &harness, artifact, iters, lam, 0,
+                                     (iters / 10).max(1), &tb)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let csv = results_dir().join(format!("e2e_mnist_{artifact}.csv"));
+        log.to_csv(&csv)?;
+        println!("[{artifact}] loss curve -> {csv:?}");
+        for row in &log.rows {
+            println!(
+                "  step {:>4}  loss {:.4}  ce {:.4}  NFE {:>4}  \
+                 train_err {:.3}  test_err {:.3}",
+                row[0] as usize, row[1], row[2], row[4] as usize, row[5], row[6]
+            );
+        }
+        table.row(vec![
+            artifact.into(),
+            format!("{:.4}", log.last("loss")),
+            format!("{:.3}", log.last("train_err")),
+            format!("{:.3}", log.last("test_err")),
+            format!("{}", log.last("nfe") as usize),
+            format!("{secs:.1}"),
+        ]);
+        println!();
+    }
+    table.print();
+    let _ = eval_opts();
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT compilation: lower the artifact catalog to HLO text + manifest.
+
+Run once at build time (``make artifacts``).  Python never runs again after
+this; the Rust coordinator loads the HLO text through the PJRT C API.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import catalog, MODEL_SPECS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_artifact(art, out_dir: str) -> dict:
+    specs = [s for _, _, s in art.inputs]
+    t0 = time.time()
+    # keep_unused: the manifest promises every declared input is a real HLO
+    # parameter (otherwise XLA prunes e.g. the eps probe of unregularized
+    # variants and the Rust-side input count mismatches).
+    lowered = jax.jit(art.fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{art.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(art.fn, *specs)
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    entry = {
+        "file": fname,
+        "model": art.model,
+        "kind": art.kind,
+        "meta": art.meta,
+        "inputs": [
+            {"role": role, "name": name, "shape": list(s.shape),
+             "dtype": str(s.dtype)}
+            for role, name, s in art.inputs
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in out_shapes
+        ],
+    }
+    dt = time.time() - t0
+    print(f"  [{dt:6.2f}s] {art.name}  ({len(text)//1024} KiB)")
+    return entry
+
+
+def export_params(out_dir: str) -> dict:
+    models = {}
+    for mname, (pspec, init_fn, hyper) in MODEL_SPECS.items():
+        params = init_fn(0)
+        flat = pspec.flatten(params)
+        fname = f"{mname}_params.bin"
+        flat.astype("<f4").tofile(os.path.join(out_dir, fname))
+        models[mname] = {
+            "hyper": hyper,
+            "params": {"file": fname, "layout": pspec.layout(),
+                       "total": int(flat.size)},
+        }
+        print(f"  params {mname}: {flat.size} floats -> {fname}")
+    return models
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (dev aid)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("exporting parameters ...")
+    models = export_params(args.out)
+
+    print("lowering artifacts ...")
+    executables = {}
+    for art in catalog():
+        if args.only and args.only not in art.name:
+            continue
+        executables[art.name] = export_artifact(art, args.out)
+
+    manifest = {"version": 1, "models": models, "executables": executables}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(executables)} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .fused_mlp import fused_mlp
+from .cauchy_prod import cauchy_prod
+from . import ref
+
+__all__ = ["fused_mlp", "cauchy_prod", "ref"]

@@ -1,0 +1,53 @@
+"""Pallas kernel: truncated Cauchy product (jet's inner loop).
+
+Taylor-mode multiplication of two K-truncated series costs O(K^2)
+multiply-adds per element (paper §4).  The coefficient stacks are laid out
+[K+1, N] with the feature axis N on the VPU lane dimension and the (tiny,
+K <= 7) coefficient axis unrolled at trace time — the triangular convolution
+becomes K(K+1)/2 vectorized FMAs over a [K+1, block_n] VMEM block.
+
+A GPU port would assign one thread per output element; on TPU the lane axis
+gives us the element parallelism for free and the unrolled k-loop keeps
+everything in registers/VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(K1: int):
+    def kernel(z_ref, w_ref, o_ref):
+        z = z_ref[...]
+        w = w_ref[...]
+        for k in range(K1):
+            acc = z[0] * w[k]
+            for j in range(1, k + 1):
+                acc = acc + z[j] * w[k - j]
+            o_ref[k, :] = acc
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def cauchy_prod(z, w, block_n: int = 128):
+    """out[k] = sum_{j<=k} z[j] * w[k-j]; z, w: [K+1, N]."""
+    K1, N = z.shape
+    if N % block_n != 0:
+        block_n = N
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _make_kernel(K1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((K1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((K1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((K1, N), z.dtype),
+        interpret=True,
+    )(z, w)

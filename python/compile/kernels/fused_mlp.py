@@ -1,0 +1,72 @@
+"""Pallas kernel: fused dynamics-MLP forward (the solve-time hot spot).
+
+One adaptive-solver NFE = one evaluation of this MLP over the whole batch.
+On the authors' GPUs this was two cuBLAS GEMMs with elementwise kernels in
+between (four HBM round-trips for the activations).  The TPU-style mapping
+(DESIGN.md §Hardware-Adaptation):
+
+  * grid over batch tiles of ``block_b`` rows; the x-tile lives in VMEM,
+  * both (small) weight matrices are broadcast VMEM-resident across the grid
+    (index_map pins them to block (0, 0)),
+  * concat-time -> GEMM -> tanh -> GEMM -> bias are fused in one kernel, so
+    the [B, H] activation never visits HBM,
+  * the GEMMs target the MXU (f32 here; bf16 on real hardware).
+
+VMEM per grid step = block_b*(D + H + D) + (D+1)*H + (H+1)*D + H + D floats;
+for D=196, H=100, block_b=32 that is ~56 KiB — far under the ~16 MiB VMEM
+budget, so block_b can grow until the MXU is saturated (see EXPERIMENTS.md
+§Perf for the sweep).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the interpret lowering emits plain HLO, which is what the Rust
+runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, t_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    z1 = jnp.tanh(x)
+    # [z1 ; t] @ W1 == z1 @ W1[:-1] + t * W1[-1]
+    h1 = z1 @ w1[:-1] + t * w1[-1] + b1_ref[...]
+    z2 = jnp.tanh(h1)
+    o_ref[...] = z2 @ w2[:-1] + t * w2[-1] + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fused_mlp(x, t, w1, b1, w2, b2, block_b: int = 32):
+    """Fused dynamics MLP; semantics of :func:`ref.fused_mlp_ref`.
+
+    x: [B, D] with B divisible by ``block_b`` (callers pad if needed).
+    """
+    B, D = x.shape
+    H = b1.shape[0]
+    if B % block_b != 0:
+        block_b = B  # degenerate fallback: single tile
+    t_arr = jnp.broadcast_to(jnp.asarray(t, dtype=x.dtype), (1,))
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((D + 1, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H + 1, D), lambda i: (0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        interpret=True,
+    )(x, t_arr, w1, b1, w2, b2)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis sweeps in ``python/tests/test_kernels.py``) and also serve as the
+default implementation inside differentiated train steps (XLA fuses them
+well; the Pallas path is used on the inference/NFE hot path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x, t, w1, b1, w2, b2):
+    """The paper's dynamics MLP (Appendix B.2), batched.
+
+        z1 = tanh(x)
+        h1 = W1 [z1 ; t] + b1
+        z2 = tanh(h1)
+        y  = W2 [z2 ; t] + b2
+
+    x: [B, D], t: scalar, w1: [D+1, H], b1: [H], w2: [H+1, D], b2: [D].
+    Returns [B, D].
+    """
+    z1 = jnp.tanh(x)
+    h1 = z1 @ w1[:-1] + t * w1[-1] + b1
+    z2 = jnp.tanh(h1)
+    return z2 @ w2[:-1] + t * w2[-1] + b2
+
+
+def cauchy_prod_ref(z, w):
+    """Truncated Cauchy product over stacked Taylor coefficients.
+
+    z, w: [K+1, N] stacks of normalized coefficients.
+    out[k] = sum_{j=0..k} z[j] * w[k-j]   (shape [K+1, N])
+    """
+    K1 = z.shape[0]
+    rows = []
+    for k in range(K1):
+        acc = z[0] * w[k]
+        for j in range(1, k + 1):
+            acc = acc + z[j] * w[k - j]
+        rows.append(acc)
+    return jnp.stack(rows, axis=0)

@@ -1,0 +1,202 @@
+"""Artifact catalog: every HLO executable the Rust runtime consumes.
+
+Each entry declares the python function, its input specs (with *roles* so
+the Rust coordinator knows which inputs are parameters, optimizer state,
+batch data, probes or scalars) and metadata.  ``aot.py`` lowers the catalog
+to ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models import toy, mnist, latent_ode, cnf
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Artifact:
+    def __init__(self, name, fn, inputs, model, kind, meta=None):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs  # [(role, name, ShapeDtypeStruct)]
+        self.model = model
+        self.kind = kind
+        self.meta = meta or {}
+
+
+def _param_inputs(ps, prefix="param"):
+    return [(f"{prefix}:{n}", n, spec(s)) for n, s in ps.entries]
+
+
+def _opt_inputs(ps, slot):
+    return [(f"opt:{slot}:{n}", f"{slot}_{n}", spec(s)) for n, s in ps.entries]
+
+
+def catalog() -> list[Artifact]:
+    arts: list[Artifact] = []
+
+    # ----- toy (Figs 1, 9) --------------------------------------------------
+    tps = toy.param_spec()
+    B = toy.BATCH
+    for tag, order in [("unreg", 0), ("k2", 2), ("k3", 3), ("k6", 6)]:
+        arts.append(Artifact(
+            f"toy_train_{tag}_s16",
+            toy.make_train_step(reg_order=order, steps=16),
+            _param_inputs(tps) + _opt_inputs(tps, "m")
+            + [("batch:x", "x", spec((B, toy.D))),
+               ("scalar:lam", "lam", spec(())),
+               ("scalar:lr", "lr", spec(()))],
+            "toy", "train", {"reg": tag, "steps": 16}))
+    for nb, suffix in [(B, ""), (1, "_b1")]:
+        arts.append(Artifact(
+            f"toy_dynamics{suffix}", toy.dynamics,
+            _param_inputs(tps)
+            + [("batch:z", "z", spec((nb, toy.D))),
+               ("scalar:t", "t", spec(()))],
+            "toy", "dynamics", {"batch": nb}))
+
+    # ----- mnist (Figs 3, 5-8, 10, 11; Table 3) ------------------------------
+    mps = mnist.param_spec()
+    B, D = mnist.BATCH, mnist.D
+    mnist_variants = [
+        ("unreg", "none", 0, 2), ("unreg", "none", 0, 8),
+        ("rnode", "rnode", 0, 2), ("rnode", "rnode", 0, 8),
+        ("k1", "taynode", 1, 8),
+        ("k2", "taynode", 2, 2), ("k2", "taynode", 2, 8),
+        ("k3", "taynode", 3, 2), ("k3", "taynode", 3, 8),
+        ("k4", "taynode", 4, 8),
+    ]
+    for tag, reg, order, steps in mnist_variants:
+        arts.append(Artifact(
+            f"mnist_train_{tag}_s{steps}",
+            mnist.make_train_step(reg=reg, reg_order=order, steps=steps),
+            _param_inputs(mps) + _opt_inputs(mps, "m")
+            + [("batch:x", "x", spec((B, D))),
+               ("batch:labels", "labels", spec((B,), I32)),
+               ("rng:eps", "eps", spec((B, D))),
+               ("scalar:lam", "lam", spec(())),
+               ("scalar:lr", "lr", spec(()))],
+            "mnist", "train", {"reg": tag, "steps": steps, "order": order}))
+    dyn_params = [(r, n, s) for r, n, s in _param_inputs(mps)
+                  if n in ("w1", "b1", "w2", "b2")]
+    for nb, suffix in [(B, ""), (1, "_b1")]:
+        arts.append(Artifact(
+            f"mnist_dynamics{suffix}", mnist.dynamics,
+            dyn_params + [("batch:z", "z", spec((nb, D))),
+                          ("scalar:t", "t", spec(()))],
+            "mnist", "dynamics", {"batch": nb}))
+    arts.append(Artifact(
+        "mnist_dynamics_pallas", mnist.dynamics_pallas,
+        dyn_params + [("batch:z", "z", spec((B, D))),
+                      ("scalar:t", "t", spec(()))],
+        "mnist", "dynamics", {"batch": B, "pallas": True}))
+    arts.append(Artifact(
+        "mnist_aug_dynamics", mnist.aug_dynamics,
+        dyn_params + [("batch:state", "state", spec((B, D + 6))),
+                      ("scalar:t", "t", spec(())),
+                      ("rng:eps", "eps", spec((B, D)))],
+        "mnist", "aug_dynamics", {"batch": B, "aug_cols": 6}))
+    head_params = [(r, n, s) for r, n, s in _param_inputs(mps)
+                   if n in ("wh", "bh")]
+    arts.append(Artifact(
+        "mnist_head", mnist.head_metrics,
+        head_params + [("batch:z1", "z1", spec((B, D))),
+                       ("batch:labels", "labels", spec((B,), I32))],
+        "mnist", "metrics", {}))
+
+    # ----- latent ODE (Fig 4, Fig 12) ----------------------------------------
+    lps = latent_ode.param_spec()
+    B, Tn, Fn, L = latent_ode.BATCH, latent_ode.T, latent_ode.F, latent_ode.L
+    for tag, reg, order in [("unreg", "none", 0), ("k2", "taynode", 2),
+                            ("k3", "taynode", 3)]:
+        arts.append(Artifact(
+            f"latent_train_{tag}",
+            latent_ode.make_train_step(reg=reg, reg_order=order),
+            _param_inputs(lps) + _opt_inputs(lps, "m") + _opt_inputs(lps, "v")
+            + [("batch:x", "x", spec((B, Tn, Fn))),
+               ("batch:mask", "mask", spec((B, Tn, Fn))),
+               ("rng:eps_z", "eps_z", spec((B, L))),
+               ("scalar:lam", "lam", spec(())),
+               ("scalar:lr", "lr", spec(())),
+               ("scalar:step", "step", spec(()))],
+            "latent", "train", {"reg": tag, "order": order}))
+    arts.append(Artifact(
+        "latent_encode", latent_ode.encode,
+        _param_inputs(lps)
+        + [("batch:x", "x", spec((B, Tn, Fn))),
+           ("batch:mask", "mask", spec((B, Tn, Fn)))],
+        "latent", "encode", {}))
+    ldyn = [(r, n, s) for r, n, s in _param_inputs(lps)
+            if n in ("w1", "b1", "w2", "b2")]
+    arts.append(Artifact(
+        "latent_dynamics", latent_ode.dynamics,
+        ldyn + [("batch:z", "z", spec((B, L))), ("scalar:t", "t", spec(()))],
+        "latent", "dynamics", {"batch": B}))
+    ldec = [(r, n, s) for r, n, s in _param_inputs(lps)
+            if n in ("wd1", "bd1", "wd2", "bd2")]
+    arts.append(Artifact(
+        "latent_traj_metrics", latent_ode.traj_metrics,
+        ldec + [("batch:ztraj", "ztraj", spec((Tn, B, L))),
+                ("batch:x", "x", spec((B, Tn, Fn))),
+                ("batch:mask", "mask", spec((B, Tn, Fn)))],
+        "latent", "metrics", {}))
+
+    # ----- CNF / FFJORD (Tables 2, 4; Fig 5) ---------------------------------
+    for cfg, steps_list in [("tab", (4, 8, 16)), ("img", (5, 8))]:
+        cps = cnf.param_spec(cfg)
+        d = cnf.CONFIGS[cfg]["d"]
+        B = cnf.CONFIGS[cfg]["batch"]
+        variants = [("unreg", "none", 0), ("rnode", "rnode", 0),
+                    ("k2", "taynode", 2)]
+        if cfg == "tab":
+            variants.append(("k3", "taynode", 3))
+        for tag, reg, order in variants:
+            for steps in steps_list:
+                if tag == "k3" and steps != 8:
+                    continue
+                arts.append(Artifact(
+                    f"cnf_{cfg}_train_{tag}_s{steps}",
+                    cnf.make_train_step(cfg, reg=reg, reg_order=order,
+                                        steps=steps),
+                    _param_inputs(cps) + _opt_inputs(cps, "m")
+                    + _opt_inputs(cps, "v")
+                    + [("batch:x", "x", spec((B, d))),
+                       ("rng:eps", "eps", spec((B, d))),
+                       ("scalar:lam", "lam", spec(())),
+                       ("scalar:lr", "lr", spec(())),
+                       ("scalar:step", "step", spec(()))],
+                    f"cnf_{cfg}", "train",
+                    {"reg": tag, "steps": steps, "order": order}))
+        arts.append(Artifact(
+            f"cnf_{cfg}_aug_dynamics", cnf.aug_dynamics,
+            _param_inputs(cps)
+            + [("batch:state", "state", spec((B, d + 4))),
+               ("scalar:t", "t", spec(())),
+               ("rng:eps", "eps", spec((B, d)))],
+            f"cnf_{cfg}", "aug_dynamics", {"batch": B, "aug_cols": 4}))
+        arts.append(Artifact(
+            f"cnf_{cfg}_nll", cnf.nll_metrics,
+            [("batch:z1", "z1", spec((B, d))),
+             ("batch:logdet", "logdet", spec((B,)))],
+            f"cnf_{cfg}", "metrics", {}))
+
+    return arts
+
+
+MODEL_SPECS = {
+    "toy": (toy.param_spec(), toy.init,
+            {"d": toy.D, "h": toy.H, "batch": toy.BATCH}),
+    "mnist": (mnist.param_spec(), mnist.init, mnist.HYPER),
+    "latent": (latent_ode.param_spec(), latent_ode.init, latent_ode.HYPER),
+    "cnf_tab": (cnf.param_spec("tab"), lambda s=0: cnf.init("tab", s),
+                cnf.CONFIGS["tab"]),
+    "cnf_img": (cnf.param_spec("img"), lambda s=0: cnf.init("img", s),
+                cnf.CONFIGS["img"]),
+}

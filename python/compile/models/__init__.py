@@ -1,0 +1,3 @@
+from . import toy, mnist, latent_ode, cnf
+
+__all__ = ["toy", "mnist", "latent_ode", "cnf"]

@@ -1,0 +1,101 @@
+"""Shared model plumbing: parameter specs, initializers, optimizers and the
+paper's time-appended MLP dynamics block, written tmath-generically so the
+same definition is used for plain evaluation and for jet propagation."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .. import tmath as tm
+
+
+class ParamSpec:
+    """An ordered list of named parameter arrays — the single source of truth
+    for flattening, artifact input order and the on-disk layout."""
+
+    def __init__(self, entries):
+        self.entries = list(entries)  # [(name, shape)]
+
+    @property
+    def names(self):
+        return [n for n, _ in self.entries]
+
+    @property
+    def shapes(self):
+        return [s for _, s in self.entries]
+
+    def size(self) -> int:
+        return int(sum(int(np.prod(s)) for _, s in self.entries))
+
+    def layout(self):
+        """[{name, shape, offset, size}] for the manifest."""
+        out, off = [], 0
+        for name, shape in self.entries:
+            n = int(np.prod(shape))
+            out.append({"name": name, "shape": list(shape), "offset": off, "size": n})
+            off += n
+        return out
+
+    def flatten(self, params):
+        return np.concatenate([np.asarray(p, dtype=np.float32).ravel() for p in params])
+
+    def specs(self, dtype=jnp.float32):
+        return [jax.ShapeDtypeStruct(s, dtype) for s in self.shapes]
+
+
+def glorot(rng: np.random.RandomState, shape):
+    if len(shape) == 1:
+        return np.zeros(shape, dtype=np.float32)
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return (rng.randn(*shape) * scale).astype(np.float32)
+
+
+def init_params(spec: ParamSpec, seed: int):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(glorot(rng, s)) for s in spec.shapes]
+
+
+# -- the paper's dynamics MLP (Appendix B.2), tmath-generic ------------------
+
+def mlp_dynamics(w1, b1, w2, b2, z, t, pre_tanh: bool = True):
+    """f(z, t) = W2 [tanh(W1 [sigma(z) ; t] + b1) ; t] + b2.
+
+    ``pre_tanh`` applies the paper's input squashing ``z1 = sigma(z)``
+    (used for the MNIST classifier; the latent/CNF dynamics skip it).
+    Accepts jnp arrays or TSeries for ``z`` and ``t``.
+    """
+    z1 = tm.tanh(z) if pre_tanh else z
+    h = tm.add_bias(tm.matmul(tm.append_time(z1, t), w1), b1)
+    h = tm.tanh(h)
+    return tm.add_bias(tm.matmul(tm.append_time(h, t), w2), b2)
+
+
+def mlp3_dynamics(w1, b1, w2, b2, w3, b3, z, t):
+    """Three-layer CNF dynamics: two hidden tanh layers, time appended at
+    every layer (FFJORD's concat-time conditioning)."""
+    h = tm.tanh(tm.add_bias(tm.matmul(tm.append_time(z, t), w1), b1))
+    h = tm.tanh(tm.add_bias(tm.matmul(tm.append_time(h, t), w2), b2))
+    return tm.add_bias(tm.matmul(tm.append_time(h, t), w3), b3)
+
+
+# -- optimizers (state kept in Rust between steps, threaded through inputs) --
+
+def sgd_momentum(params, moms, grads, lr, beta=0.9):
+    new_m = [beta * m + g for m, g in zip(moms, grads)]
+    new_p = [p - lr * m for p, m in zip(params, new_m)]
+    return new_p, new_m
+
+
+def adam(params, ms, vs, grads, lr, step, b1=0.9, b2=0.999, eps=1e-8):
+    new_m = [b1 * m + (1 - b1) * g for m, g in zip(ms, grads)]
+    new_v = [b2 * v + (1 - b2) * (g * g) for v, g in zip(vs, grads)]
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p = [
+        p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        for p, m, v in zip(params, new_m, new_v)
+    ]
+    return new_p, new_m, new_v

@@ -1,0 +1,183 @@
+"""Latent ODE for irregular time series (paper §5.2, Fig 4, Fig 12).
+
+The Rubanova et al. (2019) architecture, scaled for the CPU testbed: a GRU
+recognition network consumes the (masked) observation sequence backwards and
+produces q(z0); the latent state evolves under MLP ODE dynamics; a decoder
+maps latent states to observations.  The paper's PhysioNet preprocessing
+quantizes observations to a shared hourly grid — our synthetic clinical
+generator (``rust/src/data/physionet_sim.rs``) does the same, so all
+trajectories share the T-point grid and irregularity enters through the
+per-feature observation mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import regularizers as R
+from ..odeint import odeint_grid_traj
+from .common import ParamSpec, init_params, mlp_dynamics, adam
+
+F = 8       # observed features
+T = 16      # shared time grid (t in [0, 1])
+L = 10      # latent dimension
+GH = 40     # GRU hidden
+DH = 40     # dynamics hidden
+DEC = 32    # decoder hidden
+BATCH = 64
+SIGMA = 0.5  # observation noise for the Gaussian likelihood
+
+HYPER = {"f": F, "t": T, "l": L, "gh": GH, "dh": DH, "dec": DEC,
+         "batch": BATCH, "sigma": SIGMA}
+
+IN = 2 * F  # GRU input: [x * mask ; mask]
+
+
+def param_spec() -> ParamSpec:
+    return ParamSpec([
+        # GRU recognition network
+        ("wz", (IN, GH)), ("uz", (GH, GH)), ("bz", (GH,)),
+        ("wr", (IN, GH)), ("ur", (GH, GH)), ("br", (GH,)),
+        ("wg", (IN, GH)), ("ug", (GH, GH)), ("bg", (GH,)),
+        ("wmu", (GH, L)), ("bmu", (L,)),
+        ("wlv", (GH, L)), ("blv", (L,)),
+        # latent dynamics
+        ("w1", (L + 1, DH)), ("b1", (DH,)),
+        ("w2", (DH + 1, L)), ("b2", (L,)),
+        # decoder
+        ("wd1", (L, DEC)), ("bd1", (DEC,)),
+        ("wd2", (DEC, F)), ("bd2", (F,)),
+    ])
+
+
+N_PARAMS = len(param_spec().entries)
+
+
+def init(seed: int = 0):
+    return init_params(param_spec(), seed)
+
+
+def _gru_cell(p, h, inp):
+    zg = jax.nn.sigmoid(inp @ p["wz"] + h @ p["uz"] + p["bz"])
+    rg = jax.nn.sigmoid(inp @ p["wr"] + h @ p["ur"] + p["br"])
+    g = jnp.tanh(inp @ p["wg"] + (rg * h) @ p["ug"] + p["bg"])
+    return (1.0 - zg) * h + zg * g
+
+
+def encode_fn(p, x, mask):
+    """Run the GRU backwards over the grid; return (mu, logvar) of q(z0).
+
+    x, mask: [B, T, F]."""
+    B = x.shape[0]
+    h0 = jnp.zeros((B, GH), dtype=x.dtype)
+    seq = jnp.concatenate([x * mask, mask], axis=-1)  # [B, T, 2F]
+    rev = seq[:, ::-1, :]
+
+    def body(h, xt):
+        return _gru_cell(p, h, xt), None
+
+    hT, _ = jax.lax.scan(body, h0, jnp.transpose(rev, (1, 0, 2)))
+    mu = hT @ p["wmu"] + p["bmu"]
+    logvar = hT @ p["wlv"] + p["blv"]
+    return mu, logvar
+
+
+def _pdict(plist):
+    return dict(zip(param_spec().names, plist))
+
+
+def encode(*args):
+    """Exported: (21 params, x, mask) -> (mu, logvar)."""
+    plist, (x, mask) = args[:N_PARAMS], args[N_PARAMS:]
+    return encode_fn(_pdict(plist), x, mask)
+
+
+def dynamics_fn(p):
+    return lambda z, t: mlp_dynamics(p["w1"], p["b1"], p["w2"], p["b2"], z, t,
+                                     pre_tanh=False)
+
+
+def dynamics(w1, b1, w2, b2, z, t):
+    """Raw latent dynamics for the Rust adaptive solver (NFE measurement)."""
+    return mlp_dynamics(w1, b1, w2, b2, z, t, pre_tanh=False)
+
+
+def decode_fn(p, z):
+    h = jnp.tanh(z @ p["wd1"] + p["bd1"])
+    return h @ p["wd2"] + p["bd2"]
+
+
+def decode(wd1, bd1, wd2, bd2, z):
+    """Exported: decode one grid-point's latent state. z: [B, L] -> [B, F]."""
+    h = jnp.tanh(z @ wd1 + bd1)
+    return h @ wd2 + bd2
+
+
+def traj_metrics(wd1, bd1, wd2, bd2, ztraj, x, mask):
+    """Masked NLL and MSE of a decoded latent trajectory.
+
+    ztraj: [T, B, L] (as produced by the Rust solver's grid outputs),
+    x, mask: [B, T, F]."""
+    p = {"wd1": wd1, "bd1": bd1, "wd2": wd2, "bd2": bd2}
+    xhat = decode_fn(p, ztraj)              # [T, B, F]
+    xhat = jnp.transpose(xhat, (1, 0, 2))   # [B, T, F]
+    se = (xhat - x) ** 2 * mask
+    nobs = jnp.maximum(jnp.sum(mask), 1.0)
+    mse = jnp.sum(se) / nobs
+    nll = jnp.sum(se) / (2 * SIGMA ** 2) / nobs
+    return nll, mse
+
+
+def make_train_step(reg: str = "none", reg_order: int = 2, substeps: int = 1):
+    """Exported train step (Adam).
+
+    Inputs: 21 params, 21 adam-m, 21 adam-v, x [B,T,F], mask [B,T,F],
+    eps_z [B,L] (posterior sample noise), lam, lr, step (adam t, f32).
+    Outputs: 21 params, 21 m, 21 v, loss, nll, reg_mean, kl, mse.
+    The latent trajectory is integrated on the observation grid with
+    ``substeps`` RK4 steps per interval.
+    """
+    spec = param_spec()
+    P = N_PARAMS
+
+    def train_step(*args):
+        plist = list(args[:P])
+        ms = list(args[P:2 * P])
+        vs = list(args[2 * P:3 * P])
+        x, mask, eps_z, lam, lr, step = args[3 * P:]
+
+        def loss_fn(pl):
+            p = _pdict(pl)
+            mu, logvar = encode_fn(p, x, mask)
+            z0 = mu + jnp.exp(0.5 * logvar) * eps_z
+            f = dynamics_fn(p)
+
+            def aug(state, t):
+                z, r = state
+                dz = f(z, t)
+                if reg == "taynode":
+                    dr = R.taynode_integrand(f, z, t, reg_order)
+                else:
+                    dr = jnp.zeros_like(r)
+                return (dz, dr)
+
+            r0 = jnp.zeros((x.shape[0],), dtype=x.dtype)
+            steps = (T - 1) * substeps
+            _, traj = odeint_grid_traj(aug, (z0, r0), 0.0, 1.0, steps)
+            ztraj = traj[0][substeps - 1::substeps]     # [T-1, B, L]
+            ztraj = jnp.concatenate([z0[None], ztraj], axis=0)  # [T, B, L]
+            r1 = traj[1][-1]
+            nll, mse = traj_metrics(p["wd1"], p["bd1"], p["wd2"], p["bd2"],
+                                    ztraj, x, mask)
+            kl = -0.5 * jnp.mean(jnp.sum(1 + logvar - mu ** 2 - jnp.exp(logvar),
+                                         axis=-1))
+            rbar = jnp.mean(r1)
+            return nll + 0.1 * kl + lam * rbar, (nll, rbar, kl, mse)
+
+        (loss, (nll, rbar, kl, mse)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(plist)
+        new_p, new_m, new_v = adam(plist, ms, vs, grads, lr, step)
+        return (*new_p, *new_m, *new_v, loss, nll, rbar, kl, mse)
+
+    return train_step

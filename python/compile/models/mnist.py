@@ -1,0 +1,142 @@
+"""MNIST ODE classifier (paper §5.1, Appendix B.2; Figs 3, 5-8, 10, 11 and
+Table 3).
+
+A flattened image is integrated through MLP dynamics
+``f(z, t) = W2 [tanh(W1 [tanh(z) ; t] + b1) ; t] + b2`` and classified by a
+linear head on the final state.  Input is 14x14 (D=196) — the procedural
+digit generator in ``rust/src/data/synth_mnist.rs`` renders at this
+resolution (DESIGN.md §3 substitutions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import regularizers as R
+from ..kernels import fused_mlp
+from ..odeint import odeint_grid
+from .common import ParamSpec, init_params, mlp_dynamics, sgd_momentum
+
+D = 196
+H = 100
+N_CLASS = 10
+BATCH = 64
+
+HYPER = {"d": D, "h": H, "n_class": N_CLASS, "batch": BATCH}
+
+
+def param_spec() -> ParamSpec:
+    return ParamSpec([
+        ("w1", (D + 1, H)),
+        ("b1", (H,)),
+        ("w2", (H + 1, D)),
+        ("b2", (D,)),
+        ("wh", (D, N_CLASS)),
+        ("bh", (N_CLASS,)),
+    ])
+
+
+def init(seed: int = 0):
+    return init_params(param_spec(), seed)
+
+
+def dynamics_fn(w1, b1, w2, b2):
+    return lambda z, t: mlp_dynamics(w1, b1, w2, b2, z, t, pre_tanh=True)
+
+
+def dynamics(w1, b1, w2, b2, z, t):
+    """Raw dynamics — the Rust adaptive solver's callee (one call = one NFE)."""
+    return dynamics_fn(w1, b1, w2, b2)(z, t)
+
+
+def dynamics_pallas(w1, b1, w2, b2, z, t):
+    """Same dynamics through the fused Pallas kernel (L1 hot path).
+
+    The kernel fuses tanh -> GEMM -> tanh -> GEMM so the [B, H] activation
+    never leaves VMEM; numerics are asserted equal to :func:`dynamics` in
+    ``python/tests/test_kernels.py``."""
+    return fused_mlp(z, t, w1, b1, w2, b2)
+
+
+def head(wh, bh, z):
+    return z @ wh + bh
+
+
+def head_metrics(wh, bh, z1, labels):
+    """Cross-entropy (mean) and error count from the final ODE state.
+
+    Exported as ``mnist_head`` so Rust can compute classification metrics
+    after its own adaptive solve.  ``labels``: int32 [B]."""
+    logits = head(wh, bh, z1)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, N_CLASS, dtype=logits.dtype)
+    ce = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    err = jnp.sum((jnp.argmax(logits, axis=-1) != labels).astype(jnp.float32))
+    return ce, err
+
+
+def aug_dynamics(w1, b1, w2, b2, state, t, eps):
+    """Instrumented dynamics for evaluation-time measurement.
+
+    ``state``: [B, D+6] = [z | r1 r2 r3 r4 kin jac] accumulators.  Returns
+    the time-derivative of the full state, so the Rust adaptive solver can
+    integrate the regularizer quantities the paper tables report
+    (R_2, and Finlay et al.'s K and B) plus R_1..R_4 for Fig 7.
+    """
+    z = state[:, :D]
+    f = dynamics_fn(w1, b1, w2, b2)
+    dz = f(z, t)
+    cols = [
+        R.taynode_integrand(f, z, t, 1),
+        R.taynode_integrand(f, z, t, 2),
+        R.taynode_integrand(f, z, t, 3),
+        R.taynode_integrand(f, z, t, 4),
+        R.rnode_kinetic(f, z, t),
+        R.rnode_jacobian(f, z, t, eps),
+    ]
+    return jnp.concatenate([dz] + [c[:, None] for c in cols], axis=1)
+
+
+def make_train_step(reg: str = "none", reg_order: int = 3, steps: int = 8,
+                    method: str = "rk4"):
+    """Build the exported train step.
+
+    reg in {"none", "taynode", "rnode"}.  Signature (order = artifact input
+    order): 6 params, 6 momenta, x [B,D], labels int32 [B], eps [B,D]
+    (Rademacher probe, used by rnode only), lam, lr.  Returns 6 params,
+    6 momenta, loss, ce, reg_mean.
+    """
+
+    def train_step(w1, b1, w2, b2, wh, bh,
+                   mw1, mb1, mw2, mb2, mwh, mbh,
+                   x, labels, eps, lam, lr):
+        params = [w1, b1, w2, b2, wh, bh]
+        moms = [mw1, mb1, mw2, mb2, mwh, mbh]
+
+        def loss_fn(plist):
+            pw1, pb1, pw2, pb2, pwh, pbh = plist
+            f = dynamics_fn(pw1, pb1, pw2, pb2)
+
+            def aug(state, t):
+                z, r = state
+                dz = f(z, t)
+                if reg == "taynode":
+                    dr = R.taynode_integrand(f, z, t, reg_order)
+                elif reg == "rnode":
+                    dr = R.rnode_kinetic(f, z, t) + R.rnode_jacobian(f, z, t, eps)
+                else:
+                    dr = jnp.zeros_like(r)
+                return (dz, dr)
+
+            r0 = jnp.zeros((x.shape[0],), dtype=x.dtype)
+            z1, r1 = odeint_grid(aug, (x, r0), 0.0, 1.0, steps, method)
+            ce, _ = head_metrics(pwh, pbh, z1, labels)
+            rbar = jnp.mean(r1)
+            return ce + lam * rbar, (ce, rbar)
+
+        (loss, (ce, rbar)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_m = sgd_momentum(params, moms, grads, lr)
+        return (*new_p, *new_m, loss, ce, rbar)
+
+    return train_step

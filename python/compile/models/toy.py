@@ -1,0 +1,74 @@
+"""Toy 1-D neural ODE (paper Figs 1 and 9).
+
+Fits the map ``z(t1) = z(t0) + z(t0)^3`` with an MLP-parameterized ODE;
+regularizing ``R_3`` (or ``R_6`` for Fig 9) yields dynamics that are far
+cheaper for an adaptive solver, with the same fit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import regularizers as R
+from ..odeint import odeint_grid
+from .common import ParamSpec, init_params, mlp_dynamics, sgd_momentum
+
+D = 1
+H = 32
+BATCH = 128
+
+
+def param_spec() -> ParamSpec:
+    return ParamSpec([
+        ("w1", (D + 1, H)),
+        ("b1", (H,)),
+        ("w2", (H + 1, D)),
+        ("b2", (D,)),
+    ])
+
+
+def init(seed: int = 0):
+    return init_params(param_spec(), seed)
+
+
+def dynamics_fn(w1, b1, w2, b2):
+    return lambda z, t: mlp_dynamics(w1, b1, w2, b2, z, t, pre_tanh=False)
+
+
+def dynamics(w1, b1, w2, b2, z, t):
+    """Exported raw-dynamics entry point (called by Rust adaptive solvers)."""
+    return dynamics_fn(w1, b1, w2, b2)(z, t)
+
+
+def make_train_step(reg_order: int = 0, steps: int = 16, method: str = "rk4"):
+    """reg_order = 0 disables the regularizer (plain MSE fit)."""
+
+    def train_step(w1, b1, w2, b2, m1, m2, m3, m4, x, lam, lr):
+        params = [w1, b1, w2, b2]
+        moms = [m1, m2, m3, m4]
+        target = x + x ** 3
+
+        def loss_fn(plist):
+            f = dynamics_fn(*plist)
+
+            def aug(state, t):
+                z, r = state
+                dz = f(z, t)
+                if reg_order > 0:
+                    dr = R.taynode_integrand(f, z, t, reg_order)
+                else:
+                    dr = jnp.zeros_like(r)
+                return (dz, dr)
+
+            r0 = jnp.zeros((x.shape[0],), dtype=x.dtype)
+            z1, r1 = odeint_grid(aug, (x, r0), 0.0, 1.0, steps, method)
+            mse = jnp.mean((z1 - target) ** 2)
+            rbar = jnp.mean(r1)
+            return mse + lam * rbar, (mse, rbar)
+
+        (loss, (mse, rbar)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_m = sgd_momentum(params, moms, grads, lr)
+        return (*new_p, *new_m, loss, mse, rbar)
+
+    return train_step

@@ -1,0 +1,89 @@
+"""Differentiable fixed-grid Runge-Kutta integrators (build-time, JAX).
+
+These are the discretize-then-optimize solvers used *inside* exported train
+steps (the paper's fixed-step training rows in Tables 2-4).  The adaptive
+solvers that measure NFE at evaluation time live in Rust
+(``rust/src/solvers``) and call the exported dynamics executables.
+
+States are pytrees so augmented systems (state, regularizer accumulators,
+log-determinants, ...) integrate with the same code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Explicit Butcher tableaux: (a_lower_rows, b, c).
+TABLEAUX = {
+    "euler": ((), (1.0,), (0.0,)),
+    "midpoint": (((0.5,),), (0.0, 1.0), (0.0, 0.5)),
+    "heun2": (((1.0,),), (0.5, 0.5), (0.0, 1.0)),
+    "bosh3": (
+        ((0.5,), (0.0, 0.75)),
+        (2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0),
+        (0.0, 0.5, 0.75),
+    ),
+    "rk4": (
+        ((0.5,), (0.0, 0.5), (0.0, 0.0, 1.0)),
+        (1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0),
+        (0.0, 0.5, 0.5, 1.0),
+    ),
+}
+
+
+def _tree_axpy(alpha, x, y):
+    return jax.tree_util.tree_map(lambda a, b: b + alpha * a, x, y)
+
+
+def _tree_scale_sum(coeffs, trees):
+    out = None
+    for c, tr in zip(coeffs, trees):
+        if c == 0.0:
+            continue
+        scaled = jax.tree_util.tree_map(lambda a: c * a, tr)
+        out = scaled if out is None else jax.tree_util.tree_map(jnp.add, out, scaled)
+    return out
+
+
+def rk_step(f, y, t, dt, method: str = "rk4"):
+    """One explicit RK step of the given tableau.  ``f(y, t) -> dy``."""
+    a, b, c = TABLEAUX[method]
+    ks = [f(y, t)]
+    for i, row in enumerate(a):
+        yi = y
+        for j, aij in enumerate(row):
+            if aij != 0.0:
+                yi = _tree_axpy(aij * dt, ks[j], yi)
+        ks.append(f(yi, t + c[i + 1] * dt))
+    incr = _tree_scale_sum(b, ks)
+    return _tree_axpy(dt, incr, y)
+
+
+def odeint_grid(f, y0, t0: float, t1: float, steps: int, method: str = "rk4"):
+    """Integrate ``dy/dt = f(y, t)`` on a uniform grid of ``steps`` steps.
+
+    Returns the final state.  Differentiable (unrolled by ``lax.scan``).
+    """
+    dt = (t1 - t0) / steps
+
+    def body(y, i):
+        t = t0 + i.astype(jnp.float32) * dt
+        return rk_step(f, y, t, dt, method), None
+
+    yT, _ = jax.lax.scan(body, y0, jnp.arange(steps))
+    return yT
+
+
+def odeint_grid_traj(f, y0, t0: float, t1: float, steps: int, method: str = "rk4"):
+    """Like :func:`odeint_grid` but also returns the state after every step
+    (used by the latent-ODE decoder, which needs the whole trajectory)."""
+    dt = (t1 - t0) / steps
+
+    def body(y, i):
+        t = t0 + i.astype(jnp.float32) * dt
+        ynext = rk_step(f, y, t, dt, method)
+        return ynext, ynext
+
+    yT, traj = jax.lax.scan(body, y0, jnp.arange(steps))
+    return yT, traj

@@ -1,0 +1,45 @@
+"""Regularizer integrands: TayNODE `R_K` (eq. 1) and the RNODE baselines
+`K(theta)` (eq. 3) and `B(theta)` (eq. 4) of Finlay et al. (2020).
+
+All integrands are dimension-normalized (Appendix B) and return one value
+per batch element; the caller integrates them along the trajectory by
+augmenting the ODE state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import taylor as T
+
+
+def taynode_integrand(f, z, t, order: int):
+    """``||d^order z/dt^order||^2 / D`` along trajectories of dz/dt=f.
+
+    ``f`` must be tmath-generic (consumes TSeries).  z: [B, D] -> [B].
+    """
+    return T.rk_reg_integrand(f, z, t, order)
+
+
+def rnode_kinetic(f, z, t):
+    """Finlay et al. eq. (3): ``||f||^2 / D`` per batch element."""
+    v = f(z, t)
+    return jnp.sum(v * v, axis=-1) / v.shape[-1]
+
+
+def rnode_jacobian(f, z, t, eps):
+    """Finlay et al. eq. (4): ``||eps^T grad_z f||^2 / D`` with a fixed
+    Rademacher probe ``eps`` (shape of z)."""
+    fz = lambda zz: f(zz, t)
+    _, vjp = jax.vjp(fz, z)
+    (jt,) = vjp(eps)
+    return jnp.sum(jt * jt, axis=-1) / jt.shape[-1]
+
+
+def hutchinson_trace(f, z, t, eps):
+    """``eps^T (df/dz) eps`` — unbiased trace estimate for the CNF
+    instantaneous change of variables.  z: [B, D] -> [B]."""
+    fz = lambda zz: f(zz, t)
+    _, jv = jax.jvp(fz, (z,), (eps,))
+    return jnp.sum(jv * eps, axis=-1)

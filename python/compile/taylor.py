@@ -1,0 +1,390 @@
+"""Taylor-mode automatic differentiation, implemented from scratch.
+
+This module is the paper's §4 / Appendix A: propagation of truncated Taylor
+polynomials through programs ("jet"), and the recursive computation of the
+Taylor coefficients of an ODE *solution* trajectory (Algorithm 1), which is
+what the TayNODE regularizer `R_K` needs.
+
+Conventions
+-----------
+Internally a :class:`TSeries` stores *normalized Taylor coefficients*
+``x_[i] = x_i / i!`` where ``x_i = d^i x / dt^i`` (Appendix A.1).  The public
+:func:`jet` API follows the convention of ``jax.experimental.jet``: callers
+pass and receive *derivative coefficients* ``x_i`` (so our implementation can
+be cross-checked against JAX's in the test-suite).
+
+Cost: propagating a K-truncated series through a program costs O(K^2) per
+multiplication (a truncated Cauchy product) instead of the O(exp K) of
+naively nesting first-order JVPs — see ``python/tests/test_jet_scaling.py``
+for the measured asymptotics, and ``kernels/cauchy_prod.py`` for the Pallas
+kernel implementing the Cauchy product.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TSeries",
+    "jet",
+    "ode_jet",
+    "ode_total_derivative",
+    "rk_reg_integrand",
+    "nested_jvp_coeffs",
+]
+
+
+def _fact(k: int) -> float:
+    return float(math.factorial(k))
+
+
+class TSeries:
+    """A truncated Taylor polynomial ``x(t) = sum_i c[i] * t^i`` (normalized
+    coefficients).  Coefficients are jnp arrays of identical shape (or
+    broadcastable scalars)."""
+
+    __slots__ = ("c",)
+
+    def __init__(self, coeffs):
+        self.c = list(coeffs)
+        if not self.c:
+            raise ValueError("TSeries needs at least the 0th coefficient")
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def constant(value, order: int) -> "TSeries":
+        z = jnp.zeros_like(value)
+        return TSeries([value] + [z] * order)
+
+    @staticmethod
+    def time(t0, order: int) -> "TSeries":
+        """The series of the independent variable itself: t0 + 1*t."""
+        one = jnp.ones_like(t0)
+        zero = jnp.zeros_like(t0)
+        coeffs = [t0]
+        if order >= 1:
+            coeffs.append(one)
+        coeffs.extend([zero] * (order - 1))
+        return TSeries(coeffs)
+
+    # -- inspection ---------------------------------------------------------
+    @property
+    def order(self) -> int:
+        return len(self.c) - 1
+
+    @property
+    def primal(self):
+        return self.c[0]
+
+    def derivative_coeff(self, k: int):
+        """Unnormalized derivative coefficient ``d^k x/dt^k = k! * c[k]``."""
+        return self.c[k] * _fact(k)
+
+    # -- ring operations ----------------------------------------------------
+    def __add__(self, other):
+        if isinstance(other, TSeries):
+            _check(self, other)
+            return TSeries([a + b for a, b in zip(self.c, other.c)])
+        return TSeries([self.c[0] + other] + self.c[1:])
+
+    __radd__ = __add__
+
+    def __neg__(self):
+        return TSeries([-a for a in self.c])
+
+    def __sub__(self, other):
+        if isinstance(other, TSeries):
+            _check(self, other)
+            return TSeries([a - b for a, b in zip(self.c, other.c)])
+        return TSeries([self.c[0] - other] + self.c[1:])
+
+    def __rsub__(self, other):
+        return (-self).__add__(other)
+
+    def __mul__(self, other):
+        if isinstance(other, TSeries):
+            _check(self, other)
+            K = self.order
+            out = []
+            for k in range(K + 1):
+                acc = self.c[0] * other.c[k]
+                for j in range(1, k + 1):
+                    acc = acc + self.c[j] * other.c[k - j]
+                out.append(acc)
+            return TSeries(out)
+        return TSeries([a * other for a in self.c])
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, other):
+        if isinstance(other, TSeries):
+            _check(self, other)
+            # y = z / w  =>  y_[k] = (z_[k] - sum_{j<k} y_[j] w_[k-j]) / w_[0]
+            K = self.order
+            out = []
+            for k in range(K + 1):
+                acc = self.c[k]
+                for j in range(k):
+                    acc = acc - out[j] * other.c[k - j]
+                out.append(acc / other.c[0])
+            return TSeries(out)
+        return TSeries([a / other for a in self.c])
+
+    def __rtruediv__(self, other):
+        return TSeries.constant(jnp.asarray(other) * jnp.ones_like(self.c[0]),
+                                self.order).__truediv__(self)
+
+    def __pow__(self, n: int):
+        if not isinstance(n, int) or n < 0:
+            raise ValueError("TSeries.__pow__ supports non-negative ints")
+        if n == 0:
+            return TSeries.constant(jnp.ones_like(self.c[0]), self.order)
+        out = self
+        for _ in range(n - 1):
+            out = out * self
+        return out
+
+
+def _check(a: TSeries, b: TSeries) -> None:
+    if a.order != b.order:
+        raise ValueError(f"order mismatch: {a.order} vs {b.order}")
+
+
+# ---------------------------------------------------------------------------
+# Nonlinear propagation rules (Table 1 / Griewank & Walther ch. 13).
+# Each rule computes output coefficients from input coefficients using the
+# ODE the elementary function satisfies:  if  s = g(z)  with  s' = u(s) z'
+# then  k*s_[k] = sum_{j=1..k} (j * z_[j]) * u_[k-j].
+# ---------------------------------------------------------------------------
+
+def t_exp(z: TSeries) -> TSeries:
+    y = [jnp.exp(z.c[0])]
+    for k in range(1, z.order + 1):
+        acc = None
+        for j in range(1, k + 1):
+            term = (j * z.c[j]) * y[k - j]
+            acc = term if acc is None else acc + term
+        y.append(acc / k)
+    return TSeries(y)
+
+
+def t_log(z: TSeries) -> TSeries:
+    # z y' = z'  =>  k z_[0] y_[k] = k z_[k] - sum_{j=1..k-1} (k-j) y_[k-j] z_[j]
+    y = [jnp.log(z.c[0])]
+    for k in range(1, z.order + 1):
+        acc = k * z.c[k]
+        for j in range(1, k):
+            acc = acc - (k - j) * y[k - j] * z.c[j]
+        y.append(acc / (k * z.c[0]))
+    return TSeries(y)
+
+
+def t_sqrt(z: TSeries) -> TSeries:
+    # y*y = z  =>  y_[k] = (z_[k] - sum_{1<=j<=k-1} y_[j] y_[k-j]) / (2 y_[0])
+    y = [jnp.sqrt(z.c[0])]
+    for k in range(1, z.order + 1):
+        acc = z.c[k]
+        for j in range(1, k):
+            acc = acc - y[j] * y[k - j]
+        y.append(acc / (2.0 * y[0]))
+    return TSeries(y)
+
+
+def t_sin_cos(z: TSeries):
+    s = [jnp.sin(z.c[0])]
+    c = [jnp.cos(z.c[0])]
+    for k in range(1, z.order + 1):
+        sa = None
+        ca = None
+        for j in range(1, k + 1):
+            zj = j * z.c[j]
+            ts = zj * c[k - j]
+            tc = zj * s[k - j]
+            sa = ts if sa is None else sa + ts
+            ca = tc if ca is None else ca + tc
+        s.append(sa / k)
+        c.append(-ca / k)
+    return TSeries(s), TSeries(c)
+
+
+def t_sin(z: TSeries) -> TSeries:
+    return t_sin_cos(z)[0]
+
+
+def t_cos(z: TSeries) -> TSeries:
+    return t_sin_cos(z)[1]
+
+
+def _ode_rule(z: TSeries, g0, u_of_s):
+    """Generic rule for s = g(z) with s' = u(s) * z'.
+
+    ``g0`` is g evaluated at the primal; ``u_of_s(s_coeffs, m)`` returns the
+    m-th coefficient of u(s) given the s coefficients computed so far
+    (indices 0..m are available when requested, m < current k).
+    """
+    s = [g0]
+    for k in range(1, z.order + 1):
+        acc = None
+        for j in range(1, k + 1):
+            term = (j * z.c[j]) * u_of_s(s, k - j)
+            acc = term if acc is None else acc + term
+        s.append(acc / k)
+    return TSeries(s)
+
+
+def t_tanh(z: TSeries) -> TSeries:
+    # s' = (1 - s^2) z'
+    u_cache: dict[int, jnp.ndarray] = {}
+
+    def u(s, m):
+        if m not in u_cache:
+            acc = s[0] * s[m]
+            for i in range(1, m + 1):
+                acc = acc + s[i] * s[m - i]
+            one = 1.0 if m == 0 else 0.0
+            u_cache[m] = one - acc
+        return u_cache[m]
+
+    # NOTE: u depends on s[m] which is available because m = k - j <= k - 1.
+    # But the cache must be invalidated per-k?  No: s[0..m] never change once
+    # appended, so caching is sound.
+    return _ode_rule(z, jnp.tanh(z.c[0]), u)
+
+
+def t_sigmoid(z: TSeries) -> TSeries:
+    # s' = s (1 - s) z'
+    u_cache: dict[int, jnp.ndarray] = {}
+
+    def u(s, m):
+        if m not in u_cache:
+            acc = s[0] * s[m]
+            for i in range(1, m + 1):
+                acc = acc + s[i] * s[m - i]
+            u_cache[m] = s[m] - acc
+        return u_cache[m]
+
+    return _ode_rule(z, jax.nn.sigmoid(z.c[0]), u)
+
+
+def t_softplus(z: TSeries) -> TSeries:
+    # y' = sigmoid(z) z'
+    sig = t_sigmoid(z)
+    y = [jax.nn.softplus(z.c[0])]
+    for k in range(1, z.order + 1):
+        acc = None
+        for j in range(1, k + 1):
+            term = (j * z.c[j]) * sig.c[k - j]
+            acc = term if acc is None else acc + term
+        y.append(acc / k)
+    return TSeries(y)
+
+
+# ---------------------------------------------------------------------------
+# jet: the public Taylor-mode entry point (jax.experimental.jet convention)
+# ---------------------------------------------------------------------------
+
+def jet(f, primals, series):
+    """Compute the truncated Taylor expansion of ``f`` along a path.
+
+    Mirrors ``jax.experimental.jet.jet``: ``primals`` is a tuple of arrays
+    ``x_0``, ``series`` a tuple of lists ``[x_1, ..., x_K]`` of *derivative*
+    coefficients.  Returns ``(y_0, [y_1, ..., y_K])``.
+
+    ``f`` must be written against the :mod:`compile.tmath` generic ops so it
+    can consume :class:`TSeries` arguments.
+    """
+    K = len(series[0])
+    ins = []
+    for p, s in zip(primals, series):
+        coeffs = [p] + [si / _fact(i + 1) for i, si in enumerate(s)]
+        ins.append(TSeries(coeffs))
+    out = f(*ins)
+    single = not isinstance(out, (tuple, list))
+    outs = (out,) if single else tuple(out)
+    prim_out = []
+    ser_out = []
+    for o in outs:
+        if not isinstance(o, TSeries):
+            o = TSeries.constant(o, K)
+        prim_out.append(o.c[0])
+        ser_out.append([o.derivative_coeff(k) for k in range(1, K + 1)])
+    if single:
+        return prim_out[0], ser_out[0]
+    return tuple(prim_out), tuple(ser_out)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: Taylor coefficients of the ODE solution by recursive jet
+# ---------------------------------------------------------------------------
+
+def ode_jet(f, z0, t0, order: int):
+    """Derivative coefficients ``[x_1, ..., x_order]`` of the solution of
+    ``dz/dt = f(z, t)`` through ``(z0, t0)``.
+
+    ``f(z, t)`` must be tmath-generic.  Recursion (paper Algorithm 1, in
+    derivative-coefficient form): ``x_{k+1} = y_k`` where ``y`` is the jet of
+    ``f`` along the partially-built solution path.  Time is handled by
+    augmenting with the trivial series ``t0 + t`` (Appendix A.2.1).
+    """
+    t0 = jnp.asarray(t0, dtype=z0.dtype)
+    x = [f(z0, t0)]  # x_1 = dz/dt
+    for k in range(1, order):
+        # Build the k-truncated solution path and push it through f.
+        zs = TSeries([z0] + [x[i] / _fact(i + 1) for i in range(k)])
+        ts = TSeries.time(t0, k)
+        y = f(zs, ts)
+        # y_[k] is the k-th *Taylor* coefficient of f(z(t), t); the next
+        # derivative coefficient of the solution is x_{k+1} = k! * y_[k] ...
+        # with x_{k+1}/(k+1)! = y_[k]/(k+1) <=> x_{k+1} = (k+1)! * y_[k] / (k+1)? No:
+        # dz/dt = y(t)  =>  (k+1) z_[k+1] = y_[k]  =>  x_{k+1} = k! * y_[k].
+        x.append(y.c[k] * _fact(k))
+    return x
+
+
+def ode_total_derivative(f, z0, t0, order: int):
+    """``d^order z / dt^order`` of the solution trajectory at (z0, t0)."""
+    return ode_jet(f, z0, t0, order)[order - 1]
+
+
+def rk_reg_integrand(f, z, t, order: int):
+    """The TayNODE regularizer integrand (eq. 1), dimension-normalized as in
+    Appendix B: ``||d^K z/dt^K||^2 / D`` per batch element.
+
+    ``z`` has shape [B, D] (or [D]); returns shape [B] (or scalar).
+    """
+    dK = ode_total_derivative(f, z, t, order)
+    sq = dK * dK
+    return jnp.sum(sq, axis=-1) / sq.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Naive nested-JVP baseline (O(exp K)) — kept for the §Perf comparison.
+# ---------------------------------------------------------------------------
+
+def nested_jvp_coeffs(f, z0, t0, order: int):
+    """Derivative coefficients of the ODE solution via recursively nested
+    first-order JVPs.  Exponential in ``order``; used only to demonstrate the
+    asymptotic advantage of Taylor mode (paper §4)."""
+    t0 = jnp.asarray(t0, dtype=z0.dtype)
+
+    def g(state):
+        z, t = state
+        return (f(z, t), jnp.ones_like(t))
+
+    # d^{k+1} z/dt^{k+1} = (d^k/dt^k) f(z(t), t); build the tower recursively.
+    def nth(state, k):
+        if k == 0:
+            return g(state)
+        fn = lambda s: nth(s, k - 1)
+        _, dot = jax.jvp(fn, (state,), (g(state),))
+        return dot
+
+    out = []
+    state = (z0, t0)
+    for k in range(order):
+        out.append(nth(state, k)[0])
+    return out

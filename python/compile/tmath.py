@@ -1,0 +1,136 @@
+"""Generic math ops that dispatch on plain jnp arrays OR :class:`TSeries`.
+
+Model dynamics (the functions fed to ODE solvers and to the Taylor-mode
+regularizer) are written exclusively against this namespace, so a single
+definition serves three consumers:
+
+  1. plain evaluation inside exported HLO (arguments are jnp arrays),
+  2. jet propagation for the `R_K` regularizer (arguments are TSeries),
+  3. the pure-jnp reference oracles for the Pallas kernels.
+
+Linear operations apply coefficient-wise to a series; nonlinear ones use the
+recurrence rules in :mod:`compile.taylor`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import taylor as T
+
+TSeries = T.TSeries
+
+
+def _is_series(x) -> bool:
+    return isinstance(x, TSeries)
+
+
+def _lift(x, like: TSeries) -> TSeries:
+    if _is_series(x):
+        return x
+    return TSeries.constant(jnp.asarray(x) * jnp.ones_like(like.c[0]), like.order)
+
+
+# -- linear ------------------------------------------------------------------
+
+def add(a, b):
+    if _is_series(a) or _is_series(b):
+        ref = a if _is_series(a) else b
+        return _lift(a, ref) + _lift(b, ref)
+    return a + b
+
+
+def sub(a, b):
+    if _is_series(a) or _is_series(b):
+        ref = a if _is_series(a) else b
+        return _lift(a, ref) - _lift(b, ref)
+    return a - b
+
+
+def mul(a, b):
+    if _is_series(a) and not _is_series(b):
+        return a * b  # scalar/constant factor, coefficient-wise
+    if _is_series(b) and not _is_series(a):
+        return b * a
+    if _is_series(a):
+        return a * b
+    return a * b
+
+
+def div(a, b):
+    if _is_series(a) or _is_series(b):
+        ref = a if _is_series(a) else b
+        return _lift(a, ref) / _lift(b, ref)
+    return a / b
+
+
+def matmul(x, w):
+    """x @ w with constant (non-series) weights ``w``."""
+    if _is_series(x):
+        return TSeries([c @ w for c in x.c])
+    return x @ w
+
+
+def add_bias(x, b):
+    if _is_series(x):
+        return TSeries([x.c[0] + b] + x.c[1:])
+    return x + b
+
+
+def append_time(x, t):
+    """Concatenate the scalar time onto the last axis: ``[x ; t]``.
+
+    ``x``: [..., D] (array or series), ``t``: scalar (array or series).
+    Returns [..., D+1].  This is the paper's `W [z ; t]` construction
+    (Appendix B.2).
+    """
+    if _is_series(x) or _is_series(t):
+        K = x.order if _is_series(x) else t.order
+        xs = x if _is_series(x) else TSeries.constant(x, K)
+        ts = t if _is_series(t) else TSeries.constant(jnp.asarray(t), K)
+        out = []
+        for cx, ct in zip(xs.c, ts.c):
+            tcol = jnp.broadcast_to(ct, cx.shape[:-1] + (1,))
+            out.append(jnp.concatenate([cx, tcol], axis=-1))
+        return TSeries(out)
+    tcol = jnp.broadcast_to(jnp.asarray(t, dtype=x.dtype), x.shape[:-1] + (1,))
+    return jnp.concatenate([x, tcol], axis=-1)
+
+
+# -- nonlinear ---------------------------------------------------------------
+
+def tanh(x):
+    return T.t_tanh(x) if _is_series(x) else jnp.tanh(x)
+
+
+def sigmoid(x):
+    return T.t_sigmoid(x) if _is_series(x) else jax.nn.sigmoid(x)
+
+
+def exp(x):
+    return T.t_exp(x) if _is_series(x) else jnp.exp(x)
+
+
+def log(x):
+    return T.t_log(x) if _is_series(x) else jnp.log(x)
+
+
+def sqrt(x):
+    return T.t_sqrt(x) if _is_series(x) else jnp.sqrt(x)
+
+
+def sin(x):
+    return T.t_sin(x) if _is_series(x) else jnp.sin(x)
+
+
+def cos(x):
+    return T.t_cos(x) if _is_series(x) else jnp.cos(x)
+
+
+def softplus(x):
+    return T.t_softplus(x) if _is_series(x) else jax.nn.softplus(x)
+
+
+def square(x):
+    return mul(x, x)

@@ -1,0 +1,7 @@
+"""Make `import compile...` work regardless of pytest's invocation cwd
+(repo root or python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,82 @@
+"""AOT export pipeline: catalog integrity, HLO-text emission, manifest
+consistency with the on-disk parameter blobs."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.model import MODEL_SPECS, catalog
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_catalog_unique_names_and_roles():
+    arts = catalog()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names))
+    for a in arts:
+        for role, name, s in a.inputs:
+            assert role.split(":")[0] in {"param", "opt", "batch", "scalar", "rng"}
+            assert all(dim > 0 for dim in s.shape) or s.shape == ()
+
+
+def test_param_specs_match_models():
+    for mname, (pspec, init_fn, hyper) in MODEL_SPECS.items():
+        params = init_fn(0)
+        assert len(params) == len(pspec.entries)
+        for p, (n, s) in zip(params, pspec.entries):
+            assert tuple(p.shape) == tuple(s), (mname, n)
+        flat = pspec.flatten(params)
+        assert flat.size == pspec.size()
+
+
+def test_train_artifacts_roundtrip_params():
+    """Every train artifact must output exactly its param+opt inputs first
+    (the Rust trainer feeds outputs back as next-step inputs)."""
+    for a in catalog():
+        if a.kind != "train":
+            continue
+        n_state = sum(1 for r, _, _ in a.inputs
+                      if r.startswith("param") or r.startswith("opt"))
+        outs = jax.eval_shape(a.fn, *[s for _, _, s in a.inputs])
+        assert len(outs) > n_state, a.name
+        state_in = [s for r, _, s in a.inputs
+                    if r.startswith("param") or r.startswith("opt")]
+        for i, si in enumerate(state_in):
+            assert tuple(outs[i].shape) == tuple(si.shape), (a.name, i)
+
+
+def test_hlo_text_emission_small():
+    """The text path emits a parsable HLO module for a tiny function."""
+    import jax.numpy as jnp
+
+    def fn(x):
+        return (jnp.tanh(x) @ jnp.ones((4, 2), jnp.float32),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((3, 4), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_disk():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, e in man["executables"].items():
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(64)
+        assert "HloModule" in head, name
+    for mname, m in man["models"].items():
+        blob = np.fromfile(os.path.join(ART, m["params"]["file"]),
+                           dtype="<f4")
+        assert blob.size == m["params"]["total"], mname
+        last = m["params"]["layout"][-1]
+        assert last["offset"] + last["size"] == blob.size

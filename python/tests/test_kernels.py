@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles (hypothesis sweeps over shapes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cauchy_prod, fused_mlp, ref
+from compile.models import mnist
+
+
+def _mlp_weights(rng, D, H):
+    w1 = jnp.asarray((rng.randn(D + 1, H) * 0.3).astype(np.float32))
+    b1 = jnp.asarray((rng.randn(H) * 0.1).astype(np.float32))
+    w2 = jnp.asarray((rng.randn(H + 1, D) * 0.3).astype(np.float32))
+    b2 = jnp.asarray((rng.randn(D) * 0.1).astype(np.float32))
+    return w1, b1, w2, b2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 8, 32, 64]),
+    d=st.sampled_from([4, 28, 196]),
+    h=st.sampled_from([16, 100]),
+    block=st.sampled_from([8, 16, 32]),
+    t=st.floats(-1.0, 2.0),
+    seed=st.integers(0, 10_000),
+)
+def test_fused_mlp_vs_ref(b, d, h, block, t, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, d).astype(np.float32))
+    w1, b1, w2, b2 = _mlp_weights(rng, d, h)
+    got = fused_mlp(x, t, w1, b1, w2, b2, block_b=block)
+    want = ref.fused_mlp_ref(x, jnp.float32(t), w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 7),
+    n=st.sampled_from([1, 16, 128, 384]),
+    block=st.sampled_from([32, 128, 256]),
+    seed=st.integers(0, 10_000),
+)
+def test_cauchy_prod_vs_ref(k, n, block, seed):
+    rng = np.random.RandomState(seed)
+    z = jnp.asarray(rng.randn(k + 1, n).astype(np.float32))
+    w = jnp.asarray(rng.randn(k + 1, n).astype(np.float32))
+    got = cauchy_prod(z, w, block_n=block)
+    want = ref.cauchy_prod_ref(z, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_cauchy_prod_is_polynomial_product():
+    """Multiplying the coefficient stacks must equal multiplying the
+    polynomials and truncating — checked by evaluating at points within the
+    radius where truncation error is tiny for short series."""
+    rng = np.random.RandomState(0)
+    K = 3
+    z = rng.randn(K + 1, 4).astype(np.float32) * 0.1
+    w = rng.randn(K + 1, 4).astype(np.float32) * 0.1
+    y = np.asarray(cauchy_prod(jnp.asarray(z), jnp.asarray(w)))
+    # compare against numpy polynomial multiply, truncated
+    for col in range(4):
+        full = np.polymul(z[::-1, col], w[::-1, col])[::-1][: K + 1]
+        np.testing.assert_allclose(y[:, col], full, rtol=1e-4, atol=1e-6)
+
+
+def test_dynamics_pallas_matches_jnp():
+    """The exported pallas dynamics artifact computes exactly the same
+    function as the jnp dynamics artifact (L1 vs L2 agreement)."""
+    rng = np.random.RandomState(1)
+    params = mnist.init(0)
+    w1, b1, w2, b2 = params[:4]
+    z = jnp.asarray(rng.randn(mnist.BATCH, mnist.D).astype(np.float32))
+    a = mnist.dynamics(w1, b1, w2, b2, z, 0.25)
+    b = mnist.dynamics_pallas(w1, b1, w2, b2, z, 0.25)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

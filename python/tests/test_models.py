@@ -1,0 +1,173 @@
+"""Model-level tests: shapes, losses decrease under a few steps of the
+exported train functions, regularizers behave as the paper describes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import cnf, latent_ode, mnist, toy
+from compile import regularizers as R
+
+
+def test_toy_train_reduces_loss():
+    step = toy.make_train_step(reg_order=0, steps=8)
+    params = toy.init(0)
+    moms = [jnp.zeros_like(p) for p in params]
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.uniform(-1.5, 1.5, (toy.BATCH, 1)).astype(np.float32))
+    first = None
+    jstep = jax.jit(step)
+    for i in range(30):
+        out = jstep(*params, *moms, x, jnp.float32(0.0), jnp.float32(0.05))
+        params, moms = list(out[:4]), list(out[4:8])
+        loss = float(out[8])
+        if first is None:
+            first = loss
+    assert loss < first * 0.7, (first, loss)
+
+
+def test_toy_regularized_shrinks_r3():
+    """Training with lambda > 0 yields smaller integrated R_3 than lambda=0
+    (the mechanism behind Fig 1)."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.uniform(-1.5, 1.5, (toy.BATCH, 1)).astype(np.float32))
+
+    def run(lam):
+        step = jax.jit(toy.make_train_step(reg_order=3, steps=8))
+        params = toy.init(0)
+        moms = [jnp.zeros_like(p) for p in params]
+        for _ in range(40):
+            out = step(*params, *moms, x, jnp.float32(lam), jnp.float32(0.05))
+            params, moms = list(out[:4]), list(out[4:8])
+        return float(out[10])  # rbar
+
+    assert run(1.0) < run(0.0)
+
+
+def test_mnist_shapes_and_step():
+    step = jax.jit(mnist.make_train_step(reg="taynode", reg_order=2, steps=2))
+    params = mnist.init(0)
+    moms = [jnp.zeros_like(p) for p in params]
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(mnist.BATCH, mnist.D).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, mnist.BATCH).astype(np.int32))
+    eps = jnp.asarray(np.sign(rng.randn(mnist.BATCH, mnist.D)).astype(np.float32))
+    out = step(*params, *moms, x, y, eps, jnp.float32(0.01), jnp.float32(0.1))
+    assert len(out) == 15
+    loss, ce, rbar = map(float, out[12:])
+    assert np.isfinite(loss) and np.isfinite(ce) and rbar >= 0
+    # one step with lr>0 must change parameters
+    assert not np.allclose(np.asarray(out[0]), np.asarray(params[0]))
+
+
+def test_mnist_aug_dynamics_columns():
+    params = mnist.init(0)
+    rng = np.random.RandomState(2)
+    B, D = mnist.BATCH, mnist.D
+    state = jnp.asarray(np.concatenate(
+        [rng.randn(B, D), np.zeros((B, 6))], axis=1).astype(np.float32))
+    eps = jnp.asarray(np.sign(rng.randn(B, D)).astype(np.float32))
+    out = mnist.aug_dynamics(*params[:4], state, jnp.float32(0.3), eps)
+    assert out.shape == (B, D + 6)
+    cols = np.asarray(out[:, D:])
+    assert np.all(cols[:, :4] >= 0)   # R_1..R_4 integrands are norms
+    assert np.all(cols[:, 4:] >= 0)   # kinetic & jacobian integrands too
+    # R_1 must equal the kinetic energy ||f||^2/D (identical definitions)
+    np.testing.assert_allclose(cols[:, 0], cols[:, 4], rtol=1e-4, atol=1e-5)
+
+
+def test_mnist_head_metrics():
+    params = mnist.init(0)
+    rng = np.random.RandomState(3)
+    z = jnp.asarray(rng.randn(mnist.BATCH, mnist.D).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, mnist.BATCH).astype(np.int32))
+    ce, err = mnist.head_metrics(params[4], params[5], z, y)
+    assert 0 <= float(err) <= mnist.BATCH
+    assert float(ce) > 0
+    # CE of uniform logits is log(10)
+    ce0, _ = mnist.head_metrics(jnp.zeros_like(params[4]),
+                                jnp.zeros_like(params[5]), z, y)
+    np.testing.assert_allclose(float(ce0), np.log(10.0), rtol=1e-5)
+
+
+def test_latent_encode_decode_shapes():
+    params = latent_ode.init(0)
+    p = dict(zip(latent_ode.param_spec().names, params))
+    rng = np.random.RandomState(4)
+    B, T, F, L = latent_ode.BATCH, latent_ode.T, latent_ode.F, latent_ode.L
+    x = jnp.asarray(rng.randn(B, T, F).astype(np.float32))
+    m = jnp.asarray((rng.rand(B, T, F) < 0.5).astype(np.float32))
+    mu, lv = latent_ode.encode_fn(p, x, m)
+    assert mu.shape == (B, L) and lv.shape == (B, L)
+    xhat = latent_ode.decode_fn(p, mu)
+    assert xhat.shape == (B, F)
+
+
+def test_latent_train_step_runs_and_learns():
+    step = jax.jit(latent_ode.make_train_step(reg="taynode", reg_order=2))
+    params = latent_ode.init(0)
+    P = len(params)
+    ms = [jnp.zeros_like(q) for q in params]
+    vs = [jnp.zeros_like(q) for q in params]
+    rng = np.random.RandomState(5)
+    B, T, F, L = latent_ode.BATCH, latent_ode.T, latent_ode.F, latent_ode.L
+    ts = np.linspace(0, 1, T, dtype=np.float32)
+    x = jnp.asarray(np.sin(2 * np.pi * ts)[None, :, None]
+                    * np.ones((B, 1, F), np.float32))
+    m = jnp.ones((B, T, F), jnp.float32)
+    eps = jnp.zeros((B, L), jnp.float32)
+    losses = []
+    for i in range(10):
+        out = step(*params, *ms, *vs, x, m, eps,
+                   jnp.float32(0.0), jnp.float32(1e-2), jnp.float32(i + 1))
+        params = list(out[:P])
+        ms, vs = list(out[P:2 * P]), list(out[2 * P:3 * P])
+        losses.append(float(out[3 * P]))
+    assert losses[-1] < losses[0]
+
+
+def test_cnf_logprob_standard_normal():
+    """With zero dynamics the flow is the identity: log p must equal the
+    base log-density exactly."""
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(16, 8).astype(np.float32))
+    nll, bpd = cnf.nll_metrics(x, jnp.zeros((16,), jnp.float32))
+    want = -np.mean(-0.5 * np.sum(np.asarray(x) ** 2, 1)
+                    - 0.5 * 8 * np.log(2 * np.pi))
+    np.testing.assert_allclose(float(nll), want, rtol=1e-5)
+    np.testing.assert_allclose(float(bpd), want / (8 * np.log(2)), rtol=1e-5)
+
+
+def test_cnf_train_step_improves_nll():
+    step = jax.jit(cnf.make_train_step("tab", reg="none", steps=4))
+    params = cnf.init("tab", 0)
+    ms = [jnp.zeros_like(q) for q in params]
+    vs = [jnp.zeros_like(q) for q in params]
+    rng = np.random.RandomState(7)
+    B, d = cnf.CONFIGS["tab"]["batch"], cnf.CONFIGS["tab"]["d"]
+    # data: a shifted/scaled gaussian the flow must learn to whiten
+    x = jnp.asarray((rng.randn(B, d) * 0.5 + 1.0).astype(np.float32))
+    eps = jnp.asarray(np.sign(rng.randn(B, d)).astype(np.float32))
+    nlls = []
+    for i in range(25):
+        out = step(*params, *ms, *vs, x, eps,
+                   jnp.float32(0.0), jnp.float32(5e-3), jnp.float32(i + 1))
+        params, ms, vs = list(out[:6]), list(out[6:12]), list(out[12:18])
+        nlls.append(float(out[18]))
+    assert nlls[-1] < nlls[0]
+
+
+def test_cnf_hutchinson_unbiased_on_linear():
+    """For linear dynamics f = A z the Hutchinson estimate with Rademacher
+    probes has expectation tr(A); average over probes and check."""
+    rng = np.random.RandomState(8)
+    A = (rng.randn(6, 6) * 0.3).astype(np.float32)
+    f = lambda z, t: z @ jnp.asarray(A.T)
+    z = jnp.asarray(rng.randn(1, 6).astype(np.float32))
+    ests = []
+    for s in range(400):
+        e = jnp.asarray(np.sign(np.random.RandomState(s).randn(1, 6))
+                        .astype(np.float32))
+        ests.append(float(R.hutchinson_trace(f, z, 0.0, e)[0]))
+    np.testing.assert_allclose(np.mean(ests), np.trace(A), atol=0.05)

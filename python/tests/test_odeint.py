@@ -1,0 +1,65 @@
+"""Fixed-grid RK integrators: order-exactness on polynomials and convergence
+on smooth problems (mirrors the property tests of the Rust solver suite)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.odeint import TABLEAUX, odeint_grid, odeint_grid_traj
+
+ORDERS = {"euler": 1, "midpoint": 2, "heun2": 2, "bosh3": 3, "rk4": 4}
+
+
+@pytest.mark.parametrize("method,order", ORDERS.items())
+def test_polynomial_exactness(method, order):
+    """An order-m RK method integrates dz/dt = p(t) exactly for
+    deg p <= m-1 (quadrature view of the tableau)."""
+    coeffs = np.arange(1, order + 1, dtype=np.float32)  # degree order-1
+
+    def f(z, t):
+        return jnp.polyval(jnp.asarray(coeffs), t) * jnp.ones_like(z)
+
+    z0 = jnp.zeros((1,), jnp.float32)
+    got = odeint_grid(f, z0, 0.0, 1.0, steps=3, method=method)
+    anti = np.polyint(coeffs)
+    want = np.polyval(anti, 1.0) - np.polyval(anti, 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("method,order", [("euler", 1), ("midpoint", 2),
+                                          ("bosh3", 3), ("rk4", 4)])
+def test_convergence_order(method, order):
+    """Error on dz/dt = z shrinks like h^order."""
+    z0 = jnp.ones((1,), jnp.float32)
+    f = lambda z, t: z
+    errs = []
+    for steps in (8, 16):
+        zT = odeint_grid(f, z0, 0.0, 1.0, steps=steps, method=method)
+        errs.append(abs(float(zT[0]) - np.e))
+    rate = np.log2(errs[0] / errs[1])
+    assert rate > order - 0.6, f"{method}: observed rate {rate}"
+
+
+def test_traj_shape_and_consistency():
+    f = lambda z, t: -z
+    z0 = jnp.ones((4,), jnp.float32)
+    zT, traj = odeint_grid_traj(f, z0, 0.0, 1.0, steps=10)
+    assert traj.shape == (10, 4)
+    np.testing.assert_allclose(traj[-1], zT)
+    np.testing.assert_allclose(zT, np.exp(-1.0), rtol=1e-4)
+
+
+def test_tableau_consistency():
+    """Every tableau satisfies sum(b) = 1 and row-sum(a_i) = c_{i+1}."""
+    for name, (a, b, c) in TABLEAUX.items():
+        assert abs(sum(b) - 1.0) < 1e-12, name
+        for i, row in enumerate(a):
+            assert abs(sum(row) - c[i + 1]) < 1e-12, f"{name} row {i}"
+
+
+def test_pytree_state():
+    f = lambda s, t: (s[1], -s[0])  # harmonic oscillator as a tuple state
+    s0 = (jnp.ones(()), jnp.zeros(()))
+    x, v = odeint_grid(f, s0, 0.0, np.pi / 2, steps=64, method="rk4")
+    np.testing.assert_allclose(float(x), 0.0, atol=1e-4)
+    np.testing.assert_allclose(float(v), -1.0, atol=1e-4)

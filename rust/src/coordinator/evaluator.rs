@@ -1,0 +1,311 @@
+//! Evaluation-time measurement — the paper's instrument panel.
+//!
+//! Everything here runs *adaptive* Rust solvers over exported dynamics
+//! executables and reports NFE plus task metrics, matching the paper's
+//! "Evaluation using adaptive solvers" table columns (NFE, loss/bits-dim,
+//! R_2, and Finlay et al.'s K and B integrals).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ParamStore, Runtime, XlaDynamics};
+use crate::solvers::adaptive::{solve_adaptive_mut, solve_to_times, AdaptiveOpts, SolveStats};
+use crate::solvers::tableau::Tableau;
+use crate::runtime::client::{literal_f32, literal_i32};
+
+/// Split a flat row-major [B, W] state into the first `d` columns (flattened
+/// [B, d]) and per-row scalars for columns d..W.
+pub fn split_state(state: &[f32], b: usize, w: usize, d: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut z = Vec::with_capacity(b * d);
+    let mut cols = vec![Vec::with_capacity(b); w - d];
+    for r in 0..b {
+        let row = &state[r * w..(r + 1) * w];
+        z.extend_from_slice(&row[..d]);
+        for (k, c) in cols.iter_mut().enumerate() {
+            c.push(row[d + k]);
+        }
+    }
+    (z, cols)
+}
+
+fn mean(xs: &[f32]) -> f64 {
+    xs.iter().map(|x| *x as f64).sum::<f64>() / xs.len().max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// MNIST classifier
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MnistEval {
+    pub ce: f32,
+    pub err_rate: f32,
+    pub nfe: usize,
+    pub stats: SolveStats,
+}
+
+/// Adaptive solve of the classifier ODE + head metrics.
+/// `images` must be exactly the artifact batch ([B*196]).
+pub fn mnist_eval(
+    rt: &Runtime,
+    store: &ParamStore,
+    images: &[f32],
+    labels: &[i32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<MnistEval> {
+    let mut dyn_f = XlaDynamics::from_store(rt, "mnist_dynamics", store, None)?;
+    if images.len() != dyn_f.state_len() {
+        return Err(anyhow!(
+            "mnist_eval: need {} floats, got {}",
+            dyn_f.state_len(),
+            images.len()
+        ));
+    }
+    let (b, d) = (dyn_f.batch, dyn_f.dim);
+    let res = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, images, tb, opts);
+
+    let head = rt.exec("mnist_head")?;
+    let inputs = vec![
+        literal_f32(store.shape("wh")?, store.value("wh")?)?,
+        literal_f32(store.shape("bh")?, store.value("bh")?)?,
+        literal_f32(&[b, d], &res.y)?,
+        literal_i32(&[b], labels)?,
+    ];
+    let out = head.run(&inputs)?;
+    let ce = out[0].get_first_element::<f32>()?;
+    let err = out[1].get_first_element::<f32>()?;
+    Ok(MnistEval {
+        ce,
+        err_rate: err / b as f32,
+        nfe: res.stats.nfe,
+        stats: res.stats,
+    })
+}
+
+/// Integrate the instrumented dynamics to measure the table columns:
+/// (R_1..R_4, K, B) averaged over the batch, plus the NFE of the
+/// instrumented solve.
+#[derive(Clone, Debug)]
+pub struct RegQuantities {
+    pub r: [f64; 4],
+    pub kinetic: f64,
+    pub jacobian: f64,
+    pub nfe: usize,
+}
+
+pub fn mnist_reg_quantities(
+    rt: &Runtime,
+    store: &ParamStore,
+    images: &[f32],
+    probe: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<RegQuantities> {
+    let mut dyn_f = XlaDynamics::from_store(rt, "mnist_aug_dynamics", store, Some(probe))?;
+    let (b, w) = (dyn_f.batch, dyn_f.dim);
+    let d = w - 6;
+    let mut state = vec![0.0f32; b * w];
+    for r in 0..b {
+        state[r * w..r * w + d].copy_from_slice(&images[r * d..(r + 1) * d]);
+    }
+    let res = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, &state, tb, opts);
+    let (_, cols) = split_state(&res.y, b, w, d);
+    Ok(RegQuantities {
+        r: [mean(&cols[0]), mean(&cols[1]), mean(&cols[2]), mean(&cols[3])],
+        kinetic: mean(&cols[4]),
+        jacobian: mean(&cols[5]),
+        nfe: res.stats.nfe,
+    })
+}
+
+/// Per-example NFE (Fig 8b / Fig 10): adaptive solve with batch size 1.
+pub fn mnist_per_example_nfe(
+    rt: &Runtime,
+    store: &ParamStore,
+    images: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<Vec<usize>> {
+    let mut dyn_f = XlaDynamics::from_store(rt, "mnist_dynamics_b1", store, None)?;
+    let d = dyn_f.dim;
+    let n = images.len() / d;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let res = solve_adaptive_mut(
+            &mut dyn_f,
+            0.0,
+            1.0,
+            &images[i * d..(i + 1) * d],
+            tb,
+            opts,
+        );
+        out.push(res.stats.nfe);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// CNF / FFJORD
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct CnfEval {
+    pub nll: f32,
+    pub bpd: f32,
+    pub nfe: usize,
+    pub r2: f64,
+    pub kinetic: f64,
+    pub jacobian: f64,
+}
+
+/// Adaptive solve of the augmented CNF system (z, logdet, R2, K, B) and
+/// likelihood metrics.  `model` is "cnf_tab" or "cnf_img".
+pub fn cnf_eval(
+    rt: &Runtime,
+    model: &str,
+    store: &ParamStore,
+    x: &[f32],
+    probe: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<CnfEval> {
+    let mut dyn_f =
+        XlaDynamics::from_store(rt, &format!("{model}_aug_dynamics"), store, Some(probe))?;
+    let (b, w) = (dyn_f.batch, dyn_f.dim);
+    let d = w - 4;
+    let mut state = vec![0.0f32; b * w];
+    for r in 0..b {
+        state[r * w..r * w + d].copy_from_slice(&x[r * d..(r + 1) * d]);
+    }
+    let res = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, &state, tb, opts);
+    let (z1, cols) = split_state(&res.y, b, w, d);
+
+    let nll_exec = rt.exec(&format!("{model}_nll"))?;
+    let out = nll_exec.run(&[
+        literal_f32(&[b, d], &z1)?,
+        literal_f32(&[b], &cols[0])?,
+    ])?;
+    Ok(CnfEval {
+        nll: out[0].get_first_element::<f32>()?,
+        bpd: out[1].get_first_element::<f32>()?,
+        nfe: res.stats.nfe,
+        r2: mean(&cols[1]),
+        kinetic: mean(&cols[2]),
+        jacobian: mean(&cols[3]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Latent ODE
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct LatentEval {
+    pub nll: f32,
+    pub mse: f32,
+    pub nfe: usize,
+}
+
+/// Encode (posterior mean), adaptively solve the latent trajectory through
+/// the observation grid, decode, and report masked NLL/MSE + NFE.
+pub fn latent_eval(
+    rt: &Runtime,
+    store: &ParamStore,
+    x: &[f32],
+    mask: &[f32],
+    t_pts: usize,
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<LatentEval> {
+    // 1) encode
+    let enc = rt.exec("latent_encode")?;
+    let mut inputs = vec![];
+    let x_shape;
+    {
+        let spec = &enc.spec;
+        for inp in &spec.inputs {
+            match inp.role_kind() {
+                "param" => inputs.push(literal_f32(&inp.shape, store.value(&inp.name)?)?),
+                "batch" => {
+                    let data = if inp.name == "x" { x } else { mask };
+                    inputs.push(literal_f32(&inp.shape, data)?);
+                }
+                other => return Err(anyhow!("latent_encode role {other}")),
+            }
+        }
+        x_shape = spec
+            .inputs
+            .iter()
+            .find(|i| i.name == "x")
+            .map(|i| i.shape.clone())
+            .unwrap();
+    }
+    let out = enc.run(&inputs)?;
+    let mu = out[0].to_vec::<f32>()?; // posterior mean as z0
+
+    // 2) adaptive latent solve through the grid
+    let dyn_f = XlaDynamics::from_store(rt, "latent_dynamics", store, None)?;
+    let (b, l) = (dyn_f.batch, dyn_f.dim);
+    let times: Vec<f32> = (0..t_pts)
+        .map(|i| i as f32 / (t_pts - 1) as f32)
+        .collect();
+    let (traj, stats) = solve_to_times(dyn_f, &times, &mu, tb, opts);
+
+    // 3) decode + metrics
+    let mut ztraj = Vec::with_capacity(t_pts * b * l);
+    for z in &traj {
+        ztraj.extend_from_slice(z);
+    }
+    let met = rt.exec("latent_traj_metrics")?;
+    let mut minputs = vec![];
+    for inp in &met.spec.inputs {
+        match inp.role_kind() {
+            "param" => minputs.push(literal_f32(&inp.shape, store.value(&inp.name)?)?),
+            "batch" => match inp.name.as_str() {
+                "ztraj" => minputs.push(literal_f32(&inp.shape, &ztraj)?),
+                "x" => minputs.push(literal_f32(&x_shape, x)?),
+                "mask" => minputs.push(literal_f32(&x_shape, mask)?),
+                other => return Err(anyhow!("latent metrics input {other}")),
+            },
+            other => return Err(anyhow!("latent metrics role {other}")),
+        }
+    }
+    let mout = met.run(&minputs)?;
+    Ok(LatentEval {
+        nll: mout[0].get_first_element::<f32>()?,
+        mse: mout[1].get_first_element::<f32>()?,
+        nfe: stats.nfe,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Toy model (Figs 1, 9)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ToyEval {
+    pub mse: f32,
+    pub nfe: usize,
+}
+
+/// Adaptive solve of the toy ODE and MSE against the target map x + x^3.
+pub fn toy_eval(
+    rt: &Runtime,
+    store: &ParamStore,
+    x: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<ToyEval> {
+    let mut dyn_f = XlaDynamics::from_store(rt, "toy_dynamics", store, None)?;
+    let res = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, x, tb, opts);
+    let mse = x
+        .iter()
+        .zip(&res.y)
+        .map(|(x0, z1)| {
+            let tgt = x0 + x0 * x0 * x0;
+            (z1 - tgt) * (z1 - tgt)
+        })
+        .sum::<f32>()
+        / x.len() as f32;
+    Ok(ToyEval { mse, nfe: res.stats.nfe })
+}

@@ -1,0 +1,118 @@
+//! Metrics recording: in-memory step logs with CSV/JSONL export, used by
+//! every experiment to persist the series the paper's figures plot.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct MetricsLog {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl MetricsLog {
+    pub fn new(columns: &[&str]) -> MetricsLog {
+        MetricsLog {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "metrics row width");
+        self.rows.push(row);
+    }
+
+    pub fn col(&self, name: &str) -> Vec<f64> {
+        let idx = self
+            .columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("no metrics column {name:?}"));
+        self.rows.iter().map(|r| r[idx]).collect()
+    }
+
+    pub fn last(&self, name: &str) -> f64 {
+        *self.col(name).last().expect("non-empty log")
+    }
+
+    /// Mean of the last `k` entries of a column (smoothed terminal value).
+    pub fn tail_mean(&self, name: &str, k: usize) -> f64 {
+        let c = self.col(name);
+        let t = &c[c.len().saturating_sub(k)..];
+        t.iter().sum::<f64>() / t.len().max(1) as f64
+    }
+
+    pub fn to_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for r in &self.rows {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            writeln!(f, "{}", cells.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn to_jsonl(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.rows {
+            let obj = Json::Obj(
+                self.columns
+                    .iter()
+                    .cloned()
+                    .zip(r.iter().map(|v| Json::Num(*v)))
+                    .collect(),
+            );
+            writeln!(f, "{}", obj.to_string())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn columns_and_tail() {
+        let mut m = MetricsLog::new(&["step", "loss"]);
+        for i in 0..10 {
+            m.push(vec![i as f64, 10.0 - i as f64]);
+        }
+        assert_eq!(m.col("loss")[0], 10.0);
+        assert_eq!(m.last("loss"), 1.0);
+        assert!((m.tail_mean("loss", 2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_jsonl_roundtrip() {
+        let mut m = MetricsLog::new(&["a", "b"]);
+        m.push(vec![1.0, 2.5]);
+        let dir = std::env::temp_dir()
+            .join(format!("taynode-metrics-{}", std::process::id()));
+        m.to_csv(&dir.join("m.csv")).unwrap();
+        m.to_jsonl(&dir.join("m.jsonl")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("m.csv")).unwrap();
+        assert!(csv.starts_with("a,b\n1,2.5"));
+        let jl = std::fs::read_to_string(dir.join("m.jsonl")).unwrap();
+        let j = Json::parse(jl.lines().next().unwrap()).unwrap();
+        assert_eq!(j.req("b").unwrap().as_f64().unwrap(), 2.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut m = MetricsLog::new(&["a"]);
+        m.push(vec![1.0, 2.0]);
+    }
+}

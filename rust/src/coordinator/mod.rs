@@ -1,0 +1,12 @@
+//! L3 coordinator: training orchestration (`trainer`), evaluation
+//! instrumentation (`evaluator`), schedules, and metrics persistence.
+
+pub mod evaluator;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use evaluator::{cnf_eval, latent_eval, mnist_eval, mnist_reg_quantities, toy_eval};
+pub use metrics::MetricsLog;
+pub use schedule::Schedule;
+pub use trainer::{BatchInputs, StepMetrics, Trainer};

@@ -1,0 +1,80 @@
+//! Learning-rate and regularization-weight schedules.  The paper's MNIST
+//! recipe is a piecewise-constant lr decay (App. B.2); the related-work
+//! discussion (Chang et al.) motivates optional λ tapering.
+
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Const(f32),
+    /// (boundaries in steps, values); values has one more entry.
+    Piecewise(Vec<usize>, Vec<f32>),
+    /// Linear decay from `from` to `to` over `steps`.
+    Linear { from: f32, to: f32, steps: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match self {
+            Schedule::Const(v) => *v,
+            Schedule::Piecewise(bounds, values) => {
+                let mut i = 0;
+                while i < bounds.len() && step >= bounds[i] {
+                    i += 1;
+                }
+                values[i]
+            }
+            Schedule::Linear { from, to, steps } => {
+                if *steps == 0 || step >= *steps {
+                    *to
+                } else {
+                    from + (to - from) * step as f32 / *steps as f32
+                }
+            }
+        }
+    }
+
+    /// The paper's MNIST decay (scaled): drop by 10x at the given fractions
+    /// of the total budget.
+    pub fn mnist_lr(base: f32, total: usize) -> Schedule {
+        Schedule::Piecewise(
+            vec![total * 3 / 8, total * 5 / 8, total * 7 / 8],
+            vec![base, base * 0.1, base * 0.01, base * 0.001],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn piecewise_boundaries() {
+        let s = Schedule::Piecewise(vec![10, 20], vec![1.0, 0.1, 0.01]);
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 0.1);
+        assert_eq!(s.at(19), 0.1);
+        assert_eq!(s.at(20), 0.01);
+        assert_eq!(s.at(1000), 0.01);
+    }
+
+    #[test]
+    fn linear_decay() {
+        let s = Schedule::Linear { from: 1.0, to: 0.0, steps: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert!((s.at(5) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(10), 0.0);
+        assert_eq!(s.at(99), 0.0);
+    }
+
+    #[test]
+    fn mnist_schedule_monotone() {
+        let s = Schedule::mnist_lr(0.1, 160);
+        let mut prev = f32::MAX;
+        for step in [0, 60, 100, 140, 159] {
+            let v = s.at(step);
+            assert!(v <= prev);
+            prev = v;
+        }
+        assert!((s.at(159) - 1e-4).abs() < 1e-7);
+    }
+}

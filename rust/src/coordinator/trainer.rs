@@ -1,0 +1,187 @@
+//! The training orchestrator: drives an exported train-step executable,
+//! feeding parameters/optimizer state/batch/probes/scalars per the manifest
+//! roles and writing updated state back into the `ParamStore`.
+//!
+//! One `Trainer::step` = one optimizer update = one PJRT execution of the
+//! whole fused train step (ODE solve + loss + `R_K` via jet + optimizer),
+//! exactly the paper's fixed-grid training regime.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::client::{literal_f32, literal_i32, Executable, Runtime};
+use crate::runtime::params::ParamStore;
+use crate::util::rng::Pcg;
+
+/// Named batch arrays fed to `batch:*` inputs (f32) and `batch:labels`
+/// (i32) — filled by the experiment's data pipeline each step.
+#[derive(Default)]
+pub struct BatchInputs {
+    pub f32s: BTreeMap<String, Vec<f32>>,
+    pub i32s: BTreeMap<String, Vec<i32>>,
+}
+
+impl BatchInputs {
+    pub fn f(mut self, name: &str, data: Vec<f32>) -> Self {
+        self.f32s.insert(name.to_string(), data);
+        self
+    }
+
+    pub fn i(mut self, name: &str, data: Vec<i32>) -> Self {
+        self.i32s.insert(name.to_string(), data);
+        self
+    }
+}
+
+/// Scalar metrics a train step returns (everything after the state outputs).
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    pub values: Vec<f32>,
+}
+
+impl StepMetrics {
+    /// Train steps order their metric outputs (loss, primary, reg, ...).
+    pub fn loss(&self) -> f32 {
+        self.values.first().copied().unwrap_or(f32::NAN)
+    }
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    exec: Rc<Executable>,
+    pub store: ParamStore,
+    pub step_count: usize,
+    rng: Pcg,
+    /// Ordered (role, name) of state inputs — outputs map back positionally.
+    state_roles: Vec<(String, String)>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Build a trainer for a train-step artifact; loads the model's initial
+    /// parameters and creates whatever optimizer slots the artifact needs.
+    pub fn new(rt: &'rt Runtime, artifact: &str, seed: u64) -> Result<Trainer<'rt>> {
+        let exec = rt.exec(artifact)?;
+        if exec.spec.kind != "train" {
+            bail!("{artifact} is kind {:?}, not train", exec.spec.kind);
+        }
+        let model = rt.manifest.model(&exec.spec.model)?.clone();
+        let values = rt.load_params(&exec.spec.model)?;
+        let mut store = ParamStore::new(model.layout, values);
+
+        let mut state_roles = vec![];
+        for inp in &exec.spec.inputs {
+            let kind = inp.role_kind();
+            if kind == "param" {
+                state_roles.push(("param".to_string(), inp.name.clone()));
+            } else if kind == "opt" {
+                let mut parts = inp.role.splitn(3, ':');
+                parts.next();
+                let slot = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("bad opt role {:?}", inp.role))?
+                    .to_string();
+                let pname = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("bad opt role {:?}", inp.role))?
+                    .to_string();
+                if !store.slots.contains_key(&slot) {
+                    store.add_slot(&slot);
+                }
+                state_roles.push((format!("opt:{slot}"), pname));
+            }
+        }
+        Ok(Trainer {
+            rt,
+            exec,
+            store,
+            step_count: 0,
+            rng: Pcg::new(seed),
+            state_roles,
+        })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.exec.spec.model
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        &self.exec.spec.name
+    }
+
+    /// Run one train step: assemble inputs by role, execute, write back
+    /// state, return the metric outputs.
+    pub fn step(&mut self, batch: &BatchInputs, lam: f32, lr: f32) -> Result<StepMetrics> {
+        self.step_count += 1;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.exec.spec.inputs.len());
+        for inp in &self.exec.spec.inputs.clone() {
+            let lit = match inp.role_kind() {
+                "param" => literal_f32(&inp.shape, self.store.value(&inp.name)?)?,
+                "opt" => {
+                    let mut parts = inp.role.splitn(3, ':');
+                    parts.next();
+                    let slot = parts.next().unwrap();
+                    let pname = parts.next().unwrap();
+                    literal_f32(&inp.shape, self.store.slot_value(slot, pname)?)?
+                }
+                "batch" => {
+                    if inp.dtype.starts_with("int") {
+                        let data = batch.i32s.get(&inp.name).ok_or_else(|| {
+                            anyhow!("missing i32 batch input {:?}", inp.name)
+                        })?;
+                        literal_i32(&inp.shape, data)?
+                    } else {
+                        let data = batch.f32s.get(&inp.name).ok_or_else(|| {
+                            anyhow!("missing batch input {:?}", inp.name)
+                        })?;
+                        literal_f32(&inp.shape, data)?
+                    }
+                }
+                "rng" => {
+                    // eps  -> Rademacher probe (Hutchinson / RNODE B-term)
+                    // eps_z-> standard normal (posterior sampling)
+                    let n = inp.elems();
+                    let data = if inp.name.contains("_z") {
+                        self.rng.normal_vec(n)
+                    } else {
+                        self.rng.rademacher(n)
+                    };
+                    literal_f32(&inp.shape, &data)?
+                }
+                "scalar" => {
+                    let v = match inp.name.as_str() {
+                        "lam" => lam,
+                        "lr" => lr,
+                        "step" => self.step_count as f32,
+                        other => bail!("unknown scalar input {other:?}"),
+                    };
+                    xla::Literal::scalar(v)
+                }
+                other => bail!("unsupported role kind {other:?}"),
+            };
+            inputs.push(lit);
+        }
+
+        let outputs = self.exec.run(&inputs)?;
+        let n_state = self.state_roles.len();
+        if outputs.len() < n_state {
+            bail!("train step returned {} outputs < state {}", outputs.len(), n_state);
+        }
+        for (i, (role, pname)) in self.state_roles.clone().iter().enumerate() {
+            let data = outputs[i].to_vec::<f32>()?;
+            let idx = self.store.index_of(pname)?;
+            if role == "param" {
+                self.store.set_value(idx, data);
+            } else {
+                let slot = role.strip_prefix("opt:").unwrap();
+                self.store.set_slot_value(slot, idx, data);
+            }
+        }
+        let mut metrics = StepMetrics::default();
+        for out in &outputs[n_state..] {
+            metrics.values.push(out.get_first_element::<f32>()?);
+        }
+        Ok(metrics)
+    }
+}

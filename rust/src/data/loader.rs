@@ -1,0 +1,192 @@
+//! Batching and train/test splitting over in-memory datasets.
+//!
+//! The trainer consumes fixed-size batches (artifact shapes are static), so
+//! the loader guarantees every yielded batch has exactly `batch` rows,
+//! dropping the epoch remainder (standard drop-last semantics).
+
+use crate::util::rng::Pcg;
+
+/// Row-major feature matrix with optional integer labels.
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub labels: Option<Vec<i32>>,
+    pub n: usize,
+    /// Row width (product of per-example feature dims).
+    pub row: usize,
+    /// Optional second stream with its own row width (e.g. masks).
+    pub x2: Option<(Vec<f32>, usize)>,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, row: usize) -> Dataset {
+        assert_eq!(x.len() % row, 0);
+        let n = x.len() / row;
+        Dataset { x, labels: None, n, row, x2: None }
+    }
+
+    pub fn with_labels(mut self, labels: Vec<i32>) -> Dataset {
+        assert_eq!(labels.len(), self.n);
+        self.labels = Some(labels);
+        self
+    }
+
+    pub fn with_second(mut self, x2: Vec<f32>, row2: usize) -> Dataset {
+        assert_eq!(x2.len() / row2, self.n);
+        self.x2 = Some((x2, row2));
+        self
+    }
+
+    /// Split off the last `frac` of rows as a held-out set.
+    pub fn split(self, frac: f32) -> (Dataset, Dataset) {
+        let n_test = ((self.n as f32 * frac) as usize).clamp(1, self.n - 1);
+        let n_train = self.n - n_test;
+        let cut = n_train * self.row;
+        let (xtr, xte) = (self.x[..cut].to_vec(), self.x[cut..].to_vec());
+        let (ltr, lte) = match &self.labels {
+            Some(l) => (Some(l[..n_train].to_vec()), Some(l[n_train..].to_vec())),
+            None => (None, None),
+        };
+        let (s_tr, s_te) = match &self.x2 {
+            Some((x2, r2)) => {
+                let c2 = n_train * r2;
+                (
+                    Some((x2[..c2].to_vec(), *r2)),
+                    Some((x2[c2..].to_vec(), *r2)),
+                )
+            }
+            None => (None, None),
+        };
+        (
+            Dataset { x: xtr, labels: ltr, n: n_train, row: self.row, x2: s_tr },
+            Dataset { x: xte, labels: lte, n: n_test, row: self.row, x2: s_te },
+        )
+    }
+}
+
+/// One materialized batch (contiguous copies — the PJRT transfer needs
+/// contiguous host buffers anyway).
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub x2: Vec<f32>,
+    pub indices: Vec<usize>,
+}
+
+/// Shuffling batcher with drop-last semantics.
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Batcher<'a> {
+        assert!(batch <= ds.n, "batch {batch} > dataset {n}", n = ds.n);
+        let mut b = Batcher {
+            ds,
+            batch,
+            order: (0..ds.n).collect(),
+            cursor: 0,
+            rng: Pcg::new(seed),
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.n / self.batch
+    }
+
+    /// Next batch, reshuffling at epoch boundaries.
+    pub fn next(&mut self) -> Batch {
+        if self.cursor + self.batch > self.ds.n {
+            self.reshuffle();
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        let row = self.ds.row;
+        let mut x = Vec::with_capacity(self.batch * row);
+        let mut labels = Vec::with_capacity(self.batch);
+        let (r2, has2) = match &self.ds.x2 {
+            Some((_, r2)) => (*r2, true),
+            None => (0, false),
+        };
+        let mut x2 = Vec::with_capacity(self.batch * r2);
+        for &i in idx {
+            x.extend_from_slice(&self.ds.x[i * row..(i + 1) * row]);
+            if let Some(l) = &self.ds.labels {
+                labels.push(l[i]);
+            }
+            if has2 {
+                let (xs, _) = self.ds.x2.as_ref().unwrap();
+                x2.extend_from_slice(&xs[i * r2..(i + 1) * r2]);
+            }
+        }
+        Batch { x, labels, x2, indices: idx.to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::Prop;
+
+    fn toy_ds(n: usize) -> Dataset {
+        let x: Vec<f32> = (0..n * 3).map(|i| i as f32).collect();
+        let l: Vec<i32> = (0..n as i32).collect();
+        Dataset::new(x, 3).with_labels(l)
+    }
+
+    #[test]
+    fn batches_have_exact_size_and_pairing() {
+        let ds = toy_ds(10);
+        let mut b = Batcher::new(&ds, 4, 0);
+        for _ in 0..7 {
+            let batch = b.next();
+            assert_eq!(batch.x.len(), 12);
+            assert_eq!(batch.labels.len(), 4);
+            // row pairing: row i begins with 3*label
+            for (k, l) in batch.labels.iter().enumerate() {
+                assert_eq!(batch.x[k * 3], (*l * 3) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_examples_property() {
+        Prop::new(30).run("epoch-coverage", |rng, _| {
+            let n = 8 + rng.below(40);
+            let bsz = 1 + rng.below(n.min(9));
+            let ds = toy_ds(n);
+            let mut b = Batcher::new(&ds, bsz, rng.next_u64());
+            let per = b.batches_per_epoch();
+            let mut seen = vec![false; n];
+            for _ in 0..per {
+                for &i in &b.next().indices {
+                    assert!(!seen[i], "duplicate within epoch");
+                    seen[i] = true;
+                }
+            }
+            let covered = seen.iter().filter(|s| **s).count();
+            assert_eq!(covered, per * bsz);
+        });
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let ds = toy_ds(10).with_second(vec![1.0; 20], 2);
+        let (tr, te) = ds.split(0.25);
+        assert_eq!(tr.n, 8);
+        assert_eq!(te.n, 2);
+        assert_eq!(tr.x.len(), 24);
+        assert_eq!(te.labels.as_ref().unwrap().len(), 2);
+        assert_eq!(te.x2.as_ref().unwrap().0.len(), 4);
+    }
+}

@@ -1,0 +1,179 @@
+//! Synthetic tabular density-estimation data (MINIBOONE substitute,
+//! DESIGN.md §3): a correlated Gaussian mixture — continuous, multi-modal,
+//! anisotropic — the properties the FFJORD tabular experiment exercises.
+
+use crate::util::rng::Pcg;
+
+pub struct TabularSim {
+    pub x: Vec<f32>, // [n, d], standardized
+    pub n: usize,
+    pub d: usize,
+}
+
+pub struct TabularGen {
+    means: Vec<Vec<f32>>,
+    chols: Vec<Vec<f32>>, // lower-triangular [d*d]
+    weights: Vec<f32>,
+    d: usize,
+}
+
+impl TabularGen {
+    pub fn new(d: usize, components: usize, seed: u64) -> TabularGen {
+        let mut rng = Pcg::new(seed ^ 0xb00e);
+        let mut means = vec![];
+        let mut chols = vec![];
+        let mut weights = vec![];
+        for _ in 0..components {
+            means.push((0..d).map(|_| rng.normal() * 1.8).collect());
+            let mut l = vec![0.0f32; d * d];
+            for i in 0..d {
+                for j in 0..i {
+                    l[i * d + j] = 0.35 * rng.normal();
+                }
+                l[i * d + i] = rng.range(0.4, 1.0);
+            }
+            chols.push(l);
+            weights.push(rng.range(0.5, 1.5));
+        }
+        let s: f32 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= s;
+        }
+        TabularGen { means, chols, weights, d }
+    }
+
+    pub fn sample(&self, n: usize, seed: u64) -> TabularSim {
+        let mut rng = Pcg::new(seed);
+        let d = self.d;
+        let mut x = vec![0.0f32; n * d];
+        for i in 0..n {
+            // pick component
+            let u = rng.uniform();
+            let mut acc = 0.0;
+            let mut comp = 0;
+            for (k, w) in self.weights.iter().enumerate() {
+                acc += w;
+                if u <= acc {
+                    comp = k;
+                    break;
+                }
+            }
+            let z: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let l = &self.chols[comp];
+            let m = &self.means[comp];
+            for r in 0..d {
+                let mut v = m[r];
+                for c in 0..=r {
+                    v += l[r * d + c] * z[c];
+                }
+                x[i * d + r] = v;
+            }
+        }
+        // standardize (FFJORD preprocessing)
+        for c in 0..d {
+            let mut mean = 0.0f32;
+            for i in 0..n {
+                mean += x[i * d + c];
+            }
+            mean /= n as f32;
+            let mut var = 0.0f32;
+            for i in 0..n {
+                let v = x[i * d + c] - mean;
+                var += v * v;
+            }
+            let std = (var / n as f32).sqrt().max(1e-6);
+            for i in 0..n {
+                x[i * d + c] = (x[i * d + c] - mean) / std;
+            }
+        }
+        TabularSim { x, n, d }
+    }
+}
+
+/// Image-like density data for the MNIST-CNF experiment (Table 2): dequantized
+/// low-res digits from the stroke renderer, logit-transformed as in FFJORD.
+pub fn image_density(n: usize, side: usize, seed: u64) -> TabularSim {
+    let mut rng = Pcg::new(seed);
+    let d = side * side;
+    let mut x = vec![0.0f32; n * d];
+    for i in 0..n {
+        let class = i % crate::data::synth_mnist::N_CLASS;
+        let img14 = crate::data::synth_mnist::render(class, &mut rng);
+        // downsample 14x14 -> side x side by box averaging
+        for oy in 0..side {
+            for ox in 0..side {
+                let mut acc = 0.0f32;
+                let mut cnt = 0.0f32;
+                let y0 = oy * 14 / side;
+                let y1 = ((oy + 1) * 14).div_ceil(side);
+                let x0 = ox * 14 / side;
+                let x1 = ((ox + 1) * 14).div_ceil(side);
+                for yy in y0..y1 {
+                    for xx in x0..x1 {
+                        acc += img14[yy * 14 + xx];
+                        cnt += 1.0;
+                    }
+                }
+                let v = acc / cnt;
+                // dequantize + logit transform (alpha=0.05), FFJORD-style
+                let u = (v * 255.0 + rng.uniform()) / 256.0;
+                let p = 0.05 + 0.9 * u;
+                x[i * d + oy * side + ox] = (p / (1.0 - p)).ln();
+            }
+        }
+    }
+    TabularSim { x, n, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardized_moments() {
+        let g = TabularGen::new(8, 3, 1);
+        let s = g.sample(4000, 2);
+        for c in 0..8 {
+            let mean: f32 =
+                (0..s.n).map(|i| s.x[i * 8 + c]).sum::<f32>() / s.n as f32;
+            let var: f32 = (0..s.n)
+                .map(|i| (s.x[i * 8 + c] - mean).powi(2))
+                .sum::<f32>()
+                / s.n as f32;
+            assert!(mean.abs() < 0.05, "col {c} mean {mean}");
+            assert!((var - 1.0).abs() < 0.05, "col {c} var {var}");
+        }
+    }
+
+    #[test]
+    fn multimodal_structure_visible() {
+        // With well-separated means the 1-D marginal must be non-gaussian:
+        // check excess spread between mixture draws vs a refit gaussian by
+        // comparing 4th moment (kurtosis signature of multimodality).
+        let g = TabularGen::new(4, 2, 7);
+        let s = g.sample(4000, 3);
+        let col: Vec<f32> = (0..s.n).map(|i| s.x[i * 4]).collect();
+        let m4: f32 =
+            col.iter().map(|v| v.powi(4)).sum::<f32>() / col.len() as f32;
+        // standardized gaussian has kurtosis 3; bimodal mixtures deviate
+        assert!((m4 - 3.0).abs() > 0.1, "kurtosis {m4}");
+    }
+
+    #[test]
+    fn image_density_shapes_and_finite() {
+        let s = image_density(30, 8, 4);
+        assert_eq!(s.d, 64);
+        assert_eq!(s.x.len(), 30 * 64);
+        assert!(s.x.iter().all(|v| v.is_finite()));
+        // logit range for p in [0.05, 0.95]
+        let lo = (0.05f32 / 0.95).ln();
+        let hi = (0.95f32 / 0.05).ln();
+        assert!(s.x.iter().all(|v| *v >= lo - 1e-4 && *v <= hi + 1e-4));
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = TabularGen::new(8, 3, 1);
+        assert_eq!(g.sample(50, 5).x, g.sample(50, 5).x);
+    }
+}

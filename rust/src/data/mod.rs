@@ -1,0 +1,9 @@
+//! Synthetic dataset generators (paper-dataset substitutions, DESIGN.md §3)
+//! and the batching pipeline.
+
+pub mod loader;
+pub mod miniboone_sim;
+pub mod physionet_sim;
+pub mod synth_mnist;
+
+pub use loader::{Batch, Batcher, Dataset};

@@ -1,0 +1,169 @@
+//! Synthetic ICU-like irregular multivariate time series (PhysioNet 2012
+//! substitute, DESIGN.md §3).
+//!
+//! Generator: a stable random linear latent ODE  dx/dt = A x  observed
+//! through a fixed random nonlinear map with per-feature sampling rates and
+//! missingness — matching the structure the Latent-ODE model assumes
+//! (smooth shared latent dynamics, sparse irregular observations).  Like
+//! the paper's preprocessing (hourly quantization to 49 shared stamps), all
+//! trajectories share one T-point grid; irregularity enters via the mask.
+
+use crate::solvers::{solve_fixed, tableau};
+use crate::util::rng::Pcg;
+
+pub const LATENT: usize = 6;
+
+pub struct PhysioSim {
+    /// [n, t, f] observations (0 where unobserved)
+    pub x: Vec<f32>,
+    /// [n, t, f] observation mask in {0, 1}
+    pub mask: Vec<f32>,
+    pub n: usize,
+    pub t: usize,
+    pub f: usize,
+}
+
+pub struct PhysioGen {
+    a: Vec<f32>,       // [LATENT, LATENT] stable dynamics
+    w: Vec<f32>,       // [f, LATENT] observation map
+    b: Vec<f32>,       // [f]
+    rates: Vec<f32>,   // per-feature observation probability
+    f: usize,
+}
+
+impl PhysioGen {
+    pub fn new(f: usize, seed: u64) -> PhysioGen {
+        let mut rng = Pcg::new(seed ^ 0x9e1c);
+        // A = -0.6 I + 1.2 * skew + 0.15 * noise: oscillatory but decaying.
+        let mut a = vec![0.0f32; LATENT * LATENT];
+        let mut skew = vec![0.0f32; LATENT * LATENT];
+        for i in 0..LATENT {
+            for j in (i + 1)..LATENT {
+                let v = rng.normal();
+                skew[i * LATENT + j] = v;
+                skew[j * LATENT + i] = -v;
+            }
+        }
+        for i in 0..LATENT {
+            for j in 0..LATENT {
+                a[i * LATENT + j] = 1.2 * skew[i * LATENT + j] + 0.15 * rng.normal();
+            }
+            a[i * LATENT + i] -= 0.6;
+        }
+        let w = (0..f * LATENT).map(|_| rng.normal() * 0.8).collect();
+        let b = (0..f).map(|_| rng.normal() * 0.3).collect();
+        let rates = (0..f).map(|_| rng.range(0.25, 0.8)).collect();
+        PhysioGen { a, w, b, rates, f }
+    }
+
+    /// Latent trajectory on a uniform grid via the in-crate RK4 solver.
+    fn latent_traj(&self, x0: &[f32], t_pts: usize) -> Vec<Vec<f32>> {
+        let tb = tableau::rk4();
+        let mut out = vec![x0.to_vec()];
+        let mut x = x0.to_vec();
+        for i in 0..t_pts - 1 {
+            let t0 = i as f32 / (t_pts - 1) as f32;
+            let t1 = (i + 1) as f32 / (t_pts - 1) as f32;
+            let a = &self.a;
+            let (xn, _) = solve_fixed(
+                move |_t: f32, y: &[f32], dy: &mut [f32]| {
+                    crate::tensor::matvec(a, LATENT, LATENT, y, dy);
+                },
+                t0,
+                t1,
+                &x,
+                4,
+                &tb,
+            );
+            x = xn.clone();
+            out.push(xn);
+        }
+        out
+    }
+
+    pub fn sample(&self, n: usize, t_pts: usize, seed: u64) -> PhysioSim {
+        let mut rng = Pcg::new(seed);
+        let f = self.f;
+        let mut x = vec![0.0f32; n * t_pts * f];
+        let mut mask = vec![0.0f32; n * t_pts * f];
+        for i in 0..n {
+            let x0: Vec<f32> = (0..LATENT).map(|_| rng.normal()).collect();
+            let traj = self.latent_traj(&x0, t_pts);
+            for (ti, lat) in traj.iter().enumerate() {
+                for fi in 0..f {
+                    let mut v = self.b[fi];
+                    for (k, l) in lat.iter().enumerate() {
+                        v += self.w[fi * LATENT + k] * l;
+                    }
+                    // bounded vitals-like signal + measurement noise
+                    let obs = v.tanh() + 0.05 * rng.normal();
+                    let seen = rng.uniform() < self.rates[fi];
+                    let idx = (i * t_pts + ti) * f + fi;
+                    if seen {
+                        x[idx] = obs;
+                        mask[idx] = 1.0;
+                    }
+                }
+            }
+        }
+        PhysioSim { x, mask, n, t: t_pts, f }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_mask_consistency() {
+        let g = PhysioGen::new(8, 3);
+        let d = g.sample(10, 16, 1);
+        assert_eq!(d.x.len(), 10 * 16 * 8);
+        assert_eq!(d.mask.len(), d.x.len());
+        for (xi, mi) in d.x.iter().zip(&d.mask) {
+            assert!(*mi == 0.0 || *mi == 1.0);
+            if *mi == 0.0 {
+                assert_eq!(*xi, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn observation_rate_in_expected_band() {
+        let g = PhysioGen::new(8, 3);
+        let d = g.sample(50, 16, 2);
+        let rate = d.mask.iter().sum::<f32>() / d.mask.len() as f32;
+        assert!((0.2..0.85).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn signals_bounded_and_smooth() {
+        let g = PhysioGen::new(4, 5);
+        let d = g.sample(5, 24, 3);
+        assert!(d.x.iter().all(|v| v.abs() <= 1.3));
+        // observed values at adjacent times shouldn't jump wildly
+        // (latent dynamics are smooth; noise is 0.05)
+        let mut max_jump = 0.0f32;
+        for i in 0..d.n {
+            for ti in 0..d.t - 1 {
+                for fi in 0..d.f {
+                    let a = (i * d.t + ti) * d.f + fi;
+                    let b = (i * d.t + ti + 1) * d.f + fi;
+                    if d.mask[a] == 1.0 && d.mask[b] == 1.0 {
+                        max_jump = max_jump.max((d.x[a] - d.x[b]).abs());
+                    }
+                }
+            }
+        }
+        assert!(max_jump < 1.0, "max jump {max_jump}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = PhysioGen::new(8, 3);
+        let a = g.sample(5, 16, 9);
+        let b = g.sample(5, 16, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.mask, b.mask);
+    }
+}

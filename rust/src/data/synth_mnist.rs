@@ -1,0 +1,196 @@
+//! Procedural MNIST substitute: 14x14 grayscale digits rendered from
+//! per-class stroke templates with random affine jitter, stroke width
+//! variation and pixel noise (DESIGN.md §3: the MNIST experiments probe
+//! NFE/loss trade-offs on a learnable 10-class image problem; the exact
+//! glyph corpus is irrelevant to the code path being reproduced).
+
+use crate::util::rng::Pcg;
+
+pub const SIDE: usize = 14;
+pub const DIM: usize = SIDE * SIDE;
+pub const N_CLASS: usize = 10;
+
+/// Polyline stroke templates per digit, in the unit square (y down).
+fn template(class: usize) -> Vec<Vec<(f32, f32)>> {
+    fn ellipse(cx: f32, cy: f32, rx: f32, ry: f32, n: usize,
+               a0: f32, a1: f32) -> Vec<(f32, f32)> {
+        (0..=n)
+            .map(|i| {
+                let a = a0 + (a1 - a0) * i as f32 / n as f32;
+                (cx + rx * a.cos(), cy + ry * a.sin())
+            })
+            .collect()
+    }
+    use std::f32::consts::PI;
+    match class {
+        0 => vec![ellipse(0.5, 0.5, 0.26, 0.36, 16, 0.0, 2.0 * PI)],
+        1 => vec![vec![(0.38, 0.25), (0.52, 0.12), (0.52, 0.88)]],
+        2 => vec![
+            ellipse(0.5, 0.3, 0.22, 0.18, 8, PI, 2.2 * PI),
+            vec![(0.68, 0.42), (0.3, 0.85), (0.72, 0.85)],
+        ],
+        3 => vec![
+            ellipse(0.48, 0.3, 0.2, 0.17, 8, 1.2 * PI, 2.6 * PI),
+            ellipse(0.48, 0.67, 0.22, 0.19, 8, 1.4 * PI, 2.8 * PI),
+        ],
+        4 => vec![
+            vec![(0.62, 0.1), (0.28, 0.6), (0.78, 0.6)],
+            vec![(0.62, 0.35), (0.62, 0.9)],
+        ],
+        5 => vec![
+            vec![(0.7, 0.12), (0.34, 0.12), (0.32, 0.45)],
+            ellipse(0.48, 0.65, 0.22, 0.22, 10, 1.5 * PI, 2.9 * PI),
+        ],
+        6 => vec![
+            vec![(0.62, 0.1), (0.4, 0.45)],
+            ellipse(0.5, 0.65, 0.2, 0.22, 12, 0.0, 2.0 * PI),
+        ],
+        7 => vec![vec![(0.28, 0.14), (0.74, 0.14), (0.44, 0.88)]],
+        8 => vec![
+            ellipse(0.5, 0.3, 0.18, 0.17, 12, 0.0, 2.0 * PI),
+            ellipse(0.5, 0.68, 0.21, 0.2, 12, 0.0, 2.0 * PI),
+        ],
+        9 => vec![
+            ellipse(0.52, 0.33, 0.19, 0.2, 12, 0.0, 2.0 * PI),
+            vec![(0.71, 0.35), (0.64, 0.9)],
+        ],
+        _ => panic!("class out of range"),
+    }
+}
+
+fn dist_to_segment(px: f32, py: f32, a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 < 1e-12 {
+        0.0
+    } else {
+        (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0)
+    };
+    let (cx, cy) = (ax + t * dx, ay + t * dy);
+    ((px - cx) * (px - cx) + (py - cy) * (py - cy)).sqrt()
+}
+
+/// Render one digit with random jitter. Output: DIM floats in [0, 1].
+pub fn render(class: usize, rng: &mut Pcg) -> Vec<f32> {
+    let angle = rng.range(-0.25, 0.25);
+    let scale = rng.range(0.85, 1.12);
+    let (tx, ty) = (rng.range(-0.07, 0.07), rng.range(-0.07, 0.07));
+    let width = rng.range(0.045, 0.075);
+    let (sin, cos) = (angle.sin(), angle.cos());
+    let warp = |(x, y): (f32, f32)| {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (rx, ry) = (cos * cx - sin * cy, sin * cx + cos * cy);
+        (0.5 + scale * rx + tx, 0.5 + scale * ry + ty)
+    };
+    let strokes: Vec<Vec<(f32, f32)>> = template(class)
+        .into_iter()
+        .map(|s| s.into_iter().map(warp).collect())
+        .collect();
+
+    let mut img = vec![0.0f32; DIM];
+    for iy in 0..SIDE {
+        for ix in 0..SIDE {
+            let px = (ix as f32 + 0.5) / SIDE as f32;
+            let py = (iy as f32 + 0.5) / SIDE as f32;
+            let mut best = f32::MAX;
+            for s in &strokes {
+                for w in s.windows(2) {
+                    best = best.min(dist_to_segment(px, py, w[0], w[1]));
+                }
+            }
+            let v = (-(best * best) / (2.0 * width * width)).exp();
+            let noise = rng.range(-0.04, 0.04);
+            img[iy * SIDE + ix] = (v + noise).clamp(0.0, 1.0);
+        }
+    }
+    img
+}
+
+/// A full dataset: `n` examples with balanced random classes.
+pub struct MnistSim {
+    pub images: Vec<f32>, // [n, DIM]
+    pub labels: Vec<i32>, // [n]
+    pub n: usize,
+}
+
+pub fn generate(n: usize, seed: u64) -> MnistSim {
+    let mut rng = Pcg::new(seed);
+    let mut images = Vec::with_capacity(n * DIM);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % N_CLASS; // balanced
+        let img = render(class, &mut rng);
+        images.extend_from_slice(&img);
+        labels.push(class as i32);
+    }
+    // shuffle examples (keeping image/label pairing)
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut im2 = vec![0.0f32; n * DIM];
+    let mut lb2 = vec![0i32; n];
+    for (dst, &src) in order.iter().enumerate() {
+        im2[dst * DIM..(dst + 1) * DIM]
+            .copy_from_slice(&images[src * DIM..(src + 1) * DIM]);
+        lb2[dst] = labels[src];
+    }
+    MnistSim { images: im2, labels: lb2, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_in_range_and_nonempty() {
+        let mut rng = Pcg::new(0);
+        for class in 0..N_CLASS {
+            let img = render(class, &mut rng);
+            assert_eq!(img.len(), DIM);
+            assert!(img.iter().all(|v| (0.0..=1.0).contains(v)));
+            let mass: f32 = img.iter().sum();
+            assert!(mass > 3.0, "class {class} too faint: {mass}");
+            assert!(mass < DIM as f32 * 0.8, "class {class} saturated");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of different classes must differ substantially more
+        // than two draws of the same class — otherwise the classification
+        // experiment is vacuous.
+        let mut rng = Pcg::new(1);
+        let mean_img = |class: usize, rng: &mut Pcg| {
+            let mut acc = vec![0.0f32; DIM];
+            for _ in 0..24 {
+                for (a, v) in acc.iter_mut().zip(render(class, rng)) {
+                    *a += v / 24.0;
+                }
+            }
+            acc
+        };
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+        };
+        let m3a = mean_img(3, &mut rng);
+        let m3b = mean_img(3, &mut rng);
+        let m7 = mean_img(7, &mut rng);
+        let m1 = mean_img(1, &mut rng);
+        assert!(dist(&m3a, &m7) > 3.0 * dist(&m3a, &m3b));
+        assert!(dist(&m1, &m7) > 3.0 * dist(&m3a, &m3b));
+    }
+
+    #[test]
+    fn generate_balanced_and_deterministic() {
+        let d1 = generate(100, 7);
+        let d2 = generate(100, 7);
+        assert_eq!(d1.images, d2.images);
+        assert_eq!(d1.labels, d2.labels);
+        let mut counts = [0usize; N_CLASS];
+        for l in &d1.labels {
+            counts[*l as usize] += 1;
+        }
+        assert!(counts.iter().all(|c| *c == 10), "{counts:?}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Shared harness for the experiment regenerators: dataset construction,
+//! train-loop drivers with periodic adaptive-NFE evaluation, and result
+//! persistence.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::evaluator;
+use crate::coordinator::{BatchInputs, MetricsLog, Schedule, Trainer};
+use crate::data::{miniboone_sim, physionet_sim, synth_mnist, Batcher, Dataset};
+use crate::runtime::Runtime;
+use crate::solvers::adaptive::AdaptiveOpts;
+use crate::solvers::tableau::{self, Tableau};
+use crate::util::rng::Pcg;
+
+/// Experiment scale: `full` regenerates the paper artifacts; `quick` is the
+/// bench-harness setting (same code, smaller budgets).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub iters: usize,
+    pub sweep: usize,
+    pub data: usize,
+}
+
+impl Scale {
+    pub fn full() -> Scale {
+        Scale { iters: 240, sweep: 5, data: 640 }
+    }
+
+    pub fn quick() -> Scale {
+        Scale { iters: 30, sweep: 3, data: 256 }
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn load_runtime() -> Result<Runtime> {
+    Runtime::load(&artifacts_dir())
+}
+
+/// Evaluation tolerance: the paper uses 1.4e-8 in f64; the tightest
+/// productive setting for f32 states is ~1e-6 relative (below that the
+/// error estimate drowns in roundoff and NFE saturates).
+pub fn eval_opts() -> AdaptiveOpts {
+    AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// MNIST harness
+// ---------------------------------------------------------------------------
+
+pub struct MnistHarness {
+    pub b: usize,
+    pub d: usize,
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+impl MnistHarness {
+    pub fn new(rt: &Runtime, n: usize, seed: u64) -> Result<MnistHarness> {
+        let hyper = rt.manifest.model("mnist")?.hyper.clone();
+        let b = hyper.usize_of("batch")?;
+        let d = hyper.usize_of("d")?;
+        let raw = synth_mnist::generate(n.max(3 * b), seed);
+        let ds = Dataset::new(raw.images, d).with_labels(raw.labels);
+        let (train, test) = ds.split(0.25);
+        Ok(MnistHarness { b, d, train, test })
+    }
+
+    pub fn eval_batch<'a>(&'a self, which: &'a Dataset, idx: usize) -> (Vec<f32>, Vec<i32>) {
+        let start = (idx * self.b) % (which.n - self.b + 1);
+        let x = which.x[start * self.d..(start + self.b) * self.d].to_vec();
+        let l = which.labels.as_ref().unwrap()[start..start + self.b].to_vec();
+        (x, l)
+    }
+}
+
+/// Train an MNIST artifact for `iters` steps; if `eval_every > 0`, record
+/// (step, loss, ce, reg, nfe, train_err, test_err) via adaptive evaluation.
+pub fn train_mnist<'rt>(
+    rt: &'rt Runtime,
+    harness: &MnistHarness,
+    artifact: &str,
+    iters: usize,
+    lam: f32,
+    seed: u64,
+    eval_every: usize,
+    tb: &Tableau,
+) -> Result<(Trainer<'rt>, MetricsLog)> {
+    let mut tr = Trainer::new(rt, artifact, seed)?;
+    let mut batcher = Batcher::new(&harness.train, harness.b, seed ^ 0xb17c);
+    let lr = Schedule::mnist_lr(0.1, iters);
+    let mut log = MetricsLog::new(&[
+        "step", "loss", "ce", "reg", "nfe", "train_err", "test_err",
+    ]);
+    let opts = eval_opts();
+    for it in 0..iters {
+        let bt = batcher.next();
+        let inputs = BatchInputs::default().f("x", bt.x).i("labels", bt.labels);
+        let m = tr.step(&inputs, lam, lr.at(it))?;
+        let do_eval = eval_every > 0 && (it % eval_every == 0 || it == iters - 1);
+        if do_eval {
+            let (x, l) = harness.eval_batch(&harness.train, 0);
+            let ev = evaluator::mnist_eval(rt, &tr.store, &x, &l, tb, &opts)?;
+            let (xt, lt) = harness.eval_batch(&harness.test, 0);
+            let et = evaluator::mnist_eval(rt, &tr.store, &xt, &lt, tb, &opts)?;
+            log.push(vec![
+                it as f64,
+                m.values.first().copied().unwrap_or(f32::NAN) as f64,
+                m.values.get(1).copied().unwrap_or(f32::NAN) as f64,
+                m.values.get(2).copied().unwrap_or(f32::NAN) as f64,
+                ev.nfe as f64,
+                ev.err_rate as f64,
+                et.err_rate as f64,
+            ]);
+        }
+    }
+    Ok((tr, log))
+}
+
+// ---------------------------------------------------------------------------
+// CNF harness
+// ---------------------------------------------------------------------------
+
+pub struct CnfHarness {
+    pub model: String,
+    pub b: usize,
+    pub d: usize,
+    pub train: Vec<f32>,
+    pub test: Vec<f32>,
+}
+
+impl CnfHarness {
+    pub fn new(rt: &Runtime, model: &str, n: usize, seed: u64) -> Result<CnfHarness> {
+        let hyper = rt.manifest.model(model)?.hyper.clone();
+        let b = hyper.usize_of("batch")?;
+        let d = hyper.usize_of("d")?;
+        let n = n.max(2 * b);
+        let x = if model == "cnf_img" {
+            miniboone_sim::image_density(n, (d as f64).sqrt() as usize, seed).x
+        } else {
+            miniboone_sim::TabularGen::new(d, 3, seed).sample(n, seed ^ 1).x
+        };
+        let cut = (n - b) * d;
+        Ok(CnfHarness {
+            model: model.to_string(),
+            b,
+            d,
+            train: x[..cut].to_vec(),
+            test: x[cut..].to_vec(),
+        })
+    }
+
+    pub fn batch(&self, rng: &mut Pcg) -> Vec<f32> {
+        let n = self.train.len() / self.d;
+        let mut out = Vec::with_capacity(self.b * self.d);
+        for _ in 0..self.b {
+            let i = rng.below(n);
+            out.extend_from_slice(&self.train[i * self.d..(i + 1) * self.d]);
+        }
+        out
+    }
+}
+
+/// Train a CNF artifact; returns (trainer, seconds, final-loss).
+pub fn train_cnf<'rt>(
+    rt: &'rt Runtime,
+    harness: &CnfHarness,
+    artifact: &str,
+    iters: usize,
+    lam: f32,
+    seed: u64,
+) -> Result<(Trainer<'rt>, f64, f32)> {
+    let mut tr = Trainer::new(rt, artifact, seed)?;
+    let mut rng = Pcg::new(seed ^ 0xc4f);
+    let t0 = std::time::Instant::now();
+    let mut last = f32::NAN;
+    for _ in 0..iters {
+        let x = harness.batch(&mut rng);
+        let m = tr.step(&BatchInputs::default().f("x", x), lam, 1e-3)?;
+        last = m.loss();
+    }
+    Ok((tr, t0.elapsed().as_secs_f64(), last))
+}
+
+// ---------------------------------------------------------------------------
+// Latent-ODE harness
+// ---------------------------------------------------------------------------
+
+pub struct LatentHarness {
+    pub b: usize,
+    pub t: usize,
+    pub f: usize,
+    pub x: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub x_test: Vec<f32>,
+    pub mask_test: Vec<f32>,
+}
+
+impl LatentHarness {
+    pub fn new(rt: &Runtime, seed: u64) -> Result<LatentHarness> {
+        let hyper = rt.manifest.model("latent")?.hyper.clone();
+        let b = hyper.usize_of("batch")?;
+        let t = hyper.usize_of("t")?;
+        let f = hyper.usize_of("f")?;
+        let gen = physionet_sim::PhysioGen::new(f, seed);
+        let tr = gen.sample(b, t, seed ^ 2);
+        let te = gen.sample(b, t, seed ^ 3);
+        Ok(LatentHarness {
+            b,
+            t,
+            f,
+            x: tr.x,
+            mask: tr.mask,
+            x_test: te.x,
+            mask_test: te.mask,
+        })
+    }
+}
+
+pub fn train_latent<'rt>(
+    rt: &'rt Runtime,
+    h: &LatentHarness,
+    artifact: &str,
+    iters: usize,
+    lam: f32,
+    seed: u64,
+) -> Result<(Trainer<'rt>, f32)> {
+    let mut tr = Trainer::new(rt, artifact, seed)?;
+    let inputs = BatchInputs::default()
+        .f("x", h.x.clone())
+        .f("mask", h.mask.clone());
+    let mut last = f32::NAN;
+    for _ in 0..iters {
+        let m = tr.step(&inputs, lam, 5e-3)?;
+        last = m.loss();
+    }
+    Ok((tr, last))
+}
+
+// ---------------------------------------------------------------------------
+// Toy harness
+// ---------------------------------------------------------------------------
+
+pub fn toy_data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.range(-1.2, 1.2)).collect()
+}
+
+pub fn train_toy<'rt>(
+    rt: &'rt Runtime,
+    artifact: &str,
+    iters: usize,
+    lam: f32,
+    seed: u64,
+) -> Result<(Trainer<'rt>, f32)> {
+    let mut tr = Trainer::new(rt, artifact, seed)?;
+    let x = toy_data(128, seed ^ 9);
+    let inputs = BatchInputs::default().f("x", x);
+    let mut last = f32::NAN;
+    for _ in 0..iters {
+        let m = tr.step(&inputs, lam, 0.05)?;
+        last = m.loss();
+    }
+    Ok((tr, last))
+}
+
+/// Solver lookup shared by experiments that sweep solver orders.
+pub fn solver_suite() -> Vec<(&'static str, u32, Tableau)> {
+    vec![
+        ("heun_euler", 2, tableau::heun_euler()),
+        ("bosh3", 3, tableau::bosh3()),
+        ("dopri5", 5, tableau::dopri5()),
+    ]
+}

@@ -1,0 +1,54 @@
+//! Fig 4 (latent-ODE PhysioNet: NFE reduction at small loss increase) and
+//! Fig 12 (pareto on MSE for the time-series task).
+
+use anyhow::Result;
+
+use super::common::{self, Scale};
+use crate::coordinator::evaluator;
+use crate::solvers::tableau;
+use crate::util::bench::Table;
+
+pub fn fig4(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let h = common::LatentHarness::new(&rt, 23)?;
+    let tb = tableau::dopri5();
+    let opts = common::eval_opts();
+    let mut table = Table::new(&["variant", "lambda", "train_loss", "eval_nll",
+                                 "eval_mse", "NFE"]);
+    for (artifact, lam) in [("latent_train_unreg", 0.0f32),
+                            ("latent_train_k2", 0.1)] {
+        let (tr, loss) = common::train_latent(&rt, &h, artifact, scale.iters, lam, 0)?;
+        let ev = evaluator::latent_eval(&rt, &tr.store, &h.x, &h.mask, h.t, &tb, &opts)?;
+        table.row(vec![
+            artifact.to_string(),
+            format!("{lam}"),
+            format!("{loss:.4}"),
+            format!("{:.4}", ev.nll),
+            format!("{:.4}", ev.mse),
+            format!("{}", ev.nfe),
+        ]);
+    }
+    Ok(table)
+}
+
+pub fn fig12(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let h = common::LatentHarness::new(&rt, 29)?;
+    let tb = tableau::dopri5();
+    let opts = common::eval_opts();
+    let lams = [0.0f32, 0.03, 0.1, 0.3, 1.0];
+    let mut table = Table::new(&["lambda", "eval_mse", "eval_nll", "NFE"]);
+    for &lam in &lams[..scale.sweep.min(5)] {
+        let artifact = if lam == 0.0 { "latent_train_unreg" } else { "latent_train_k2" };
+        let (tr, _) = common::train_latent(&rt, &h, artifact, scale.iters, lam, 3)?;
+        let ev = evaluator::latent_eval(&rt, &tr.store, &h.x_test, &h.mask_test,
+                                        h.t, &tb, &opts)?;
+        table.row(vec![
+            format!("{lam}"),
+            format!("{:.4}", ev.mse),
+            format!("{:.4}", ev.nll),
+            format!("{}", ev.nfe),
+        ]);
+    }
+    Ok(table)
+}

@@ -1,0 +1,210 @@
+//! MNIST-classifier figures:
+//!   Fig 3  — NFE and training error *during* training, unreg vs R_3.
+//!   Fig 5/11 — pareto: loss (and classification error) vs NFE sweeping λ.
+//!   Fig 6  — regularization order K vs solver order m.
+//!   Fig 7  — R_K vs NFE monotone relationship.
+//!   Fig 8/10 — solver calibration, NFE overfitting, generalization.
+
+use anyhow::Result;
+
+use super::common::{self, Scale};
+use crate::coordinator::evaluator;
+use crate::runtime::XlaDynamics;
+use crate::solvers::adaptive::{solve_adaptive_mut, AdaptiveOpts};
+use crate::solvers::tableau;
+use crate::util::bench::Table;
+use crate::util::rng::Pcg;
+use crate::util::stats::{spearman, summarize};
+
+pub fn fig3(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let h = common::MnistHarness::new(&rt, scale.data, 11)?;
+    let tb = tableau::dopri5();
+    let every = (scale.iters / 6).max(1);
+    let mut table = Table::new(&["variant", "step", "train_err", "NFE"]);
+    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32),
+                            ("mnist_train_k3_s8", 0.03)] {
+        let (_tr, log) =
+            common::train_mnist(&rt, &h, artifact, scale.iters, lam, 0, every, &tb)?;
+        log.to_csv(&common::results_dir().join(format!("fig3_{artifact}.csv")))?;
+        for row in &log.rows {
+            table.row(vec![
+                artifact.to_string(),
+                format!("{}", row[0] as usize),
+                format!("{:.4}", row[5]),
+                format!("{}", row[4] as usize),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// λ sweep on R_2: (λ, final train loss, final NFE, test err) per point.
+pub fn mnist_lambda_sweep(
+    rt: &crate::runtime::Runtime,
+    h: &common::MnistHarness,
+    artifact: &str,
+    lams: &[f32],
+    iters: usize,
+) -> Result<Vec<(f32, f64, f64, f64, f64)>> {
+    let tb = tableau::dopri5();
+    let mut out = vec![];
+    for (i, &lam) in lams.iter().enumerate() {
+        let (_tr, log) =
+            common::train_mnist(rt, h, artifact, iters, lam, 100 + i as u64,
+                                iters, &tb)?;
+        out.push((
+            lam,
+            log.last("ce"),
+            log.last("nfe"),
+            log.last("test_err"),
+            log.last("train_err"),
+        ));
+    }
+    Ok(out)
+}
+
+pub fn fig5_mnist(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let h = common::MnistHarness::new(&rt, scale.data, 13)?;
+    let lams: Vec<f32> = [0.0, 0.01, 0.03, 0.1, 0.3, 1.0][..scale.sweep.min(6)].to_vec();
+    let pts = mnist_lambda_sweep(&rt, &h, "mnist_train_k2_s8", &lams, scale.iters)?;
+    let mut table = Table::new(&["lambda", "train_ce", "NFE", "test_err", "train_err"]);
+    for (lam, ce, nfe, te, tre) in &pts {
+        table.row(vec![
+            format!("{lam}"),
+            format!("{ce:.4}"),
+            format!("{nfe:.0}"),
+            format!("{te:.4}"),
+            format!("{tre:.4}"),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Fig 6 + Fig 7: train each regularization order, evaluate under each
+/// solver order; report the (K, solver, NFE, loss, R_K) grid.
+pub fn fig6_fig7(scale: Scale) -> Result<(Table, Table)> {
+    let rt = common::load_runtime()?;
+    let h = common::MnistHarness::new(&rt, scale.data, 17)?;
+    let opts = common::eval_opts();
+    let mut variants = vec![
+        ("unreg", "mnist_train_unreg_s8", 0.0f32),
+        ("K=1", "mnist_train_k1_s8", 0.03),
+        ("K=2", "mnist_train_k2_s8", 0.03),
+        ("K=3", "mnist_train_k3_s8", 0.03),
+        ("K=4", "mnist_train_k4_s8", 0.03),
+    ];
+    if scale.iters < 50 {
+        // bench-scale: drop the outer orders, keep the comparison's spine
+        variants = vec![variants[0], variants[2], variants[3]];
+    }
+    let mut fig6 = Table::new(&["reg", "solver(order)", "NFE", "train_ce"]);
+    let mut fig7 = Table::new(&["reg", "solver(order)", "R_1", "R_2", "R_3", "R_4", "NFE"]);
+    let mut per_solver: Vec<(u32, Vec<f64>, Vec<f64>)> = vec![];
+    let dtb = tableau::dopri5();
+    for (label, artifact, lam) in variants {
+        let (tr, _log) =
+            common::train_mnist(&rt, &h, artifact, scale.iters, lam, 5, 0, &dtb)?;
+        let (x, l) = h.eval_batch(&h.train, 0);
+        let mut rng = Pcg::new(41);
+        let probe = rng.rademacher(h.b * h.d);
+        for (si, (sname, order, tb)) in common::solver_suite().into_iter().enumerate() {
+            let ev = evaluator::mnist_eval(&rt, &tr.store, &x, &l, &tb, &opts)?;
+            fig6.row(vec![
+                label.to_string(),
+                format!("{sname}({order})"),
+                format!("{}", ev.nfe),
+                format!("{:.4}", ev.ce),
+            ]);
+            let rq = evaluator::mnist_reg_quantities(&rt, &tr.store, &x, &probe,
+                                                     &tb, &opts)?;
+            fig7.row(vec![
+                label.to_string(),
+                format!("{sname}({order})"),
+                format!("{:.3}", rq.r[0]),
+                format!("{:.3}", rq.r[1]),
+                format!("{:.3}", rq.r[2]),
+                format!("{:.3}", rq.r[3]),
+                format!("{}", ev.nfe),
+            ]);
+            if per_solver.len() <= si {
+                per_solver.push((order, vec![], vec![]));
+            }
+            let k_idx = (order as usize - 1).min(3);
+            per_solver[si].1.push(rq.r[k_idx]);
+            per_solver[si].2.push(ev.nfe as f64);
+        }
+    }
+    // Fig 7's claim: R_K and NFE vary together (monotone) per solver order.
+    for (order, rk, nfe) in &per_solver {
+        let rho = spearman(rk, nfe);
+        fig7.row(vec![
+            format!("spearman(R_m, NFE) order {order}"),
+            String::new(),
+            format!("{rho:.2}"),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    Ok((fig6, fig7))
+}
+
+/// Fig 8a (solver calibration), 8b + Fig 10 (NFE overfitting), 8c
+/// (generalization vs λ — covered by the fig5 sweep's test_err column).
+pub fn fig8_fig10(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let h = common::MnistHarness::new(&rt, scale.data, 19)?;
+    let dtb = tableau::dopri5();
+    let mut table = Table::new(&["quantity", "unregularized", "regularized(K=3)"]);
+
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["solver err @rtol1e-3 (vs 1e-7 ref)".into()],
+        vec!["train NFE (mean/example)".into()],
+        vec!["test NFE (mean/example)".into()],
+        vec!["|train-test| NFE".into()],
+        vec!["NFE std across examples".into()],
+    ];
+    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32),
+                            ("mnist_train_k3_s8", 0.03)] {
+        let (tr, _) = common::train_mnist(&rt, &h, artifact, scale.iters, lam,
+                                          7, 0, &dtb)?;
+        // 8a: actual solve error at loose tolerance vs tight reference
+        let (x, _) = h.eval_batch(&h.train, 0);
+        let mut dyn_f = XlaDynamics::from_store(&rt, "mnist_dynamics", &tr.store, None)?;
+        let loose = AdaptiveOpts { rtol: 1e-3, atol: 1e-5, ..Default::default() };
+        let tight = AdaptiveOpts { rtol: 1e-7, atol: 1e-9, ..Default::default() };
+        let yl = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, &x, &dtb, &loose).y;
+        let yt = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, &x, &dtb, &tight).y;
+        let err = yl
+            .iter()
+            .zip(&yt)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            / (yt.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt() + 1e-12);
+        rows[0].push(format!("{err:.2e}"));
+
+        // 8b/10: per-example NFE on train vs test
+        let n_ex = 24.min(h.b);
+        let (xtr, _) = h.eval_batch(&h.train, 0);
+        let (xte, _) = h.eval_batch(&h.test, 0);
+        let opts = common::eval_opts();
+        let tr_nfe = evaluator::mnist_per_example_nfe(
+            &rt, &tr.store, &xtr[..n_ex * h.d], &dtb, &opts)?;
+        let te_nfe = evaluator::mnist_per_example_nfe(
+            &rt, &tr.store, &xte[..n_ex * h.d], &dtb, &opts)?;
+        let s_tr = summarize(&tr_nfe.iter().map(|v| *v as f64).collect::<Vec<_>>());
+        let s_te = summarize(&te_nfe.iter().map(|v| *v as f64).collect::<Vec<_>>());
+        rows[1].push(format!("{:.1}", s_tr.mean));
+        rows[2].push(format!("{:.1}", s_te.mean));
+        rows[3].push(format!("{:.1}", (s_tr.mean - s_te.mean).abs()));
+        rows[4].push(format!("{:.1}", s_tr.std));
+    }
+    for r in rows {
+        table.row(r);
+    }
+    Ok(table)
+}

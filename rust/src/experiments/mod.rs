@@ -1,0 +1,63 @@
+//! Experiment registry: one regenerator per paper table/figure (DESIGN.md
+//! §6 experiment index).  Every entry prints the paper-shaped table and is
+//! also wrapped by a `benches/` target.
+
+pub mod common;
+pub mod latent_figs;
+pub mod mnist_figs;
+pub mod orders;
+pub mod tables;
+pub mod toy_figs;
+
+use anyhow::{bail, Result};
+
+pub use common::Scale;
+
+/// Unique regenerators: fig6 covers fig7, fig8 covers fig10, fig5 covers
+/// fig11 and fig12 (shared sweeps printed together).
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9",
+    "table2", "table3", "table4",
+];
+
+/// Run one experiment by paper id, printing its table(s).
+pub fn run(id: &str, scale: Scale) -> Result<()> {
+    println!("== {id} ==");
+    match id {
+        "fig1" => toy_figs::fig1(scale)?.print(),
+        "fig2" => orders::fig2(scale)?.print(),
+        "fig3" => mnist_figs::fig3(scale)?.print(),
+        "fig4" => latent_figs::fig4(scale)?.print(),
+        "fig5" => {
+            println!("-- mnist (R_2 sweep) --");
+            mnist_figs::fig5_mnist(scale)?.print();
+            println!("-- cnf tabular (R_2 sweep) --");
+            tables::fig5_cnf(scale)?.print();
+            println!("-- latent time-series (R_2 sweep) --");
+            latent_figs::fig12(scale)?.print();
+        }
+        "fig6" | "fig7" => {
+            // the two figures share one sweep; print both rather than
+            // recomputing under each id
+            let (f6, f7) = mnist_figs::fig6_fig7(scale)?;
+            println!("-- fig6: order-vs-solver tradeoff --");
+            f6.print();
+            println!("-- fig7: R_K vs NFE --");
+            f7.print();
+        }
+        "fig8" | "fig10" => mnist_figs::fig8_fig10(scale)?.print(),
+        "fig9" => toy_figs::fig9(scale)?.print(),
+        "fig11" => mnist_figs::fig5_mnist(scale)?.print(),
+        "fig12" => latent_figs::fig12(scale)?.print(),
+        "table2" => tables::cnf_table("cnf_img", scale)?.print(),
+        "table3" => tables::table3(scale)?.print(),
+        "table4" => tables::cnf_table("cnf_tab", scale)?.print(),
+        "all" => {
+            for e in ALL {
+                run(e, scale)?;
+            }
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL:?} or 'all'"),
+    }
+    Ok(())
+}

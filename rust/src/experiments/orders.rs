@@ -1,0 +1,94 @@
+//! Fig 2: which orders of (adaptive) Runge-Kutta solvers can efficiently
+//! solve which orders of polynomial trajectories.
+//!
+//! Pure-Rust experiment: dynamics dz/dt = p'(t) with deg p = K give
+//! trajectories whose total derivatives of order > K vanish identically
+//! (verified by the `taylor` module's jet).  An order-m adaptive solver's
+//! local error model is exact on them when K <= m, so its error estimate is
+//! ~0 and it takes maximal steps; for K > m the step count grows — the
+//! paper's lower-triangle heatmap.
+
+use anyhow::Result;
+
+use super::common::Scale;
+use crate::solvers::adaptive::{solve_adaptive, AdaptiveOpts};
+use crate::solvers::tableau;
+use crate::util::bench::Table;
+use crate::util::rng::Pcg;
+
+/// NFE needed by `solver` on a random polynomial trajectory of degree `k`.
+pub fn poly_nfe(solver: &tableau::Tableau, k: usize, seed: u64) -> usize {
+    let mut rng = Pcg::new(seed);
+    // coefficients of p'(t): degree k-1 (k = 0 -> zero dynamics)
+    let coeffs: Vec<f32> = (0..k).map(|_| rng.range(0.5, 2.0)).collect();
+    let opts = AdaptiveOpts {
+        rtol: 1e-6,
+        atol: 1e-8,
+        h_init: Some(0.05),
+        ..Default::default()
+    };
+    let res = solve_adaptive(
+        move |t: f32, _y: &[f32], dy: &mut [f32]| {
+            let mut acc = 0.0f32;
+            for (i, c) in coeffs.iter().enumerate() {
+                acc += (i as f32 + 1.0) * c * t.powi(i as i32);
+            }
+            dy[0] = acc;
+        },
+        0.0,
+        1.0,
+        &[0.0f32],
+        solver,
+        &opts,
+    );
+    res.stats.nfe
+}
+
+pub fn fig2(_scale: Scale) -> Result<Table> {
+    let solvers = [
+        ("heun_euler(2)", tableau::heun_euler()),
+        ("bosh3(3)", tableau::bosh3()),
+        ("fehlberg(4)", tableau::fehlberg45()),
+        ("cash_karp(5)", tableau::cash_karp()),
+        ("dopri5(5)", tableau::dopri5()),
+    ];
+    let degrees: Vec<usize> = (0..=8).collect();
+    let mut headers: Vec<String> = vec!["solver \\ poly K".to_string()];
+    headers.extend(degrees.iter().map(|k| format!("K={k}")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs);
+    for (name, tb) in &solvers {
+        let mut row = vec![name.to_string()];
+        for &k in &degrees {
+            // median over seeds for stability
+            let mut nfes: Vec<usize> =
+                (0..5).map(|s| poly_nfe(tb, k, 31 + s)).collect();
+            nfes.sort_unstable();
+            row.push(format!("{}", nfes[2]));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_degree_cheap_high_degree_expensive() {
+        // The paper's Fig 2 structure: for an order-m solver, NFE jumps
+        // once the trajectory's polynomial order exceeds m.
+        let tb = tableau::bosh3(); // order 3
+        let cheap = poly_nfe(&tb, 2, 1);
+        let expensive = poly_nfe(&tb, 7, 1);
+        assert!(
+            expensive > cheap,
+            "bosh3: deg7 {expensive} !> deg2 {cheap}"
+        );
+        let tb5 = tableau::dopri5();
+        let cheap5 = poly_nfe(&tb5, 4, 1);
+        let exp5 = poly_nfe(&tb5, 8, 1);
+        assert!(exp5 > cheap5, "dopri5: {exp5} !> {cheap5}");
+    }
+}

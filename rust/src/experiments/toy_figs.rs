@@ -1,0 +1,57 @@
+//! Fig 1 (regularizing R_3 on the toy 1-D map z0 + z0^3 reduces NFE without
+//! hurting the fit) and Fig 9 (same with R_6 / 6th-order local Taylor
+//! approximation quality).
+
+use anyhow::Result;
+
+use super::common::{self, Scale};
+use crate::coordinator::toy_eval;
+use crate::solvers::tableau;
+use crate::util::bench::Table;
+
+pub fn fig1(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let tb = tableau::dopri5();
+    let opts = common::eval_opts();
+    let x = common::toy_data(128, 99);
+    let mut table = Table::new(&["variant", "lambda", "train_loss", "eval_mse", "NFE"]);
+    for (artifact, lam) in [
+        ("toy_train_unreg_s16", 0.0f32),
+        ("toy_train_k3_s16", 0.3),
+    ] {
+        let (tr, loss) = common::train_toy(&rt, artifact, scale.iters, lam, 0)?;
+        let ev = toy_eval(&rt, &tr.store, &x, &tb, &opts)?;
+        table.row(vec![
+            artifact.to_string(),
+            format!("{lam}"),
+            format!("{loss:.5}"),
+            format!("{:.5}", ev.mse),
+            format!("{}", ev.nfe),
+        ]);
+    }
+    Ok(table)
+}
+
+pub fn fig9(scale: Scale) -> Result<Table> {
+    let rt = common::load_runtime()?;
+    let tb = tableau::dopri5();
+    let opts = common::eval_opts();
+    let x = common::toy_data(128, 77);
+    let mut table = Table::new(&["variant", "lambda", "train_loss", "eval_mse", "NFE"]);
+    for (artifact, lam) in [
+        ("toy_train_unreg_s16", 0.0f32),
+        ("toy_train_k6_s16", 0.3),
+        ("toy_train_k2_s16", 0.3),
+    ] {
+        let (tr, loss) = common::train_toy(&rt, artifact, scale.iters, lam, 1)?;
+        let ev = toy_eval(&rt, &tr.store, &x, &tb, &opts)?;
+        table.row(vec![
+            artifact.to_string(),
+            format!("{lam}"),
+            format!("{loss:.5}"),
+            format!("{:.5}", ev.mse),
+            format!("{}", ev.nfe),
+        ]);
+    }
+    Ok(table)
+}

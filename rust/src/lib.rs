@@ -1,0 +1,25 @@
+//! # taynode
+//!
+//! A Rust + JAX + Pallas reproduction of *Learning Differential Equations
+//! that are Easy to Solve* (Kelly, Bettencourt, Johnson, Duvenaud — NeurIPS
+//! 2020): neural-ODE training with Taylor-mode `R_K` speed regularization,
+//! with the evaluation/serving hot path (adaptive solvers + NFE accounting)
+//! entirely in Rust over AOT-compiled XLA executables.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`solvers`] — fixed & adaptive Runge-Kutta suite with NFE accounting.
+//! * [`taylor`] — truncated Taylor-series arithmetic / jets in pure Rust.
+//! * [`runtime`] — PJRT client, artifact registry, parameter store.
+//! * [`coordinator`] — training loop, schedules, sweeps, metrics.
+//! * [`data`] — synthetic MNIST / PhysioNet / MINIBOONE generators.
+//! * [`experiments`] — one regenerator per paper table and figure.
+//! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench).
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod solvers;
+pub mod taylor;
+pub mod tensor;
+pub mod util;

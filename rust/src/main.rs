@@ -1,0 +1,172 @@
+//! `repro` — the TayNODE coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         — manifest/runtime summary
+//!   train --artifact NAME        — train one exported artifact
+//!   eval  --model NAME           — adaptive-solver evaluation of a model
+//!   experiment <id|all> [--quick]— regenerate a paper table/figure
+//!   solvers                      — list the RK tableau suite
+
+use anyhow::{bail, Result};
+
+use taynode::coordinator::{evaluator, BatchInputs, Trainer};
+use taynode::data::{synth_mnist, Batcher, Dataset};
+use taynode::experiments::{self, Scale};
+use taynode::solvers::tableau;
+use taynode::util::cli::Args;
+use taynode::util::rng::Pcg;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.pos(0).unwrap_or("help") {
+        "info" => info(),
+        "train" => train(args),
+        "eval" => eval(args),
+        "experiment" => {
+            let id = args.pos(1).unwrap_or("all").to_string();
+            let scale = if args.bool("quick") { Scale::quick() } else { Scale::full() };
+            experiments::run(&id, scale)
+        }
+        "solvers" => {
+            println!("{:<12} {:>6} {:>7} {:>9} {:>6}", "name", "order", "stages",
+                     "adaptive", "fsal");
+            for name in tableau::ALL {
+                let t = tableau::by_name(name).unwrap();
+                println!(
+                    "{:<12} {:>6} {:>7} {:>9} {:>6}",
+                    t.name, t.order, t.stages,
+                    if t.e.is_some() { "embedded" } else { "doubling" },
+                    t.fsal
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "repro — TayNODE coordinator\n\
+                 usage:\n  repro info\n  repro solvers\n  \
+                 repro train --artifact mnist_train_k2_s8 [--iters N] [--lam F] [--lr F]\n  \
+                 repro eval --model toy|mnist [--solver dopri5] [--rtol F]\n  \
+                 repro experiment <fig1..fig12|table2|table3|table4|all> [--quick]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let rt = experiments::common::load_runtime()?;
+    println!("platform: {} ({} devices)", rt.client.platform_name(),
+             rt.client.device_count());
+    println!("models:");
+    for (name, m) in &rt.manifest.models {
+        println!("  {name:<10} {:>8} params  ({})", m.total, m.params_file);
+    }
+    println!("executables: {}", rt.manifest.executables.len());
+    let mut by_kind: std::collections::BTreeMap<&str, usize> = Default::default();
+    for e in rt.manifest.executables.values() {
+        *by_kind.entry(e.kind.as_str()).or_default() += 1;
+    }
+    for (k, n) in by_kind {
+        println!("  {k:<14} {n}");
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let rt = experiments::common::load_runtime()?;
+    let artifact = args.require("artifact")?.to_string();
+    let iters = args.usize_or("iters", 100)?;
+    let lam = args.f32_or("lam", 0.0)?;
+    let lr = args.f32_or("lr", 0.05)?;
+    let seed = args.u64_or("seed", 0)?;
+    let spec = rt.manifest.exec_spec(&artifact)?.clone();
+    let model = spec.model.clone();
+    let hyper = rt.manifest.model(&model)?.hyper.clone();
+
+    // Pre-build the data pipeline for the artifact's model.
+    let mnist_ds: Option<Dataset> = if model == "mnist" {
+        let b = hyper.usize_of("batch")?;
+        let d = hyper.usize_of("d")?;
+        let raw = synth_mnist::generate(8 * b, seed);
+        Some(Dataset::new(raw.images, d).with_labels(raw.labels))
+    } else {
+        None
+    };
+    let mut mnist_batcher = mnist_ds
+        .as_ref()
+        .map(|ds| Batcher::new(ds, hyper.usize_of("batch").unwrap(), seed));
+    let latent_h = if model == "latent" {
+        Some(experiments::common::LatentHarness::new(&rt, seed)?)
+    } else {
+        None
+    };
+    let cnf_h = if model.starts_with("cnf") {
+        Some(experiments::common::CnfHarness::new(&rt, &model, 512, seed)?)
+    } else {
+        None
+    };
+    let mut rng = Pcg::new(seed ^ 0xfeed);
+
+    let mut tr = Trainer::new(&rt, &artifact, seed)?;
+    for it in 0..iters {
+        let inputs = match model.as_str() {
+            "toy" => BatchInputs::default()
+                .f("x", experiments::common::toy_data(128, seed)),
+            "mnist" => {
+                let bt = mnist_batcher.as_mut().unwrap().next();
+                BatchInputs::default().f("x", bt.x).i("labels", bt.labels)
+            }
+            "latent" => {
+                let h = latent_h.as_ref().unwrap();
+                BatchInputs::default().f("x", h.x.clone()).f("mask", h.mask.clone())
+            }
+            m if m.starts_with("cnf") => {
+                let h = cnf_h.as_ref().unwrap();
+                BatchInputs::default().f("x", h.batch(&mut rng))
+            }
+            other => bail!("no batch provider for model {other:?}"),
+        };
+        let m = tr.step(&inputs, lam, lr)?;
+        if it % 10 == 0 || it == iters - 1 {
+            println!("step {it:>5}  loss {:>10.5}  metrics {:?}", m.loss(), m.values);
+        }
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let rt = experiments::common::load_runtime()?;
+    let model = args.require("model")?.to_string();
+    let solver = args.str_or("solver", "dopri5").to_string();
+    let tb = tableau::by_name(&solver)
+        .ok_or_else(|| anyhow::anyhow!("unknown solver {solver:?}"))?;
+    let mut opts = experiments::common::eval_opts();
+    opts.rtol = args.f32_or("rtol", opts.rtol)?;
+    opts.atol = opts.rtol * 1e-2;
+
+    match model.as_str() {
+        "mnist" => {
+            let h = experiments::common::MnistHarness::new(&rt, 256, 0)?;
+            let tr = Trainer::new(&rt, "mnist_train_unreg_s2", 0)?;
+            let (x, l) = h.eval_batch(&h.train, 0);
+            let ev = evaluator::mnist_eval(&rt, &tr.store, &x, &l, &tb, &opts)?;
+            println!("mnist: ce {:.4} err {:.3} NFE {}", ev.ce, ev.err_rate, ev.nfe);
+        }
+        "toy" => {
+            let tr = Trainer::new(&rt, "toy_train_unreg_s16", 0)?;
+            let x = experiments::common::toy_data(128, 0);
+            let ev = evaluator::toy_eval(&rt, &tr.store, &x, &tb, &opts)?;
+            println!("toy: mse {:.5} NFE {}", ev.mse, ev.nfe);
+        }
+        other => bail!("eval supports toy|mnist, got {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them on the CPU client,
+//! caches the executables, and provides typed invoke helpers.
+//!
+//! Exported computations are lowered with `return_tuple=True`, so every
+//! execution returns a single tuple literal that we decompose.  Interchange
+//! is HLO *text* (see aot.py for why).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ExecSpec, Manifest};
+
+/// Build an f32 literal with the given shape.
+///
+/// Perf note (§Perf L3a iteration 1): this is on the per-NFE hot path, so
+/// the literal is created in ONE host copy via
+/// `create_from_shape_and_untyped_data` instead of `vec1(..).reshape(..)`
+/// (which materializes an intermediate rank-1 literal = two copies + an
+/// extra C-API round-trip).
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal shape {shape:?} needs {n} elems, got {}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal with the given shape.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal shape {shape:?} needs {n} elems, got {}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs (owned or borrowed); returns the
+    /// decomposed output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs = self.exe.execute(inputs)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (hot path: parameters stay on
+    /// device across NFE calls).  Returns the raw output buffers.
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute_b(inputs)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// The runtime owns the PJRT client, the manifest, and an executable cache
+/// (artifacts compile lazily on first use, once per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name.
+    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.exec_spec(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let rc = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Host -> device transfer for the buffer-based hot path.
+    pub fn to_device(&self, shape: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, shape, None)
+            .map_err(|e| anyhow!("to_device: {e:?}"))
+    }
+
+    /// Load a model's initial parameter blob as per-entry f32 vectors.
+    pub fn load_params(&self, model: &str) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.model(model)?;
+        let path = self.manifest.dir.join(&spec.params_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != spec.total * 4 {
+            bail!(
+                "{model}: params blob {} bytes, expected {}",
+                bytes.len(),
+                spec.total * 4
+            );
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(spec
+            .layout
+            .iter()
+            .map(|e| flat[e.offset..e.offset + e.size].to_vec())
+            .collect())
+    }
+}

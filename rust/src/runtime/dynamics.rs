@@ -1,0 +1,131 @@
+//! Bridge from the Rust solver suite to XLA dynamics executables — the NFE
+//! hot path.  One `eval` = one NFE = one PJRT execution of the exported
+//! dynamics function over the whole batch.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::client::{literal_f32, Executable, Runtime};
+use super::params::ParamStore;
+use crate::solvers::Dynamics;
+
+enum Slot {
+    /// Fixed input prepared once (parameters, probes).
+    Fixed(xla::Literal),
+    /// The solver state (batch:z or batch:state).
+    State,
+    /// The scalar time.
+    Time,
+}
+
+/// An exported dynamics function bound to concrete parameters.
+///
+/// State layout: row-major [batch, dim] flattened — matching both the
+/// artifact's input shape and the solver's flat state vector.
+pub struct XlaDynamics {
+    exec: Rc<Executable>,
+    slots: Vec<Slot>,
+    pub batch: usize,
+    pub dim: usize,
+    state_shape: Vec<usize>,
+    /// Device-buffer parameter cache for the buffer hot path (perf pass).
+    pub calls: usize,
+}
+
+impl XlaDynamics {
+    /// Bind `exec_name` to parameters from `store`, generating `rng:*`
+    /// probe inputs with `probe` (rademacher) when the artifact needs them.
+    pub fn from_store(
+        rt: &Runtime,
+        exec_name: &str,
+        store: &ParamStore,
+        probe: Option<&[f32]>,
+    ) -> Result<XlaDynamics> {
+        let exec = rt.exec(exec_name)?;
+        let mut slots = vec![];
+        let mut state_shape = vec![];
+        for inp in &exec.spec.inputs {
+            match inp.role_kind() {
+                "param" => {
+                    let val = store.value(&inp.name)?;
+                    slots.push(Slot::Fixed(literal_f32(&inp.shape, val)?));
+                }
+                "batch" => {
+                    state_shape = inp.shape.clone();
+                    slots.push(Slot::State);
+                }
+                "scalar" => slots.push(Slot::Time),
+                "rng" => {
+                    let p = probe.ok_or_else(|| {
+                        anyhow!("{exec_name} needs probe input {}", inp.name)
+                    })?;
+                    slots.push(Slot::Fixed(literal_f32(&inp.shape, p)?));
+                }
+                other => bail!("{exec_name}: unsupported role {other}"),
+            }
+        }
+        if state_shape.len() != 2 {
+            bail!("{exec_name}: expected one [B, D] batch input");
+        }
+        Ok(XlaDynamics {
+            exec,
+            slots,
+            batch: state_shape[0],
+            dim: state_shape[1],
+            state_shape,
+            calls: 0,
+        })
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.batch * self.dim
+    }
+
+    fn run_into(&mut self, t: f32, y: &[f32], dy: &mut [f32]) -> Result<()> {
+        // §Perf L3a iteration 2: copy the output tuple element straight into
+        // the solver's stage buffer (no Vec allocation per NFE).
+        let state_lit = literal_f32(&self.state_shape, y)?;
+        let t_lit = xla::Literal::scalar(t);
+        let inputs: Vec<&xla::Literal> = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Fixed(l) => l,
+                Slot::State => &state_lit,
+                Slot::Time => &t_lit,
+            })
+            .collect();
+        self.calls += 1;
+        let out = self.exec.run(&inputs)?;
+        out[0].copy_raw_to(dy)?;
+        Ok(())
+    }
+
+    #[allow(dead_code)]
+    fn run(&mut self, t: f32, y: &[f32]) -> Result<Vec<f32>> {
+        // Parameters/probes are bound once at construction; only the state
+        // and time literals are created per call (no param copies per NFE).
+        let state_lit = literal_f32(&self.state_shape, y)?;
+        let t_lit = xla::Literal::scalar(t);
+        let inputs: Vec<&xla::Literal> = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Fixed(l) => l,
+                Slot::State => &state_lit,
+                Slot::Time => &t_lit,
+            })
+            .collect();
+        self.calls += 1;
+        let out = self.exec.run(&inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+impl Dynamics for XlaDynamics {
+    fn eval(&mut self, t: f32, y: &[f32], dy: &mut [f32]) {
+        self.run_into(t, y, dy)
+            .unwrap_or_else(|e| panic!("dynamics {}: {e:?}", self.exec.spec.name));
+    }
+}

@@ -1,0 +1,248 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust coordinator.  Input *roles* (`param:w1`, `opt:m:w1`, `batch:x`,
+//! `rng:eps`, `scalar:lam`) let the trainer assemble executable inputs
+//! generically for any model.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub role: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn role_kind(&self) -> &str {
+        self.role.split(':').next().unwrap_or("")
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OutputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub kind: String,
+    pub meta: Json,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<OutputSpec>,
+}
+
+impl ExecSpec {
+    /// Number of leading outputs that are the updated training state
+    /// (params + optimizer slots), fed back as next-step inputs.
+    pub fn n_state(&self) -> usize {
+        self.inputs
+            .iter()
+            .filter(|i| {
+                let k = i.role_kind();
+                k == "param" || k == "opt"
+            })
+            .count()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub hyper: Json,
+    pub params_file: String,
+    pub layout: Vec<ParamEntry>,
+    pub total: usize,
+}
+
+impl ModelSpec {
+    pub fn hyper_usize(&self, key: &str) -> Result<usize> {
+        self.hyper.usize_of(key)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let p = m.req("params")?;
+            let mut layout = vec![];
+            for e in p.req("layout")?.as_arr().unwrap_or(&[]) {
+                layout.push(ParamEntry {
+                    name: e.str_of("name")?.to_string(),
+                    shape: parse_shape(e.req("shape")?)?,
+                    offset: e.usize_of("offset")?,
+                    size: e.usize_of("size")?,
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    hyper: m.req("hyper")?.clone(),
+                    params_file: p.str_of("file")?.to_string(),
+                    layout,
+                    total: p.usize_of("total")?,
+                },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in root
+            .req("executables")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("executables not an object"))?
+        {
+            let mut inputs = vec![];
+            for i in e.req("inputs")?.as_arr().unwrap_or(&[]) {
+                inputs.push(InputSpec {
+                    role: i.str_of("role")?.to_string(),
+                    name: i.str_of("name")?.to_string(),
+                    shape: parse_shape(i.req("shape")?)?,
+                    dtype: i.str_of("dtype")?.to_string(),
+                });
+            }
+            let mut outputs = vec![];
+            for o in e.req("outputs")?.as_arr().unwrap_or(&[]) {
+                outputs.push(OutputSpec {
+                    shape: parse_shape(o.req("shape")?)?,
+                    dtype: o.str_of("dtype")?.to_string(),
+                });
+            }
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    name: name.clone(),
+                    file: e.str_of("file")?.to_string(),
+                    model: e.str_of("model")?.to_string(),
+                    kind: e.str_of("kind")?.to_string(),
+                    meta: e.get("meta").cloned().unwrap_or(Json::Null),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        if models.is_empty() || executables.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, executables })
+    }
+
+    pub fn exec_spec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown executable {name:?}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m": {"hyper": {"d": 4, "batch": 2},
+               "params": {"file": "m_params.bin", "total": 6,
+                          "layout": [{"name": "w", "shape": [2, 2],
+                                      "offset": 0, "size": 4},
+                                     {"name": "b", "shape": [2],
+                                      "offset": 4, "size": 2}]}}
+      },
+      "executables": {
+        "m_train": {"file": "m_train.hlo.txt", "model": "m", "kind": "train",
+          "meta": {"steps": 8},
+          "inputs": [{"role": "param:w", "name": "w", "shape": [2, 2],
+                      "dtype": "float32"},
+                     {"role": "opt:m:w", "name": "m_w", "shape": [2, 2],
+                      "dtype": "float32"},
+                     {"role": "batch:x", "name": "x", "shape": [2, 4],
+                      "dtype": "float32"},
+                     {"role": "scalar:lam", "name": "lam", "shape": [],
+                      "dtype": "float32"}],
+          "outputs": [{"shape": [2, 2], "dtype": "float32"},
+                      {"shape": [], "dtype": "float32"}]}
+      }
+    }"#;
+
+    fn sample_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "taynode-manifest-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::load(&sample_dir()).unwrap();
+        let e = m.exec_spec("m_train").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.n_state(), 2);
+        assert_eq!(e.inputs[2].elems(), 8);
+        assert_eq!(e.inputs[3].elems(), 1); // scalar
+        assert_eq!(e.inputs[0].role_kind(), "param");
+        let model = m.model("m").unwrap();
+        assert_eq!(model.total, 6);
+        assert_eq!(model.layout[1].offset, 4);
+        assert_eq!(model.hyper_usize("d").unwrap(), 4);
+    }
+
+    #[test]
+    fn missing_exec_errors() {
+        let m = Manifest::load(&sample_dir()).unwrap();
+        assert!(m.exec_spec("nope").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 runtime: PJRT client + artifact registry (`client`), the
+//! python→rust interface contract (`manifest`), training-state store
+//! (`params`), and the solver↔executable bridge (`dynamics`).
+//!
+//! Python never runs at this layer: artifacts are HLO text produced once by
+//! `make artifacts` and compiled here through the PJRT C API.
+
+pub mod client;
+pub mod dynamics;
+pub mod manifest;
+pub mod params;
+
+pub use client::{literal_f32, literal_i32, Executable, Runtime};
+pub use dynamics::XlaDynamics;
+pub use manifest::{ExecSpec, InputSpec, Manifest, ModelSpec};
+pub use params::ParamStore;

@@ -1,0 +1,205 @@
+//! Training-state store: named parameter and optimizer-slot arrays, kept as
+//! host vectors (checkpointable) and refreshed from train-step outputs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::ParamEntry;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub layout: Vec<ParamEntry>,
+    /// Parameter values, in layout order.
+    pub values: Vec<Vec<f32>>,
+    /// Optimizer slots ("m", "v", ...) in layout order.
+    pub slots: BTreeMap<String, Vec<Vec<f32>>>,
+}
+
+impl ParamStore {
+    pub fn new(layout: Vec<ParamEntry>, values: Vec<Vec<f32>>) -> ParamStore {
+        assert_eq!(layout.len(), values.len());
+        for (e, v) in layout.iter().zip(&values) {
+            assert_eq!(e.size, v.len(), "{}", e.name);
+        }
+        ParamStore { layout, values, slots: BTreeMap::new() }
+    }
+
+    /// Add a zero-initialized optimizer slot (adam m/v, sgd momentum).
+    pub fn add_slot(&mut self, slot: &str) {
+        let zeros: Vec<Vec<f32>> =
+            self.layout.iter().map(|e| vec![0.0; e.size]).collect();
+        self.slots.insert(slot.to_string(), zeros);
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.layout
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| anyhow!("unknown parameter {name:?}"))
+    }
+
+    pub fn value(&self, name: &str) -> Result<&Vec<f32>> {
+        Ok(&self.values[self.index_of(name)?])
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.layout[self.index_of(name)?].shape)
+    }
+
+    pub fn slot_value(&self, slot: &str, name: &str) -> Result<&Vec<f32>> {
+        let s = self
+            .slots
+            .get(slot)
+            .ok_or_else(|| anyhow!("unknown slot {slot:?}"))?;
+        Ok(&s[self.index_of(name)?])
+    }
+
+    pub fn set_value(&mut self, idx: usize, data: Vec<f32>) {
+        assert_eq!(data.len(), self.layout[idx].size);
+        self.values[idx] = data;
+    }
+
+    pub fn set_slot_value(&mut self, slot: &str, idx: usize, data: Vec<f32>) {
+        let s = self.slots.get_mut(slot).expect("slot exists");
+        assert_eq!(data.len(), s[idx].len());
+        s[idx] = data;
+    }
+
+    /// L2 norm of all parameters (divergence tripwire in the trainer).
+    pub fn global_norm(&self) -> f32 {
+        self.values
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|x| x * x)
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut bytes: Vec<u8> = vec![];
+        let mut meta_slots = vec![];
+        for v in &self.values {
+            for x in v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for (slot, vs) in &self.slots {
+            meta_slots.push(Json::str(slot.clone()));
+            for v in vs {
+                for x in v {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        let meta = Json::obj(vec![
+            ("slots", Json::Arr(meta_slots)),
+            (
+                "layout",
+                Json::Arr(
+                    self.layout
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("name", Json::str(e.name.clone())),
+                                ("size", Json::num(e.size as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path.with_extension("json"), meta.to_string())?;
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        let meta_path = path.with_extension("json");
+        let meta = Json::parse(
+            &std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {meta_path:?}"))?,
+        )?;
+        let bytes = std::fs::read(path)?;
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let per_copy: usize = self.layout.iter().map(|e| e.size).sum();
+        let slots: Vec<String> = meta
+            .req("slots")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| s.as_str().map(|x| x.to_string()))
+            .collect();
+        if flat.len() != per_copy * (1 + slots.len()) {
+            bail!("checkpoint size mismatch");
+        }
+        let mut off = 0;
+        for i in 0..self.layout.len() {
+            let n = self.layout[i].size;
+            self.values[i] = flat[off..off + n].to_vec();
+            off += n;
+        }
+        self.slots.clear();
+        for slot in slots {
+            let mut vs = vec![];
+            for e in &self.layout {
+                vs.push(flat[off..off + e.size].to_vec());
+                off += e.size;
+            }
+            self.slots.insert(slot, vs);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        let layout = vec![
+            ParamEntry { name: "w".into(), shape: vec![2, 2], offset: 0, size: 4 },
+            ParamEntry { name: "b".into(), shape: vec![2], offset: 4, size: 2 },
+        ];
+        ParamStore::new(layout, vec![vec![1., 2., 3., 4.], vec![5., 6.]])
+    }
+
+    #[test]
+    fn lookup_and_update() {
+        let mut s = store();
+        assert_eq!(s.value("b").unwrap(), &vec![5., 6.]);
+        assert_eq!(s.shape("w").unwrap(), &[2, 2]);
+        s.add_slot("m");
+        assert_eq!(s.slot_value("m", "w").unwrap(), &vec![0.0; 4]);
+        s.set_value(1, vec![7., 8.]);
+        assert_eq!(s.value("b").unwrap(), &vec![7., 8.]);
+        assert!(s.value("nope").is_err());
+        let gn = s.global_norm();
+        assert!((gn - (1.0f32 + 4.0 + 9.0 + 16.0 + 49.0 + 64.0).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut s = store();
+        s.add_slot("m");
+        s.set_slot_value("m", 0, vec![9., 9., 9., 9.]);
+        let dir = std::env::temp_dir()
+            .join(format!("taynode-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        s.save(&path).unwrap();
+
+        let mut s2 = store();
+        s2.add_slot("m");
+        s2.load(&path).unwrap();
+        assert_eq!(s2.values, s.values);
+        assert_eq!(s2.slots, s.slots);
+    }
+}

@@ -1,0 +1,97 @@
+//! Fixed-grid explicit RK driver.
+//!
+//! Mirrors the JAX-side `odeint_grid` used inside exported train steps (the
+//! python/tests and rust tests check both against the same analytic
+//! solutions), and is used by experiments that need a deterministic step
+//! budget.  Allocation-free inner loop: stage buffers are preallocated once.
+
+use super::tableau::Tableau;
+use super::Dynamics;
+use crate::tensor::multi_axpy_into;
+
+/// Integrate `f` from t0 to t1 in `steps` uniform steps.  Returns the final
+/// state and the exact NFE spent.
+pub fn solve_fixed<F: Dynamics>(
+    mut f: F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> (Vec<f32>, usize) {
+    solve_fixed_mut(&mut f, t0, t1, y0, steps, tb)
+}
+
+/// `&mut`-receiver variant for callers that need to keep ownership of the
+/// dynamics (e.g. the step-doubling adaptive driver).
+pub fn solve_fixed_mut<F: Dynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> (Vec<f32>, usize) {
+    let (y, _traj, nfe) = drive(f, t0, t1, y0, steps, tb, false);
+    (y, nfe)
+}
+
+/// Like `solve_fixed`, but also record the state after every step.
+pub fn solve_fixed_traj<F: Dynamics>(
+    mut f: F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> (Vec<f32>, Vec<Vec<f32>>, usize) {
+    drive(&mut f, t0, t1, y0, steps, tb, true)
+}
+
+fn drive<F: Dynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+    record: bool,
+) -> (Vec<f32>, Vec<Vec<f32>>, usize) {
+    assert!(steps > 0);
+    let n = y0.len();
+    let dt = (t1 - t0) / steps as f32;
+    let mut y = y0.to_vec();
+    let mut ystage = vec![0.0f32; n];
+    let mut ks: Vec<Vec<f32>> = (0..tb.stages).map(|_| vec![0.0f32; n]).collect();
+    let mut traj = Vec::new();
+    let mut nfe = 0usize;
+
+    for s in 0..steps {
+        let t = t0 + s as f32 * dt;
+        // stage 0
+        {
+            let (k0, _) = ks.split_at_mut(1);
+            f.eval(t, &y, &mut k0[0]);
+        }
+        nfe += 1;
+        // stages 1..S
+        for i in 0..tb.a.len() {
+            let row = &tb.a[i];
+            let coeffs: Vec<f32> = row.iter().map(|a| (*a as f32) * dt).collect();
+            let prev: Vec<&[f32]> = ks[..=i].iter().map(|k| k.as_slice()).collect();
+            multi_axpy_into(&coeffs, &prev, &y, &mut ystage);
+            let (done, rest) = ks.split_at_mut(i + 1);
+            let _ = done;
+            f.eval(t + tb.c[i + 1] as f32 * dt, &ystage, &mut rest[0]);
+            nfe += 1;
+        }
+        // combine
+        let coeffs: Vec<f32> = tb.b.iter().map(|b| (*b as f32) * dt).collect();
+        let stages: Vec<&[f32]> = ks.iter().map(|k| k.as_slice()).collect();
+        multi_axpy_into(&coeffs, &stages, &y.clone(), &mut y);
+        if record {
+            traj.push(y.clone());
+        }
+    }
+    (y, traj, nfe)
+}

@@ -1,0 +1,241 @@
+//! Runge-Kutta ODE solver suite — the paper's evaluation instrument.
+//!
+//! The number of function evaluations (NFE) an *adaptive* solver spends on
+//! learned dynamics is TayNODE's headline metric; this module provides the
+//! fixed-grid and adaptive drivers, the PI step-size controller, NFE
+//! accounting, and grid-output solving for trajectory models.  Dynamics are
+//! arbitrary `FnMut(t, y, dy)` — in production they invoke a PJRT-compiled
+//! XLA executable (`crate::runtime`), in tests they are native Rust closures.
+
+pub mod adaptive;
+pub mod fixed;
+pub mod tableau;
+
+pub use adaptive::{solve_adaptive, solve_to_times, AdaptiveOpts, SolveStats};
+pub use fixed::{solve_fixed, solve_fixed_traj};
+pub use tableau::Tableau;
+
+/// A dynamics function dy = f(t, y) writing into a preallocated buffer.
+pub trait Dynamics {
+    fn eval(&mut self, t: f32, y: &[f32], dy: &mut [f32]);
+}
+
+impl<F: FnMut(f32, &[f32], &mut [f32])> Dynamics for F {
+    fn eval(&mut self, t: f32, y: &[f32], dy: &mut [f32]) {
+        self(t, y, dy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    fn poly_deriv_dynamics(coeffs: Vec<f32>) -> impl FnMut(f32, &[f32], &mut [f32]) {
+        // dz/dt = p'(t) so z(t) = p(t) - p(0) + z0: total derivatives of
+        // order > deg(p) vanish identically.
+        move |t, _y, dy| {
+            let mut acc = 0.0f32;
+            // p'(t) with p = sum c_i t^i  =>  sum i c_i t^{i-1}
+            for (i, c) in coeffs.iter().enumerate().skip(1) {
+                acc += i as f32 * c * t.powi(i as i32 - 1);
+            }
+            for d in dy.iter_mut() {
+                *d = acc;
+            }
+        }
+    }
+
+    fn eval_poly(coeffs: &[f32], t: f32) -> f32 {
+        coeffs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c * t.powi(i as i32))
+            .sum()
+    }
+
+    #[test]
+    fn fixed_polynomial_exactness_property() {
+        // Property: an order-m tableau integrates dz/dt = p'(t) exactly
+        // (up to f32 roundoff) whenever deg p <= m.
+        Prop::new(60).run("poly-exactness", |rng: &mut Pcg, case| {
+            let names = ["euler", "midpoint", "ralston", "bosh3", "rk4", "rk38"];
+            let tb = tableau::by_name(names[case % names.len()]).unwrap();
+            let deg = (tb.order as usize).min(1 + rng.below(tb.order as usize));
+            let coeffs = gen::poly(rng, deg, 1.0);
+            let f = poly_deriv_dynamics(coeffs.clone());
+            let (y, nfe) = solve_fixed(f, 0.0, 1.0, &[0.5f32], 4, &tb);
+            let want = 0.5 + eval_poly(&coeffs, 1.0) - eval_poly(&coeffs, 0.0);
+            assert_eq!(nfe, 4 * tb.stages);
+            assert!(
+                (y[0] - want).abs() < 2e-4 * (1.0 + want.abs()),
+                "{} deg {deg}: {} vs {want}",
+                tb.name,
+                y[0]
+            );
+        });
+    }
+
+    #[test]
+    fn convergence_rates_match_order() {
+        // dz/dt = z on [0,1]; error ~ C h^order.
+        for name in ["euler", "midpoint", "bosh3", "rk4", "dopri5"] {
+            let tb = tableau::by_name(name).unwrap();
+            // keep truncation error above the f32 roundoff floor: fewer
+            // steps for higher-order methods
+            // keep truncation error above the f32 roundoff floor: fewer
+            // steps for higher-order methods.  At order >= 5 there is no
+            // f32 window where the asymptotic rate is observable, so we
+            // assert near-roundoff accuracy instead.
+            if tb.order >= 5 {
+                let (y, _) =
+                    solve_fixed(|_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+                                0.0, 1.0, &[1.0f32], 4, &tb);
+                let err = ((y[0] as f64) - std::f64::consts::E).abs();
+                assert!(err < 5e-6, "{name}: err {err}");
+                continue;
+            }
+            let pair = match tb.order {
+                0..=2 => [16usize, 32],
+                3 => [8, 16],
+                _ => [2, 4],
+            };
+            let mut errs = vec![];
+            for steps in pair {
+                let (y, _) =
+                    solve_fixed(|_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+                                0.0, 1.0, &[1.0f32], steps, &tb);
+                errs.push(((y[0] as f64) - std::f64::consts::E).abs());
+            }
+            let rate = (errs[0] / errs[1]).log2();
+            assert!(
+                rate > tb.order as f64 - 0.55,
+                "{name}: rate {rate} < order {}",
+                tb.order
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_matches_analytic_solution() {
+        // Linear rotation: (x, v)' = (v, -x); x(pi/2) = 0, v = -1.
+        for name in ["heun_euler", "bosh3", "fehlberg45", "cash_karp", "dopri5"] {
+            let tb = tableau::by_name(name).unwrap();
+            let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+            let res = solve_adaptive(
+                |_t, y: &[f32], dy: &mut [f32]| {
+                    dy[0] = y[1];
+                    dy[1] = -y[0];
+                },
+                0.0,
+                std::f32::consts::FRAC_PI_2,
+                &[1.0, 0.0],
+                &tb,
+                &opts,
+            );
+            assert!(res.y[0].abs() < 1e-3, "{name}: x={}", res.y[0]);
+            assert!((res.y[1] + 1.0).abs() < 1e-3, "{name}: v={}", res.y[1]);
+            assert!(res.stats.nfe > 0 && res.stats.accepted > 0);
+        }
+    }
+
+    #[test]
+    fn adaptive_tolerance_monotonicity() {
+        // Property: tightening rtol never decreases NFE (controller sanity).
+        let mut nfes = vec![];
+        for rtol in [1e-2f32, 1e-4, 1e-6, 1e-8] {
+            let tb = tableau::dopri5();
+            let opts = AdaptiveOpts { rtol, atol: rtol * 1e-2, ..Default::default() };
+            let res = solve_adaptive(
+                |t: f32, y: &[f32], dy: &mut [f32]| dy[0] = (3.0 * t).sin() * y[0],
+                0.0,
+                4.0,
+                &[1.0f32],
+                &tb,
+                &opts,
+            );
+            nfes.push(res.stats.nfe);
+        }
+        for w in nfes.windows(2) {
+            assert!(w[1] >= w[0], "{nfes:?}");
+        }
+    }
+
+    #[test]
+    fn adaptive_stiffer_dynamics_cost_more_nfe() {
+        // The mechanism the paper exploits: larger high-order derivatives
+        // (here: higher oscillation frequency) => more NFE at fixed tol.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let nfe_of = |freq: f32| {
+            solve_adaptive(
+                move |t: f32, _y: &[f32], dy: &mut [f32]| dy[0] = (freq * t).cos(),
+                0.0,
+                1.0,
+                &[0.0f32],
+                &tb,
+                &opts,
+            )
+            .stats
+            .nfe
+        };
+        assert!(nfe_of(40.0) > nfe_of(2.0));
+    }
+
+    #[test]
+    fn step_doubling_fallback_for_plain_tableaux() {
+        // rk4 has no embedded pair; adaptivity must still work.
+        let tb = tableau::rk4();
+        let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+        let res = solve_adaptive(
+            |_t, y: &[f32], dy: &mut [f32]| dy[0] = -y[0],
+            0.0,
+            2.0,
+            &[1.0f32],
+            &tb,
+            &opts,
+        );
+        assert!((res.y[0] - (-2.0f32).exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn solve_to_times_hits_grid() {
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let times = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+        let (traj, stats) = solve_to_times(
+            |_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+            &times,
+            &[1.0f32],
+            &tb,
+            &opts,
+        );
+        assert_eq!(traj.len(), times.len());
+        for (z, t) in traj.iter().zip(&times) {
+            assert!((z[0] - t.exp()).abs() < 1e-3, "t={t}");
+        }
+        assert!(stats.nfe > 0);
+    }
+
+    #[test]
+    fn nfe_accounting_exact_for_fixed() {
+        for name in tableau::ALL {
+            let tb = tableau::by_name(name).unwrap();
+            let mut count = 0usize;
+            let (_, nfe) = solve_fixed(
+                |_t, _y: &[f32], dy: &mut [f32]| {
+                    count += 1;
+                    dy[0] = 1.0;
+                },
+                0.0,
+                1.0,
+                &[0.0f32],
+                7,
+                &tb,
+            );
+            assert_eq!(nfe, count, "{name}");
+            assert_eq!(nfe, 7 * tb.stages, "{name}");
+        }
+    }
+}

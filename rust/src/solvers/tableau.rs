@@ -1,0 +1,360 @@
+//! Explicit Runge-Kutta Butcher tableaux, with embedded error weights where
+//! a classical pair exists.  Coefficients are standard (Hairer-Norsett-Wanner
+//! I; Dormand & Prince 1980; Bogacki & Shampine 1989; Fehlberg 1969;
+//! Cash & Karp 1990) and are validated by order-exactness property tests in
+//! `super::tests` (an order-m tableau must integrate polynomials of degree
+//! <= m-1 exactly and show an h^m convergence rate).
+
+#[derive(Clone, Debug)]
+pub struct Tableau {
+    pub name: &'static str,
+    /// Classical order of the propagating solution.
+    pub order: u32,
+    pub stages: usize,
+    /// Strictly-lower-triangular coupling coefficients; row i has i entries.
+    pub a: Vec<Vec<f64>>,
+    /// Solution weights.
+    pub b: Vec<f64>,
+    /// Error weights e = b - b_hat (None for fixed-step-only tableaux;
+    /// adaptivity then falls back to step doubling).
+    pub e: Option<Vec<f64>>,
+    /// Stage abscissae.
+    pub c: Vec<f64>,
+    /// First-same-as-last: stage `stages-1` equals f at the accepted point.
+    pub fsal: bool,
+}
+
+impl Tableau {
+    pub fn validate(&self) {
+        assert_eq!(self.a.len(), self.stages - 1, "{}", self.name);
+        for (i, row) in self.a.iter().enumerate() {
+            assert_eq!(row.len(), i + 1, "{} row {i}", self.name);
+        }
+        assert_eq!(self.b.len(), self.stages, "{}", self.name);
+        assert_eq!(self.c.len(), self.stages, "{}", self.name);
+        let bs: f64 = self.b.iter().sum();
+        assert!((bs - 1.0).abs() < 1e-12, "{}: sum b = {bs}", self.name);
+        for (i, row) in self.a.iter().enumerate() {
+            let rs: f64 = row.iter().sum();
+            assert!(
+                (rs - self.c[i + 1]).abs() < 1e-9,
+                "{}: row {i} sum {rs} != c {}",
+                self.name,
+                self.c[i + 1]
+            );
+        }
+        if let Some(e) = &self.e {
+            assert_eq!(e.len(), self.stages, "{}", self.name);
+            // e = b - b_hat and both weight rows sum to 1 => sum e = 0.
+            let es: f64 = e.iter().sum();
+            assert!(es.abs() < 1e-10, "{}: sum e = {es}", self.name);
+        }
+    }
+}
+
+pub fn euler() -> Tableau {
+    Tableau {
+        name: "euler",
+        order: 1,
+        stages: 1,
+        a: vec![],
+        b: vec![1.0],
+        e: None,
+        c: vec![0.0],
+        fsal: false,
+    }
+}
+
+pub fn midpoint() -> Tableau {
+    Tableau {
+        name: "midpoint",
+        order: 2,
+        stages: 2,
+        a: vec![vec![0.5]],
+        b: vec![0.0, 1.0],
+        e: None,
+        c: vec![0.0, 0.5],
+        fsal: false,
+    }
+}
+
+pub fn ralston() -> Tableau {
+    Tableau {
+        name: "ralston",
+        order: 2,
+        stages: 2,
+        a: vec![vec![2.0 / 3.0]],
+        b: vec![0.25, 0.75],
+        e: None,
+        c: vec![0.0, 2.0 / 3.0],
+        fsal: false,
+    }
+}
+
+/// Heun-Euler 2(1) embedded pair — the lowest-order adaptive solver.
+pub fn heun_euler() -> Tableau {
+    Tableau {
+        name: "heun_euler",
+        order: 2,
+        stages: 2,
+        a: vec![vec![1.0]],
+        b: vec![0.5, 0.5],
+        e: Some(vec![-0.5, 0.5]), // b - [1, 0]
+        c: vec![0.0, 1.0],
+        fsal: false,
+    }
+}
+
+/// Bogacki-Shampine 3(2), FSAL (ode23 / jax bosh3).
+pub fn bosh3() -> Tableau {
+    let b = [2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0];
+    let bh = [7.0 / 24.0, 0.25, 1.0 / 3.0, 0.125];
+    Tableau {
+        name: "bosh3",
+        order: 3,
+        stages: 4,
+        a: vec![
+            vec![0.5],
+            vec![0.0, 0.75],
+            vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0],
+        ],
+        b: b.to_vec(),
+        e: Some(b.iter().zip(&bh).map(|(x, y)| x - y).collect()),
+        c: vec![0.0, 0.5, 0.75, 1.0],
+        fsal: true,
+    }
+}
+
+/// The classical RK4.
+pub fn rk4() -> Tableau {
+    Tableau {
+        name: "rk4",
+        order: 4,
+        stages: 4,
+        a: vec![vec![0.5], vec![0.0, 0.5], vec![0.0, 0.0, 1.0]],
+        b: vec![1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+        e: None,
+        c: vec![0.0, 0.5, 0.5, 1.0],
+        fsal: false,
+    }
+}
+
+/// 3/8-rule fourth-order method (Kutta 1901).
+pub fn rk38() -> Tableau {
+    Tableau {
+        name: "rk38",
+        order: 4,
+        stages: 4,
+        a: vec![
+            vec![1.0 / 3.0],
+            vec![-1.0 / 3.0, 1.0],
+            vec![1.0, -1.0, 1.0],
+        ],
+        b: vec![0.125, 0.375, 0.375, 0.125],
+        e: None,
+        c: vec![0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0],
+        fsal: false,
+    }
+}
+
+/// Fehlberg 4(5): propagate the 4th-order solution, 5th-order error est.
+pub fn fehlberg45() -> Tableau {
+    let b4 = [
+        25.0 / 216.0,
+        0.0,
+        1408.0 / 2565.0,
+        2197.0 / 4104.0,
+        -0.2,
+        0.0,
+    ];
+    let b5 = [
+        16.0 / 135.0,
+        0.0,
+        6656.0 / 12825.0,
+        28561.0 / 56430.0,
+        -9.0 / 50.0,
+        2.0 / 55.0,
+    ];
+    Tableau {
+        name: "fehlberg45",
+        order: 4,
+        stages: 6,
+        a: vec![
+            vec![0.25],
+            vec![3.0 / 32.0, 9.0 / 32.0],
+            vec![1932.0 / 2197.0, -7200.0 / 2197.0, 7296.0 / 2197.0],
+            vec![439.0 / 216.0, -8.0, 3680.0 / 513.0, -845.0 / 4104.0],
+            vec![
+                -8.0 / 27.0,
+                2.0,
+                -3544.0 / 2565.0,
+                1859.0 / 4104.0,
+                -11.0 / 40.0,
+            ],
+        ],
+        b: b4.to_vec(),
+        e: Some(b4.iter().zip(&b5).map(|(x, y)| x - y).collect()),
+        c: vec![0.0, 0.25, 0.375, 12.0 / 13.0, 1.0, 0.5],
+        fsal: false,
+    }
+}
+
+/// Cash-Karp 5(4).
+pub fn cash_karp() -> Tableau {
+    let b5 = [
+        37.0 / 378.0,
+        0.0,
+        250.0 / 621.0,
+        125.0 / 594.0,
+        0.0,
+        512.0 / 1771.0,
+    ];
+    let b4 = [
+        2825.0 / 27648.0,
+        0.0,
+        18575.0 / 48384.0,
+        13525.0 / 55296.0,
+        277.0 / 14336.0,
+        0.25,
+    ];
+    Tableau {
+        name: "cash_karp",
+        order: 5,
+        stages: 6,
+        a: vec![
+            vec![0.2],
+            vec![3.0 / 40.0, 9.0 / 40.0],
+            vec![0.3, -0.9, 1.2],
+            vec![-11.0 / 54.0, 2.5, -70.0 / 27.0, 35.0 / 27.0],
+            vec![
+                1631.0 / 55296.0,
+                175.0 / 512.0,
+                575.0 / 13824.0,
+                44275.0 / 110592.0,
+                253.0 / 4096.0,
+            ],
+        ],
+        b: b5.to_vec(),
+        e: Some(b5.iter().zip(&b4).map(|(x, y)| x - y).collect()),
+        c: vec![0.0, 0.2, 0.3, 0.6, 1.0, 7.0 / 8.0],
+        fsal: false,
+    }
+}
+
+/// Dormand-Prince 5(4), FSAL — `dopri5`, the paper's default solver.
+pub fn dopri5() -> Tableau {
+    let b = [
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+        0.0,
+    ];
+    let bh = [
+        5179.0 / 57600.0,
+        0.0,
+        7571.0 / 16695.0,
+        393.0 / 640.0,
+        -92097.0 / 339200.0,
+        187.0 / 2100.0,
+        1.0 / 40.0,
+    ];
+    Tableau {
+        name: "dopri5",
+        order: 5,
+        stages: 7,
+        a: vec![
+            vec![0.2],
+            vec![3.0 / 40.0, 9.0 / 40.0],
+            vec![44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0],
+            vec![
+                19372.0 / 6561.0,
+                -25360.0 / 2187.0,
+                64448.0 / 6561.0,
+                -212.0 / 729.0,
+            ],
+            vec![
+                9017.0 / 3168.0,
+                -355.0 / 33.0,
+                46732.0 / 5247.0,
+                49.0 / 176.0,
+                -5103.0 / 18656.0,
+            ],
+            vec![
+                35.0 / 384.0,
+                0.0,
+                500.0 / 1113.0,
+                125.0 / 192.0,
+                -2187.0 / 6784.0,
+                11.0 / 84.0,
+            ],
+        ],
+        b: b.to_vec(),
+        e: Some(b.iter().zip(&bh).map(|(x, y)| x - y).collect()),
+        c: vec![0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+        fsal: true,
+    }
+}
+
+/// Look up a tableau by name (CLI / config surface).
+pub fn by_name(name: &str) -> Option<Tableau> {
+    Some(match name {
+        "euler" => euler(),
+        "midpoint" => midpoint(),
+        "ralston" => ralston(),
+        "heun_euler" | "heun" => heun_euler(),
+        "bosh3" => bosh3(),
+        "rk4" => rk4(),
+        "rk38" => rk38(),
+        "fehlberg45" | "rkf45" => fehlberg45(),
+        "cash_karp" => cash_karp(),
+        "dopri5" => dopri5(),
+        _ => return None,
+    })
+}
+
+pub const ALL: &[&str] = &[
+    "euler", "midpoint", "ralston", "heun_euler", "bosh3", "rk4", "rk38",
+    "fehlberg45", "cash_karp", "dopri5",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tableaux_validate() {
+        for name in ALL {
+            by_name(name).unwrap().validate();
+        }
+    }
+
+    #[test]
+    fn adaptive_pairs_have_error_weights() {
+        for name in ["heun_euler", "bosh3", "fehlberg45", "cash_karp", "dopri5"] {
+            assert!(by_name(name).unwrap().e.is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn fsal_consistency() {
+        // For FSAL tableaux the last row of `a` must equal b[..stages-1]
+        // and c[last] must be 1.
+        for name in ["bosh3", "dopri5"] {
+            let t = by_name(name).unwrap();
+            assert!(t.fsal);
+            let last = &t.a[t.stages - 2];
+            for (i, v) in last.iter().enumerate() {
+                assert!((v - t.b[i]).abs() < 1e-12, "{name} col {i}");
+            }
+            assert_eq!(t.c[t.stages - 1], 1.0);
+        }
+    }
+
+    #[test]
+    fn unknown_name_none() {
+        assert!(by_name("tsit99").is_none());
+    }
+}

@@ -1,0 +1,387 @@
+//! Truncated Taylor-series arithmetic and ODE-solution jets in pure Rust —
+//! the native counterpart of `python/compile/taylor.py` (paper §4 / App. A).
+//!
+//! Used by: the Fig 2 polynomial-order experiments, the toy-dynamics
+//! experiments that run without XLA, and property tests cross-checking the
+//! propagation rules against the Python implementation's semantics.
+//! Coefficients are *normalized Taylor coefficients* c[i] = x_i / i!.
+
+/// A scalar truncated Taylor polynomial sum_i c[i] t^i.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Series {
+    pub c: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(c: Vec<f64>) -> Series {
+        assert!(!c.is_empty());
+        Series { c }
+    }
+
+    pub fn constant(x: f64, order: usize) -> Series {
+        let mut c = vec![0.0; order + 1];
+        c[0] = x;
+        Series { c }
+    }
+
+    /// The independent variable itself: t0 + 1*t.
+    pub fn time(t0: f64, order: usize) -> Series {
+        let mut c = vec![0.0; order + 1];
+        c[0] = t0;
+        if order >= 1 {
+            c[1] = 1.0;
+        }
+        Series { c }
+    }
+
+    pub fn order(&self) -> usize {
+        self.c.len() - 1
+    }
+
+    /// Unnormalized derivative coefficient d^k x/dt^k = k! c[k].
+    pub fn derivative(&self, k: usize) -> f64 {
+        self.c[k] * factorial(k)
+    }
+
+    pub fn add(&self, o: &Series) -> Series {
+        assert_eq!(self.order(), o.order());
+        Series::new(self.c.iter().zip(&o.c).map(|(a, b)| a + b).collect())
+    }
+
+    pub fn sub(&self, o: &Series) -> Series {
+        assert_eq!(self.order(), o.order());
+        Series::new(self.c.iter().zip(&o.c).map(|(a, b)| a - b).collect())
+    }
+
+    pub fn scale(&self, a: f64) -> Series {
+        Series::new(self.c.iter().map(|x| a * x).collect())
+    }
+
+    pub fn add_scalar(&self, a: f64) -> Series {
+        let mut c = self.c.clone();
+        c[0] += a;
+        Series::new(c)
+    }
+
+    /// Truncated Cauchy product (Table 1 row 2).
+    pub fn mul(&self, o: &Series) -> Series {
+        assert_eq!(self.order(), o.order());
+        let k1 = self.c.len();
+        let mut out = vec![0.0; k1];
+        for k in 0..k1 {
+            for j in 0..=k {
+                out[k] += self.c[j] * o.c[k - j];
+            }
+        }
+        Series::new(out)
+    }
+
+    /// Division (Table 1 row 3).
+    pub fn div(&self, o: &Series) -> Series {
+        assert_eq!(self.order(), o.order());
+        let k1 = self.c.len();
+        let mut out = vec![0.0; k1];
+        for k in 0..k1 {
+            let mut acc = self.c[k];
+            for j in 0..k {
+                acc -= out[j] * o.c[k - j];
+            }
+            out[k] = acc / o.c[0];
+        }
+        Series::new(out)
+    }
+
+    pub fn exp(&self) -> Series {
+        let k1 = self.c.len();
+        let mut y = vec![0.0; k1];
+        y[0] = self.c[0].exp();
+        for k in 1..k1 {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                acc += j as f64 * self.c[j] * y[k - j];
+            }
+            y[k] = acc / k as f64;
+        }
+        Series::new(y)
+    }
+
+    pub fn ln(&self) -> Series {
+        let k1 = self.c.len();
+        let mut y = vec![0.0; k1];
+        y[0] = self.c[0].ln();
+        for k in 1..k1 {
+            let mut acc = k as f64 * self.c[k];
+            for j in 1..k {
+                acc -= (k - j) as f64 * y[k - j] * self.c[j];
+            }
+            y[k] = acc / (k as f64 * self.c[0]);
+        }
+        Series::new(y)
+    }
+
+    pub fn sqrt(&self) -> Series {
+        let k1 = self.c.len();
+        let mut y = vec![0.0; k1];
+        y[0] = self.c[0].sqrt();
+        for k in 1..k1 {
+            let mut acc = self.c[k];
+            for j in 1..k {
+                acc -= y[j] * y[k - j];
+            }
+            y[k] = acc / (2.0 * y[0]);
+        }
+        Series::new(y)
+    }
+
+    pub fn sin_cos(&self) -> (Series, Series) {
+        let k1 = self.c.len();
+        let mut s = vec![0.0; k1];
+        let mut c = vec![0.0; k1];
+        s[0] = self.c[0].sin();
+        c[0] = self.c[0].cos();
+        for k in 1..k1 {
+            let mut sa = 0.0;
+            let mut ca = 0.0;
+            for j in 1..=k {
+                let zj = j as f64 * self.c[j];
+                sa += zj * c[k - j];
+                ca += zj * s[k - j];
+            }
+            s[k] = sa / k as f64;
+            c[k] = -ca / k as f64;
+        }
+        (Series::new(s), Series::new(c))
+    }
+
+    /// tanh via the ODE s' = (1 - s^2) z'.
+    pub fn tanh(&self) -> Series {
+        let k1 = self.c.len();
+        let mut s = vec![0.0; k1];
+        s[0] = self.c[0].tanh();
+        for k in 1..k1 {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                let m = k - j;
+                // u[m] = delta_{m0} - (s*s)[m], with s[0..=m] already known
+                let mut ssm = 0.0;
+                for i in 0..=m {
+                    ssm += s[i] * s[m - i];
+                }
+                let u = if m == 0 { 1.0 - ssm } else { -ssm };
+                acc += j as f64 * self.c[j] * u;
+            }
+            s[k] = acc / k as f64;
+        }
+        Series::new(s)
+    }
+
+    pub fn powi(&self, n: usize) -> Series {
+        let mut out = Series::constant(1.0, self.order());
+        for _ in 0..n {
+            out = out.mul(self);
+        }
+        out
+    }
+
+    /// Evaluate the polynomial at offset t.
+    pub fn eval(&self, t: f64) -> f64 {
+        let mut acc = 0.0;
+        for &ci in self.c.iter().rev() {
+            acc = acc * t + ci;
+        }
+        acc
+    }
+}
+
+pub fn factorial(k: usize) -> f64 {
+    (1..=k).map(|i| i as f64).product()
+}
+
+/// Derivative coefficients [x_1, ..., x_order] of the solution of the scalar
+/// ODE dz/dt = f(z, t) through (z0, t0) — Algorithm 1, with `f` evaluated on
+/// `Series` arguments.
+pub fn ode_jet<F: Fn(&Series, &Series) -> Series>(
+    f: F,
+    z0: f64,
+    t0: f64,
+    order: usize,
+) -> Vec<f64> {
+    let mut x: Vec<f64> = Vec::with_capacity(order);
+    // x_1 = f(z0, t0)
+    let f0 = f(&Series::constant(z0, 0), &Series::constant(t0, 0));
+    x.push(f0.c[0]);
+    for k in 1..order {
+        let mut zc = vec![z0];
+        for (i, xi) in x.iter().enumerate() {
+            zc.push(xi / factorial(i + 1));
+        }
+        let zs = Series::new(zc);
+        let ts = Series::time(t0, k);
+        let y = f(&zs, &ts);
+        // dz/dt = y  =>  x_{k+1} = k! * y_[k]
+        x.push(y.c[k] * factorial(k));
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::Prop;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn mul_matches_polynomial_multiplication() {
+        let a = Series::new(vec![1.0, 2.0, 3.0]);
+        let b = Series::new(vec![4.0, 5.0, 6.0]);
+        let p = a.mul(&b);
+        // (1+2t+3t^2)(4+5t+6t^2) = 4 + 13t + 28t^2 + ...
+        assert_eq!(p.c, vec![4.0, 13.0, 28.0]);
+    }
+
+    #[test]
+    fn div_inverts_mul_property() {
+        Prop::new(100).run("div-inverts-mul", |rng, _| {
+            let k = 1 + rng.below(6);
+            let a = Series::new((0..=k).map(|_| rng.range(-2.0, 2.0) as f64).collect());
+            let mut bc: Vec<f64> =
+                (0..=k).map(|_| rng.range(-2.0, 2.0) as f64).collect();
+            bc[0] = bc[0].signum() * (bc[0].abs() + 0.5); // keep away from 0
+            let b = Series::new(bc);
+            let q = a.mul(&b).div(&b);
+            for (x, y) in q.c.iter().zip(&a.c) {
+                assert!(close(*x, *y, 1e-9), "{:?} vs {:?}", q.c, a.c);
+            }
+        });
+    }
+
+    #[test]
+    fn exp_ln_roundtrip_property() {
+        Prop::new(100).run("exp-ln", |rng, _| {
+            let k = 1 + rng.below(6);
+            let mut c: Vec<f64> =
+                (0..=k).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+            c[0] = rng.range(0.5, 3.0) as f64;
+            let a = Series::new(c);
+            let r = a.exp().ln();
+            for (x, y) in r.c.iter().zip(&a.c) {
+                assert!(close(*x, *y, 1e-8), "{:?} vs {:?}", r.c, a.c);
+            }
+        });
+    }
+
+    #[test]
+    fn sqrt_squares_back_property() {
+        Prop::new(100).run("sqrt-sq", |rng, _| {
+            let k = 1 + rng.below(5);
+            let mut c: Vec<f64> =
+                (0..=k).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+            c[0] = rng.range(0.5, 4.0) as f64;
+            let a = Series::new(c);
+            let r = a.sqrt();
+            let sq = r.mul(&r);
+            for (x, y) in sq.c.iter().zip(&a.c) {
+                assert!(close(*x, *y, 1e-9));
+            }
+        });
+    }
+
+    #[test]
+    fn sin_cos_pythagorean_property() {
+        Prop::new(100).run("sin2cos2", |rng, _| {
+            let k = 1 + rng.below(6);
+            let a = Series::new((0..=k).map(|_| rng.range(-2.0, 2.0) as f64).collect());
+            let (s, c) = a.sin_cos();
+            let ident = s.mul(&s).add(&c.mul(&c));
+            assert!(close(ident.c[0], 1.0, 1e-10));
+            for v in &ident.c[1..] {
+                assert!(v.abs() < 1e-9, "{:?}", ident.c);
+            }
+        });
+    }
+
+    #[test]
+    fn tanh_matches_sinh_cosh_ratio() {
+        Prop::new(60).run("tanh-ratio", |rng, _| {
+            let k = 1 + rng.below(5);
+            let a = Series::new((0..=k).map(|_| rng.range(-1.0, 1.0) as f64).collect());
+            let t1 = a.tanh();
+            // tanh = (e^{2z} - 1)/(e^{2z} + 1)
+            let e2 = a.scale(2.0).exp();
+            let t2 = e2.add_scalar(-1.0).div(&e2.add_scalar(1.0));
+            for (x, y) in t1.c.iter().zip(&t2.c) {
+                assert!(close(*x, *y, 1e-8), "{:?} vs {:?}", t1.c, t2.c);
+            }
+        });
+    }
+
+    #[test]
+    fn derivative_coefficients_unnormalize() {
+        let s = Series::new(vec![1.0, 1.0, 0.5, 1.0 / 6.0]); // e^t
+        for k in 0..4 {
+            assert!(close(s.derivative(k), 1.0, 1e-12));
+        }
+    }
+
+    #[test]
+    fn ode_jet_exponential() {
+        // dz/dt = z  =>  all derivative coefficients equal z0.
+        let x = ode_jet(|z, _t| z.clone(), 2.0, 0.0, 6);
+        for v in &x {
+            assert!(close(*v, 2.0, 1e-12), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn ode_jet_time_dependent() {
+        // dz/dt = sin(t) => z^(k) = d^{k-1} sin(t).
+        let t0 = 0.7f64;
+        let x = ode_jet(|_z, t| t.sin_cos().0, 1.0, t0, 5);
+        let want = [t0.sin(), t0.cos(), -t0.sin(), -t0.cos(), t0.sin()];
+        for (a, b) in x.iter().zip(&want) {
+            assert!(close(*a, *b, 1e-10), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn ode_jet_logistic_vs_analytic() {
+        // dz/dt = z(1-z), z(0)=1/2 => z(t) = 1/(1+e^{-t}); check derivatives
+        // by finite differences of the analytic solution.
+        let order = 5;
+        let x = ode_jet(
+            |z, _t| z.mul(&z.scale(-1.0).add_scalar(1.0)),
+            0.5,
+            0.0,
+            order,
+        );
+        let z = |t: f64| 1.0 / (1.0 + (-t).exp());
+        let h = 1e-2;
+        // central differences for k = 1, 2
+        let d1 = (z(h) - z(-h)) / (2.0 * h);
+        let d2 = (z(h) - 2.0 * z(0.0) + z(-h)) / (h * h);
+        assert!(close(x[0], d1, 1e-4), "{} vs {}", x[0], d1);
+        assert!(close(x[1], d2, 1e-3), "{} vs {}", x[1], d2);
+    }
+
+    #[test]
+    fn polynomial_trajectory_has_vanishing_high_orders() {
+        // dz/dt = 3t^2 (so z is cubic): derivative coefficients above order
+        // 3 must vanish — the property Fig 2 is built on.
+        let x = ode_jet(
+            |_z, t| t.mul(t).scale(3.0),
+            0.0,
+            0.5,
+            6,
+        );
+        // z' = 3t^2, z'' = 6t, z''' = 6, z'''' = 0 ...
+        assert!(close(x[0], 0.75, 1e-12));
+        assert!(close(x[1], 3.0, 1e-12));
+        assert!(close(x[2], 6.0, 1e-12));
+        for v in &x[3..] {
+            assert!(v.abs() < 1e-10, "{x:?}");
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Minimal dense-tensor substrate (f32, row-major).
+//!
+//! The ODE solver suite operates on flat state vectors; the data generators
+//! need small matvec/affine ops.  This is intentionally BLAS-free — the
+//! heavy numerics run inside XLA executables, and the solver-side vector
+//! updates are memory-bound axpy's that the compiler vectorizes well (see
+//! `benches/perf_hotpath.rs`).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+// -- flat vector ops (solver hot path) ---------------------------------------
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// out = y + a * x  (writes into `out`, no allocation)
+#[inline]
+pub fn axpy_into(a: f32, x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = y[i] + a * x[i];
+    }
+}
+
+/// out = y + sum_j coeffs[j] * xs[j]   (fused multi-axpy, one pass)
+pub fn multi_axpy_into(coeffs: &[f32], xs: &[&[f32]], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(coeffs.len(), xs.len());
+    out.copy_from_slice(y);
+    for (c, x) in coeffs.iter().zip(xs) {
+        if *c != 0.0 {
+            axpy(*c, x, out);
+        }
+    }
+}
+
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// RMS norm — the error norm adaptive solvers use (Hairer II.4).
+pub fn rms(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (dot(x, x) / x.len() as f32).sqrt()
+}
+
+/// Small dense matvec: y = A x, A is [m, n] row-major.
+pub fn matvec(a: &[f32], m: usize, n: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] = dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.rank(), 2);
+        let z = Tensor::zeros(&[4]);
+        assert_eq!(z.len(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn axpy_family() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+
+        let mut out = [0.0; 2];
+        axpy_into(0.5, &x, &y, &mut out);
+        assert_eq!(out, [12.5, 25.0]);
+
+        multi_axpy_into(&[1.0, 0.0, 2.0], &[&x, &x, &x], &[0.0, 0.0], &mut out);
+        assert_eq!(out, [3.0, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        assert!((rms(&[3.0, 4.0]) - (12.5f32).sqrt()).abs() < 1e-6);
+        assert_eq!(rms(&[]), 0.0);
+    }
+
+    #[test]
+    fn matvec_small() {
+        let a = [1.0, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let mut y = [0.0; 2];
+        matvec(&a, 2, 2, &[1.0, 1.0], &mut y);
+        assert_eq!(y, [3.0, 7.0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.flags.insert(
+                        stripped[..eq].to_string(),
+                        stripped[eq + 1..].to_string(),
+                    );
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.str_opt(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // note: a bare boolean flag must not be followed by a positional —
+        // `--verbose extra` would bind "extra" as its value (documented
+        // greedy-value semantics); positionals go first or use --flag=true.
+        let a = Args::parse(&v(&["train", "extra", "--lam", "0.1",
+                                 "--steps=8", "--verbose"]));
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.pos(1), Some("extra"));
+        assert_eq!(a.f32_or("lam", 0.0).unwrap(), 0.1);
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 8);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&v(&["--bad", "xyz"]));
+        assert!(a.f32_or("bad", 1.0).is_err());
+        assert_eq!(a.f32_or("missing", 2.5).unwrap(), 2.5);
+        assert!(a.require("absent").is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "--lo -3" : the -3 doesn't start with --, so it's a value.
+        let a = Args::parse(&v(&["--lo", "-3.5"]));
+        assert_eq!(a.f32_or("lo", 0.0).unwrap(), -3.5);
+    }
+}

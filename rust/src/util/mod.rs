@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, statistics, bench harness, property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod stats;

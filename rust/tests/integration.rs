@@ -1,0 +1,155 @@
+//! Cross-module integration tests over real artifacts (skipped when
+//! `make artifacts` has not run).  These exercise the full L3 stack:
+//! manifest -> PJRT compile -> trainer -> adaptive solvers -> metrics.
+
+use std::path::Path;
+
+use taynode::coordinator::evaluator;
+use taynode::coordinator::{BatchInputs, Trainer};
+use taynode::data::{synth_mnist, Batcher, Dataset};
+use taynode::runtime::Runtime;
+use taynode::solvers::adaptive::AdaptiveOpts;
+use taynode::solvers::tableau;
+use taynode::util::rng::Pcg;
+
+fn runtime() -> Option<Runtime> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json")
+        .exists()
+        .then(|| Runtime::load(&p).unwrap())
+}
+
+#[test]
+fn manifest_covers_every_model_and_file() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.manifest.models.len() >= 5);
+    assert!(rt.manifest.executables.len() >= 40);
+    for e in rt.manifest.executables.values() {
+        assert!(rt.manifest.dir.join(&e.file).exists(), "{}", e.file);
+        assert!(rt.manifest.models.contains_key(&e.model), "{}", e.model);
+    }
+}
+
+#[test]
+fn params_blob_matches_layout() {
+    let Some(rt) = runtime() else { return };
+    for name in rt.manifest.models.keys() {
+        let vals = rt.load_params(name).unwrap();
+        let spec = rt.manifest.model(name).unwrap();
+        assert_eq!(vals.len(), spec.layout.len());
+        for (v, e) in vals.iter().zip(&spec.layout) {
+            assert_eq!(v.len(), e.size, "{name}:{}", e.name);
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn mnist_train_and_adaptive_eval() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = Trainer::new(&rt, "mnist_train_k2_s2", 0).unwrap();
+    let hyper = rt.manifest.model("mnist").unwrap().hyper.clone();
+    let b = hyper.usize_of("batch").unwrap();
+    let d = hyper.usize_of("d").unwrap();
+    let ds = synth_mnist::generate(4 * b, 7);
+    let data = Dataset::new(ds.images, d).with_labels(ds.labels);
+    let mut batcher = Batcher::new(&data, b, 0);
+
+    let mut losses = vec![];
+    for _ in 0..8 {
+        let bt = batcher.next();
+        let inputs = BatchInputs::default().f("x", bt.x).i("labels", bt.labels);
+        let m = tr.step(&inputs, 0.01, 0.1).unwrap();
+        assert!(m.loss().is_finite());
+        losses.push(m.loss());
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "{losses:?}"
+    );
+
+    // adaptive evaluation: NFE + head metrics + instrumented quantities
+    let bt = batcher.next();
+    let tb = tableau::dopri5();
+    let opts = AdaptiveOpts::default();
+    let ev = evaluator::mnist_eval(&rt, &tr.store, &bt.x, &bt.labels, &tb, &opts)
+        .unwrap();
+    assert!(ev.nfe >= 7, "nfe {}", ev.nfe);
+    assert!(ev.ce.is_finite() && ev.err_rate <= 1.0);
+
+    let mut rng = Pcg::new(3);
+    let probe = rng.rademacher(b * d);
+    let rq = evaluator::mnist_reg_quantities(&rt, &tr.store, &bt.x, &probe,
+                                             &tb, &opts)
+        .unwrap();
+    // R_1 is the kinetic energy — identical definitions must agree.
+    assert!(
+        (rq.r[0] - rq.kinetic).abs() < 1e-3 * (1.0 + rq.kinetic.abs()),
+        "{rq:?}"
+    );
+    assert!(rq.r.iter().all(|v| *v >= 0.0));
+}
+
+#[test]
+fn pallas_and_jnp_dynamics_artifacts_agree() {
+    let Some(rt) = runtime() else { return };
+    let tr = Trainer::new(&rt, "mnist_train_unreg_s2", 0).unwrap();
+    let store = &tr.store;
+    use taynode::runtime::XlaDynamics;
+    use taynode::solvers::Dynamics;
+    let mut a = XlaDynamics::from_store(&rt, "mnist_dynamics", store, None).unwrap();
+    let mut b = XlaDynamics::from_store(&rt, "mnist_dynamics_pallas", store, None).unwrap();
+    let mut rng = Pcg::new(5);
+    let n = a.state_len();
+    let y: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let mut da = vec![0.0; n];
+    let mut db = vec![0.0; n];
+    a.eval(0.3, &y, &mut da);
+    b.eval(0.3, &y, &mut db);
+    for (x, z) in da.iter().zip(&db) {
+        assert!((x - z).abs() < 1e-4, "{x} vs {z}");
+    }
+}
+
+#[test]
+fn cnf_eval_runs_and_latent_eval_runs() {
+    let Some(rt) = runtime() else { return };
+    // CNF tabular
+    let mut tr = Trainer::new(&rt, "cnf_tab_train_k2_s4", 0).unwrap();
+    let hyper = rt.manifest.model("cnf_tab").unwrap().hyper.clone();
+    let (b, d) = (hyper.usize_of("batch").unwrap(), hyper.usize_of("d").unwrap());
+    let gen = taynode::data::miniboone_sim::TabularGen::new(d, 3, 1);
+    let sample = gen.sample(b, 2);
+    let mut rng = Pcg::new(4);
+    let inputs = BatchInputs::default().f("x", sample.x.clone());
+    for _ in 0..3 {
+        let m = tr.step(&inputs, 0.01, 1e-3).unwrap();
+        assert!(m.loss().is_finite());
+    }
+    let probe = rng.rademacher(b * d);
+    let tb = tableau::dopri5();
+    let ev = evaluator::cnf_eval(&rt, "cnf_tab", &tr.store, &sample.x, &probe,
+                                 &tb, &AdaptiveOpts::default())
+        .unwrap();
+    assert!(ev.nfe > 0 && ev.nll.is_finite() && ev.r2 >= 0.0);
+
+    // Latent ODE
+    let mut ltr = Trainer::new(&rt, "latent_train_k2", 0).unwrap();
+    let lh = rt.manifest.model("latent").unwrap().hyper.clone();
+    let (lb, lt, lf) = (
+        lh.usize_of("batch").unwrap(),
+        lh.usize_of("t").unwrap(),
+        lh.usize_of("f").unwrap(),
+    );
+    let pg = taynode::data::physionet_sim::PhysioGen::new(lf, 3);
+    let pd = pg.sample(lb, lt, 1);
+    let linputs = BatchInputs::default().f("x", pd.x.clone()).f("mask", pd.mask.clone());
+    for _ in 0..2 {
+        let m = ltr.step(&linputs, 0.001, 1e-2).unwrap();
+        assert!(m.loss().is_finite());
+    }
+    let lev = evaluator::latent_eval(&rt, &ltr.store, &pd.x, &pd.mask, lt, &tb,
+                                     &AdaptiveOpts::default())
+        .unwrap();
+    assert!(lev.nfe > 0 && lev.mse.is_finite());
+}

@@ -1,0 +1,44 @@
+//! Integration smoke test: artifacts load, compile, train and evaluate.
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use std::path::Path;
+
+use taynode::coordinator::{toy_eval, BatchInputs, Trainer};
+use taynode::runtime::Runtime;
+use taynode::solvers::adaptive::AdaptiveOpts;
+use taynode::solvers::tableau;
+use taynode::util::rng::Pcg;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn toy_train_step_reduces_loss_and_eval_runs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut tr = Trainer::new(&rt, "toy_train_unreg_s16", 0).unwrap();
+    let mut rng = Pcg::new(1);
+    let x: Vec<f32> = (0..128).map(|_| rng.range(-1.5, 1.5)).collect();
+    let batch = BatchInputs::default().f("x", x.clone());
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let m = tr.step(&batch, 0.0, 0.05).unwrap();
+        if first.is_none() {
+            first = Some(m.loss());
+        }
+        last = m.loss();
+        assert!(last.is_finite());
+    }
+    assert!(last < first.unwrap(), "{last} !< {first:?}");
+
+    let tb = tableau::dopri5();
+    let ev = toy_eval(&rt, &tr.store, &x, &tb, &AdaptiveOpts::default()).unwrap();
+    assert!(ev.nfe > 0);
+    assert!(ev.mse.is_finite());
+}
