@@ -1,0 +1,191 @@
+//! §Perf: batched multi-trajectory engine vs the per-example evaluator loop.
+//!
+//! Scenario: serve per-example adaptive solves of the paper's toy dynamics
+//! (Fig 1 / Fig 8b shape: B independent 1-D trajectories, per-example NFE).
+//! The dynamics model is a small MLP behind a *per-invocation staging cost*,
+//! shaped like a batch-1 `XlaDynamics` launch: every evaluation stages the
+//! bound parameter block into the launch buffer (PJRT argument preparation —
+//! see the §Perf notes in runtime/client.rs), then runs the math per row.
+//!
+//! * per-example loop: one full adaptive solve per trajectory => one launch
+//!   per trajectory per stage evaluation.
+//! * batched engine:  ONE launch per stage evaluation for the whole active
+//!   set; per-trajectory step control + compaction keep the NFE identical
+//!   per example (asserted below, bit-for-bit).
+//!
+//! A pure-closure variant (no staging cost) is also reported so the
+//! driver-only amortization is visible separately and honestly.
+
+use taynode::solvers::adaptive::{solve_adaptive_mut, AdaptiveOpts};
+use taynode::solvers::batch::{solve_adaptive_batch_mut, BatchDynamics};
+use taynode::solvers::{tableau, Dynamics};
+use taynode::util::bench::{fmt_secs, report, time_fn};
+use taynode::util::rng::Pcg;
+
+const B: usize = 64;
+const HIDDEN: usize = 16;
+/// Parameter block staged per launch (floats).  64 KiB — modest next to the
+/// ~42k-parameter mnist_dynamics_b1 artifact this models.
+const PARAM_BLOCK: usize = 16_384;
+
+/// Toy dynamics z' = w2 · tanh(w1 z + b1 + 0.1 t) behind a per-launch
+/// staging cost.  Implements both the scalar and the batched traits so the
+/// two drivers integrate the *identical* model.
+struct ServingDynamics {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    params: Vec<f32>,
+    staging: Vec<f32>,
+    stage_cost: bool,
+    launches: usize,
+}
+
+impl ServingDynamics {
+    fn new(seed: u64, stage_cost: bool) -> ServingDynamics {
+        let mut rng = Pcg::new(seed);
+        ServingDynamics {
+            w1: (0..HIDDEN).map(|_| rng.range(-1.5, 1.5)).collect(),
+            b1: (0..HIDDEN).map(|_| rng.range(-0.5, 0.5)).collect(),
+            w2: (0..HIDDEN).map(|_| rng.range(-0.7, 0.7)).collect(),
+            params: (0..PARAM_BLOCK).map(|_| rng.range(-1.0, 1.0)).collect(),
+            staging: vec![0.0; PARAM_BLOCK],
+            stage_cost,
+            launches: 0,
+        }
+    }
+
+    /// Fixed per-invocation cost: stage the bound parameters for this
+    /// launch, independent of how many rows ride along.
+    #[inline]
+    fn launch(&mut self) {
+        self.launches += 1;
+        if self.stage_cost {
+            self.staging.copy_from_slice(&self.params);
+            std::hint::black_box(&self.staging);
+        }
+    }
+
+    #[inline]
+    fn f(&self, t: f32, z: f32) -> f32 {
+        let mut acc = 0.0f32;
+        for j in 0..HIDDEN {
+            acc += self.w2[j] * (self.w1[j] * z + self.b1[j] + 0.1 * t).tanh();
+        }
+        acc
+    }
+}
+
+impl Dynamics for ServingDynamics {
+    fn eval(&mut self, t: f32, y: &[f32], dy: &mut [f32]) {
+        self.launch();
+        for (d, z) in dy.iter_mut().zip(y) {
+            *d = self.f(t, *z);
+        }
+    }
+}
+
+impl BatchDynamics for ServingDynamics {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        self.launch();
+        for (r, tr) in t.iter().enumerate() {
+            dy[r] = self.f(*tr, y[r]);
+        }
+    }
+}
+
+fn main() {
+    let tb = tableau::dopri5();
+    let opts = AdaptiveOpts::default();
+    let mut rng = Pcg::new(7);
+    let x: Vec<f32> = (0..B).map(|_| rng.range(-1.2, 1.2)).collect();
+
+    // -- correctness first: identical per-example results either way -------
+    let mut d_loop = ServingDynamics::new(1, true);
+    let mut d_batch = ServingDynamics::new(1, true);
+    let mut loop_y = Vec::with_capacity(B);
+    let mut loop_nfe = Vec::with_capacity(B);
+    for i in 0..B {
+        let res = solve_adaptive_mut(&mut d_loop, 0.0, 1.0, &x[i..i + 1], &tb, &opts);
+        loop_y.push(res.y[0]);
+        loop_nfe.push(res.stats.nfe);
+    }
+    let bres = solve_adaptive_batch_mut(&mut d_batch, 0.0, 1.0, &x, &tb, &opts);
+    assert_eq!(loop_nfe, bres.nfes(), "per-example NFE must be identical");
+    for i in 0..B {
+        assert_eq!(
+            loop_y[i].to_bits(),
+            bres.y[i].to_bits(),
+            "example {i}: batched state must be bit-identical"
+        );
+    }
+    let total_nfe: usize = loop_nfe.iter().sum();
+    let min = loop_nfe.iter().min().unwrap();
+    let max = loop_nfe.iter().max().unwrap();
+    println!(
+        "B={B} toy trajectories, dopri5: total NFE {total_nfe}, \
+         per-example NFE {min}..{max}"
+    );
+    println!(
+        "launches: per-example loop {}, batched engine {} ({:.1}x fewer)\n",
+        d_loop.launches,
+        d_batch.launches,
+        d_loop.launches as f64 / d_batch.launches.max(1) as f64
+    );
+
+    // -- throughput: serving-shaped dynamics (per-launch staging cost) -----
+    let mut d1 = ServingDynamics::new(1, true);
+    let s_loop = time_fn(3, 20, || {
+        for i in 0..B {
+            let res = solve_adaptive_mut(&mut d1, 0.0, 1.0, &x[i..i + 1], &tb, &opts);
+            std::hint::black_box(res.stats.nfe);
+        }
+    });
+    report("per-example loop (staged launches, B=64)", &s_loop);
+
+    let mut d2 = ServingDynamics::new(1, true);
+    let s_batch = time_fn(3, 20, || {
+        let res = solve_adaptive_batch_mut(&mut d2, 0.0, 1.0, &x, &tb, &opts);
+        std::hint::black_box(res.stats.len());
+    });
+    report("batched engine     (staged launches, B=64)", &s_batch);
+
+    let speedup = s_loop.mean / s_batch.mean;
+    println!(
+        "\nbatched speedup over per-example loop: {speedup:.2}x \
+         ({} -> {})",
+        fmt_secs(s_loop.mean),
+        fmt_secs(s_batch.mean)
+    );
+
+    // -- driver-only amortization (pure closures, no staging cost) ---------
+    let mut c1 = ServingDynamics::new(1, false);
+    let s_loop_c = time_fn(3, 20, || {
+        for i in 0..B {
+            let res = solve_adaptive_mut(&mut c1, 0.0, 1.0, &x[i..i + 1], &tb, &opts);
+            std::hint::black_box(res.stats.nfe);
+        }
+    });
+    report("per-example loop (pure closure, B=64)", &s_loop_c);
+    let mut c2 = ServingDynamics::new(1, false);
+    let s_batch_c = time_fn(3, 20, || {
+        let res = solve_adaptive_batch_mut(&mut c2, 0.0, 1.0, &x, &tb, &opts);
+        std::hint::black_box(res.stats.len());
+    });
+    report("batched engine     (pure closure, B=64)", &s_batch_c);
+    println!(
+        "driver-only amortization: {:.2}x",
+        s_loop_c.mean / s_batch_c.mean
+    );
+
+    assert!(
+        speedup >= 4.0,
+        "acceptance: batched engine must be >= 4x over the per-example loop \
+         at B=64 on serving-shaped toy dynamics (got {speedup:.2}x)"
+    );
+    println!("\nacceptance (>= 4x at B=64): PASS");
+}

@@ -8,7 +8,8 @@
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{ParamStore, Runtime, XlaDynamics};
-use crate::solvers::adaptive::{solve_adaptive_mut, solve_to_times, AdaptiveOpts, SolveStats};
+use crate::solvers::adaptive::{solve_adaptive_mut, AdaptiveOpts, SolveStats};
+use crate::solvers::batch::{solve_adaptive_batch, solve_to_times_batch, Rowwise};
 use crate::solvers::tableau::Tableau;
 use crate::runtime::client::{literal_f32, literal_i32};
 
@@ -118,7 +119,12 @@ pub fn mnist_reg_quantities(
     })
 }
 
-/// Per-example NFE (Fig 8b / Fig 10): adaptive solve with batch size 1.
+/// Per-example NFE (Fig 8b / Fig 10): every example is one trajectory of
+/// the batched engine — per-trajectory adaptive step control with
+/// active-set compaction, so cheap examples retire early instead of each
+/// paying for a full standalone solve.  The per-example NFE values are
+/// bit-identical to the old one-solve-per-example loop (the batched driver
+/// reproduces the scalar driver exactly; see `solvers::batch` tests).
 pub fn mnist_per_example_nfe(
     rt: &Runtime,
     store: &ParamStore,
@@ -126,22 +132,18 @@ pub fn mnist_per_example_nfe(
     tb: &Tableau,
     opts: &AdaptiveOpts,
 ) -> Result<Vec<usize>> {
-    let mut dyn_f = XlaDynamics::from_store(rt, "mnist_dynamics_b1", store, None)?;
+    let dyn_f = XlaDynamics::from_store(rt, "mnist_dynamics_b1", store, None)?;
     let d = dyn_f.dim;
     let n = images.len() / d;
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let res = solve_adaptive_mut(
-            &mut dyn_f,
-            0.0,
-            1.0,
-            &images[i * d..(i + 1) * d],
-            tb,
-            opts,
-        );
-        out.push(res.stats.nfe);
-    }
-    Ok(out)
+    let res = solve_adaptive_batch(
+        Rowwise::new(dyn_f, d),
+        0.0,
+        1.0,
+        &images[..n * d],
+        tb,
+        opts,
+    );
+    Ok(res.nfes())
 }
 
 // ---------------------------------------------------------------------------
@@ -243,13 +245,20 @@ pub fn latent_eval(
     let out = enc.run(&inputs)?;
     let mu = out[0].to_vec::<f32>()?; // posterior mean as z0
 
-    // 2) adaptive latent solve through the grid
+    // 2) adaptive latent solve through the grid, via the batched grid
+    // driver: the exported latent executable consumes the whole [B, L]
+    // batch with one shared time, so it rides as a single trajectory of
+    // the engine (the B=1 specialization, bit-equal to the scalar
+    // `solve_to_times`).  Per-example step control needs a batch-1 latent
+    // artifact with a per-row time input — see ROADMAP open items.
     let dyn_f = XlaDynamics::from_store(rt, "latent_dynamics", store, None)?;
     let (b, l) = (dyn_f.batch, dyn_f.dim);
+    let state_len = dyn_f.state_len();
     let times: Vec<f32> = (0..t_pts)
         .map(|i| i as f32 / (t_pts - 1) as f32)
         .collect();
-    let (traj, stats) = solve_to_times(dyn_f, &times, &mu, tb, opts);
+    let (traj, stats) =
+        solve_to_times_batch(Rowwise::new(dyn_f, state_len), &times, &mu, tb, opts);
 
     // 3) decode + metrics
     let mut ztraj = Vec::with_capacity(t_pts * b * l);
@@ -274,7 +283,7 @@ pub fn latent_eval(
     Ok(LatentEval {
         nll: mout[0].get_first_element::<f32>()?,
         mse: mout[1].get_first_element::<f32>()?,
-        nfe: stats.nfe,
+        nfe: stats.first().map(|s| s.nfe).unwrap_or(0),
     })
 }
 
@@ -289,6 +298,9 @@ pub struct ToyEval {
 }
 
 /// Adaptive solve of the toy ODE and MSE against the target map x + x^3.
+/// The exported executable consumes the whole batch per evaluation, so it
+/// rides the batched engine as one trajectory (B=1 specialization —
+/// bit-equal to the old scalar solve, NFE semantics unchanged).
 pub fn toy_eval(
     rt: &Runtime,
     store: &ParamStore,
@@ -296,8 +308,9 @@ pub fn toy_eval(
     tb: &Tableau,
     opts: &AdaptiveOpts,
 ) -> Result<ToyEval> {
-    let mut dyn_f = XlaDynamics::from_store(rt, "toy_dynamics", store, None)?;
-    let res = solve_adaptive_mut(&mut dyn_f, 0.0, 1.0, x, tb, opts);
+    let dyn_f = XlaDynamics::from_store(rt, "toy_dynamics", store, None)?;
+    let state_len = dyn_f.state_len();
+    let res = solve_adaptive_batch(Rowwise::new(dyn_f, state_len), 0.0, 1.0, x, tb, opts);
     let mse = x
         .iter()
         .zip(&res.y)
@@ -307,5 +320,8 @@ pub fn toy_eval(
         })
         .sum::<f32>()
         / x.len() as f32;
-    Ok(ToyEval { mse, nfe: res.stats.nfe })
+    Ok(ToyEval {
+        mse,
+        nfe: res.stats.first().map(|s| s.nfe).unwrap_or(0),
+    })
 }

@@ -11,7 +11,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::client::{literal_f32, literal_i32, Executable, Runtime};
+use crate::runtime::client::{literal_f32, literal_i32, Executable, Literal, Runtime};
 use crate::runtime::params::ParamStore;
 use crate::util::rng::Pcg;
 
@@ -114,8 +114,12 @@ impl<'rt> Trainer<'rt> {
     /// state, return the metric outputs.
     pub fn step(&mut self, batch: &BatchInputs, lam: f32, lr: f32) -> Result<StepMetrics> {
         self.step_count += 1;
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.exec.spec.inputs.len());
-        for inp in &self.exec.spec.inputs.clone() {
+        // Cheap Rc clone so the spec can be iterated while `self` stays
+        // free for the store/rng borrows below (the seed deep-cloned the
+        // whole input-spec Vec every step).
+        let exec = self.exec.clone();
+        let mut inputs: Vec<Literal> = Vec::with_capacity(exec.spec.inputs.len());
+        for inp in &exec.spec.inputs {
             let lit = match inp.role_kind() {
                 "param" => literal_f32(&inp.shape, self.store.value(&inp.name)?)?,
                 "opt" => {
@@ -156,7 +160,7 @@ impl<'rt> Trainer<'rt> {
                         "step" => self.step_count as f32,
                         other => bail!("unknown scalar input {other:?}"),
                     };
-                    xla::Literal::scalar(v)
+                    Literal::scalar(v)
                 }
                 other => bail!("unsupported role kind {other:?}"),
             };

@@ -7,13 +7,22 @@
 //! entirely in Rust over AOT-compiled XLA executables.
 //!
 //! Layer map (see DESIGN.md):
-//! * [`solvers`] — fixed & adaptive Runge-Kutta suite with NFE accounting.
+//! * [`solvers`] — fixed & adaptive Runge-Kutta suite with NFE accounting,
+//!   shared stage machinery, and the batched multi-trajectory engine
+//!   (`solvers::batch`: per-trajectory step control, active-set compaction).
 //! * [`taylor`] — truncated Taylor-series arithmetic / jets in pure Rust.
-//! * [`runtime`] — PJRT client, artifact registry, parameter store.
+//! * [`runtime`] — PJRT client (behind the `pjrt` feature; a thin stub
+//!   substitutes by default), artifact registry, parameter store.
 //! * [`coordinator`] — training loop, schedules, sweeps, metrics.
 //! * [`data`] — synthetic MNIST / PhysioNet / MINIBOONE generators.
 //! * [`experiments`] — one regenerator per paper table and figure.
 //! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench).
+
+// Numerical-kernel style: index loops over parallel slices mirror the
+// reference equations (Hairer et al.) more faithfully than iterator chains;
+// keep clippy's stylistic lints from fighting that.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod coordinator;
 pub mod data;

@@ -14,6 +14,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{ExecSpec, Manifest};
 
+// Re-exported so downstream layers (dynamics, trainer) name these through
+// `runtime::client::*` and compile identically against `client_stub.rs`
+// when the `pjrt` feature is off.
+pub use xla::{Literal, PjRtBuffer};
+
 /// Build an f32 literal with the given shape.
 ///
 /// Perf note (§Perf L3a iteration 1): this is on the per-NFE hot path, so

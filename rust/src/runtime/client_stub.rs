@@ -1,0 +1,162 @@
+//! Stub PJRT client — compiled when the `pjrt` feature is OFF (the
+//! default).
+//!
+//! Mirrors the API surface of `client.rs` (`Runtime`, `Executable`,
+//! `Literal`, the literal builders) so the coordinator, evaluator, and
+//! experiment layers type-check and unit-test everywhere, with zero native
+//! dependencies.  Every entry point that would touch a device returns a
+//! descriptive error instead; nothing downstream can observe a half-working
+//! runtime because `Runtime::load` itself refuses to construct one.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ExecSpec, Manifest};
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow!(
+        "{what}: taynode was built without the `pjrt` feature; \
+         rebuild with `cargo build --features pjrt` (requires the vendored \
+         `xla` crate and a PJRT CPU plugin) to run exported artifacts"
+    )
+}
+
+/// Stand-in for `xla::Literal`.  Constructible (so literal-building code
+/// paths stay exercised and shape-validated) but never device-backed;
+/// reads fail with the feature-gate error.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn copy_raw_to(&self, _dst: &mut [f32]) -> Result<()> {
+        Err(unavailable("Literal::copy_raw_to"))
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+/// Stand-in for the PJRT client handle (`repro info` surface).
+#[derive(Debug)]
+pub struct StubClient(());
+
+impl StubClient {
+    pub fn platform_name(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// Build an f32 literal with the given shape.  Shape/length validation is
+/// identical to the real client so callers fail the same way in both
+/// builds; the value itself is inert.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal shape {shape:?} needs {n} elems, got {}", data.len());
+    }
+    Ok(Literal(()))
+}
+
+/// Build an i32 literal with the given shape.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal shape {shape:?} needs {n} elems, got {}", data.len());
+    }
+    Ok(Literal(()))
+}
+
+pub fn literal_to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+}
+
+pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+}
+
+/// A compiled artifact plus its manifest spec (stub: never constructed).
+pub struct Executable {
+    pub spec: ExecSpec,
+}
+
+impl Executable {
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Literal>> {
+        Err(unavailable(&format!("Executable::run({})", self.spec.name)))
+    }
+
+    pub fn run_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        Err(unavailable(&format!("Executable::run_b({})", self.spec.name)))
+    }
+}
+
+/// The runtime handle.  `load` always errors in stub builds, so no method
+/// past construction is reachable; they exist so the coordinator layers
+/// compile unchanged.
+pub struct Runtime {
+    pub client: StubClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn load(_artifacts_dir: &Path) -> Result<Runtime> {
+        Err(unavailable("Runtime::load"))
+    }
+
+    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
+        Err(unavailable(&format!("Runtime::exec({name})")))
+    }
+
+    pub fn to_device(&self, _shape: &[usize], _data: &[f32]) -> Result<PjRtBuffer> {
+        Err(unavailable("Runtime::to_device"))
+    }
+
+    pub fn load_params(&self, model: &str) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable(&format!("Runtime::load_params({model})")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_errors_with_feature_hint() {
+        let err = Runtime::load(Path::new("/nonexistent")).err().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn literal_builders_still_validate_shapes() {
+        assert!(literal_f32(&[2, 2], &[0.0; 4]).is_ok());
+        assert!(literal_f32(&[2, 2], &[0.0; 3]).is_err());
+        assert!(literal_i32(&[], &[7]).is_ok());
+        assert!(literal_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_reads_error() {
+        let l = Literal::scalar(1.0f32);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.get_first_element::<f32>().is_err());
+    }
+}

@@ -6,13 +6,13 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::client::{literal_f32, Executable, Runtime};
+use super::client::{literal_f32, Executable, Literal, Runtime};
 use super::params::ParamStore;
 use crate::solvers::Dynamics;
 
 enum Slot {
     /// Fixed input prepared once (parameters, probes).
-    Fixed(xla::Literal),
+    Fixed(Literal),
     /// The solver state (batch:z or batch:state).
     State,
     /// The scalar time.
@@ -86,8 +86,8 @@ impl XlaDynamics {
         // §Perf L3a iteration 2: copy the output tuple element straight into
         // the solver's stage buffer (no Vec allocation per NFE).
         let state_lit = literal_f32(&self.state_shape, y)?;
-        let t_lit = xla::Literal::scalar(t);
-        let inputs: Vec<&xla::Literal> = self
+        let t_lit = Literal::scalar(t);
+        let inputs: Vec<&Literal> = self
             .slots
             .iter()
             .map(|s| match s {
@@ -107,8 +107,8 @@ impl XlaDynamics {
         // Parameters/probes are bound once at construction; only the state
         // and time literals are created per call (no param copies per NFE).
         let state_lit = literal_f32(&self.state_shape, y)?;
-        let t_lit = xla::Literal::scalar(t);
-        let inputs: Vec<&xla::Literal> = self
+        let t_lit = Literal::scalar(t);
+        let inputs: Vec<&Literal> = self
             .slots
             .iter()
             .map(|s| match s {

@@ -4,8 +4,20 @@
 //!
 //! Python never runs at this layer: artifacts are HLO text produced once by
 //! `make artifacts` and compiled here through the PJRT C API.
+//!
+//! The PJRT/XLA half is feature-gated: with `--features pjrt` the real
+//! client (`client.rs`, needs the vendored `xla` crate and its native
+//! deps) is compiled; by default `client_stub.rs` supplies the same API
+//! surface with constructors that return errors, so every downstream layer
+//! (dynamics, trainer, evaluator, experiments) builds and unit-tests on any
+//! machine with no native dependency.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
+pub mod client;
+
 pub mod dynamics;
 pub mod manifest;
 pub mod params;

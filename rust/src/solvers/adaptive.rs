@@ -4,17 +4,23 @@
 //! embedded pair.  Counts every dynamics evaluation — NFE is the paper's
 //! headline metric, so the accounting here is load-bearing and is verified
 //! exactly in tests.
+//!
+//! The per-step arithmetic lives in [`super::stage`] and is shared with the
+//! batched engine ([`super::batch`]): this driver is the B=1 specialization,
+//! and the equivalence is bit-for-bit (see `super::tests`).
 
+use super::stage::{self, TableauCoeffs};
 use super::tableau::Tableau;
 use super::Dynamics;
-use crate::tensor::multi_axpy_into;
 
 #[derive(Clone, Debug)]
 pub struct AdaptiveOpts {
     pub rtol: f32,
     pub atol: f32,
-    /// Initial step; if None, use the Hairer starting-step heuristic
-    /// (costs one extra NFE).
+    /// Initial step magnitude; if None, use the Hairer starting-step
+    /// heuristic (costs one extra NFE).  The sign is ignored — direction
+    /// comes from t0/t1 — so a step warm-started from a forward segment is
+    /// safe to reuse on a reverse-time segment.
     pub h_init: Option<f32>,
     pub h_max: Option<f32>,
     pub max_steps: usize,
@@ -61,18 +67,10 @@ pub struct SolveResult {
     pub stats: SolveStats,
 }
 
-/// Scaled RMS error norm (Hairer eq. II.4.11).
-fn error_norm(err: &[f32], y0: &[f32], y1: &[f32], atol: f32, rtol: f32) -> f32 {
-    let mut acc = 0.0f64;
-    for i in 0..err.len() {
-        let sc = atol + rtol * y0[i].abs().max(y1[i].abs());
-        let r = (err[i] / sc) as f64;
-        acc += r * r;
-    }
-    ((acc / err.len() as f64) as f32).sqrt()
-}
-
-/// Hairer's automatic initial step (II.4, "starting step size").
+/// Hairer's automatic initial step (II.4, "starting step size"): h0 from
+/// the state/derivative norms, one Euler probe (the extra NFE), then the
+/// refined h1.  The two norm halves live in `stage` so the batched engine
+/// can run the identical estimate per trajectory.
 fn initial_step<F: Dynamics>(
     f: &mut F,
     t0: f32,
@@ -83,35 +81,12 @@ fn initial_step<F: Dynamics>(
     rtol: f32,
     nfe: &mut usize,
 ) -> f32 {
-    let n = y0.len();
-    let sc: Vec<f32> = y0.iter().map(|y| atol + rtol * y.abs()).collect();
-    let d0 = (y0.iter().zip(&sc).map(|(y, s)| ((y / s) as f64).powi(2)).sum::<f64>()
-        / n as f64)
-        .sqrt();
-    let d1 = (f0.iter().zip(&sc).map(|(g, s)| ((g / s) as f64).powi(2)).sum::<f64>()
-        / n as f64)
-        .sqrt();
-    let h0 = if d0 < 1e-5 || d1 < 1e-5 { 1e-6 } else { 0.01 * (d0 / d1) as f32 };
-    // one Euler probe to estimate the second derivative
+    let h0 = stage::h0_estimate(y0, f0, atol, rtol);
     let y1: Vec<f32> = y0.iter().zip(f0).map(|(y, g)| y + h0 * g).collect();
-    let mut f1 = vec![0.0f32; n];
+    let mut f1 = vec![0.0f32; y0.len()];
     f.eval(t0 + h0, &y1, &mut f1);
     *nfe += 1;
-    let d2 = (f1
-        .iter()
-        .zip(f0)
-        .zip(&sc)
-        .map(|((a, b), s)| (((a - b) / s) as f64).powi(2))
-        .sum::<f64>()
-        / n as f64)
-        .sqrt() as f32
-        / h0;
-    let h1 = if d1.max(d2 as f64) <= 1e-15 {
-        (h0 * 1e-3).max(1e-6)
-    } else {
-        (0.01 / d1.max(d2 as f64) as f32).powf(1.0 / (order as f32 + 1.0))
-    };
-    (100.0 * h0).min(h1)
+    stage::h1_estimate(y0, f0, &f1, h0, order, atol, rtol)
 }
 
 /// Integrate from t0 to t1 with adaptive steps.
@@ -151,14 +126,19 @@ fn solve_embedded<F: Dynamics>(
     opts: &AdaptiveOpts,
 ) -> SolveResult {
     let n = y0.len();
-    let e = tb.e.as_ref().expect("embedded pair");
+    let tbf = TableauCoeffs::new(tb);
+    // Hard precondition (kept from the seed's `expect`): with no error
+    // weights every step would silently pass the error test and h would
+    // balloon — panicking beats plausible-looking wrong answers.
+    assert!(tbf.has_embedded(), "solve_embedded needs an embedded pair");
     let span = t1 - t0;
     let h_max = opts.h_max.unwrap_or(span.abs());
     let mut stats = SolveStats::default();
 
     let mut t = t0;
     let mut y = y0.to_vec();
-    let mut ks: Vec<Vec<f32>> = (0..tb.stages).map(|_| vec![0.0f32; n]).collect();
+    // All buffers live for the whole solve: no allocation in the step loop.
+    let mut ks: Vec<Vec<f32>> = (0..tbf.stages).map(|_| vec![0.0f32; n]).collect();
     let mut ystage = vec![0.0f32; n];
     let mut ynew = vec![0.0f32; n];
     let mut errv = vec![0.0f32; n];
@@ -168,14 +148,14 @@ fn solve_embedded<F: Dynamics>(
     stats.nfe += 1;
 
     let mut h = match opts.h_init {
-        Some(h) => h,
-        None => initial_step(f, t, &y, &ks[0], tb.order, opts.atol, opts.rtol,
+        Some(h) => h.abs(),
+        None => initial_step(f, t, &y, &ks[0], tbf.order, opts.atol, opts.rtol,
                              &mut stats.nfe),
     }
     .min(h_max)
     .max(1e-10);
 
-    let inv_order = 1.0 / (tb.order as f32 + 1.0);
+    let inv_order = tbf.inv_order();
     let mut prev_err: f32 = 1.0; // neutral PI history
 
     while (t - t1).abs() > 1e-9 && (t1 - t) * span.signum() > 0.0 {
@@ -185,30 +165,24 @@ fn solve_embedded<F: Dynamics>(
         h = h.min((t1 - t).abs()).min(h_max) * span.signum();
 
         // stages 1..S (stage 0 already in ks[0])
-        for i in 0..tb.a.len() {
-            let row = &tb.a[i];
-            let coeffs: Vec<f32> = row.iter().map(|a| *a as f32 * h).collect();
-            let prev: Vec<&[f32]> = ks[..=i].iter().map(|k| k.as_slice()).collect();
-            multi_axpy_into(&coeffs, &prev, &y, &mut ystage);
+        for i in 0..tbf.a.len() {
+            stage::accumulate(&tbf.a[i], h, &ks[..=i], &y, &mut ystage);
             let (_, rest) = ks.split_at_mut(i + 1);
-            f.eval(t + tb.c[i + 1] as f32 * h, &ystage, &mut rest[0]);
+            f.eval(t + tbf.c[i + 1] * h, &ystage, &mut rest[0]);
             stats.nfe += 1;
         }
 
-        // 5th-order solution and embedded error
-        let bco: Vec<f32> = tb.b.iter().map(|b| *b as f32 * h).collect();
-        let stages: Vec<&[f32]> = ks.iter().map(|k| k.as_slice()).collect();
-        multi_axpy_into(&bco, &stages, &y, &mut ynew);
-        let eco: Vec<f32> = e.iter().map(|c| *c as f32 * h).collect();
-        multi_axpy_into(&eco, &stages, &vec![0.0; n], &mut errv);
+        // propagating solution and embedded error
+        stage::accumulate(&tbf.b, h, &ks, &y, &mut ynew);
+        stage::accumulate_err(&tbf.e, h, &ks, &mut errv);
 
-        let err = error_norm(&errv, &y, &ynew, opts.atol, opts.rtol);
+        let err = stage::error_norm(&errv, &y, &ynew, opts.atol, opts.rtol);
         if err <= 1.0 || h.abs() <= 1e-9 {
             // accept
             t += h;
             std::mem::swap(&mut y, &mut ynew);
             stats.accepted += 1;
-            if tb.fsal {
+            if tbf.fsal {
                 let last = ks.len() - 1;
                 ks.swap(0, last);
             } else if (t - t1).abs() > 1e-9 {
@@ -216,19 +190,14 @@ fn solve_embedded<F: Dynamics>(
                 stats.nfe += 1;
             }
             let errc = err.max(1e-10);
-            let factor = opts.safety
-                * errc.powf(-inv_order + opts.pi_beta)
-                * prev_err.powf(opts.pi_beta);
+            let factor = stage::accept_factor(opts, inv_order, errc, prev_err);
             h = h.abs() * factor.clamp(opts.factor_min, opts.factor_max);
             prev_err = errc;
         } else {
             // reject: shrink and retry (FSAL stage 0 is still valid at t)
             stats.rejected += 1;
-            let factor = opts.safety * err.powf(-inv_order);
+            let factor = stage::reject_factor(opts, inv_order, err);
             h = h.abs() * factor.clamp(opts.factor_min, 1.0);
-            if tb.fsal {
-                // ks[0] still holds f(t, y): nothing to do.
-            }
         }
     }
     stats.h_final = h;
@@ -251,7 +220,11 @@ fn solve_doubling<F: Dynamics>(
     let mut stats = SolveStats::default();
     let mut t = t0;
     let mut y = y0.to_vec();
-    let mut h = opts.h_init.unwrap_or(span.abs() / 16.0).min(h_max);
+    let mut h = opts
+        .h_init
+        .map(f32::abs)
+        .unwrap_or(span.abs() / 16.0)
+        .min(h_max);
     let scale = 1.0 / ((2f32).powi(tb.order as i32) - 1.0);
     let inv_order = 1.0 / (tb.order as f32 + 1.0);
 
@@ -270,16 +243,16 @@ fn solve_doubling<F: Dynamics>(
             .zip(&half)
             .map(|(a, b)| (a - b) * scale)
             .collect();
-        let err = error_norm(&errv, &y, &half, opts.atol, opts.rtol);
+        let err = stage::error_norm(&errv, &y, &half, opts.atol, opts.rtol);
         if err <= 1.0 || h <= 1e-9 {
             t += hs;
             y = half;
             stats.accepted += 1;
-            let factor = opts.safety * err.max(1e-10).powf(-inv_order);
+            let factor = stage::reject_factor(opts, inv_order, err.max(1e-10));
             h *= factor.clamp(opts.factor_min, opts.factor_max);
         } else {
             stats.rejected += 1;
-            let factor = opts.safety * err.powf(-inv_order);
+            let factor = stage::reject_factor(opts, inv_order, err);
             h *= factor.clamp(opts.factor_min, 1.0);
         }
     }
@@ -287,10 +260,14 @@ fn solve_doubling<F: Dynamics>(
     SolveResult { y, t, stats }
 }
 
-/// Solve sequentially through a sorted grid of output times, returning the
-/// state at every grid point (used by the latent-ODE evaluation: NFE for the
-/// whole trajectory is the sum over segments).  `times[0]` is t0 and the
-/// initial state is returned as the first entry.
+/// Solve sequentially through a grid of output times, returning the state at
+/// every grid point (used by the latent-ODE evaluation: NFE for the whole
+/// trajectory is the sum over segments).  `times[0]` is t0 and the initial
+/// state is returned as the first entry.  The grid may be increasing or
+/// decreasing (reverse-time latent-ODE encode) — each segment integrates in
+/// its own direction and the warm-started step size is a magnitude, so a
+/// direction flip between segments cannot poison the next solve.
+/// Zero-length segments (duplicate grid points) are skipped outright.
 pub fn solve_to_times<F: Dynamics>(
     mut f: F,
     times: &[f32],
@@ -304,14 +281,18 @@ pub fn solve_to_times<F: Dynamics>(
     let mut y = y0.to_vec();
     let mut seg_opts = opts.clone();
     for w in times.windows(2) {
+        if (w[1] - w[0]).abs() <= 1e-9 {
+            out.push(y.clone());
+            continue;
+        }
         let res = solve_adaptive_mut(&mut f, w[0], w[1], &y, tb, &seg_opts);
         y = res.y.clone();
         stats.nfe += res.stats.nfe;
         stats.accepted += res.stats.accepted;
         stats.rejected += res.stats.rejected;
         stats.h_final = res.stats.h_final;
-        // warm-start the next segment's step size
-        seg_opts.h_init = Some(res.stats.h_final.max(1e-6));
+        // warm-start the next segment's step size (magnitude only)
+        seg_opts.h_init = Some(res.stats.h_final.abs().max(1e-6));
         out.push(res.y);
     }
     (out, stats)

@@ -1,0 +1,939 @@
+//! Batched multi-trajectory RK engine — the serving-path primitive.
+//!
+//! Integrates B independent ODE systems in one pass over an SoA state
+//! matrix `[B, n]`.  A [`BatchDynamics`] is evaluated **once per stage for
+//! the whole active batch** instead of once per trajectory, which is where
+//! the throughput comes from when one model evaluation has fixed dispatch
+//! cost (an XLA executable launch, a GPU kernel, a closure call).
+//!
+//! Each trajectory keeps its own adaptive step size, PI-controller history,
+//! and NFE/accepted/rejected counters; **finished trajectories are swapped
+//! out of the working set** (active-set compaction) so stragglers don't pay
+//! for the whole batch.  The per-trajectory arithmetic is the shared stage
+//! machinery of [`super::stage`], applied in the same operation order as the
+//! scalar driver — a batched trajectory therefore reproduces
+//! [`super::adaptive::solve_adaptive`] **bit-for-bit** in state, NFE,
+//! accepted and rejected counts (property-tested below).
+//!
+//! Tableaux without an embedded pair fall back to per-trajectory scalar
+//! step-doubling solves (still through the same entry points, still
+//! per-trajectory stats), since step doubling re-enters the fixed driver
+//! and cannot share stage evaluations across rows with distinct h.
+
+use super::adaptive::{solve_adaptive_mut, AdaptiveOpts, SolveStats};
+use super::stage::{self, TableauCoeffs};
+use super::tableau::Tableau;
+use super::Dynamics;
+use crate::tensor::axpy;
+
+/// Dynamics over a batch of trajectories: `dy[r] = f(t[r], y[r])` for every
+/// active row r, where `y` and `dy` are row-major `[t.len(), dim()]`.
+/// Implementations see one call per RK stage for the whole active set; rows
+/// carry *per-trajectory* times because adaptive trajectories decouple.
+///
+/// `ids[r]` is the **original trajectory index** of row r.  The engine
+/// compacts finished trajectories out of the working set, so row position
+/// is not stable — models with per-trajectory conditioning (per-request
+/// parameters, per-seed coefficients) must key on `ids`, never on r.
+pub trait BatchDynamics {
+    /// Per-trajectory state dimension n (must be positive).
+    fn dim(&self) -> usize;
+    /// Evaluate all rows: `t.len()` trajectories, `y`/`dy` of `t.len() * dim()`.
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]);
+}
+
+/// Adapter: drive a scalar [`Dynamics`] once per row.  This is how
+/// per-example XLA executables (batch-1 artifacts) and test closures plug
+/// into the batched engine; a native vectorized model should implement
+/// [`BatchDynamics`] directly (see [`BatchFn`]).
+pub struct Rowwise<F> {
+    f: F,
+    n: usize,
+}
+
+impl<F: Dynamics> Rowwise<F> {
+    pub fn new(f: F, n: usize) -> Rowwise<F> {
+        assert!(n > 0, "Rowwise: state dimension must be positive");
+        Rowwise { f, n }
+    }
+
+    /// Recover the wrapped dynamics (e.g. to read eval counters).
+    pub fn into_inner(self) -> F {
+        self.f
+    }
+}
+
+impl<F: Dynamics> BatchDynamics for Rowwise<F> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        let n = self.n;
+        debug_assert_eq!(y.len(), t.len() * n);
+        debug_assert_eq!(dy.len(), t.len() * n);
+        for (r, tr) in t.iter().enumerate() {
+            self.f
+                .eval(*tr, &y[r * n..(r + 1) * n], &mut dy[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+/// Adapter: a natively-vectorized batch closure `(ids, t_per_row, Y, dY)`
+/// plus its row dimension.  The closure receives the engine's stable
+/// trajectory ids so per-trajectory-conditioned models can key their
+/// parameters correctly under compaction (row position is NOT stable).
+pub struct BatchFn<F> {
+    f: F,
+    n: usize,
+}
+
+impl<F: FnMut(&[usize], &[f32], &[f32], &mut [f32])> BatchFn<F> {
+    pub fn new(n: usize, f: F) -> BatchFn<F> {
+        assert!(n > 0, "BatchFn: state dimension must be positive");
+        BatchFn { f, n }
+    }
+}
+
+impl<F: FnMut(&[usize], &[f32], &[f32], &mut [f32])> BatchDynamics for BatchFn<F> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        (self.f)(ids, t, y, dy)
+    }
+}
+
+/// View one trajectory of a [`BatchDynamics`] as a scalar [`Dynamics`]
+/// (used by the step-doubling fallback).
+struct OneRow<'a, F: BatchDynamics> {
+    f: &'a mut F,
+    id: usize,
+}
+
+impl<F: BatchDynamics> Dynamics for OneRow<'_, F> {
+    fn eval(&mut self, t: f32, y: &[f32], dy: &mut [f32]) {
+        self.f.eval(&[self.id], &[t], y, dy);
+    }
+}
+
+/// Result of a batched solve, in the caller's original trajectory order
+/// (compaction is internal and never observable).
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    /// Per-trajectory state dimension.
+    pub n: usize,
+    /// Final states, row-major `[B, n]`.
+    pub y: Vec<f32>,
+    /// Final integration time per trajectory.
+    pub t: Vec<f32>,
+    /// Per-trajectory solver statistics.
+    pub stats: Vec<SolveStats>,
+}
+
+impl BatchResult {
+    pub fn batch(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.y[r * self.n..(r + 1) * self.n]
+    }
+
+    /// Per-trajectory NFE — the paper's headline metric, per example.
+    pub fn nfes(&self) -> Vec<usize> {
+        self.stats.iter().map(|s| s.nfe).collect()
+    }
+}
+
+/// Adaptively integrate B trajectories from t0 to t1.  `y0` is row-major
+/// `[B, dim]`; B is inferred from `y0.len() / f.dim()`.
+pub fn solve_adaptive_batch<F: BatchDynamics>(
+    mut f: F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> BatchResult {
+    solve_adaptive_batch_mut(&mut f, t0, t1, y0, tb, opts)
+}
+
+/// `&mut`-receiver variant (keeps ownership with the caller).
+pub fn solve_adaptive_batch_mut<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> BatchResult {
+    batch_segment(f, t0, t1, y0, tb, opts, None)
+}
+
+/// One batched segment, optionally warm-started with a per-trajectory
+/// initial step magnitude (grid solving re-uses each trajectory's own
+/// final h, exactly like the scalar `solve_to_times`).
+fn batch_segment<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+    h_init_rows: Option<&[f32]>,
+) -> BatchResult {
+    let n = f.dim();
+    assert!(n > 0, "BatchDynamics::dim() must be positive");
+    assert_eq!(
+        y0.len() % n,
+        0,
+        "batch state length {} is not a multiple of dim {n}",
+        y0.len()
+    );
+    if tb.e.is_some() {
+        solve_embedded_batch(f, t0, t1, y0, tb, opts, h_init_rows)
+    } else {
+        solve_doubling_rows(f, t0, t1, y0, tb, opts, h_init_rows)
+    }
+}
+
+/// The batched embedded-pair driver: per-trajectory adaptive step control
+/// with active-set compaction.
+fn solve_embedded_batch<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+    h_init_rows: Option<&[f32]>,
+) -> BatchResult {
+    let n = f.dim();
+    let b = y0.len() / n;
+    let tbf = TableauCoeffs::new(tb);
+    // Hard precondition, matching the scalar driver: a silently-empty `e`
+    // would zero every error estimate and accept every step.
+    assert!(tbf.has_embedded(), "solve_embedded_batch needs an embedded pair");
+    let span = t1 - t0;
+    let sg = span.signum();
+    let h_max = opts.h_max.unwrap_or(span.abs());
+    let inv_order = tbf.inv_order();
+
+    // Outputs, in original trajectory order.
+    let mut out_y = y0.to_vec();
+    let mut out_t = vec![t0; b];
+    let mut out_stats = vec![SolveStats::default(); b];
+    if b == 0 {
+        return BatchResult { n, y: out_y, t: out_t, stats: out_stats };
+    }
+
+    // Working set, compacted to the active prefix.  `idx[s]` is the
+    // original trajectory occupying slot s.
+    let mut idx: Vec<usize> = (0..b).collect();
+    let mut act = b;
+    let mut t = vec![t0; b];
+    let mut h = vec![0.0f32; b];
+    let mut prev_err = vec![1.0f32; b]; // neutral PI history
+    let mut stats = vec![SolveStats::default(); b];
+    let mut y = y0.to_vec();
+    // One [B, n] matrix per stage; allocated once for the whole solve.
+    let mut ks: Vec<Vec<f32>> = (0..tbf.stages).map(|_| vec![0.0f32; b * n]).collect();
+    let mut ystage = vec![0.0f32; b * n];
+    let mut ynew = vec![0.0f32; b * n];
+    let mut errv = vec![0.0f32; n];
+    let mut tstage = vec![0.0f32; b];
+    let mut finished: Vec<usize> = Vec::with_capacity(b);
+    let mut refresh: Vec<usize> = Vec::with_capacity(b);
+    let mut ids_scratch: Vec<usize> = vec![0; b];
+
+    // Stage-0 derivative for every trajectory: one batched evaluation
+    // (reused by FSAL across accepted steps, exactly like the scalar path).
+    f.eval(&idx[..act], &t[..act], &y[..act * n], &mut ks[0][..act * n]);
+    for s in stats.iter_mut().take(act) {
+        s.nfe += 1;
+    }
+
+    // Initial step per trajectory: warm-start rows > explicit opts.h_init >
+    // the batched Hairer heuristic (h0 per row, ONE probe evaluation for the
+    // whole batch, h1 per row — one extra NFE per trajectory, same as
+    // scalar).
+    if let Some(rows) = h_init_rows {
+        assert_eq!(rows.len(), b, "h_init_rows length");
+        for s in 0..act {
+            h[s] = rows[s].abs().min(h_max).max(1e-10);
+        }
+    } else if let Some(h0) = opts.h_init {
+        for hs in h.iter_mut().take(act) {
+            *hs = h0.abs().min(h_max).max(1e-10);
+        }
+    } else {
+        for s in 0..act {
+            let yr = &y[s * n..(s + 1) * n];
+            let f0 = &ks[0][s * n..(s + 1) * n];
+            let h0 = stage::h0_estimate(yr, f0, opts.atol, opts.rtol);
+            // Euler probe state, staged for one batched evaluation.
+            let pr = &mut ystage[s * n..(s + 1) * n];
+            for i in 0..n {
+                pr[i] = yr[i] + h0 * f0[i];
+            }
+            tstage[s] = t[s] + h0;
+            h[s] = h0; // stash h0 until the probe comes back
+        }
+        f.eval(&idx[..act], &tstage[..act], &ystage[..act * n], &mut ynew[..act * n]);
+        for s in 0..act {
+            stats[s].nfe += 1;
+            let yr = &y[s * n..(s + 1) * n];
+            let f0 = &ks[0][s * n..(s + 1) * n];
+            let f1 = &ynew[s * n..(s + 1) * n];
+            let h1 = stage::h1_estimate(yr, f0, f1, h[s], tbf.order, opts.atol, opts.rtol);
+            h[s] = h1.min(h_max).max(1e-10);
+        }
+    }
+
+    // Trajectories that are already done (t0 == t1, or max_steps == 0).
+    finished.clear();
+    for s in 0..act {
+        let live = (t[s] - t1).abs() > 1e-9 && (t1 - t[s]) * sg > 0.0;
+        let exhausted = stats[s].accepted + stats[s].rejected >= opts.max_steps;
+        if !live || exhausted {
+            finished.push(s);
+        }
+    }
+    retire(
+        &finished, &mut act, n, &mut idx, &mut t, &mut h, &mut prev_err, &mut stats,
+        &mut y, &mut ks, &mut out_y, &mut out_t, &mut out_stats,
+    );
+
+    while act > 0 {
+        // Clamp and sign each trajectory's attempted step.
+        for s in 0..act {
+            h[s] = h[s].min((t1 - t[s]).abs()).min(h_max) * sg;
+        }
+
+        // Stages 1..S: stage state for all rows, then ONE model evaluation
+        // for the whole active batch.  Per-row operation order matches
+        // `stage::accumulate` exactly (copy, then axpy in ascending stage
+        // order, zero coefficients skipped) so results are bit-identical to
+        // the scalar driver.
+        for i in 0..tbf.a.len() {
+            let a_row = &tbf.a[i];
+            ystage[..act * n].copy_from_slice(&y[..act * n]);
+            for (j, aj) in a_row.iter().enumerate() {
+                let kj = &ks[j];
+                for s in 0..act {
+                    let cj = *aj * h[s];
+                    if cj != 0.0 {
+                        axpy(cj, &kj[s * n..(s + 1) * n], &mut ystage[s * n..(s + 1) * n]);
+                    }
+                }
+            }
+            let ci = tbf.c[i + 1];
+            for s in 0..act {
+                tstage[s] = t[s] + ci * h[s];
+            }
+            let (_, rest) = ks.split_at_mut(i + 1);
+            f.eval(&idx[..act], &tstage[..act], &ystage[..act * n], &mut rest[0][..act * n]);
+            for s in stats.iter_mut().take(act) {
+                s.nfe += 1;
+            }
+        }
+
+        // Propagating solution for all rows.
+        ynew[..act * n].copy_from_slice(&y[..act * n]);
+        for (j, bj) in tbf.b.iter().enumerate() {
+            let kj = &ks[j];
+            for s in 0..act {
+                let cj = *bj * h[s];
+                if cj != 0.0 {
+                    axpy(cj, &kj[s * n..(s + 1) * n], &mut ynew[s * n..(s + 1) * n]);
+                }
+            }
+        }
+
+        // Per-trajectory embedded error, accept/reject, controller update.
+        finished.clear();
+        refresh.clear();
+        for s in 0..act {
+            for v in errv.iter_mut() {
+                *v = 0.0;
+            }
+            for (j, ej) in tbf.e.iter().enumerate() {
+                let cj = *ej * h[s];
+                if cj != 0.0 {
+                    axpy(cj, &ks[j][s * n..(s + 1) * n], &mut errv);
+                }
+            }
+            let err = stage::error_norm(
+                &errv,
+                &y[s * n..(s + 1) * n],
+                &ynew[s * n..(s + 1) * n],
+                opts.atol,
+                opts.rtol,
+            );
+            let hs = h[s];
+            if err <= 1.0 || hs.abs() <= 1e-9 {
+                // accept
+                t[s] += hs;
+                y[s * n..(s + 1) * n].copy_from_slice(&ynew[s * n..(s + 1) * n]);
+                stats[s].accepted += 1;
+                if tbf.fsal {
+                    // per-row FSAL: k_last at the accepted point becomes k0
+                    let last = tbf.stages - 1;
+                    let (k0, tail) = ks.split_at_mut(1);
+                    k0[0][s * n..(s + 1) * n]
+                        .swap_with_slice(&mut tail[last - 1][s * n..(s + 1) * n]);
+                } else if (t[s] - t1).abs() > 1e-9 {
+                    refresh.push(s); // fresh f(t, y), batched below
+                }
+                let errc = err.max(1e-10);
+                let factor = stage::accept_factor(opts, inv_order, errc, prev_err[s]);
+                h[s] = hs.abs() * factor.clamp(opts.factor_min, opts.factor_max);
+                prev_err[s] = errc;
+            } else {
+                // reject: shrink and retry (FSAL stage 0 is still valid)
+                stats[s].rejected += 1;
+                let factor = stage::reject_factor(opts, inv_order, err);
+                h[s] = hs.abs() * factor.clamp(opts.factor_min, 1.0);
+            }
+            let live = (t[s] - t1).abs() > 1e-9 && (t1 - t[s]) * sg > 0.0;
+            let exhausted = stats[s].accepted + stats[s].rejected >= opts.max_steps;
+            if !live || exhausted {
+                finished.push(s);
+            }
+        }
+
+        // Batched stage-0 refresh for non-FSAL accepts still in flight
+        // (the scalar driver spends this NFE immediately after accepting;
+        // the value is identical, the dispatch is amortized).
+        if !refresh.is_empty() {
+            let m = refresh.len();
+            for (q, &s) in refresh.iter().enumerate() {
+                ystage[q * n..(q + 1) * n].copy_from_slice(&y[s * n..(s + 1) * n]);
+                tstage[q] = t[s];
+                ids_scratch[q] = idx[s];
+            }
+            f.eval(&ids_scratch[..m], &tstage[..m], &ystage[..m * n], &mut ynew[..m * n]);
+            for (q, &s) in refresh.iter().enumerate() {
+                ks[0][s * n..(s + 1) * n].copy_from_slice(&ynew[q * n..(q + 1) * n]);
+                stats[s].nfe += 1;
+            }
+        }
+
+        retire(
+            &finished, &mut act, n, &mut idx, &mut t, &mut h, &mut prev_err, &mut stats,
+            &mut y, &mut ks, &mut out_y, &mut out_t, &mut out_stats,
+        );
+    }
+
+    BatchResult { n, y: out_y, t: out_t, stats: out_stats }
+}
+
+/// Write finished trajectories to the output arrays and compact the active
+/// prefix by moving the last active row into each vacated slot.  `finished`
+/// must be ascending slot indices from the current attempt.
+fn retire(
+    finished: &[usize],
+    act: &mut usize,
+    n: usize,
+    idx: &mut [usize],
+    t: &mut [f32],
+    h: &mut [f32],
+    prev_err: &mut [f32],
+    stats: &mut [SolveStats],
+    y: &mut [f32],
+    ks: &mut [Vec<f32>],
+    out_y: &mut [f32],
+    out_t: &mut [f32],
+    out_stats: &mut [SolveStats],
+) {
+    for &s in finished {
+        let orig = idx[s];
+        out_y[orig * n..(orig + 1) * n].copy_from_slice(&y[s * n..(s + 1) * n]);
+        out_t[orig] = t[s];
+        let mut st = stats[s].clone();
+        st.h_final = h[s];
+        out_stats[orig] = st;
+    }
+    // Descending order: every slot above the one being filled is already
+    // retired, so the last active row is always a live trajectory.
+    for &s in finished.iter().rev() {
+        *act -= 1;
+        let last = *act;
+        if s != last {
+            let (head, tail) = y.split_at_mut(last * n);
+            head[s * n..(s + 1) * n].copy_from_slice(&tail[..n]);
+            // Only stage 0 survives across attempts (FSAL / refresh); the
+            // other stage matrices are rewritten from scratch before every
+            // read, so compacting them would be wasted memcpy.
+            {
+                let k0 = &mut ks[0];
+                let (kh, kt) = k0.split_at_mut(last * n);
+                kh[s * n..(s + 1) * n].copy_from_slice(&kt[..n]);
+            }
+            t[s] = t[last];
+            h[s] = h[last];
+            prev_err[s] = prev_err[last];
+            stats[s] = stats[last].clone();
+            idx[s] = idx[last];
+        }
+    }
+}
+
+/// Per-trajectory fallback for tableaux without an embedded pair: scalar
+/// step-doubling solves through a one-row view of the batch dynamics.
+fn solve_doubling_rows<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+    h_init_rows: Option<&[f32]>,
+) -> BatchResult {
+    let n = f.dim();
+    let b = y0.len() / n;
+    let mut out_y = vec![0.0f32; b * n];
+    let mut out_t = vec![t0; b];
+    let mut out_stats = vec![SolveStats::default(); b];
+    for r in 0..b {
+        let mut row_opts = opts.clone();
+        if let Some(rows) = h_init_rows {
+            row_opts.h_init = Some(rows[r].abs());
+        }
+        let mut one = OneRow { f: &mut *f, id: r };
+        let res = solve_adaptive_mut(&mut one, t0, t1, &y0[r * n..(r + 1) * n], tb, &row_opts);
+        out_y[r * n..(r + 1) * n].copy_from_slice(&res.y);
+        out_t[r] = res.t;
+        out_stats[r] = res.stats;
+    }
+    BatchResult { n, y: out_y, t: out_t, stats: out_stats }
+}
+
+/// Fixed-grid batched driver: B trajectories share one uniform step grid
+/// (one model evaluation per stage per step for the whole batch).  Returns
+/// the final `[B, n]` state and the exact per-trajectory NFE.
+pub fn solve_fixed_batch<F: BatchDynamics>(
+    mut f: F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> (Vec<f32>, Vec<usize>) {
+    solve_fixed_batch_mut(&mut f, t0, t1, y0, steps, tb)
+}
+
+pub fn solve_fixed_batch_mut<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> (Vec<f32>, Vec<usize>) {
+    assert!(steps > 0);
+    let n = f.dim();
+    assert!(n > 0, "BatchDynamics::dim() must be positive");
+    assert_eq!(y0.len() % n, 0, "batch state length vs dim");
+    let b = y0.len() / n;
+    let tbf = TableauCoeffs::new(tb);
+    let dt = (t1 - t0) / steps as f32;
+    let mut y = y0.to_vec();
+    let mut ynew = vec![0.0f32; b * n];
+    let mut ystage = vec![0.0f32; b * n];
+    let mut ks: Vec<Vec<f32>> = (0..tbf.stages).map(|_| vec![0.0f32; b * n]).collect();
+    let mut tstage = vec![0.0f32; b];
+    let ids: Vec<usize> = (0..b).collect();
+    if b == 0 {
+        return (y, vec![]);
+    }
+
+    for s in 0..steps {
+        let t = t0 + s as f32 * dt;
+        // stage 0
+        for ts in tstage.iter_mut() {
+            *ts = t;
+        }
+        {
+            let (k0, _) = ks.split_at_mut(1);
+            f.eval(&ids, &tstage, &y, &mut k0[0]);
+        }
+        // stages 1..S — the grid is shared, so the whole [B, n] matrix gets
+        // one flat axpy per stage coefficient (elementwise identical to the
+        // per-row scalar op sequence).
+        for i in 0..tbf.a.len() {
+            ystage.copy_from_slice(&y);
+            for (j, aj) in tbf.a[i].iter().enumerate() {
+                let cj = *aj * dt;
+                if cj != 0.0 {
+                    axpy(cj, &ks[j], &mut ystage);
+                }
+            }
+            let tc = t + tbf.c[i + 1] * dt;
+            for ts in tstage.iter_mut() {
+                *ts = tc;
+            }
+            let (_, rest) = ks.split_at_mut(i + 1);
+            f.eval(&ids, &tstage, &ystage, &mut rest[0]);
+        }
+        // combine
+        ynew.copy_from_slice(&y);
+        for (j, bj) in tbf.b.iter().enumerate() {
+            let cj = *bj * dt;
+            if cj != 0.0 {
+                axpy(cj, &ks[j], &mut ynew);
+            }
+        }
+        std::mem::swap(&mut y, &mut ynew);
+    }
+    (y, vec![steps * tbf.stages; b])
+}
+
+/// Batched grid-output solve (the latent-ODE evaluation path): adaptively
+/// integrate all B trajectories through a shared grid of output times,
+/// returning the `[B, n]` state at every grid point plus per-trajectory
+/// cumulative stats.  Each trajectory's step size is warm-started from its
+/// own previous segment (magnitude only, so decreasing/reverse-time grids
+/// are safe), exactly like the scalar `solve_to_times`.
+pub fn solve_to_times_batch<F: BatchDynamics>(
+    mut f: F,
+    times: &[f32],
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> (Vec<Vec<f32>>, Vec<SolveStats>) {
+    let n = f.dim();
+    assert!(n > 0, "BatchDynamics::dim() must be positive");
+    assert_eq!(y0.len() % n, 0, "batch state length vs dim");
+    let b = y0.len() / n;
+    let mut traj = Vec::with_capacity(times.len());
+    traj.push(y0.to_vec());
+    let mut agg = vec![SolveStats::default(); b];
+    let mut y = y0.to_vec();
+    let mut warm: Option<Vec<f32>> = None;
+    for w in times.windows(2) {
+        if (w[1] - w[0]).abs() <= 1e-9 {
+            traj.push(y.clone());
+            continue;
+        }
+        let res = batch_segment(&mut f, w[0], w[1], &y, tb, opts, warm.as_deref());
+        y = res.y;
+        for (a, s) in agg.iter_mut().zip(&res.stats) {
+            a.nfe += s.nfe;
+            a.accepted += s.accepted;
+            a.rejected += s.rejected;
+            a.h_final = s.h_final;
+        }
+        warm = Some(
+            res.stats
+                .iter()
+                .map(|s| s.h_final.abs().max(1e-6))
+                .collect(),
+        );
+        traj.push(y.clone());
+    }
+    (traj, agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::adaptive::{solve_adaptive, solve_to_times};
+    use crate::solvers::fixed::solve_fixed;
+    use crate::solvers::tableau;
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    const EMBEDDED: &[&str] = &["heun_euler", "bosh3", "fehlberg45", "cash_karp", "dopri5"];
+
+    /// A nonlinear, time-dependent test dynamics parameterized by (w, a, c);
+    /// state-dependent stiffness makes different rows take different step
+    /// sequences.  Stateless, so scalar and batched evaluation orders agree.
+    fn test_dynamics(w: f32, a: f32, c: f32) -> impl FnMut(f32, &[f32], &mut [f32]) {
+        move |t, y, dy| {
+            for (d, yi) in dy.iter_mut().zip(y) {
+                *d = a * (w * t + yi).sin() + c * yi;
+            }
+        }
+    }
+
+    fn random_opts(rng: &mut Pcg) -> AdaptiveOpts {
+        let rtol = 10f32.powi(-(2 + rng.below(5) as i32)); // 1e-2 .. 1e-6
+        AdaptiveOpts {
+            rtol,
+            atol: rtol * 1e-2,
+            h_init: if rng.below(2) == 0 { None } else { Some(rng.range(0.01, 0.3)) },
+            max_steps: 50_000,
+            ..Default::default()
+        }
+    }
+
+    fn assert_stats_eq(a: &crate::solvers::adaptive::SolveStats, b: &crate::solvers::adaptive::SolveStats, ctx: &str) {
+        assert_eq!(a.nfe, b.nfe, "{ctx}: nfe");
+        assert_eq!(a.accepted, b.accepted, "{ctx}: accepted");
+        assert_eq!(a.rejected, b.rejected, "{ctx}: rejected");
+        assert_eq!(a.h_final.to_bits(), b.h_final.to_bits(), "{ctx}: h_final");
+    }
+
+    #[test]
+    fn b1_reproduces_scalar_driver_bit_for_bit() {
+        // The acceptance property: batched at B=1 == solve_adaptive exactly
+        // (state bits, NFE, accepted, rejected), over random embedded
+        // tableaux, tolerances, dims, directions, and warm starts.
+        Prop::new(60).run("batch-b1-equiv", |rng: &mut Pcg, case| {
+            let tb = tableau::by_name(EMBEDDED[case % EMBEDDED.len()]).unwrap();
+            let n = 1 + rng.below(4);
+            let y0 = gen::vec_f32(rng, n, 1.5);
+            let (w, a, c) = (rng.range(1.0, 25.0), rng.range(0.2, 2.0), rng.range(-1.0, 1.0));
+            let opts = random_opts(rng);
+            let (t0, t1) = if rng.below(4) == 0 { (1.0, 0.0) } else { (0.0, 1.0) };
+
+            let scalar = solve_adaptive(test_dynamics(w, a, c), t0, t1, &y0, &tb, &opts);
+            let batched = solve_adaptive_batch(
+                Rowwise::new(test_dynamics(w, a, c), n),
+                t0,
+                t1,
+                &y0,
+                &tb,
+                &opts,
+            );
+            assert_eq!(batched.batch(), 1);
+            for i in 0..n {
+                assert_eq!(
+                    scalar.y[i].to_bits(),
+                    batched.y[i].to_bits(),
+                    "{}: y[{i}] {} vs {}",
+                    tb.name,
+                    scalar.y[i],
+                    batched.y[i]
+                );
+            }
+            assert_eq!(scalar.t.to_bits(), batched.t[0].to_bits(), "{}", tb.name);
+            assert_stats_eq(&scalar.stats, &batched.stats[0], tb.name);
+        });
+    }
+
+    #[test]
+    fn batch_matches_independent_scalar_solves_per_trajectory() {
+        // B > 1: every trajectory must match its own scalar solve even
+        // though rows accept/reject on different schedules and the working
+        // set compacts as rows finish.
+        Prop::new(40).run("batch-bn-equiv", |rng: &mut Pcg, case| {
+            let tb = tableau::by_name(EMBEDDED[case % EMBEDDED.len()]).unwrap();
+            let n = 1 + rng.below(3);
+            let b = 2 + rng.below(4);
+            // Rows at very different magnitudes => very different NFE, so
+            // stragglers exercise the compaction path.
+            let mut y0 = Vec::with_capacity(b * n);
+            for r in 0..b {
+                let mag = 0.2 * 3f32.powi(r as i32 % 4);
+                y0.extend(gen::vec_f32(rng, n, mag));
+            }
+            let (w, a, c) = (rng.range(1.0, 30.0), rng.range(0.2, 2.0), rng.range(-1.0, 1.0));
+            let opts = random_opts(rng);
+
+            let batched = solve_adaptive_batch(
+                Rowwise::new(test_dynamics(w, a, c), n),
+                0.0,
+                1.0,
+                &y0,
+                &tb,
+                &opts,
+            );
+            for r in 0..b {
+                let scalar = solve_adaptive(
+                    test_dynamics(w, a, c),
+                    0.0,
+                    1.0,
+                    &y0[r * n..(r + 1) * n],
+                    &tb,
+                    &opts,
+                );
+                for i in 0..n {
+                    assert_eq!(
+                        scalar.y[i].to_bits(),
+                        batched.row(r)[i].to_bits(),
+                        "{} row {r} y[{i}]",
+                        tb.name
+                    );
+                }
+                assert_stats_eq(&scalar.stats, &batched.stats[r], &format!("{} row {r}", tb.name));
+            }
+        });
+    }
+
+    #[test]
+    fn doubling_fallback_matches_scalar() {
+        // rk4 has no embedded pair; the batch API must still give
+        // per-trajectory results identical to scalar step doubling.
+        let tb = tableau::rk4();
+        let opts = AdaptiveOpts { rtol: 1e-5, atol: 1e-7, ..Default::default() };
+        let y0 = [1.0f32, 0.5, -0.25];
+        let batched = solve_adaptive_batch(
+            Rowwise::new(|_t: f32, y: &[f32], dy: &mut [f32]| dy[0] = -y[0], 1),
+            0.0,
+            2.0,
+            &y0,
+            &tb,
+            &opts,
+        );
+        for r in 0..3 {
+            let scalar = solve_adaptive(
+                |_t: f32, y: &[f32], dy: &mut [f32]| dy[0] = -y[0],
+                0.0,
+                2.0,
+                &y0[r..r + 1],
+                &tb,
+                &opts,
+            );
+            assert_eq!(scalar.y[0].to_bits(), batched.row(r)[0].to_bits(), "row {r}");
+            assert_stats_eq(&scalar.stats, &batched.stats[r], &format!("row {r}"));
+        }
+    }
+
+    #[test]
+    fn fixed_batch_matches_scalar_rows() {
+        Prop::new(30).run("fixed-batch-equiv", |rng: &mut Pcg, case| {
+            let names = tableau::ALL;
+            let tb = tableau::by_name(names[case % names.len()]).unwrap();
+            let n = 1 + rng.below(3);
+            let b = 1 + rng.below(4);
+            let steps = 1 + rng.below(5);
+            let y0 = gen::vec_f32(rng, b * n, 1.0);
+            let (w, a, c) = (rng.range(1.0, 10.0), rng.range(0.2, 1.5), rng.range(-1.0, 1.0));
+            let (yb, nfes) = solve_fixed_batch(
+                Rowwise::new(test_dynamics(w, a, c), n),
+                0.0,
+                1.0,
+                &y0,
+                steps,
+                &tb,
+            );
+            for r in 0..b {
+                let (ys, nfe) = solve_fixed(
+                    test_dynamics(w, a, c),
+                    0.0,
+                    1.0,
+                    &y0[r * n..(r + 1) * n],
+                    steps,
+                    &tb,
+                );
+                assert_eq!(nfes[r], nfe, "{} row {r}", tb.name);
+                for i in 0..n {
+                    assert_eq!(
+                        ys[i].to_bits(),
+                        yb[r * n + i].to_bits(),
+                        "{} row {r} y[{i}]",
+                        tb.name
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn to_times_batch_matches_scalar_grid_solves() {
+        // Forward and reverse grids, warm-started per trajectory.
+        for times in [
+            vec![0.0f32, 0.25, 0.5, 0.75, 1.0],
+            vec![1.0f32, 0.6, 0.3, 0.0],
+            vec![0.0f32, 0.5, 0.5, 1.0], // duplicate grid point
+        ] {
+            let tb = tableau::dopri5();
+            let opts = AdaptiveOpts::default();
+            let n = 2;
+            let y0 = [1.0f32, 0.0, 0.4, -0.8]; // B = 2
+            let (traj_b, stats_b) = solve_to_times_batch(
+                Rowwise::new(test_dynamics(6.0, 1.0, -0.3), n),
+                &times,
+                &y0,
+                &tb,
+                &opts,
+            );
+            assert_eq!(traj_b.len(), times.len());
+            for r in 0..2 {
+                let (traj_s, stats_s) = solve_to_times(
+                    test_dynamics(6.0, 1.0, -0.3),
+                    &times,
+                    &y0[r * n..(r + 1) * n],
+                    &tb,
+                    &opts,
+                );
+                assert_eq!(stats_s.nfe, stats_b[r].nfe, "row {r} {times:?}");
+                assert_eq!(stats_s.accepted, stats_b[r].accepted, "row {r}");
+                for (k, snap) in traj_s.iter().enumerate() {
+                    for i in 0..n {
+                        assert_eq!(
+                            snap[i].to_bits(),
+                            traj_b[k][r * n + i].to_bits(),
+                            "row {r} time {k} y[{i}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_batch_has_per_trajectory_nfe() {
+        // The serving-path property: cheap rows must not pay for stragglers
+        // (per-trajectory step control + compaction), so NFE varies by row.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        // Row identity must travel with the state (slots reorder under
+        // compaction): y = [phase, freq], dy = [cos(freq*t), 0].
+        let n = 2;
+        let f = BatchFn::new(n, |_ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]| {
+            for (r, tr) in t.iter().enumerate() {
+                dy[2 * r] = (y[2 * r + 1] * tr).cos();
+                dy[2 * r + 1] = 0.0;
+            }
+        });
+        let y0 = [0.0f32, 2.0, 0.0, 10.0, 0.0, 40.0, 0.0, 160.0];
+        let res = solve_adaptive_batch(f, 0.0, 1.0, &y0, &tb, &opts);
+        let nfes = res.nfes();
+        assert!(
+            nfes.iter().any(|v| *v != nfes[0]),
+            "expected heterogeneous NFE, got {nfes:?}"
+        );
+        // Fast oscillation must cost more than slow (paper Fig 8 mechanism).
+        assert!(nfes[3] > nfes[0], "{nfes:?}");
+        // Frequencies came through untouched (row order preserved).
+        assert_eq!(res.row(2)[1], 40.0);
+    }
+
+    #[test]
+    fn zero_batch_is_empty_result() {
+        let tb = tableau::dopri5();
+        let res = solve_adaptive_batch(
+            Rowwise::new(|_t: f32, _y: &[f32], _dy: &mut [f32]| {}, 3),
+            0.0,
+            1.0,
+            &[],
+            &tb,
+            &AdaptiveOpts::default(),
+        );
+        assert_eq!(res.batch(), 0);
+        assert!(res.y.is_empty());
+    }
+
+    #[test]
+    fn degenerate_span_finishes_immediately() {
+        let tb = tableau::dopri5();
+        let res = solve_adaptive_batch(
+            Rowwise::new(|_t: f32, y: &[f32], dy: &mut [f32]| dy[0] = y[0], 1),
+            0.5,
+            0.5,
+            &[1.0, 2.0],
+            &tb,
+            &AdaptiveOpts::default(),
+        );
+        assert_eq!(res.y, vec![1.0, 2.0]);
+        for s in &res.stats {
+            assert_eq!(s.accepted, 0);
+            assert!(s.nfe >= 1); // the stage-0 evaluation still happened
+        }
+    }
+}

@@ -3,11 +3,13 @@
 //! Mirrors the JAX-side `odeint_grid` used inside exported train steps (the
 //! python/tests and rust tests check both against the same analytic
 //! solutions), and is used by experiments that need a deterministic step
-//! budget.  Allocation-free inner loop: stage buffers are preallocated once.
+//! budget.  Allocation-free inner loop: stage buffers are preallocated once
+//! and the per-step solution combine writes into a swap buffer instead of
+//! cloning the state (the seed cloned `y` every step).
 
+use super::stage::{self, TableauCoeffs};
 use super::tableau::Tableau;
 use super::Dynamics;
-use crate::tensor::multi_axpy_into;
 
 /// Integrate `f` from t0 to t1 in `steps` uniform steps.  Returns the final
 /// state and the exact NFE spent.
@@ -59,10 +61,12 @@ fn drive<F: Dynamics>(
 ) -> (Vec<f32>, Vec<Vec<f32>>, usize) {
     assert!(steps > 0);
     let n = y0.len();
+    let tbf = TableauCoeffs::new(tb);
     let dt = (t1 - t0) / steps as f32;
     let mut y = y0.to_vec();
+    let mut ynew = vec![0.0f32; n];
     let mut ystage = vec![0.0f32; n];
-    let mut ks: Vec<Vec<f32>> = (0..tb.stages).map(|_| vec![0.0f32; n]).collect();
+    let mut ks: Vec<Vec<f32>> = (0..tbf.stages).map(|_| vec![0.0f32; n]).collect();
     let mut traj = Vec::new();
     let mut nfe = 0usize;
 
@@ -75,20 +79,15 @@ fn drive<F: Dynamics>(
         }
         nfe += 1;
         // stages 1..S
-        for i in 0..tb.a.len() {
-            let row = &tb.a[i];
-            let coeffs: Vec<f32> = row.iter().map(|a| (*a as f32) * dt).collect();
-            let prev: Vec<&[f32]> = ks[..=i].iter().map(|k| k.as_slice()).collect();
-            multi_axpy_into(&coeffs, &prev, &y, &mut ystage);
-            let (done, rest) = ks.split_at_mut(i + 1);
-            let _ = done;
-            f.eval(t + tb.c[i + 1] as f32 * dt, &ystage, &mut rest[0]);
+        for i in 0..tbf.a.len() {
+            stage::accumulate(&tbf.a[i], dt, &ks[..=i], &y, &mut ystage);
+            let (_, rest) = ks.split_at_mut(i + 1);
+            f.eval(t + tbf.c[i + 1] * dt, &ystage, &mut rest[0]);
             nfe += 1;
         }
-        // combine
-        let coeffs: Vec<f32> = tb.b.iter().map(|b| (*b as f32) * dt).collect();
-        let stages: Vec<&[f32]> = ks.iter().map(|k| k.as_slice()).collect();
-        multi_axpy_into(&coeffs, &stages, &y.clone(), &mut y);
+        // combine into the swap buffer, then promote it to the state
+        stage::accumulate(&tbf.b, dt, &ks, &y, &mut ynew);
+        std::mem::swap(&mut y, &mut ynew);
         if record {
             traj.push(y.clone());
         }

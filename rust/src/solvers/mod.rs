@@ -8,10 +8,16 @@
 //! XLA executable (`crate::runtime`), in tests they are native Rust closures.
 
 pub mod adaptive;
+pub mod batch;
 pub mod fixed;
+pub mod stage;
 pub mod tableau;
 
 pub use adaptive::{solve_adaptive, solve_to_times, AdaptiveOpts, SolveStats};
+pub use batch::{
+    solve_adaptive_batch, solve_fixed_batch, solve_to_times_batch, BatchDynamics, BatchFn,
+    BatchResult, Rowwise,
+};
 pub use fixed::{solve_fixed, solve_fixed_traj};
 pub use tableau::Tableau;
 
@@ -216,6 +222,71 @@ mod tests {
             assert!((z[0] - t.exp()).abs() < 1e-3, "t={t}");
         }
         assert!(stats.nfe > 0);
+    }
+
+    #[test]
+    fn empty_state_is_safe() {
+        // Regression: `error_norm` divided by a zero length, yielding NaN —
+        // the controller then rejected every step until the h floor forced
+        // blind accepts.  An empty state must now finish cleanly with zero
+        // rejections and finite bookkeeping.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let res = solve_adaptive(
+            |_t: f32, _y: &[f32], _dy: &mut [f32]| {},
+            0.0,
+            1.0,
+            &[],
+            &tb,
+            &opts,
+        );
+        assert!(res.y.is_empty());
+        assert!((res.t - 1.0).abs() < 1e-6, "t = {}", res.t);
+        assert_eq!(res.stats.rejected, 0);
+        assert!(res.stats.accepted > 0);
+        assert!(res.stats.h_final.is_finite());
+    }
+
+    #[test]
+    fn solve_to_times_reverse_grid() {
+        // Reverse-time latent-ODE encode: integrate y' = y backward from
+        // y(1) = e through a decreasing grid; the warm-started step size is
+        // a magnitude, so every segment must land on the analytic values.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+        let times = [1.0f32, 0.75, 0.5, 0.25, 0.0];
+        let e = std::f32::consts::E;
+        let (traj, stats) = solve_to_times(
+            |_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+            &times,
+            &[e],
+            &tb,
+            &opts,
+        );
+        assert_eq!(traj.len(), times.len());
+        for (z, t) in traj.iter().zip(&times) {
+            assert!((z[0] - t.exp()).abs() < 1e-3, "t={t}: {} vs {}", z[0], t.exp());
+        }
+        assert!(stats.nfe > 0);
+    }
+
+    #[test]
+    fn solve_to_times_duplicate_grid_points() {
+        // Duplicate output times are zero-length segments: skipped, with the
+        // state repeated and no solver work spent.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let times = [0.0f32, 0.5, 0.5, 1.0];
+        let (traj, _) = solve_to_times(
+            |_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+            &times,
+            &[1.0f32],
+            &tb,
+            &opts,
+        );
+        assert_eq!(traj.len(), 4);
+        assert_eq!(traj[1], traj[2]);
+        assert!((traj[3][0] - times[3].exp()).abs() < 1e-3);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Shared explicit-RK stage machinery.
+//!
+//! Everything arithmetic about taking one embedded RK step lives here —
+//! f32-cast tableau coefficients, stage-state accumulation, solution/error
+//! combination, the scaled RMS error norm, the PI controller factors, and
+//! the two halves of Hairer's automatic initial-step heuristic.  The scalar
+//! drivers (`super::adaptive`, `super::fixed`) and the batched engine
+//! (`super::batch`) call the *same* functions in the *same* order, so a
+//! batched trajectory reproduces the scalar solve bit-for-bit — a property
+//! verified exhaustively in `super::tests`.
+
+use super::adaptive::AdaptiveOpts;
+use super::tableau::Tableau;
+use crate::tensor::axpy;
+
+/// Tableau coefficients cast to f32 once per solve, so the per-step hot loop
+/// performs no `as` casts and allocates nothing (the seed code built a fresh
+/// coefficient `Vec` per stage per step).
+pub struct TableauCoeffs {
+    pub stages: usize,
+    pub order: u32,
+    pub fsal: bool,
+    /// Strictly-lower-triangular coupling rows; row i has i+1 entries.
+    pub a: Vec<Vec<f32>>,
+    /// Solution weights.
+    pub b: Vec<f32>,
+    /// Embedded error weights; empty when the tableau has no pair.
+    pub e: Vec<f32>,
+    /// Stage abscissae.
+    pub c: Vec<f32>,
+}
+
+impl TableauCoeffs {
+    pub fn new(tb: &Tableau) -> TableauCoeffs {
+        TableauCoeffs {
+            stages: tb.stages,
+            order: tb.order,
+            fsal: tb.fsal,
+            a: tb
+                .a
+                .iter()
+                .map(|row| row.iter().map(|x| *x as f32).collect())
+                .collect(),
+            b: tb.b.iter().map(|x| *x as f32).collect(),
+            e: tb
+                .e
+                .as_ref()
+                .map(|e| e.iter().map(|x| *x as f32).collect())
+                .unwrap_or_default(),
+            c: tb.c.iter().map(|x| *x as f32).collect(),
+        }
+    }
+
+    pub fn has_embedded(&self) -> bool {
+        !self.e.is_empty()
+    }
+
+    /// 1 / (order + 1), the error-exponent the controller uses.
+    pub fn inv_order(&self) -> f32 {
+        1.0 / (self.order as f32 + 1.0)
+    }
+}
+
+/// ystage = y + h * Σ_j a_row[j] · k_j over per-stage slices, zero
+/// coefficients skipped, applied in stage order (the exact op sequence of
+/// the seed's `multi_axpy_into`, minus its two per-call Vec allocations).
+/// The batched engine applies this same per-row op sequence to row slices
+/// of its per-stage matrices (`batch::solve_embedded_batch`); the bit-level
+/// equivalence property tests keep the two in lockstep.
+#[inline]
+pub fn accumulate<K: AsRef<[f32]>>(a_row: &[f32], h: f32, ks: &[K], y: &[f32], out: &mut [f32]) {
+    out.copy_from_slice(y);
+    for (j, aj) in a_row.iter().enumerate() {
+        let cj = *aj * h;
+        if cj != 0.0 {
+            axpy(cj, ks[j].as_ref(), out);
+        }
+    }
+}
+
+/// errv = h * Σ_j e[j] · k_j (zero base, zero coefficients skipped).
+#[inline]
+pub fn accumulate_err<K: AsRef<[f32]>>(e: &[f32], h: f32, ks: &[K], errv: &mut [f32]) {
+    for v in errv.iter_mut() {
+        *v = 0.0;
+    }
+    for (j, ej) in e.iter().enumerate() {
+        let cj = *ej * h;
+        if cj != 0.0 {
+            axpy(cj, ks[j].as_ref(), errv);
+        }
+    }
+}
+
+/// Scaled RMS error norm (Hairer eq. II.4.11).
+///
+/// A zero-length state has nothing to control: return 0 ("always accept")
+/// instead of the seed's 0/0 = NaN, which poisoned every comparison in the
+/// controller (NaN ≤ 1 is false, so each step was rejected until the
+/// step-size floor forced a blind accept).
+pub fn error_norm(err: &[f32], y0: &[f32], y1: &[f32], atol: f32, rtol: f32) -> f32 {
+    if err.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for i in 0..err.len() {
+        let sc = atol + rtol * y0[i].abs().max(y1[i].abs());
+        let r = (err[i] / sc) as f64;
+        acc += r * r;
+    }
+    ((acc / err.len() as f64) as f32).sqrt()
+}
+
+/// PI-controller growth factor after an accepted step (unclamped).
+#[inline]
+pub fn accept_factor(opts: &AdaptiveOpts, inv_order: f32, errc: f32, prev_err: f32) -> f32 {
+    opts.safety * errc.powf(-inv_order + opts.pi_beta) * prev_err.powf(opts.pi_beta)
+}
+
+/// Shrink factor after a rejected step (unclamped; caller clamps to ≤ 1).
+#[inline]
+pub fn reject_factor(opts: &AdaptiveOpts, inv_order: f32, err: f32) -> f32 {
+    opts.safety * err.powf(-inv_order)
+}
+
+/// First half of Hairer's automatic initial step (II.4 "starting step
+/// size"): a crude h0 from ‖y0‖ and ‖f0‖.  The caller then takes one Euler
+/// probe step of size h0, evaluates f there (one NFE), and feeds the result
+/// to [`h1_estimate`].
+pub fn h0_estimate(y0: &[f32], f0: &[f32], atol: f32, rtol: f32) -> f32 {
+    let n = y0.len();
+    if n == 0 {
+        return 1e-6;
+    }
+    let d0 = (y0
+        .iter()
+        .map(|y| {
+            let s = atol + rtol * y.abs();
+            ((y / s) as f64).powi(2)
+        })
+        .sum::<f64>()
+        / n as f64)
+        .sqrt();
+    let d1 = (f0
+        .iter()
+        .zip(y0)
+        .map(|(g, y)| {
+            let s = atol + rtol * y.abs();
+            ((g / s) as f64).powi(2)
+        })
+        .sum::<f64>()
+        / n as f64)
+        .sqrt();
+    if d0 < 1e-5 || d1 < 1e-5 {
+        1e-6
+    } else {
+        0.01 * (d0 / d1) as f32
+    }
+}
+
+/// Second half of the starting-step heuristic: refine h0 with the probe
+/// derivative `f1` evaluated at t0 + h0 on y0 + h0·f0.
+pub fn h1_estimate(
+    y0: &[f32],
+    f0: &[f32],
+    f1: &[f32],
+    h0: f32,
+    order: u32,
+    atol: f32,
+    rtol: f32,
+) -> f32 {
+    let n = y0.len();
+    if n == 0 {
+        return (100.0 * h0).min((h0 * 1e-3).max(1e-6));
+    }
+    let d1 = (f0
+        .iter()
+        .zip(y0)
+        .map(|(g, y)| {
+            let s = atol + rtol * y.abs();
+            ((g / s) as f64).powi(2)
+        })
+        .sum::<f64>()
+        / n as f64)
+        .sqrt();
+    let d2 = (f1
+        .iter()
+        .zip(f0)
+        .zip(y0)
+        .map(|((a, b), y)| {
+            let s = atol + rtol * y.abs();
+            (((a - b) / s) as f64).powi(2)
+        })
+        .sum::<f64>()
+        / n as f64)
+        .sqrt() as f32
+        / h0;
+    let h1 = if d1.max(d2 as f64) <= 1e-15 {
+        (h0 * 1e-3).max(1e-6)
+    } else {
+        (0.01 / d1.max(d2 as f64) as f32).powf(1.0 / (order as f32 + 1.0))
+    };
+    (100.0 * h0).min(h1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::tableau;
+
+    #[test]
+    fn coeffs_match_tableau_casts() {
+        for name in tableau::ALL {
+            let tb = tableau::by_name(name).unwrap();
+            let tc = TableauCoeffs::new(&tb);
+            assert_eq!(tc.stages, tb.stages);
+            for (i, row) in tb.a.iter().enumerate() {
+                for (j, v) in row.iter().enumerate() {
+                    assert_eq!(tc.a[i][j], *v as f32, "{name} a[{i}][{j}]");
+                }
+            }
+            for (j, v) in tb.b.iter().enumerate() {
+                assert_eq!(tc.b[j], *v as f32, "{name} b[{j}]");
+            }
+            assert_eq!(tc.has_embedded(), tb.e.is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn error_norm_empty_state_is_zero_not_nan() {
+        let e = error_norm(&[], &[], &[], 1e-8, 1e-6);
+        assert_eq!(e, 0.0);
+        assert!(!e.is_nan());
+    }
+
+    #[test]
+    fn error_norm_scales_like_rms() {
+        // err = atol everywhere, y = 0: each scaled residual is exactly 1.
+        let err = [1e-6f32; 4];
+        let y = [0.0f32; 4];
+        let e = error_norm(&err, &y, &y, 1e-6, 1e-3);
+        assert!((e - 1.0).abs() < 1e-6, "{e}");
+    }
+
+    #[test]
+    fn accumulate_matches_multi_axpy() {
+        use crate::tensor::multi_axpy_into;
+        let k0 = [1.0f32, 2.0];
+        let k1 = [3.0f32, -1.0];
+        let y = [0.5f32, 0.5];
+        let a_row = [0.25f32, 0.75];
+        let h = 0.1f32;
+        let mut want = [0.0f32; 2];
+        let coeffs: Vec<f32> = a_row.iter().map(|a| a * h).collect();
+        multi_axpy_into(&coeffs, &[&k0, &k1], &y, &mut want);
+        let mut got = [0.0f32; 2];
+        accumulate(&a_row, h, &[&k0, &k1], &y, &mut got);
+        assert_eq!(got, want);
+    }
+}
