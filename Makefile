@@ -1,0 +1,7 @@
+# Build-time artifact export: lower the JAX models to HLO text + params for
+# the Rust PJRT runtime (see python/compile/aot.py and rust/src/runtime/).
+# Run once before any artifact-backed example/experiment; the Rust side
+# never invokes Python.  Requires the python/ dependencies (JAX).
+.PHONY: artifacts
+artifacts:
+	cd python && python compile/aot.py --out ../artifacts

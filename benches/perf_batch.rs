@@ -15,10 +15,17 @@
 //!
 //! A pure-closure variant (no staging cost) is also reported so the
 //! driver-only amortization is visible separately and honestly.
+//!
+//! A second section benchmarks the batched Taylor-jet `R_K` path
+//! (`RegularizedBatchDynamics` + `taylor::ode_jet_batch`) against the
+//! per-row scalar-jet loop it replaces — same staging-cost model, per-row
+//! results asserted bit-identical before anything is timed.
 
-use taynode::solvers::adaptive::{solve_adaptive_mut, AdaptiveOpts};
+use taynode::coordinator::batch_rk_eval;
+use taynode::solvers::adaptive::{solve_adaptive, solve_adaptive_mut, AdaptiveOpts, SolveStats};
 use taynode::solvers::batch::{solve_adaptive_batch_mut, BatchDynamics};
 use taynode::solvers::{tableau, Dynamics};
+use taynode::taylor::{ode_jet, ode_jet_batch, BatchSeriesDynamics, Series, SeriesVec};
 use taynode::util::bench::{fmt_secs, report, time_fn};
 use taynode::util::rng::Pcg;
 
@@ -96,6 +103,105 @@ impl BatchDynamics for ServingDynamics {
             dy[r] = self.f(*tr, y[r]);
         }
     }
+}
+
+/// Taylor-jet regularization order benchmarked below (the paper's K).
+const JET_ORDER: usize = 3;
+/// Parameter block staged per *series* launch.  Smaller than the f32 path's
+/// block: one R_K solve spends K launches per NFE, and the baseline loop
+/// pays that per row.
+const JET_PARAM_BLOCK: usize = 4_096;
+
+/// Series-liftable toy dynamics z' = a·tanh(z) + w·sin(t), conditioned per
+/// trajectory (each row has its own a, w keyed on the engine ids), behind
+/// the same per-launch staging cost model as [`ServingDynamics`].  The
+/// scalar-jet and batched-jet paths evaluate the *identical* expression in
+/// the identical operation order, so their results are bit-comparable.
+struct JetServing {
+    a: Vec<f64>,
+    w: Vec<f64>,
+    params: Vec<f32>,
+    staging: Vec<f32>,
+    stage_cost: bool,
+    launches: usize,
+}
+
+impl JetServing {
+    fn new(seed: u64, stage_cost: bool) -> JetServing {
+        let mut rng = Pcg::new(seed);
+        JetServing {
+            a: (0..B).map(|_| rng.range(-1.2, 1.2) as f64).collect(),
+            w: (0..B).map(|_| rng.range(0.5, 3.0) as f64).collect(),
+            params: (0..JET_PARAM_BLOCK).map(|_| rng.range(-1.0, 1.0)).collect(),
+            staging: vec![0.0; JET_PARAM_BLOCK],
+            stage_cost,
+            launches: 0,
+        }
+    }
+
+    /// The per-row scalar-jet baseline: one `ode_jet` per trajectory, one
+    /// staged launch per series evaluation of that single row.
+    fn scalar_jets(&mut self, r: usize, z0: f64, t0: f64, order: usize) -> Vec<f64> {
+        let (ar, wr) = (self.a[r], self.w[r]);
+        let params = &self.params;
+        let staging = &mut self.staging;
+        let stage_cost = self.stage_cost;
+        let mut launches = 0usize;
+        let jets = ode_jet(
+            |z: &Series, t: &Series| {
+                launches += 1;
+                if stage_cost {
+                    staging.copy_from_slice(params);
+                    std::hint::black_box(&*staging);
+                }
+                z.tanh().scale(ar).add(&t.sin_cos().0.scale(wr))
+            },
+            z0,
+            t0,
+            order,
+        );
+        self.launches += launches;
+        jets
+    }
+}
+
+impl BatchSeriesDynamics for JetServing {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn eval(&mut self, ids: &[usize], z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+        self.launches += 1;
+        if self.stage_cost {
+            self.staging.copy_from_slice(&self.params);
+            std::hint::black_box(&self.staging);
+        }
+        let asel: Vec<f64> = ids.iter().map(|id| self.a[*id]).collect();
+        let wsel: Vec<f64> = ids.iter().map(|id| self.w[*id]).collect();
+        z.tanh().scale_rows(&asel).add(&t.sin_cos().0.scale_rows(&wsel))
+    }
+}
+
+/// One trajectory of the baseline: scalar adaptive solve of the augmented
+/// system [z, r] with the integrand from per-row scalar jets — exactly what
+/// `RegularizedBatchDynamics` replaces.
+fn scalar_rk_row(
+    d: &mut JetServing,
+    r: usize,
+    z0: f32,
+    order: usize,
+    tb: &tableau::Tableau,
+    opts: &AdaptiveOpts,
+) -> (f32, f32, SolveStats) {
+    let f = |t: f32, y: &[f32], dy: &mut [f32]| {
+        let jets = d.scalar_jets(r, y[0] as f64, t as f64, order);
+        dy[0] = jets[0] as f32;
+        let v = jets[order - 1];
+        // mirror the batched integrand ops exactly (n = 1)
+        dy[1] = (v * v / 1.0) as f32;
+    };
+    let res = solve_adaptive(f, 0.0, 1.0, &[z0, 0.0], tb, opts);
+    (res.y[0], res.y[1], res.stats)
 }
 
 fn main() {
@@ -188,4 +294,99 @@ fn main() {
          at B=64 on serving-shaped toy dynamics (got {speedup:.2}x)"
     );
     println!("\nacceptance (>= 4x at B=64): PASS");
+
+    // -- batched Taylor-jet R_K vs the per-row scalar-jet loop -------------
+    println!("\n== R_K (K={JET_ORDER}) via batched Taylor jets ==");
+    let z0: Vec<f64> = x.iter().map(|v| *v as f64).collect();
+    let t0 = vec![0.0f64; B];
+    let ids: Vec<usize> = (0..B).collect();
+
+    // correctness first: raw jets bit-identical per row
+    let mut jb = JetServing::new(11, true);
+    let jets_b = ode_jet_batch(&mut jb, &ids, &z0, &t0, JET_ORDER);
+    let mut js = JetServing::new(11, true);
+    for r in 0..B {
+        let jets_s = js.scalar_jets(r, z0[r], 0.0, JET_ORDER);
+        for k in 0..JET_ORDER {
+            assert_eq!(
+                jets_s[k].to_bits(),
+                jets_b[k][r].to_bits(),
+                "jet row {r} order {k} must be bit-identical"
+            );
+        }
+    }
+    println!(
+        "raw jet sweep: bit-identical per row; series launches \
+         per-row loop {}, batched {} ({:.1}x fewer)",
+        js.launches,
+        jb.launches,
+        js.launches as f64 / jb.launches.max(1) as f64
+    );
+
+    // correctness: the full R_K quadrature solve, bit-identical per row
+    // (state and R_K) with identical per-trajectory NFE.
+    let mut db = JetServing::new(11, true);
+    let ev = batch_rk_eval(&mut db, JET_ORDER, 0.0, 1.0, &x, &tb, &opts);
+    let mut ds = JetServing::new(11, true);
+    for r in 0..B {
+        let (zf, rk, stats) = scalar_rk_row(&mut ds, r, x[r], JET_ORDER, &tb, &opts);
+        assert_eq!(rk.to_bits(), ev.r_k[r].to_bits(), "R_K row {r}");
+        assert_eq!(zf.to_bits(), ev.y[r].to_bits(), "state row {r}");
+        assert_eq!(stats.nfe, ev.stats[r].nfe, "NFE row {r}");
+    }
+    println!(
+        "R_K quadrature: bit-identical per row, NFE identical; launches \
+         per-row loop {}, batched {}\n",
+        ds.launches, db.launches
+    );
+
+    // throughput: staged launches (the serving/XLA shape)
+    let mut q1 = JetServing::new(11, true);
+    let s_rk_loop = time_fn(2, 10, || {
+        for r in 0..B {
+            let out = scalar_rk_row(&mut q1, r, x[r], JET_ORDER, &tb, &opts);
+            std::hint::black_box(out.1);
+        }
+    });
+    report("per-row scalar-jet R_K loop (staged, B=64)", &s_rk_loop);
+    let mut q2 = JetServing::new(11, true);
+    let s_rk_batch = time_fn(2, 10, || {
+        let ev = batch_rk_eval(&mut q2, JET_ORDER, 0.0, 1.0, &x, &tb, &opts);
+        std::hint::black_box(ev.r_k.len());
+    });
+    report("batched SeriesVec R_K eval  (staged, B=64)", &s_rk_batch);
+    let jet_speedup = s_rk_loop.mean / s_rk_batch.mean;
+    println!(
+        "\nbatched R_K speedup over per-row scalar jets: {jet_speedup:.2}x \
+         ({} -> {})",
+        fmt_secs(s_rk_loop.mean),
+        fmt_secs(s_rk_batch.mean)
+    );
+
+    // driver+series amortization alone (pure closures, no staging cost)
+    let mut p1 = JetServing::new(11, false);
+    let s_rk_loop_c = time_fn(2, 10, || {
+        for r in 0..B {
+            let out = scalar_rk_row(&mut p1, r, x[r], JET_ORDER, &tb, &opts);
+            std::hint::black_box(out.1);
+        }
+    });
+    report("per-row scalar-jet R_K loop (pure, B=64)", &s_rk_loop_c);
+    let mut p2 = JetServing::new(11, false);
+    let s_rk_batch_c = time_fn(2, 10, || {
+        let ev = batch_rk_eval(&mut p2, JET_ORDER, 0.0, 1.0, &x, &tb, &opts);
+        std::hint::black_box(ev.r_k.len());
+    });
+    report("batched SeriesVec R_K eval  (pure, B=64)", &s_rk_batch_c);
+    println!(
+        "jet driver-only amortization: {:.2}x",
+        s_rk_loop_c.mean / s_rk_batch_c.mean
+    );
+
+    assert!(
+        jet_speedup >= 2.0,
+        "acceptance: batched R_K evaluation must be >= 2x over the per-row \
+         scalar-jet loop at B=64 (got {jet_speedup:.2}x)"
+    );
+    println!("\njet acceptance (>= 2x at B=64): PASS");
 }

@@ -18,8 +18,7 @@ fn main() -> anyhow::Result<()> {
     let opts = eval_opts();
     let iters = 150;
 
-    let mut table = Table::new(&["variant", "lambda", "secs", "test_nll",
-                                 "NFE", "R_2", "B", "K"]);
+    let mut table = Table::new(&["variant", "lambda", "secs", "test_nll", "NFE", "R_2", "B", "K"]);
     for (artifact, lam) in [
         ("cnf_tab_train_unreg_s8", 0.0f32),
         ("cnf_tab_train_rnode_s8", 0.05),

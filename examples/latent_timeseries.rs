@@ -24,15 +24,14 @@ fn main() -> anyhow::Result<()> {
     let opts = eval_opts();
     let iters = 200;
 
-    let mut table = Table::new(&["variant", "lambda", "train_loss",
-                                 "test_nll", "test_mse", "NFE"]);
-    for (artifact, lam) in [("latent_train_unreg", 0.0f32),
-                            ("latent_train_k2", 0.1)] {
+    let mut table = Table::new(&["variant", "lambda", "train_loss", "test_nll", "test_mse", "NFE"]);
+    for (artifact, lam) in [("latent_train_unreg", 0.0f32), ("latent_train_k2", 0.1)] {
         let (tr, loss) = train_latent(&rt, &h, artifact, iters, lam, 0)?;
-        let ev = latent_eval(&rt, &tr.store, &h.x_test, &h.mask_test, h.t, &tb,
-                             &opts)?;
-        println!("[{artifact}] loss {loss:.4}  test nll {:.4}  mse {:.4}  NFE {}",
-                 ev.nll, ev.mse, ev.nfe);
+        let ev = latent_eval(&rt, &tr.store, &h.x_test, &h.mask_test, h.t, &tb, &opts)?;
+        println!(
+            "[{artifact}] loss {loss:.4}  test nll {:.4}  mse {:.4}  NFE {}",
+            ev.nll, ev.mse, ev.nfe
+        );
         table.row(vec![
             artifact.into(),
             format!("{lam}"),

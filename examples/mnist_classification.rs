@@ -28,13 +28,11 @@ fn main() -> anyhow::Result<()> {
         harness.train.n, harness.test.n, harness.b
     );
 
-    let mut table = Table::new(&["variant", "final_loss", "train_err",
-                                 "test_err", "NFE", "secs"]);
-    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32),
-                            ("mnist_train_k3_s8", 0.03)] {
+    let mut table = Table::new(&["variant", "final_loss", "train_err", "test_err", "NFE", "secs"]);
+    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32), ("mnist_train_k3_s8", 0.03)] {
         let t0 = std::time::Instant::now();
-        let (_tr, log) = train_mnist(&rt, &harness, artifact, iters, lam, 0,
-                                     (iters / 10).max(1), &tb)?;
+        let (_tr, log) =
+            train_mnist(&rt, &harness, artifact, iters, lam, 0, (iters / 10).max(1), &tb)?;
         let secs = t0.elapsed().as_secs_f64();
         let csv = results_dir().join(format!("e2e_mnist_{artifact}.csv"));
         log.to_csv(&csv)?;

@@ -17,8 +17,7 @@ fn main() -> anyhow::Result<()> {
     let x = toy_data(128, 0); // batch of initial states
 
     let mut results = vec![];
-    for (artifact, lam) in [("toy_train_unreg_s16", 0.0f32),
-                            ("toy_train_k3_s16", 0.3)] {
+    for (artifact, lam) in [("toy_train_unreg_s16", 0.0f32), ("toy_train_k3_s16", 0.3)] {
         // Train: each step executes one fused XLA train step
         // (RK4 solve + MSE + lambda * R_3 via Taylor-mode jet + SGD).
         let mut trainer = Trainer::new(&rt, artifact, 0)?;
@@ -34,10 +33,11 @@ fn main() -> anyhow::Result<()> {
 
         // Evaluate: Rust adaptive dopri5 over the exported dynamics,
         // counting every function evaluation (NFE).
-        let ev = toy_eval(&rt, &trainer.store, &x, &tableau::dopri5(),
-                          &AdaptiveOpts::default())?;
-        println!("[{artifact}] final loss {loss:.5}  eval mse {:.5}  NFE {}\n",
-                 ev.mse, ev.nfe);
+        let ev = toy_eval(&rt, &trainer.store, &x, &tableau::dopri5(), &AdaptiveOpts::default())?;
+        println!(
+            "[{artifact}] final loss {loss:.5}  eval mse {:.5}  NFE {}\n",
+            ev.mse, ev.nfe
+        );
         results.push((artifact, ev));
     }
 

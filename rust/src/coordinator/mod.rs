@@ -6,7 +6,9 @@ pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
-pub use evaluator::{cnf_eval, latent_eval, mnist_eval, mnist_reg_quantities, toy_eval};
+pub use evaluator::{
+    batch_rk_eval, cnf_eval, latent_eval, mnist_eval, mnist_reg_quantities, toy_eval, RkEval,
+};
 pub use metrics::MetricsLog;
 pub use schedule::Schedule;
 pub use trainer::{BatchInputs, StepMetrics, Trainer};

@@ -46,6 +46,20 @@ impl StepMetrics {
     pub fn loss(&self) -> f32 {
         self.values.first().copied().unwrap_or(f32::NAN)
     }
+
+    /// The task metric (cross-entropy, NLL, MSE — position 1); NaN when the
+    /// artifact reports fewer outputs.
+    pub fn primary(&self) -> f32 {
+        self.values.get(1).copied().unwrap_or(f32::NAN)
+    }
+
+    /// The regularization term `R_K` as the fused train step measured it on
+    /// its fixed grid (position 2); NaN when the artifact is unregularized.
+    /// The native batched counterpart measured with adaptive quadrature is
+    /// `coordinator::evaluator::batch_rk_eval`.
+    pub fn reg(&self) -> f32 {
+        self.values.get(2).copied().unwrap_or(f32::NAN)
+    }
 }
 
 pub struct Trainer<'rt> {

@@ -13,10 +13,8 @@ pub fn fig4(scale: Scale) -> Result<Table> {
     let h = common::LatentHarness::new(&rt, 23)?;
     let tb = tableau::dopri5();
     let opts = common::eval_opts();
-    let mut table = Table::new(&["variant", "lambda", "train_loss", "eval_nll",
-                                 "eval_mse", "NFE"]);
-    for (artifact, lam) in [("latent_train_unreg", 0.0f32),
-                            ("latent_train_k2", 0.1)] {
+    let mut table = Table::new(&["variant", "lambda", "train_loss", "eval_nll", "eval_mse", "NFE"]);
+    for (artifact, lam) in [("latent_train_unreg", 0.0f32), ("latent_train_k2", 0.1)] {
         let (tr, loss) = common::train_latent(&rt, &h, artifact, scale.iters, lam, 0)?;
         let ev = evaluator::latent_eval(&rt, &tr.store, &h.x, &h.mask, h.t, &tb, &opts)?;
         table.row(vec![
@@ -41,8 +39,7 @@ pub fn fig12(scale: Scale) -> Result<Table> {
     for &lam in &lams[..scale.sweep.min(5)] {
         let artifact = if lam == 0.0 { "latent_train_unreg" } else { "latent_train_k2" };
         let (tr, _) = common::train_latent(&rt, &h, artifact, scale.iters, lam, 3)?;
-        let ev = evaluator::latent_eval(&rt, &tr.store, &h.x_test, &h.mask_test,
-                                        h.t, &tb, &opts)?;
+        let ev = evaluator::latent_eval(&rt, &tr.store, &h.x_test, &h.mask_test, h.t, &tb, &opts)?;
         table.row(vec![
             format!("{lam}"),
             format!("{:.4}", ev.mse),

@@ -22,10 +22,8 @@ pub fn fig3(scale: Scale) -> Result<Table> {
     let tb = tableau::dopri5();
     let every = (scale.iters / 6).max(1);
     let mut table = Table::new(&["variant", "step", "train_err", "NFE"]);
-    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32),
-                            ("mnist_train_k3_s8", 0.03)] {
-        let (_tr, log) =
-            common::train_mnist(&rt, &h, artifact, scale.iters, lam, 0, every, &tb)?;
+    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32), ("mnist_train_k3_s8", 0.03)] {
+        let (_tr, log) = common::train_mnist(&rt, &h, artifact, scale.iters, lam, 0, every, &tb)?;
         log.to_csv(&common::results_dir().join(format!("fig3_{artifact}.csv")))?;
         for row in &log.rows {
             table.row(vec![
@@ -51,8 +49,7 @@ pub fn mnist_lambda_sweep(
     let mut out = vec![];
     for (i, &lam) in lams.iter().enumerate() {
         let (_tr, log) =
-            common::train_mnist(rt, h, artifact, iters, lam, 100 + i as u64,
-                                iters, &tb)?;
+            common::train_mnist(rt, h, artifact, iters, lam, 100 + i as u64, iters, &tb)?;
         out.push((
             lam,
             log.last("ce"),
@@ -104,8 +101,7 @@ pub fn fig6_fig7(scale: Scale) -> Result<(Table, Table)> {
     let mut per_solver: Vec<(u32, Vec<f64>, Vec<f64>)> = vec![];
     let dtb = tableau::dopri5();
     for (label, artifact, lam) in variants {
-        let (tr, _log) =
-            common::train_mnist(&rt, &h, artifact, scale.iters, lam, 5, 0, &dtb)?;
+        let (tr, _log) = common::train_mnist(&rt, &h, artifact, scale.iters, lam, 5, 0, &dtb)?;
         let (x, l) = h.eval_batch(&h.train, 0);
         let mut rng = Pcg::new(41);
         let probe = rng.rademacher(h.b * h.d);
@@ -117,8 +113,7 @@ pub fn fig6_fig7(scale: Scale) -> Result<(Table, Table)> {
                 format!("{}", ev.nfe),
                 format!("{:.4}", ev.ce),
             ]);
-            let rq = evaluator::mnist_reg_quantities(&rt, &tr.store, &x, &probe,
-                                                     &tb, &opts)?;
+            let rq = evaluator::mnist_reg_quantities(&rt, &tr.store, &x, &probe, &tb, &opts)?;
             fig7.row(vec![
                 label.to_string(),
                 format!("{sname}({order})"),
@@ -167,10 +162,8 @@ pub fn fig8_fig10(scale: Scale) -> Result<Table> {
         vec!["|train-test| NFE".into()],
         vec!["NFE std across examples".into()],
     ];
-    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32),
-                            ("mnist_train_k3_s8", 0.03)] {
-        let (tr, _) = common::train_mnist(&rt, &h, artifact, scale.iters, lam,
-                                          7, 0, &dtb)?;
+    for (artifact, lam) in [("mnist_train_unreg_s8", 0.0f32), ("mnist_train_k3_s8", 0.03)] {
+        let (tr, _) = common::train_mnist(&rt, &h, artifact, scale.iters, lam, 7, 0, &dtb)?;
         // 8a: actual solve error at loose tolerance vs tight reference
         let (x, _) = h.eval_batch(&h.train, 0);
         let mut dyn_f = XlaDynamics::from_store(&rt, "mnist_dynamics", &tr.store, None)?;

@@ -25,7 +25,12 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
     println!("== {id} ==");
     match id {
         "fig1" => toy_figs::fig1(scale)?.print(),
-        "fig2" => orders::fig2(scale)?.print(),
+        "fig2" => {
+            println!("-- NFE of adaptive solvers on polynomial trajectories --");
+            orders::fig2(scale)?.print();
+            println!("-- R_K on the same trajectories (batched Taylor jets) --");
+            orders::fig2_rk(scale)?.print();
+        }
         "fig3" => mnist_figs::fig3(scale)?.print(),
         "fig4" => latent_figs::fig4(scale)?.print(),
         "fig5" => {

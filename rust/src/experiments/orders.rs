@@ -11,9 +11,11 @@
 use anyhow::Result;
 
 use super::common::Scale;
+use crate::coordinator::evaluator::batch_rk_eval;
 use crate::solvers::adaptive::{solve_adaptive, AdaptiveOpts};
 use crate::solvers::batch::{solve_adaptive_batch, BatchDynamics};
 use crate::solvers::tableau;
+use crate::taylor::{BatchSeriesDynamics, SeriesVec};
 use crate::util::bench::Table;
 use crate::util::rng::Pcg;
 
@@ -80,6 +82,38 @@ impl BatchDynamics for PolySweep {
     }
 }
 
+/// The series lift of [`PolySweep`]: the same per-seed dynamics
+/// dz/dt = p'(t) evaluated on truncated Taylor series, so the fig2
+/// trajectories can be jetted **for all seeds at once** by
+/// `taylor::ode_jet_batch`.  Rows are keyed on the engine's stable `ids`,
+/// exactly like the f32 path; the elementwise series ops apply the scalar
+/// operation order, so each row's jet is bit-identical to a scalar one.
+impl BatchSeriesDynamics for PolySweep {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn eval(&mut self, ids: &[usize], _z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+        let ord = t.order();
+        let rows = t.rows();
+        let terms = ids.iter().map(|id| self.coeffs[*id].len()).max().unwrap_or(0);
+        let mut acc = SeriesVec::fill(0.0, rows, 1, ord);
+        let mut tp = SeriesVec::fill(1.0, rows, 1, ord);
+        for i in 0..terms {
+            let scales: Vec<f64> = ids
+                .iter()
+                .map(|id| {
+                    let c = &self.coeffs[*id];
+                    if i < c.len() { (i as f64 + 1.0) * c[i] as f64 } else { 0.0 }
+                })
+                .collect();
+            acc = acc.add(&tp.scale_rows(&scales));
+            tp = tp.mul(t);
+        }
+        acc
+    }
+}
+
 /// Batched variant of [`poly_nfe`]: all seeds of one (solver, degree) cell
 /// integrate as one batch with per-trajectory step control.  Per-seed NFE
 /// is identical to the scalar loop (verified in tests); the sweep costs one
@@ -89,6 +123,26 @@ pub fn poly_nfe_batch(solver: &tableau::Tableau, k: usize, seeds: &[u64]) -> Vec
     let y0 = vec![0.0f32; seeds.len()];
     let res = solve_adaptive_batch(PolySweep { coeffs }, 0.0, 1.0, &y0, solver, &fig2_opts());
     res.nfes()
+}
+
+/// Per-seed `R_K = ∫‖d^K z/dt^K‖² dt` of the degree-k fig2 trajectories,
+/// measured natively: all seeds solve as ONE quadrature-augmented batch
+/// through `RegularizedBatchDynamics`/`ode_jet_batch` — no per-row scalar
+/// jet loop anywhere on this path (each row is still bit-identical to one;
+/// see tests).
+pub fn poly_rk_batch(k: usize, seeds: &[u64], order: usize) -> Vec<f32> {
+    let coeffs: Vec<Vec<f32>> = seeds.iter().map(|s| poly_coeffs(k, *s)).collect();
+    let y0 = vec![0.0f32; seeds.len()];
+    let ev = batch_rk_eval(
+        PolySweep { coeffs },
+        order,
+        0.0,
+        1.0,
+        &y0,
+        &tableau::dopri5(),
+        &fig2_opts(),
+    );
+    ev.r_k
 }
 
 pub fn fig2(_scale: Scale) -> Result<Table> {
@@ -112,6 +166,31 @@ pub fn fig2(_scale: Scale) -> Result<Table> {
             let mut nfes = poly_nfe_batch(tb, k, &seeds);
             nfes.sort_unstable();
             row.push(format!("{}", nfes[2]));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Companion heatmap to [`fig2`]: the regularizer `R_K` measured on the
+/// same random polynomial trajectories (mean over seeds, batched Taylor
+/// jets).  A degree-k trajectory has d^K z/dt^K ≡ 0 exactly when K > k, so
+/// the matrix is lower-triangular — the quantity the paper's regularizer
+/// drives toward zero is literally zero where Fig 2 shows solvers are
+/// cheap.
+pub fn fig2_rk(_scale: Scale) -> Result<Table> {
+    let degrees: Vec<usize> = (0..=8).collect();
+    let mut headers: Vec<String> = vec!["R_K \\ traj deg".to_string()];
+    headers.extend(degrees.iter().map(|k| format!("deg={k}")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs);
+    let seeds: Vec<u64> = (0..5).map(|s| 31 + s).collect();
+    for order in 1..=5usize {
+        let mut row = vec![format!("K={order}")];
+        for &k in &degrees {
+            let rks = poly_rk_batch(k, &seeds, order);
+            let mean = rks.iter().map(|v| *v as f64).sum::<f64>() / rks.len() as f64;
+            row.push(format!("{mean:.3e}"));
         }
         table.row(row);
     }
@@ -147,10 +226,92 @@ mod tests {
         for tb in [tableau::bosh3(), tableau::dopri5(), tableau::heun_euler()] {
             for k in [0usize, 2, 5, 8] {
                 let batched = poly_nfe_batch(&tb, k, &seeds);
-                let scalar: Vec<usize> =
-                    seeds.iter().map(|s| poly_nfe(&tb, k, *s)).collect();
+                let scalar: Vec<usize> = seeds.iter().map(|s| poly_nfe(&tb, k, *s)).collect();
                 assert_eq!(batched, scalar, "{} k={k}", tb.name);
             }
         }
+    }
+
+    /// The old-style per-seed reference: a scalar augmented solve whose
+    /// quadrature integrand comes from the scalar `ode_jet`, with the exact
+    /// operation sequence the batched series lift applies per row.
+    fn poly_rk_scalar(k: usize, seed: u64, order: usize) -> f32 {
+        use crate::taylor::{ode_jet, Series};
+        let coeffs = poly_coeffs(k, seed);
+        let f = |t: f32, y: &[f32], dy: &mut [f32]| {
+            let jets = ode_jet(
+                |_z: &Series, ts: &Series| {
+                    let ord = ts.order();
+                    let mut acc = Series::constant(0.0, ord);
+                    let mut tp = Series::constant(1.0, ord);
+                    for (i, c) in coeffs.iter().enumerate() {
+                        acc = acc.add(&tp.scale((i as f64 + 1.0) * *c as f64));
+                        tp = tp.mul(ts);
+                    }
+                    acc
+                },
+                y[0] as f64,
+                t as f64,
+                order,
+            );
+            dy[0] = jets[0] as f32;
+            let v = jets[order - 1];
+            // mirror the batched integrand ops exactly (n = 1)
+            dy[1] = (v * v / 1.0) as f32;
+        };
+        let res = solve_adaptive(f, 0.0, 1.0, &[0.0f32, 0.0], &tableau::dopri5(), &fig2_opts());
+        res.y[1]
+    }
+
+    #[test]
+    fn batched_rk_matches_scalar_jet_path_per_seed() {
+        // Regression pin for the fig2 R_K conversion: every cell value the
+        // batched jet/quadrature path reports equals — bit-for-bit — the
+        // per-seed scalar-jet solve it replaced.
+        let seeds = [31u64, 32, 33];
+        for k in [0usize, 1, 3, 6] {
+            for order in [1usize, 2, 4] {
+                let batched = poly_rk_batch(k, &seeds, order);
+                for (r, seed) in seeds.iter().enumerate() {
+                    let scalar = poly_rk_scalar(k, *seed, order);
+                    assert_eq!(
+                        scalar.to_bits(),
+                        batched[r].to_bits(),
+                        "deg {k} K={order} seed {seed}: {scalar} vs {}",
+                        batched[r]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rk_vanishes_exactly_above_trajectory_degree() {
+        // The fig2_rk triangle: a degree-k trajectory has d^K z ≡ 0 for
+        // K > k (exactly — polynomial series arithmetic produces true
+        // zeros), and strictly positive R_K at K = k.
+        let seeds = [31u64, 32, 33];
+        for k in [1usize, 2, 4] {
+            for v in poly_rk_batch(k, &seeds, k + 1) {
+                assert_eq!(v, 0.0, "deg {k}: R_{} must vanish", k + 1);
+            }
+            for v in poly_rk_batch(k, &seeds, k) {
+                assert!(v > 1e-4, "deg {k}: R_{k} suspiciously small: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rk_linear_trajectory_matches_closed_form() {
+        // deg 1: p'(t) = c0, so z(t) = c0·t and R_1 = ∫ c0² dt = c0².
+        let seed = 31u64;
+        let c0 = poly_coeffs(1, seed)[0] as f64;
+        let rk = poly_rk_batch(1, &[seed], 1);
+        let want = c0 * c0;
+        assert!(
+            (rk[0] as f64 - want).abs() < 1e-4 * want.max(1.0),
+            "{} vs {want}",
+            rk[0]
+        );
     }
 }

@@ -32,20 +32,17 @@ pub fn table3(scale: Scale) -> Result<Table> {
         ("TayNODE (K=2)", "mnist_train_k2_s8", 0.03),
         ("TayNODE (K=3)", "mnist_train_k3_s8", 0.03),
     ];
-    let mut table = Table::new(&["method", "steps", "secs", "loss", "NFE",
-                                 "R_2", "B", "K"]);
+    let mut table = Table::new(&["method", "steps", "secs", "loss", "NFE", "R_2", "B", "K"]);
     for (label, artifact, lam) in rows {
         let steps = artifact.rsplit("_s").next().unwrap().to_string();
         let t0 = std::time::Instant::now();
-        let (tr, _) = common::train_mnist(&rt, &h, artifact, scale.iters, lam,
-                                          1, 0, &tb)?;
+        let (tr, _) = common::train_mnist(&rt, &h, artifact, scale.iters, lam, 1, 0, &tb)?;
         let secs = t0.elapsed().as_secs_f64();
         let (x, l) = h.eval_batch(&h.train, 0);
         let ev = evaluator::mnist_eval(&rt, &tr.store, &x, &l, &tb, &opts)?;
         let mut rng = Pcg::new(51);
         let probe = rng.rademacher(h.b * h.d);
-        let rq = evaluator::mnist_reg_quantities(&rt, &tr.store, &x, &probe,
-                                                 &tb, &opts)?;
+        let rq = evaluator::mnist_reg_quantities(&rt, &tr.store, &x, &probe, &tb, &opts)?;
         table.row(vec![
             label.to_string(),
             steps,
@@ -73,20 +70,18 @@ pub fn cnf_table(model: &str, scale: Scale) -> Result<Table> {
         ("TayNODE (K=2)", "k2", 0.05),
     ];
     let loss_label = if model == "cnf_img" { "bits/dim" } else { "loss(nats)" };
-    let mut table = Table::new(&["method", "steps", "secs", loss_label, "NFE",
-                                 "R_2", "B", "K"]);
+    let mut table = Table::new(&["method", "steps", "secs", loss_label, "NFE", "R_2", "B", "K"]);
     for (label, tag, lam) in methods {
         for &s in &steps_list {
             let artifact = format!("{model}_train_{tag}_s{s}");
             if rt.manifest.exec_spec(&artifact).is_err() {
                 continue;
             }
-            let (tr, secs, _) =
-                common::train_cnf(&rt, &h, &artifact, scale.iters, lam, 2)?;
+            let (tr, secs, _) = common::train_cnf(&rt, &h, &artifact, scale.iters, lam, 2)?;
             let mut rng = Pcg::new(61);
             let probe = rng.rademacher(h.b * h.d);
-            let ev = evaluator::cnf_eval(&rt, model, &tr.store, &h.test, &probe,
-                                         &tb, &opts)?;
+            let ev =
+                evaluator::cnf_eval(&rt, model, &tr.store, &h.test, &probe, &tb, &opts)?;
             let loss = if model == "cnf_img" { ev.bpd } else { ev.nll };
             table.row(vec![
                 label.to_string(),
@@ -117,8 +112,8 @@ pub fn fig5_cnf(scale: Scale) -> Result<Table> {
         let (tr, _, _) = common::train_cnf(&rt, &h, &artifact, scale.iters, lam, 4)?;
         let mut rng = Pcg::new(71);
         let probe = rng.rademacher(h.b * h.d);
-        let ev = evaluator::cnf_eval(&rt, "cnf_tab", &tr.store, &h.test, &probe,
-                                     &tb, &opts)?;
+        let ev =
+            evaluator::cnf_eval(&rt, "cnf_tab", &tr.store, &h.test, &probe, &tb, &opts)?;
         table.row(vec![
             format!("{lam}"),
             format!("{:.3}", ev.nll),

@@ -9,8 +9,12 @@
 //! Layer map (see DESIGN.md):
 //! * [`solvers`] — fixed & adaptive Runge-Kutta suite with NFE accounting,
 //!   shared stage machinery, and the batched multi-trajectory engine
-//!   (`solvers::batch`: per-trajectory step control, active-set compaction).
-//! * [`taylor`] — truncated Taylor-series arithmetic / jets in pure Rust.
+//!   (`solvers::batch`: per-trajectory step control, active-set compaction
+//!   over a `WorkingSet`, and `RegularizedBatchDynamics` — native `R_K`
+//!   quadrature over batched Taylor jets).
+//! * [`taylor`] — truncated Taylor-series arithmetic / jets in pure Rust:
+//!   scalar `Series`/`ode_jet` plus the SoA `SeriesVec`/`ode_jet_batch`
+//!   that jets a whole `[B, n]` active set per sweep.
 //! * [`runtime`] — PJRT client (behind the `pjrt` feature; a thin stub
 //!   substitutes by default), artifact registry, parameter store.
 //! * [`coordinator`] — training loop, schedules, sweeps, metrics.

@@ -35,13 +35,17 @@ fn dispatch(args: &Args) -> Result<()> {
             experiments::run(&id, scale)
         }
         "solvers" => {
-            println!("{:<12} {:>6} {:>7} {:>9} {:>6}", "name", "order", "stages",
-                     "adaptive", "fsal");
+            println!(
+                "{:<12} {:>6} {:>7} {:>9} {:>6}",
+                "name", "order", "stages", "adaptive", "fsal"
+            );
             for name in tableau::ALL {
                 let t = tableau::by_name(name).unwrap();
                 println!(
                     "{:<12} {:>6} {:>7} {:>9} {:>6}",
-                    t.name, t.order, t.stages,
+                    t.name,
+                    t.order,
+                    t.stages,
                     if t.e.is_some() { "embedded" } else { "doubling" },
                     t.fsal
                 );
@@ -63,8 +67,11 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn info() -> Result<()> {
     let rt = experiments::common::load_runtime()?;
-    println!("platform: {} ({} devices)", rt.client.platform_name(),
-             rt.client.device_count());
+    println!(
+        "platform: {} ({} devices)",
+        rt.client.platform_name(),
+        rt.client.device_count()
+    );
     println!("models:");
     for (name, m) in &rt.manifest.models {
         println!("  {name:<10} {:>8} params  ({})", m.total, m.params_file);

@@ -149,8 +149,9 @@ fn solve_embedded<F: Dynamics>(
 
     let mut h = match opts.h_init {
         Some(h) => h.abs(),
-        None => initial_step(f, t, &y, &ks[0], tbf.order, opts.atol, opts.rtol,
-                             &mut stats.nfe),
+        None => {
+            initial_step(f, t, &y, &ks[0], tbf.order, opts.atol, opts.rtol, &mut stats.nfe)
+        }
     }
     .min(h_max)
     .max(1e-10);

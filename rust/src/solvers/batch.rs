@@ -9,9 +9,12 @@
 //! Each trajectory keeps its own adaptive step size, PI-controller history,
 //! and NFE/accepted/rejected counters; **finished trajectories are swapped
 //! out of the working set** (active-set compaction) so stragglers don't pay
-//! for the whole batch.  The per-trajectory arithmetic is the shared stage
-//! machinery of [`super::stage`], applied in the same operation order as the
-//! scalar driver — a batched trajectory therefore reproduces
+//! for the whole batch.  All per-trajectory arrays live in one
+//! `WorkingSet` whose `retire` method is the *only* compaction point, so
+//! adding a per-row field cannot silently skip compaction.  The
+//! per-trajectory arithmetic is the shared stage machinery of
+//! [`super::stage`], applied in the same operation order as the scalar
+//! driver — a batched trajectory therefore reproduces
 //! [`super::adaptive::solve_adaptive`] **bit-for-bit** in state, NFE,
 //! accepted and rejected counts (property-tested below).
 //!
@@ -19,11 +22,38 @@
 //! step-doubling solves (still through the same entry points, still
 //! per-trajectory stats), since step doubling re-enters the fixed driver
 //! and cannot share stage evaluations across rows with distinct h.
+//!
+//! [`RegularizedBatchDynamics`] closes the loop with the paper: it lifts a
+//! series-generic vector field ([`BatchSeriesDynamics`]) into an augmented
+//! system whose extra column integrates the regularizer
+//! `R_K = ∫ ‖d^K y/dt^K‖²/n dt`, with the K-th total derivatives computed
+//! by [`taylor::ode_jet_batch`](crate::taylor::ode_jet_batch) for the whole
+//! active set at once.
+//!
+//! ```
+//! use taynode::solvers::batch::{solve_adaptive_batch, Rowwise};
+//! use taynode::solvers::{tableau, AdaptiveOpts};
+//!
+//! // Two independent trajectories of dy/dt = -y, solved in one batch.
+//! let res = solve_adaptive_batch(
+//!     Rowwise::new(|_t: f32, y: &[f32], dy: &mut [f32]| dy[0] = -y[0], 1),
+//!     0.0,
+//!     1.0,
+//!     &[1.0, 2.0],
+//!     &tableau::dopri5(),
+//!     &AdaptiveOpts::default(),
+//! );
+//! let e1 = (-1.0f32).exp();
+//! assert!((res.row(0)[0] - e1).abs() < 1e-3);
+//! assert!((res.row(1)[0] - 2.0 * e1).abs() < 1e-3);
+//! assert!(res.nfes().iter().all(|nfe| *nfe > 0));
+//! ```
 
 use super::adaptive::{solve_adaptive_mut, AdaptiveOpts, SolveStats};
 use super::stage::{self, TableauCoeffs};
 use super::tableau::Tableau;
 use super::Dynamics;
+use crate::taylor::{ode_jet_batch, BatchSeriesDynamics};
 use crate::tensor::axpy;
 
 /// Dynamics over a batch of trajectories: `dy[r] = f(t[r], y[r])` for every
@@ -118,6 +148,130 @@ impl<F: BatchDynamics> Dynamics for OneRow<'_, F> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Native R_K: quadrature-augmented dynamics over batched Taylor jets
+// ---------------------------------------------------------------------------
+
+/// Append one zero-initialized quadrature column to a row-major `[B, n]`
+/// state, producing the `[B, n + 1]` augmented state a
+/// [`RegularizedBatchDynamics`] integrates.
+pub fn augment_quadrature(y0: &[f32], n: usize) -> Vec<f32> {
+    assert!(n > 0, "augment_quadrature: dim must be positive");
+    assert_eq!(y0.len() % n, 0, "augment_quadrature: state length vs dim");
+    let b = y0.len() / n;
+    let mut out = Vec::with_capacity(b * (n + 1));
+    for r in 0..b {
+        out.extend_from_slice(&y0[r * n..(r + 1) * n]);
+        out.push(0.0);
+    }
+    out
+}
+
+/// Split the result of a quadrature-augmented solve back into the plain
+/// `[B, n]` final states and the per-trajectory quadrature values
+/// (`R_K` when the augmented system came from [`RegularizedBatchDynamics`]).
+pub fn split_quadrature(res: &BatchResult) -> (Vec<f32>, Vec<f32>) {
+    let w = res.n;
+    assert!(w >= 2, "split_quadrature needs an augmented [B, n + 1] result");
+    let n = w - 1;
+    let b = res.batch();
+    let mut y = Vec::with_capacity(b * n);
+    let mut q = Vec::with_capacity(b);
+    for r in 0..b {
+        let row = res.row(r);
+        y.extend_from_slice(&row[..n]);
+        q.push(row[n]);
+    }
+    (y, q)
+}
+
+/// Adapter that turns a series-generic vector field into a
+/// [`BatchDynamics`] over the augmented state `[y, r]` with
+/// `dr/dt = ‖d^K y/dt^K‖² / n` — so an ordinary batched adaptive solve
+/// integrates the paper's regularizer `R_K` (eq. 1, dimension-normalized as
+/// in Appendix B) alongside the trajectories, for the whole active set per
+/// evaluation.
+///
+/// Every solver NFE spends one [`ode_jet_batch`] sweep (= `K` series
+/// evaluations of the inner field, batched over all active rows): the jet's
+/// first derivative matrix *is* `f(t, y)`, so the state derivatives and the
+/// regularizer integrand come out of the same sweep.  Per-row results are
+/// bit-identical to a scalar augmented solve built on the scalar
+/// [`ode_jet`](crate::taylor::ode_jet) (tested below).
+pub struct RegularizedBatchDynamics<F> {
+    inner: F,
+    order: usize,
+    // f64 staging for the jet sweep, reused across evaluations
+    z0: Vec<f64>,
+    t0: Vec<f64>,
+}
+
+impl<F: BatchSeriesDynamics> RegularizedBatchDynamics<F> {
+    /// Wrap `inner` to integrate `R_order` (order = the paper's K, ≥ 1).
+    pub fn new(inner: F, order: usize) -> RegularizedBatchDynamics<F> {
+        assert!(order >= 1, "RegularizedBatchDynamics: R_K needs K >= 1");
+        assert!(inner.dim() > 0, "RegularizedBatchDynamics: dim must be positive");
+        RegularizedBatchDynamics { inner, order, z0: vec![], t0: vec![] }
+    }
+
+    /// The un-augmented per-trajectory state dimension.
+    pub fn state_dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    /// The regularization order K.
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// Build the `[B, n + 1]` augmented initial state for this adapter.
+    pub fn augment(&self, y0: &[f32]) -> Vec<f32> {
+        augment_quadrature(y0, self.inner.dim())
+    }
+
+    pub fn into_inner(self) -> F {
+        self.inner
+    }
+}
+
+impl<F: BatchSeriesDynamics> BatchDynamics for RegularizedBatchDynamics<F> {
+    fn dim(&self) -> usize {
+        self.inner.dim() + 1
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        let n = self.inner.dim();
+        let w = n + 1;
+        let m = t.len();
+        self.z0.clear();
+        self.t0.clear();
+        for (r, tr) in t.iter().enumerate() {
+            self.t0.push(*tr as f64);
+            for i in 0..n {
+                self.z0.push(y[r * w + i] as f64);
+            }
+        }
+        let jets = ode_jet_batch(&mut self.inner, ids, &self.z0, &self.t0, self.order);
+        let x1 = &jets[0];
+        let xk = &jets[self.order - 1];
+        for r in 0..m {
+            for i in 0..n {
+                dy[r * w + i] = x1[r * n + i] as f32;
+            }
+            let mut sq = 0.0f64;
+            for i in 0..n {
+                let v = xk[r * n + i];
+                sq += v * v;
+            }
+            dy[r * w + n] = (sq / n as f64) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Results and the per-trajectory working set
+// ---------------------------------------------------------------------------
+
 /// Result of a batched solve, in the caller's original trajectory order
 /// (compaction is internal and never observable).
 #[derive(Clone, Debug)]
@@ -146,6 +300,102 @@ impl BatchResult {
         self.stats.iter().map(|s| s.nfe).collect()
     }
 }
+
+/// The embedded driver's per-trajectory state, bundled so compaction is
+/// exhaustive **by construction**: every parallel per-row array lives here,
+/// and [`WorkingSet::retire`] is the single place rows move.  A new per-row
+/// field (a jet cache, a quadrature accumulator, a deadline) is added to
+/// this struct and compacted in `retire`, or it does not exist — it cannot
+/// be threaded past the compaction point as a forgotten loose argument.
+///
+/// Slot `s < act` holds a live trajectory; `idx[s]` is its original index.
+/// Finished rows are copied to the `out_*` arrays (indexed by original
+/// trajectory) and the last active row swaps into the vacated slot.
+struct WorkingSet {
+    n: usize,
+    /// Active prefix length: slots `0..act` are live.
+    act: usize,
+    idx: Vec<usize>,
+    t: Vec<f32>,
+    h: Vec<f32>,
+    prev_err: Vec<f32>,
+    stats: Vec<SolveStats>,
+    /// Row-major `[B, n]` working states.
+    y: Vec<f32>,
+    /// One `[B, n]` matrix per RK stage.
+    ks: Vec<Vec<f32>>,
+    out_y: Vec<f32>,
+    out_t: Vec<f32>,
+    out_stats: Vec<SolveStats>,
+}
+
+impl WorkingSet {
+    fn new(y0: &[f32], n: usize, stages: usize, t0: f32) -> WorkingSet {
+        let b = y0.len() / n;
+        WorkingSet {
+            n,
+            act: b,
+            idx: (0..b).collect(),
+            t: vec![t0; b],
+            h: vec![0.0f32; b],
+            prev_err: vec![1.0f32; b], // neutral PI history
+            stats: vec![SolveStats::default(); b],
+            y: y0.to_vec(),
+            ks: (0..stages).map(|_| vec![0.0f32; b * n]).collect(),
+            out_y: y0.to_vec(),
+            out_t: vec![t0; b],
+            out_stats: vec![SolveStats::default(); b],
+        }
+    }
+
+    /// Write finished trajectories to the output arrays and compact the
+    /// active prefix by moving the last active row into each vacated slot.
+    /// `finished` must be ascending slot indices from the current attempt.
+    fn retire(&mut self, finished: &[usize]) {
+        let n = self.n;
+        for &s in finished {
+            let orig = self.idx[s];
+            self.out_y[orig * n..(orig + 1) * n].copy_from_slice(&self.y[s * n..(s + 1) * n]);
+            self.out_t[orig] = self.t[s];
+            let mut st = self.stats[s].clone();
+            st.h_final = self.h[s];
+            self.out_stats[orig] = st;
+        }
+        // Descending order: every slot above the one being filled is already
+        // retired, so the last active row is always a live trajectory.
+        for &s in finished.iter().rev() {
+            self.act -= 1;
+            let last = self.act;
+            if s != last {
+                {
+                    let (head, tail) = self.y.split_at_mut(last * n);
+                    head[s * n..(s + 1) * n].copy_from_slice(&tail[..n]);
+                }
+                // Only stage 0 survives across attempts (FSAL / refresh);
+                // the other stage matrices are rewritten from scratch before
+                // every read, so compacting them would be wasted memcpy.
+                {
+                    let k0 = &mut self.ks[0];
+                    let (kh, kt) = k0.split_at_mut(last * n);
+                    kh[s * n..(s + 1) * n].copy_from_slice(&kt[..n]);
+                }
+                self.t[s] = self.t[last];
+                self.h[s] = self.h[last];
+                self.prev_err[s] = self.prev_err[last];
+                self.stats[s] = self.stats[last].clone();
+                self.idx[s] = self.idx[last];
+            }
+        }
+    }
+
+    fn into_result(self) -> BatchResult {
+        BatchResult { n: self.n, y: self.out_y, t: self.out_t, stats: self.out_stats }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers
+// ---------------------------------------------------------------------------
 
 /// Adaptively integrate B trajectories from t0 to t1.  `y0` is row-major
 /// `[B, dim]`; B is inferred from `y0.len() / f.dim()`.
@@ -200,7 +450,7 @@ fn batch_segment<F: BatchDynamics>(
 }
 
 /// The batched embedded-pair driver: per-trajectory adaptive step control
-/// with active-set compaction.
+/// with active-set compaction over a [`WorkingSet`].
 fn solve_embedded_batch<F: BatchDynamics>(
     f: &mut F,
     t0: f32,
@@ -221,25 +471,12 @@ fn solve_embedded_batch<F: BatchDynamics>(
     let h_max = opts.h_max.unwrap_or(span.abs());
     let inv_order = tbf.inv_order();
 
-    // Outputs, in original trajectory order.
-    let mut out_y = y0.to_vec();
-    let mut out_t = vec![t0; b];
-    let mut out_stats = vec![SolveStats::default(); b];
+    let mut ws = WorkingSet::new(y0, n, tbf.stages, t0);
     if b == 0 {
-        return BatchResult { n, y: out_y, t: out_t, stats: out_stats };
+        return ws.into_result();
     }
 
-    // Working set, compacted to the active prefix.  `idx[s]` is the
-    // original trajectory occupying slot s.
-    let mut idx: Vec<usize> = (0..b).collect();
-    let mut act = b;
-    let mut t = vec![t0; b];
-    let mut h = vec![0.0f32; b];
-    let mut prev_err = vec![1.0f32; b]; // neutral PI history
-    let mut stats = vec![SolveStats::default(); b];
-    let mut y = y0.to_vec();
-    // One [B, n] matrix per stage; allocated once for the whole solve.
-    let mut ks: Vec<Vec<f32>> = (0..tbf.stages).map(|_| vec![0.0f32; b * n]).collect();
+    // Per-attempt scratch (no per-trajectory identity, so never compacted).
     let mut ystage = vec![0.0f32; b * n];
     let mut ynew = vec![0.0f32; b * n];
     let mut errv = vec![0.0f32; n];
@@ -250,8 +487,8 @@ fn solve_embedded_batch<F: BatchDynamics>(
 
     // Stage-0 derivative for every trajectory: one batched evaluation
     // (reused by FSAL across accepted steps, exactly like the scalar path).
-    f.eval(&idx[..act], &t[..act], &y[..act * n], &mut ks[0][..act * n]);
-    for s in stats.iter_mut().take(act) {
+    f.eval(&ws.idx[..b], &ws.t[..b], &ws.y[..b * n], &mut ws.ks[0][..b * n]);
+    for s in ws.stats.iter_mut().take(b) {
         s.nfe += 1;
     }
 
@@ -261,55 +498,53 @@ fn solve_embedded_batch<F: BatchDynamics>(
     // scalar).
     if let Some(rows) = h_init_rows {
         assert_eq!(rows.len(), b, "h_init_rows length");
-        for s in 0..act {
-            h[s] = rows[s].abs().min(h_max).max(1e-10);
+        for s in 0..b {
+            ws.h[s] = rows[s].abs().min(h_max).max(1e-10);
         }
     } else if let Some(h0) = opts.h_init {
-        for hs in h.iter_mut().take(act) {
+        for hs in ws.h.iter_mut().take(b) {
             *hs = h0.abs().min(h_max).max(1e-10);
         }
     } else {
-        for s in 0..act {
-            let yr = &y[s * n..(s + 1) * n];
-            let f0 = &ks[0][s * n..(s + 1) * n];
+        for s in 0..b {
+            let yr = &ws.y[s * n..(s + 1) * n];
+            let f0 = &ws.ks[0][s * n..(s + 1) * n];
             let h0 = stage::h0_estimate(yr, f0, opts.atol, opts.rtol);
             // Euler probe state, staged for one batched evaluation.
             let pr = &mut ystage[s * n..(s + 1) * n];
             for i in 0..n {
                 pr[i] = yr[i] + h0 * f0[i];
             }
-            tstage[s] = t[s] + h0;
-            h[s] = h0; // stash h0 until the probe comes back
+            tstage[s] = ws.t[s] + h0;
+            ws.h[s] = h0; // stash h0 until the probe comes back
         }
-        f.eval(&idx[..act], &tstage[..act], &ystage[..act * n], &mut ynew[..act * n]);
-        for s in 0..act {
-            stats[s].nfe += 1;
-            let yr = &y[s * n..(s + 1) * n];
-            let f0 = &ks[0][s * n..(s + 1) * n];
+        f.eval(&ws.idx[..b], &tstage[..b], &ystage[..b * n], &mut ynew[..b * n]);
+        for s in 0..b {
+            ws.stats[s].nfe += 1;
+            let yr = &ws.y[s * n..(s + 1) * n];
+            let f0 = &ws.ks[0][s * n..(s + 1) * n];
             let f1 = &ynew[s * n..(s + 1) * n];
-            let h1 = stage::h1_estimate(yr, f0, f1, h[s], tbf.order, opts.atol, opts.rtol);
-            h[s] = h1.min(h_max).max(1e-10);
+            let h1 = stage::h1_estimate(yr, f0, f1, ws.h[s], tbf.order, opts.atol, opts.rtol);
+            ws.h[s] = h1.min(h_max).max(1e-10);
         }
     }
 
     // Trajectories that are already done (t0 == t1, or max_steps == 0).
     finished.clear();
-    for s in 0..act {
-        let live = (t[s] - t1).abs() > 1e-9 && (t1 - t[s]) * sg > 0.0;
-        let exhausted = stats[s].accepted + stats[s].rejected >= opts.max_steps;
+    for s in 0..b {
+        let live = (ws.t[s] - t1).abs() > 1e-9 && (t1 - ws.t[s]) * sg > 0.0;
+        let exhausted = ws.stats[s].accepted + ws.stats[s].rejected >= opts.max_steps;
         if !live || exhausted {
             finished.push(s);
         }
     }
-    retire(
-        &finished, &mut act, n, &mut idx, &mut t, &mut h, &mut prev_err, &mut stats,
-        &mut y, &mut ks, &mut out_y, &mut out_t, &mut out_stats,
-    );
+    ws.retire(&finished);
 
-    while act > 0 {
+    while ws.act > 0 {
+        let act = ws.act;
         // Clamp and sign each trajectory's attempted step.
         for s in 0..act {
-            h[s] = h[s].min((t1 - t[s]).abs()).min(h_max) * sg;
+            ws.h[s] = ws.h[s].min((t1 - ws.t[s]).abs()).min(h_max) * sg;
         }
 
         // Stages 1..S: stage state for all rows, then ONE model evaluation
@@ -319,11 +554,11 @@ fn solve_embedded_batch<F: BatchDynamics>(
         // the scalar driver.
         for i in 0..tbf.a.len() {
             let a_row = &tbf.a[i];
-            ystage[..act * n].copy_from_slice(&y[..act * n]);
+            ystage[..act * n].copy_from_slice(&ws.y[..act * n]);
             for (j, aj) in a_row.iter().enumerate() {
-                let kj = &ks[j];
+                let kj = &ws.ks[j];
                 for s in 0..act {
-                    let cj = *aj * h[s];
+                    let cj = *aj * ws.h[s];
                     if cj != 0.0 {
                         axpy(cj, &kj[s * n..(s + 1) * n], &mut ystage[s * n..(s + 1) * n]);
                     }
@@ -331,21 +566,21 @@ fn solve_embedded_batch<F: BatchDynamics>(
             }
             let ci = tbf.c[i + 1];
             for s in 0..act {
-                tstage[s] = t[s] + ci * h[s];
+                tstage[s] = ws.t[s] + ci * ws.h[s];
             }
-            let (_, rest) = ks.split_at_mut(i + 1);
-            f.eval(&idx[..act], &tstage[..act], &ystage[..act * n], &mut rest[0][..act * n]);
-            for s in stats.iter_mut().take(act) {
+            let (_, rest) = ws.ks.split_at_mut(i + 1);
+            f.eval(&ws.idx[..act], &tstage[..act], &ystage[..act * n], &mut rest[0][..act * n]);
+            for s in ws.stats.iter_mut().take(act) {
                 s.nfe += 1;
             }
         }
 
         // Propagating solution for all rows.
-        ynew[..act * n].copy_from_slice(&y[..act * n]);
+        ynew[..act * n].copy_from_slice(&ws.y[..act * n]);
         for (j, bj) in tbf.b.iter().enumerate() {
-            let kj = &ks[j];
+            let kj = &ws.ks[j];
             for s in 0..act {
-                let cj = *bj * h[s];
+                let cj = *bj * ws.h[s];
                 if cj != 0.0 {
                     axpy(cj, &kj[s * n..(s + 1) * n], &mut ynew[s * n..(s + 1) * n]);
                 }
@@ -360,45 +595,45 @@ fn solve_embedded_batch<F: BatchDynamics>(
                 *v = 0.0;
             }
             for (j, ej) in tbf.e.iter().enumerate() {
-                let cj = *ej * h[s];
+                let cj = *ej * ws.h[s];
                 if cj != 0.0 {
-                    axpy(cj, &ks[j][s * n..(s + 1) * n], &mut errv);
+                    axpy(cj, &ws.ks[j][s * n..(s + 1) * n], &mut errv);
                 }
             }
             let err = stage::error_norm(
                 &errv,
-                &y[s * n..(s + 1) * n],
+                &ws.y[s * n..(s + 1) * n],
                 &ynew[s * n..(s + 1) * n],
                 opts.atol,
                 opts.rtol,
             );
-            let hs = h[s];
+            let hs = ws.h[s];
             if err <= 1.0 || hs.abs() <= 1e-9 {
                 // accept
-                t[s] += hs;
-                y[s * n..(s + 1) * n].copy_from_slice(&ynew[s * n..(s + 1) * n]);
-                stats[s].accepted += 1;
+                ws.t[s] += hs;
+                ws.y[s * n..(s + 1) * n].copy_from_slice(&ynew[s * n..(s + 1) * n]);
+                ws.stats[s].accepted += 1;
                 if tbf.fsal {
                     // per-row FSAL: k_last at the accepted point becomes k0
                     let last = tbf.stages - 1;
-                    let (k0, tail) = ks.split_at_mut(1);
+                    let (k0, tail) = ws.ks.split_at_mut(1);
                     k0[0][s * n..(s + 1) * n]
                         .swap_with_slice(&mut tail[last - 1][s * n..(s + 1) * n]);
-                } else if (t[s] - t1).abs() > 1e-9 {
+                } else if (ws.t[s] - t1).abs() > 1e-9 {
                     refresh.push(s); // fresh f(t, y), batched below
                 }
                 let errc = err.max(1e-10);
-                let factor = stage::accept_factor(opts, inv_order, errc, prev_err[s]);
-                h[s] = hs.abs() * factor.clamp(opts.factor_min, opts.factor_max);
-                prev_err[s] = errc;
+                let factor = stage::accept_factor(opts, inv_order, errc, ws.prev_err[s]);
+                ws.h[s] = hs.abs() * factor.clamp(opts.factor_min, opts.factor_max);
+                ws.prev_err[s] = errc;
             } else {
                 // reject: shrink and retry (FSAL stage 0 is still valid)
-                stats[s].rejected += 1;
+                ws.stats[s].rejected += 1;
                 let factor = stage::reject_factor(opts, inv_order, err);
-                h[s] = hs.abs() * factor.clamp(opts.factor_min, 1.0);
+                ws.h[s] = hs.abs() * factor.clamp(opts.factor_min, 1.0);
             }
-            let live = (t[s] - t1).abs() > 1e-9 && (t1 - t[s]) * sg > 0.0;
-            let exhausted = stats[s].accepted + stats[s].rejected >= opts.max_steps;
+            let live = (ws.t[s] - t1).abs() > 1e-9 && (t1 - ws.t[s]) * sg > 0.0;
+            let exhausted = ws.stats[s].accepted + ws.stats[s].rejected >= opts.max_steps;
             if !live || exhausted {
                 finished.push(s);
             }
@@ -410,75 +645,21 @@ fn solve_embedded_batch<F: BatchDynamics>(
         if !refresh.is_empty() {
             let m = refresh.len();
             for (q, &s) in refresh.iter().enumerate() {
-                ystage[q * n..(q + 1) * n].copy_from_slice(&y[s * n..(s + 1) * n]);
-                tstage[q] = t[s];
-                ids_scratch[q] = idx[s];
+                ystage[q * n..(q + 1) * n].copy_from_slice(&ws.y[s * n..(s + 1) * n]);
+                tstage[q] = ws.t[s];
+                ids_scratch[q] = ws.idx[s];
             }
             f.eval(&ids_scratch[..m], &tstage[..m], &ystage[..m * n], &mut ynew[..m * n]);
             for (q, &s) in refresh.iter().enumerate() {
-                ks[0][s * n..(s + 1) * n].copy_from_slice(&ynew[q * n..(q + 1) * n]);
-                stats[s].nfe += 1;
+                ws.ks[0][s * n..(s + 1) * n].copy_from_slice(&ynew[q * n..(q + 1) * n]);
+                ws.stats[s].nfe += 1;
             }
         }
 
-        retire(
-            &finished, &mut act, n, &mut idx, &mut t, &mut h, &mut prev_err, &mut stats,
-            &mut y, &mut ks, &mut out_y, &mut out_t, &mut out_stats,
-        );
+        ws.retire(&finished);
     }
 
-    BatchResult { n, y: out_y, t: out_t, stats: out_stats }
-}
-
-/// Write finished trajectories to the output arrays and compact the active
-/// prefix by moving the last active row into each vacated slot.  `finished`
-/// must be ascending slot indices from the current attempt.
-fn retire(
-    finished: &[usize],
-    act: &mut usize,
-    n: usize,
-    idx: &mut [usize],
-    t: &mut [f32],
-    h: &mut [f32],
-    prev_err: &mut [f32],
-    stats: &mut [SolveStats],
-    y: &mut [f32],
-    ks: &mut [Vec<f32>],
-    out_y: &mut [f32],
-    out_t: &mut [f32],
-    out_stats: &mut [SolveStats],
-) {
-    for &s in finished {
-        let orig = idx[s];
-        out_y[orig * n..(orig + 1) * n].copy_from_slice(&y[s * n..(s + 1) * n]);
-        out_t[orig] = t[s];
-        let mut st = stats[s].clone();
-        st.h_final = h[s];
-        out_stats[orig] = st;
-    }
-    // Descending order: every slot above the one being filled is already
-    // retired, so the last active row is always a live trajectory.
-    for &s in finished.iter().rev() {
-        *act -= 1;
-        let last = *act;
-        if s != last {
-            let (head, tail) = y.split_at_mut(last * n);
-            head[s * n..(s + 1) * n].copy_from_slice(&tail[..n]);
-            // Only stage 0 survives across attempts (FSAL / refresh); the
-            // other stage matrices are rewritten from scratch before every
-            // read, so compacting them would be wasted memcpy.
-            {
-                let k0 = &mut ks[0];
-                let (kh, kt) = k0.split_at_mut(last * n);
-                kh[s * n..(s + 1) * n].copy_from_slice(&kt[..n]);
-            }
-            t[s] = t[last];
-            h[s] = h[last];
-            prev_err[s] = prev_err[last];
-            stats[s] = stats[last].clone();
-            idx[s] = idx[last];
-        }
-    }
+    ws.into_result()
 }
 
 /// Per-trajectory fallback for tableaux without an embedded pair: scalar
@@ -643,6 +824,7 @@ mod tests {
     use crate::solvers::adaptive::{solve_adaptive, solve_to_times};
     use crate::solvers::fixed::solve_fixed;
     use crate::solvers::tableau;
+    use crate::taylor::{ode_jet, Series, SeriesFn, SeriesVec};
     use crate::util::ptest::{gen, Prop};
     use crate::util::rng::Pcg;
 
@@ -670,7 +852,11 @@ mod tests {
         }
     }
 
-    fn assert_stats_eq(a: &crate::solvers::adaptive::SolveStats, b: &crate::solvers::adaptive::SolveStats, ctx: &str) {
+    fn assert_stats_eq(
+        a: &crate::solvers::adaptive::SolveStats,
+        b: &crate::solvers::adaptive::SolveStats,
+        ctx: &str,
+    ) {
         assert_eq!(a.nfe, b.nfe, "{ctx}: nfe");
         assert_eq!(a.accepted, b.accepted, "{ctx}: accepted");
         assert_eq!(a.rejected, b.rejected, "{ctx}: rejected");
@@ -935,5 +1121,142 @@ mod tests {
             assert_eq!(s.accepted, 0);
             assert!(s.nfe >= 1); // the stage-0 evaluation still happened
         }
+    }
+
+    // -- RegularizedBatchDynamics -----------------------------------------
+
+    #[test]
+    fn augment_and_split_roundtrip() {
+        let y0 = [1.0f32, 2.0, 3.0, 4.0]; // [2, 2]
+        let aug = augment_quadrature(&y0, 2);
+        assert_eq!(aug, vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]);
+        let res = BatchResult {
+            n: 3,
+            y: aug,
+            t: vec![1.0; 2],
+            stats: vec![SolveStats::default(); 2],
+        };
+        let (y, q) = split_quadrature(&res);
+        assert_eq!(y, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(q, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn regularized_constant_dynamics_quadrature() {
+        // dz/dt = 1.5: d¹z = 1.5, d²z = 0.  R_1 = ∫1.5² dt = 2.25 over
+        // [0, 1]; R_2 = 0 exactly (the jet of a constant field vanishes).
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+        for (order, want) in [(1usize, 2.25f64), (2, 0.0)] {
+            let f = SeriesFn::new(1, |_ids: &[usize], z: &SeriesVec, _t: &SeriesVec| {
+                SeriesVec::fill(1.5, z.rows(), z.cols(), z.order())
+            });
+            let reg = RegularizedBatchDynamics::new(f, order);
+            let y0 = reg.augment(&[0.0, 2.0]);
+            let res = solve_adaptive_batch(reg, 0.0, 1.0, &y0, &tb, &opts);
+            let (y, q) = split_quadrature(&res);
+            for (r, qr) in q.iter().enumerate() {
+                assert!(
+                    (*qr as f64 - want).abs() < 1e-5,
+                    "K={order} row {r}: {qr} vs {want}"
+                );
+            }
+            // states integrated alongside: z(1) = z0 + 1.5
+            assert!((y[0] - 1.5).abs() < 1e-5);
+            assert!((y[1] - 3.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn regularized_rows_match_scalar_jet_augmentation_bit_for_bit() {
+        // End-to-end acceptance: a batched quadrature-augmented solve must
+        // reproduce, per row and bit-for-bit (state, R_K, and stats), the
+        // scalar augmented solve built on the scalar ode_jet — over random
+        // per-row-conditioned dynamics, embedded tableaux, and orders.
+        Prop::new(25).run("regularized-equiv", |rng: &mut Pcg, case| {
+            let tb = tableau::by_name(EMBEDDED[case % EMBEDDED.len()]).unwrap();
+            let order = 1 + rng.below(4);
+            let b = 1 + rng.below(4);
+            let a: Vec<f64> = gen::vec_f64(rng, b, -1.2, 1.2);
+            let w: Vec<f64> = gen::vec_f64(rng, b, 0.5, 3.0);
+            let y0 = gen::vec_f32(rng, b, 1.0);
+            let opts = AdaptiveOpts {
+                rtol: 1e-5,
+                atol: 1e-7,
+                h_init: Some(0.1),
+                ..Default::default()
+            };
+
+            // z' = a_id · tanh(z) + w_id · sin(t), series-generic.
+            let f = SeriesFn::new(1, |ids: &[usize], z: &SeriesVec, t: &SeriesVec| {
+                let asel: Vec<f64> = ids.iter().map(|id| a[*id]).collect();
+                let wsel: Vec<f64> = ids.iter().map(|id| w[*id]).collect();
+                z.tanh().scale_rows(&asel).add(&t.sin_cos().0.scale_rows(&wsel))
+            });
+            let reg = RegularizedBatchDynamics::new(f, order);
+            let aug0 = reg.augment(&y0);
+            let batched = solve_adaptive_batch(reg, 0.0, 1.0, &aug0, &tb, &opts);
+
+            for r in 0..b {
+                let (ar, wr) = (a[r], w[r]);
+                let scalar_aug = |t: f32, y: &[f32], dy: &mut [f32]| {
+                    let jets = ode_jet(
+                        |z: &Series, ts: &Series| {
+                            z.tanh().scale(ar).add(&ts.sin_cos().0.scale(wr))
+                        },
+                        y[0] as f64,
+                        t as f64,
+                        order,
+                    );
+                    dy[0] = jets[0] as f32;
+                    let v = jets[order - 1];
+                    dy[1] = (v * v / 1.0) as f32;
+                };
+                let scalar = solve_adaptive(
+                    scalar_aug,
+                    0.0,
+                    1.0,
+                    &[y0[r], 0.0],
+                    &tb,
+                    &opts,
+                );
+                for i in 0..2 {
+                    assert_eq!(
+                        scalar.y[i].to_bits(),
+                        batched.row(r)[i].to_bits(),
+                        "{} K={order} row {r} y[{i}]",
+                        tb.name
+                    );
+                }
+                assert_stats_eq(
+                    &scalar.stats,
+                    &batched.stats[r],
+                    &format!("{} K={order} row {r}", tb.name),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn regularized_multi_dim_normalizes_by_dim() {
+        // n = 2 with identical decoupled columns: the integrand averages
+        // ‖d^K y‖² over dims (Appendix B), so R_K equals the 1-D value.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+        let make = |n: usize| {
+            SeriesFn::new(n, move |_ids: &[usize], z: &SeriesVec, _t: &SeriesVec| z.clone())
+        };
+        let reg1 = RegularizedBatchDynamics::new(make(1), 2);
+        let res1 = solve_adaptive_batch(reg1, 0.0, 1.0, &[0.7, 0.0], &tb, &opts);
+        let reg2 = RegularizedBatchDynamics::new(make(2), 2);
+        let res2 = solve_adaptive_batch(reg2, 0.0, 1.0, &[0.7, 0.7, 0.0], &tb, &opts);
+        let (_, q1) = split_quadrature(&res1);
+        let (_, q2) = split_quadrature(&res2);
+        assert!(
+            (q1[0] - q2[0]).abs() < 1e-4 * q1[0].abs().max(1.0),
+            "{} vs {}",
+            q1[0],
+            q2[0]
+        );
     }
 }

@@ -3,9 +3,12 @@
 //! The number of function evaluations (NFE) an *adaptive* solver spends on
 //! learned dynamics is TayNODE's headline metric; this module provides the
 //! fixed-grid and adaptive drivers, the PI step-size controller, NFE
-//! accounting, and grid-output solving for trajectory models.  Dynamics are
-//! arbitrary `FnMut(t, y, dy)` — in production they invoke a PJRT-compiled
-//! XLA executable (`crate::runtime`), in tests they are native Rust closures.
+//! accounting, grid-output solving for trajectory models, the batched
+//! multi-trajectory engine ([`batch`]), and the quadrature adapter that
+//! integrates the paper's `R_K` regularizer over batched Taylor jets
+//! ([`batch::RegularizedBatchDynamics`]).  Dynamics are arbitrary
+//! `FnMut(t, y, dy)` — in production they invoke a PJRT-compiled XLA
+//! executable (`crate::runtime`), in tests they are native Rust closures.
 
 pub mod adaptive;
 pub mod batch;
@@ -15,8 +18,8 @@ pub mod tableau;
 
 pub use adaptive::{solve_adaptive, solve_to_times, AdaptiveOpts, SolveStats};
 pub use batch::{
-    solve_adaptive_batch, solve_fixed_batch, solve_to_times_batch, BatchDynamics, BatchFn,
-    BatchResult, Rowwise,
+    augment_quadrature, solve_adaptive_batch, solve_fixed_batch, solve_to_times_batch,
+    split_quadrature, BatchDynamics, BatchFn, BatchResult, RegularizedBatchDynamics, Rowwise,
 };
 pub use fixed::{solve_fixed, solve_fixed_traj};
 pub use tableau::Tableau;
@@ -95,9 +98,14 @@ mod tests {
             // f32 window where the asymptotic rate is observable, so we
             // assert near-roundoff accuracy instead.
             if tb.order >= 5 {
-                let (y, _) =
-                    solve_fixed(|_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
-                                0.0, 1.0, &[1.0f32], 4, &tb);
+                let (y, _) = solve_fixed(
+                    |_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+                    0.0,
+                    1.0,
+                    &[1.0f32],
+                    4,
+                    &tb,
+                );
                 let err = ((y[0] as f64) - std::f64::consts::E).abs();
                 assert!(err < 5e-6, "{name}: err {err}");
                 continue;
@@ -109,9 +117,14 @@ mod tests {
             };
             let mut errs = vec![];
             for steps in pair {
-                let (y, _) =
-                    solve_fixed(|_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
-                                0.0, 1.0, &[1.0f32], steps, &tb);
+                let (y, _) = solve_fixed(
+                    |_t, y: &[f32], dy: &mut [f32]| dy[0] = y[0],
+                    0.0,
+                    1.0,
+                    &[1.0f32],
+                    steps,
+                    &tb,
+                );
                 errs.push(((y[0] as f64) - std::f64::consts::E).abs());
             }
             let rate = (errs[0] / errs[1]).log2();

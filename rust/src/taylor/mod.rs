@@ -1,10 +1,33 @@
 //! Truncated Taylor-series arithmetic and ODE-solution jets in pure Rust —
 //! the native counterpart of `python/compile/taylor.py` (paper §4 / App. A).
 //!
-//! Used by: the Fig 2 polynomial-order experiments, the toy-dynamics
-//! experiments that run without XLA, and property tests cross-checking the
-//! propagation rules against the Python implementation's semantics.
+//! Two tiers share one set of propagation rules:
+//!
+//! * [`Series`] / [`ode_jet`] — one scalar trajectory, the reference
+//!   implementation of Algorithm 1;
+//! * [`SeriesVec`] / [`ode_jet_batch`] ([mod@vec]) — the same rules applied
+//!   elementwise over an SoA `[B, n]` coefficient matrix, so higher-order
+//!   trajectory derivatives (and with them the paper's `R_K` regularizer)
+//!   ride the batched solver engine: one series evaluation per jet order
+//!   for a whole active set, per-row bit-identical to the scalar jet.
+//!
+//! Used by: the Fig 2 polynomial-order experiments, native `R_K`
+//! measurement (`solvers::batch::RegularizedBatchDynamics`), the
+//! toy-dynamics experiments that run without XLA, and property tests
+//! cross-checking the propagation rules against the Python implementation.
 //! Coefficients are *normalized Taylor coefficients* c[i] = x_i / i!.
+//!
+//! ```
+//! use taynode::taylor::{ode_jet, Series};
+//!
+//! // dz/dt = z through (z0, t0) = (2, 0): every derivative equals z0.
+//! let jet = ode_jet(|z: &Series, _t: &Series| z.clone(), 2.0, 0.0, 3);
+//! assert_eq!(jet, vec![2.0; 3]);
+//! ```
+
+pub mod vec;
+
+pub use vec::{ode_jet_batch, BatchSeriesDynamics, SeriesFn, SeriesVec};
 
 /// A scalar truncated Taylor polynomial sum_i c[i] t^i.
 #[derive(Clone, Debug, PartialEq)]
@@ -199,9 +222,11 @@ pub fn factorial(k: usize) -> f64 {
 
 /// Derivative coefficients [x_1, ..., x_order] of the solution of the scalar
 /// ODE dz/dt = f(z, t) through (z0, t0) — Algorithm 1, with `f` evaluated on
-/// `Series` arguments.
-pub fn ode_jet<F: Fn(&Series, &Series) -> Series>(
-    f: F,
+/// `Series` arguments.  `f` may be stateful (`FnMut`) so instrumented
+/// dynamics can count their series evaluations, exactly like the solver
+/// drivers count NFE.
+pub fn ode_jet<F: FnMut(&Series, &Series) -> Series>(
+    mut f: F,
     z0: f64,
     t0: f64,
     order: usize,

@@ -1,0 +1,744 @@
+//! Batched truncated Taylor series over an SoA coefficient matrix — the
+//! `[B, n]` counterpart of the scalar [`Series`](super::Series), and the
+//! substrate for native batched `R_K` regularization (paper §3–4).
+//!
+//! A [`SeriesVec`] holds one `[rows, cols]` matrix per Taylor coefficient
+//! and applies **exactly the scalar propagation rules elementwise, in the
+//! scalar operation order**, so every element of a batched series is
+//! bit-identical to the scalar `Series` computation on that element
+//! (property-tested below).  [`ode_jet_batch`] then lifts a
+//! [`BatchSeriesDynamics`] vector field recursively (Algorithm 1) to
+//! produce the solution jets x₁..x_K for a whole active set in one sweep —
+//! one series evaluation per jet order for the entire batch, instead of
+//! one per trajectory per order.
+//!
+//! ```
+//! use taynode::taylor::{ode_jet_batch, SeriesFn, SeriesVec};
+//!
+//! // Two rows of dz/dt = z: every derivative of the solution equals z0.
+//! let mut f = SeriesFn::new(1, |_ids: &[usize], z: &SeriesVec, _t: &SeriesVec| z.clone());
+//! let jets = ode_jet_batch(&mut f, &[0, 1], &[2.0, 3.0], &[0.0, 0.0], 3);
+//! assert_eq!(jets.len(), 3);
+//! for x in &jets {
+//!     assert_eq!(x[0], 2.0);
+//!     assert_eq!(x[1], 3.0);
+//! }
+//! ```
+
+use super::factorial;
+
+/// A batch of truncated Taylor polynomials, stored structure-of-arrays:
+/// `c[k]` is the k-th normalized coefficient for every element of a
+/// row-major `[rows, cols]` matrix.  Rows are trajectories, columns are
+/// state dimensions; elementwise ops share one coefficient allocation per
+/// order for the whole batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeriesVec {
+    rows: usize,
+    cols: usize,
+    /// `c[k]` is row-major `[rows, cols]`; `c.len()` is order + 1.
+    c: Vec<Vec<f64>>,
+}
+
+impl SeriesVec {
+    /// Build from explicit coefficient matrices (each `rows * cols` long).
+    pub fn new(c: Vec<Vec<f64>>, rows: usize, cols: usize) -> SeriesVec {
+        assert!(!c.is_empty(), "SeriesVec needs at least the order-0 coefficient");
+        for (k, ck) in c.iter().enumerate() {
+            assert_eq!(ck.len(), rows * cols, "coefficient {k} length vs {rows}x{cols}");
+        }
+        SeriesVec { rows, cols, c }
+    }
+
+    /// A constant batch: order-0 coefficients from `vals`, the rest zero.
+    pub fn constant(vals: &[f64], rows: usize, cols: usize, order: usize) -> SeriesVec {
+        assert_eq!(vals.len(), rows * cols, "constant values vs {rows}x{cols}");
+        let mut c = vec![vec![0.0; rows * cols]; order + 1];
+        c[0].copy_from_slice(vals);
+        SeriesVec { rows, cols, c }
+    }
+
+    /// A uniform constant batch (every element `x`).
+    pub fn fill(x: f64, rows: usize, cols: usize, order: usize) -> SeriesVec {
+        let mut c = vec![vec![0.0; rows * cols]; order + 1];
+        for v in c[0].iter_mut() {
+            *v = x;
+        }
+        SeriesVec { rows, cols, c }
+    }
+
+    /// The independent variable per row: `t0[r] + 1·t`, as a single-column
+    /// batch (broadcast against `[rows, n]` states with
+    /// [`broadcast_cols`](SeriesVec::broadcast_cols)).
+    pub fn time(t0: &[f64], order: usize) -> SeriesVec {
+        let rows = t0.len();
+        let mut c = vec![vec![0.0; rows]; order + 1];
+        c[0].copy_from_slice(t0);
+        if order >= 1 {
+            for v in c[1].iter_mut() {
+                *v = 1.0;
+            }
+        }
+        SeriesVec { rows, cols: 1, c }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn order(&self) -> usize {
+        self.c.len() - 1
+    }
+
+    /// The k-th normalized coefficient matrix, row-major `[rows, cols]`.
+    pub fn coeff(&self, k: usize) -> &[f64] {
+        &self.c[k]
+    }
+
+    /// Unnormalized derivative matrix d^k x/dt^k = k! c[k].
+    pub fn derivative(&self, k: usize) -> Vec<f64> {
+        let f = factorial(k);
+        self.c[k].iter().map(|v| v * f).collect()
+    }
+
+    fn assert_same_shape(&self, o: &SeriesVec, op: &str) {
+        assert_eq!(self.rows, o.rows, "{op}: row mismatch");
+        assert_eq!(self.cols, o.cols, "{op}: column mismatch");
+        assert_eq!(self.c.len(), o.c.len(), "{op}: order mismatch");
+    }
+
+    fn elems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Replicate a single-column batch across `cols` columns — how per-row
+    /// time series meet `[rows, n]` states in elementwise vector fields.
+    pub fn broadcast_cols(&self, cols: usize) -> SeriesVec {
+        assert_eq!(self.cols, 1, "broadcast_cols needs a single-column series");
+        assert!(cols > 0);
+        let mut c = Vec::with_capacity(self.c.len());
+        for ck in &self.c {
+            let mut out = Vec::with_capacity(self.rows * cols);
+            for r in 0..self.rows {
+                for _ in 0..cols {
+                    out.push(ck[r]);
+                }
+            }
+            c.push(out);
+        }
+        SeriesVec { rows: self.rows, cols, c }
+    }
+
+    pub fn add(&self, o: &SeriesVec) -> SeriesVec {
+        self.assert_same_shape(o, "add");
+        let c = self
+            .c
+            .iter()
+            .zip(&o.c)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x + y).collect())
+            .collect();
+        SeriesVec { rows: self.rows, cols: self.cols, c }
+    }
+
+    pub fn sub(&self, o: &SeriesVec) -> SeriesVec {
+        self.assert_same_shape(o, "sub");
+        let c = self
+            .c
+            .iter()
+            .zip(&o.c)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x - y).collect())
+            .collect();
+        SeriesVec { rows: self.rows, cols: self.cols, c }
+    }
+
+    pub fn scale(&self, a: f64) -> SeriesVec {
+        let c = self
+            .c
+            .iter()
+            .map(|ck| ck.iter().map(|x| a * x).collect())
+            .collect();
+        SeriesVec { rows: self.rows, cols: self.cols, c }
+    }
+
+    /// Per-row scaling: every element of row r (all columns, all orders) is
+    /// multiplied by `a[r]` — how per-trajectory conditioning (per-seed
+    /// coefficients, per-request parameters) enters a batched series.
+    pub fn scale_rows(&self, a: &[f64]) -> SeriesVec {
+        assert_eq!(a.len(), self.rows, "scale_rows length vs rows");
+        let mut c = Vec::with_capacity(self.c.len());
+        for ck in &self.c {
+            let mut out = Vec::with_capacity(self.elems());
+            for r in 0..self.rows {
+                for j in 0..self.cols {
+                    out.push(a[r] * ck[r * self.cols + j]);
+                }
+            }
+            c.push(out);
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c }
+    }
+
+    /// Add a scalar to every element's constant coefficient.
+    pub fn add_scalar(&self, a: f64) -> SeriesVec {
+        let mut c = self.c.clone();
+        for v in c[0].iter_mut() {
+            *v += a;
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c }
+    }
+
+    /// Truncated Cauchy product, elementwise (Table 1 row 2); per-element
+    /// accumulation order matches scalar `Series::mul` exactly.
+    pub fn mul(&self, o: &SeriesVec) -> SeriesVec {
+        self.assert_same_shape(o, "mul");
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut out = vec![vec![0.0; m]; k1];
+        for k in 0..k1 {
+            for j in 0..=k {
+                for e in 0..m {
+                    out[k][e] += self.c[j][e] * o.c[k - j][e];
+                }
+            }
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: out }
+    }
+
+    /// Division, elementwise (Table 1 row 3).
+    pub fn div(&self, o: &SeriesVec) -> SeriesVec {
+        self.assert_same_shape(o, "div");
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut out = vec![vec![0.0; m]; k1];
+        for k in 0..k1 {
+            for e in 0..m {
+                let mut acc = self.c[k][e];
+                for j in 0..k {
+                    acc -= out[j][e] * o.c[k - j][e];
+                }
+                out[k][e] = acc / o.c[0][e];
+            }
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: out }
+    }
+
+    pub fn exp(&self) -> SeriesVec {
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        y.push(self.c[0].iter().map(|v| v.exp()).collect());
+        for k in 1..k1 {
+            let mut out = vec![0.0; m];
+            for e in 0..m {
+                let mut acc = 0.0;
+                for j in 1..=k {
+                    acc += j as f64 * self.c[j][e] * y[k - j][e];
+                }
+                out[e] = acc / k as f64;
+            }
+            y.push(out);
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: y }
+    }
+
+    pub fn ln(&self) -> SeriesVec {
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        y.push(self.c[0].iter().map(|v| v.ln()).collect());
+        for k in 1..k1 {
+            let mut out = vec![0.0; m];
+            for e in 0..m {
+                let mut acc = k as f64 * self.c[k][e];
+                for j in 1..k {
+                    acc -= (k - j) as f64 * y[k - j][e] * self.c[j][e];
+                }
+                out[e] = acc / (k as f64 * self.c[0][e]);
+            }
+            y.push(out);
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: y }
+    }
+
+    pub fn sqrt(&self) -> SeriesVec {
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        y.push(self.c[0].iter().map(|v| v.sqrt()).collect());
+        for k in 1..k1 {
+            let mut out = vec![0.0; m];
+            for e in 0..m {
+                let mut acc = self.c[k][e];
+                for j in 1..k {
+                    acc -= y[j][e] * y[k - j][e];
+                }
+                out[e] = acc / (2.0 * y[0][e]);
+            }
+            y.push(out);
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: y }
+    }
+
+    pub fn sin_cos(&self) -> (SeriesVec, SeriesVec) {
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        let mut c: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        s.push(self.c[0].iter().map(|v| v.sin()).collect());
+        c.push(self.c[0].iter().map(|v| v.cos()).collect());
+        for k in 1..k1 {
+            let mut sk = vec![0.0; m];
+            let mut ck = vec![0.0; m];
+            for e in 0..m {
+                let mut sa = 0.0;
+                let mut ca = 0.0;
+                for j in 1..=k {
+                    let zj = j as f64 * self.c[j][e];
+                    sa += zj * c[k - j][e];
+                    ca += zj * s[k - j][e];
+                }
+                sk[e] = sa / k as f64;
+                ck[e] = -ca / k as f64;
+            }
+            s.push(sk);
+            c.push(ck);
+        }
+        (
+            SeriesVec { rows: self.rows, cols: self.cols, c: s },
+            SeriesVec { rows: self.rows, cols: self.cols, c },
+        )
+    }
+
+    /// tanh via the ODE s' = (1 - s²) z', elementwise.
+    pub fn tanh(&self) -> SeriesVec {
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        s.push(self.c[0].iter().map(|v| v.tanh()).collect());
+        for k in 1..k1 {
+            let mut out = vec![0.0; m];
+            for e in 0..m {
+                let mut acc = 0.0;
+                for j in 1..=k {
+                    let mj = k - j;
+                    // u[mj] = delta_{mj,0} - (s*s)[mj], s[0..=mj] known
+                    let mut ssm = 0.0;
+                    for i in 0..=mj {
+                        ssm += s[i][e] * s[mj - i][e];
+                    }
+                    let u = if mj == 0 { 1.0 - ssm } else { -ssm };
+                    acc += j as f64 * self.c[j][e] * u;
+                }
+                out[e] = acc / k as f64;
+            }
+            s.push(out);
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: s }
+    }
+
+    pub fn powi(&self, n: usize) -> SeriesVec {
+        let mut out = SeriesVec::fill(1.0, self.rows, self.cols, self.order());
+        for _ in 0..n {
+            out = out.mul(self);
+        }
+        out
+    }
+
+    /// Evaluate every element's polynomial at offset t (Horner).
+    pub fn eval(&self, t: f64) -> Vec<f64> {
+        let m = self.elems();
+        let mut acc = vec![0.0; m];
+        for ck in self.c.iter().rev() {
+            for e in 0..m {
+                acc[e] = acc[e] * t + ck[e];
+            }
+        }
+        acc
+    }
+}
+
+/// A vector field over a batch of trajectories, evaluated on truncated
+/// Taylor series: the series-lifted counterpart of
+/// [`BatchDynamics`](crate::solvers::batch::BatchDynamics).  `z` is a
+/// `[rows, dim()]` series batch, `t` the per-row time series (`[rows, 1]`,
+/// broadcast as needed); `ids[r]` is the stable trajectory index of row r,
+/// for per-trajectory conditioning under active-set compaction.
+pub trait BatchSeriesDynamics {
+    /// Per-trajectory state dimension n (must be positive).
+    fn dim(&self) -> usize;
+    /// Evaluate dz/dt = f(z, t) for every row, on series arguments.
+    fn eval(&mut self, ids: &[usize], z: &SeriesVec, t: &SeriesVec) -> SeriesVec;
+}
+
+/// A `&mut` reference forwards, so callers can lend instrumented dynamics
+/// (eval counters, staging buffers) to a jet sweep and keep ownership.
+impl<T: BatchSeriesDynamics + ?Sized> BatchSeriesDynamics for &mut T {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn eval(&mut self, ids: &[usize], z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+        (**self).eval(ids, z, t)
+    }
+}
+
+/// Adapter: a series-generic closure `(ids, z, t) -> dz` plus its row
+/// dimension (mirrors [`BatchFn`](crate::solvers::batch::BatchFn)).
+pub struct SeriesFn<F> {
+    f: F,
+    n: usize,
+}
+
+impl<F: FnMut(&[usize], &SeriesVec, &SeriesVec) -> SeriesVec> SeriesFn<F> {
+    pub fn new(n: usize, f: F) -> SeriesFn<F> {
+        assert!(n > 0, "SeriesFn: state dimension must be positive");
+        SeriesFn { f, n }
+    }
+}
+
+impl<F: FnMut(&[usize], &SeriesVec, &SeriesVec) -> SeriesVec> BatchSeriesDynamics for SeriesFn<F> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, ids: &[usize], z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+        (self.f)(ids, z, t)
+    }
+}
+
+/// Derivative coefficient matrices `[x_1, ..., x_order]` (each row-major
+/// `[rows, n]`) of the solutions of dz/dt = f(z, t) through per-row
+/// `(z0[r], t0[r])` — Algorithm 1 lifted to the whole batch.  One call of
+/// `f` per jet order covers every trajectory; each row's result is
+/// bit-identical to the scalar [`ode_jet`](super::ode_jet) on that row
+/// (the elementwise propagation rules share the scalar operation order).
+pub fn ode_jet_batch<F: BatchSeriesDynamics + ?Sized>(
+    f: &mut F,
+    ids: &[usize],
+    z0: &[f64],
+    t0: &[f64],
+    order: usize,
+) -> Vec<Vec<f64>> {
+    let n = f.dim();
+    let rows = t0.len();
+    assert!(n > 0, "ode_jet_batch: dim() must be positive");
+    assert!(order >= 1, "ode_jet_batch: order must be >= 1");
+    assert_eq!(z0.len(), rows * n, "ode_jet_batch: state length vs rows * dim");
+    assert_eq!(ids.len(), rows, "ode_jet_batch: ids length vs rows");
+    let mut x: Vec<Vec<f64>> = Vec::with_capacity(order);
+    // x_1 = f(z0, t0)
+    let f0 = f.eval(
+        ids,
+        &SeriesVec::constant(z0, rows, n, 0),
+        &SeriesVec::time(t0, 0),
+    );
+    x.push(f0.coeff(0).to_vec());
+    for k in 1..order {
+        // The k-truncated solution path: [z0, x_1/1!, ..., x_k/k!].
+        let mut zc: Vec<Vec<f64>> = Vec::with_capacity(k + 1);
+        zc.push(z0.to_vec());
+        for (i, xi) in x.iter().enumerate() {
+            let fct = factorial(i + 1);
+            zc.push(xi.iter().map(|v| v / fct).collect());
+        }
+        let zs = SeriesVec::new(zc, rows, n);
+        let ts = SeriesVec::time(t0, k);
+        let y = f.eval(ids, &zs, &ts);
+        // dz/dt = y  =>  x_{k+1} = k! * y_[k]
+        let fct = factorial(k);
+        x.push(y.coeff(k).iter().map(|v| v * fct).collect());
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ode_jet, Series};
+    use super::*;
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    /// Extract one element of a batched series as a scalar Series.
+    fn elem(v: &SeriesVec, e: usize) -> Series {
+        Series::new(v.c.iter().map(|ck| ck[e]).collect())
+    }
+
+    fn random_vec(
+        rng: &mut Pcg,
+        rows: usize,
+        cols: usize,
+        ord: usize,
+        lo: f64,
+        hi: f64,
+    ) -> SeriesVec {
+        let c = (0..=ord)
+            .map(|_| gen::vec_f64(rng, rows * cols, lo, hi))
+            .collect();
+        SeriesVec::new(c, rows, cols)
+    }
+
+    fn assert_bits_eq(a: &Series, v: &SeriesVec, e: usize, ctx: &str) {
+        for (k, x) in a.c.iter().enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                v.coeff(k)[e].to_bits(),
+                "{ctx}: coeff {k} elem {e}: {x} vs {}",
+                v.coeff(k)[e]
+            );
+        }
+    }
+
+    #[test]
+    fn elementwise_ops_match_scalar_series_bit_for_bit() {
+        // Every element of every SeriesVec op must be the scalar Series op
+        // on that element, bit-for-bit — the invariant ode_jet_batch's
+        // per-row equivalence is built on.
+        Prop::new(60).run("seriesvec-elementwise", |rng: &mut Pcg, _| {
+            let rows = 1 + rng.below(4);
+            let cols = 1 + rng.below(3);
+            let ord = 1 + rng.below(5);
+            let a = random_vec(rng, rows, cols, ord, -1.5, 1.5);
+            let mut b = random_vec(rng, rows, cols, ord, -1.5, 1.5);
+            // keep divisors/sqrt/ln arguments away from 0
+            for v in b.c[0].iter_mut() {
+                *v = v.signum() * (v.abs() + 0.5);
+            }
+            let bpos = {
+                let mut p = b.clone();
+                for v in p.c[0].iter_mut() {
+                    *v = v.abs();
+                }
+                p
+            };
+            let m = rows * cols;
+            for e in 0..m {
+                let ae = elem(&a, e);
+                let be = elem(&b, e);
+                assert_bits_eq(&ae.add(&be), &a.add(&b), e, "add");
+                assert_bits_eq(&ae.sub(&be), &a.sub(&b), e, "sub");
+                assert_bits_eq(&ae.mul(&be), &a.mul(&b), e, "mul");
+                assert_bits_eq(&ae.div(&be), &a.div(&b), e, "div");
+                assert_bits_eq(&ae.scale(0.7), &a.scale(0.7), e, "scale");
+                assert_bits_eq(&ae.add_scalar(0.3), &a.add_scalar(0.3), e, "add_scalar");
+                assert_bits_eq(&ae.exp(), &a.exp(), e, "exp");
+                assert_bits_eq(&ae.tanh(), &a.tanh(), e, "tanh");
+                assert_bits_eq(&elem(&bpos, e).ln(), &bpos.ln(), e, "ln");
+                assert_bits_eq(&elem(&bpos, e).sqrt(), &bpos.sqrt(), e, "sqrt");
+                let (ss, cs) = ae.sin_cos();
+                let (sv, cv) = a.sin_cos();
+                assert_bits_eq(&ss, &sv, e, "sin");
+                assert_bits_eq(&cs, &cv, e, "cos");
+                assert_bits_eq(&ae.powi(3), &a.powi(3), e, "powi");
+            }
+        });
+    }
+
+    /// A random series-generic expression in (z, t): evaluated on scalar
+    /// Series and on SeriesVec with the identical operation tree, so the two
+    /// paths must agree bit-for-bit.
+    enum Expr {
+        Z,
+        T,
+        Konst(f64),
+        Scale(f64, Box<Expr>),
+        Add(Box<Expr>, Box<Expr>),
+        Mul(Box<Expr>, Box<Expr>),
+        Sin(Box<Expr>),
+        Tanh(Box<Expr>),
+    }
+
+    impl Expr {
+        fn random(rng: &mut Pcg, depth: usize) -> Expr {
+            if depth == 0 {
+                return match rng.below(3) {
+                    0 => Expr::Z,
+                    1 => Expr::T,
+                    _ => Expr::Konst(rng.range(-1.0, 1.0) as f64),
+                };
+            }
+            match rng.below(6) {
+                0 => Expr::Z,
+                1 => Expr::T,
+                2 => Expr::Scale(
+                    rng.range(-1.0, 1.0) as f64,
+                    Box::new(Expr::random(rng, depth - 1)),
+                ),
+                3 => Expr::Add(
+                    Box::new(Expr::random(rng, depth - 1)),
+                    Box::new(Expr::random(rng, depth - 1)),
+                ),
+                4 => Expr::Mul(
+                    Box::new(Expr::random(rng, depth - 1)),
+                    Box::new(Expr::random(rng, depth - 1)),
+                ),
+                _ => {
+                    if rng.below(2) == 0 {
+                        Expr::Sin(Box::new(Expr::random(rng, depth - 1)))
+                    } else {
+                        Expr::Tanh(Box::new(Expr::random(rng, depth - 1)))
+                    }
+                }
+            }
+        }
+
+        fn eval_s(&self, z: &Series, t: &Series) -> Series {
+            match self {
+                Expr::Z => z.clone(),
+                Expr::T => t.clone(),
+                Expr::Konst(v) => Series::constant(*v, z.order()),
+                Expr::Scale(a, e) => e.eval_s(z, t).scale(*a),
+                Expr::Add(a, b) => a.eval_s(z, t).add(&b.eval_s(z, t)),
+                Expr::Mul(a, b) => a.eval_s(z, t).mul(&b.eval_s(z, t)),
+                Expr::Sin(e) => e.eval_s(z, t).sin_cos().0,
+                Expr::Tanh(e) => e.eval_s(z, t).tanh(),
+            }
+        }
+
+        fn eval_v(&self, z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+            match self {
+                Expr::Z => z.clone(),
+                Expr::T => t.clone(),
+                Expr::Konst(v) => SeriesVec::fill(*v, z.rows(), z.cols(), z.order()),
+                Expr::Scale(a, e) => e.eval_v(z, t).scale(*a),
+                Expr::Add(a, b) => a.eval_v(z, t).add(&b.eval_v(z, t)),
+                Expr::Mul(a, b) => a.eval_v(z, t).mul(&b.eval_v(z, t)),
+                Expr::Sin(e) => e.eval_v(z, t).sin_cos().0,
+                Expr::Tanh(e) => e.eval_v(z, t).tanh(),
+            }
+        }
+    }
+
+    #[test]
+    fn ode_jet_batch_rows_match_scalar_jets_property() {
+        // The acceptance property: at any B, every row of ode_jet_batch is
+        // bit-for-bit the scalar ode_jet of that row, over random dynamics
+        // (expression trees), orders, z0, and t0.
+        Prop::new(50).run("jet-batch-equiv", |rng: &mut Pcg, _| {
+            let order = 1 + rng.below(5);
+            let b = 1 + rng.below(5);
+            let expr = Expr::random(rng, 3);
+            let z0 = gen::vec_f64(rng, b, -1.2, 1.2);
+            let t0 = gen::vec_f64(rng, b, -1.0, 1.0);
+            let ids: Vec<usize> = (0..b).collect();
+            let mut fv = SeriesFn::new(1, |_ids: &[usize], z: &SeriesVec, t: &SeriesVec| {
+                expr.eval_v(z, t)
+            });
+            let jets = ode_jet_batch(&mut fv, &ids, &z0, &t0, order);
+            assert_eq!(jets.len(), order);
+            for r in 0..b {
+                let scalar = ode_jet(|z, t| expr.eval_s(z, t), z0[r], t0[r], order);
+                for (k, sk) in scalar.iter().enumerate() {
+                    assert_eq!(
+                        sk.to_bits(),
+                        jets[k][r].to_bits(),
+                        "row {r} order {k}: {sk} vs {}",
+                        jets[k][r]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ode_jet_batch_multi_dim_matches_scalar_per_element() {
+        // Elementwise vector field dz_i/dt = z_i · sin(t) on [B, n]: each
+        // element is an independent scalar ODE, so every (row, col) must
+        // reproduce the scalar jet bit-for-bit (time enters via broadcast).
+        let (b, n, order) = (3usize, 2usize, 5usize);
+        let z0 = [0.4f64, -1.1, 0.9, 0.2, -0.6, 1.3];
+        let t0 = [0.0f64, 0.7, -0.3];
+        let ids: Vec<usize> = (0..b).collect();
+        let mut f = SeriesFn::new(n, |_ids: &[usize], z: &SeriesVec, t: &SeriesVec| {
+            z.mul(&t.sin_cos().0.broadcast_cols(z.cols()))
+        });
+        let jets = ode_jet_batch(&mut f, &ids, &z0, &t0, order);
+        for r in 0..b {
+            for i in 0..n {
+                let scalar = ode_jet(
+                    |z, t| z.mul(&t.sin_cos().0),
+                    z0[r * n + i],
+                    t0[r],
+                    order,
+                );
+                for (k, sk) in scalar.iter().enumerate() {
+                    assert_eq!(
+                        sk.to_bits(),
+                        jets[k][r * n + i].to_bits(),
+                        "row {r} col {i} order {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ode_jet_batch_per_row_conditioning_keys_on_ids() {
+        // dz/dt = a_id · z: d^k z = a^k z0.  Conditioning must follow the
+        // engine-provided ids, not the row position.
+        let a = [0.5f64, 2.0, -1.5];
+        let z0 = [1.0f64, 1.0];
+        let t0 = [0.0f64, 0.0];
+        // Rows carry ids 2 and 0 (as after compaction reordered the set).
+        let ids = [2usize, 0];
+        let mut f = SeriesFn::new(1, |ids: &[usize], z: &SeriesVec, _t: &SeriesVec| {
+            let sel: Vec<f64> = ids.iter().map(|id| a[*id]).collect();
+            z.scale_rows(&sel)
+        });
+        let jets = ode_jet_batch(&mut f, &ids, &z0, &t0, 4);
+        for (k, xk) in jets.iter().enumerate() {
+            let want0 = a[2].powi(k as i32 + 1);
+            let want1 = a[0].powi(k as i32 + 1);
+            assert!((xk[0] - want0).abs() < 1e-12, "k={k}: {} vs {want0}", xk[0]);
+            assert!((xk[1] - want1).abs() < 1e-12, "k={k}: {} vs {want1}", xk[1]);
+        }
+    }
+
+    #[test]
+    fn polynomial_rows_have_vanishing_high_orders() {
+        // dz/dt = 3t² per row: derivative matrices above order 3 vanish —
+        // the batched form of the property Fig 2 is built on.
+        let t0 = [0.5f64, -0.25];
+        let z0 = [0.0f64, 1.0];
+        let ids = [0usize, 1];
+        let mut f = SeriesFn::new(1, |_ids: &[usize], _z: &SeriesVec, t: &SeriesVec| {
+            t.mul(t).scale(3.0)
+        });
+        let jets = ode_jet_batch(&mut f, &ids, &z0, &t0, 6);
+        for (r, tr) in t0.iter().enumerate() {
+            assert!((jets[0][r] - 3.0 * tr * tr).abs() < 1e-12);
+            assert!((jets[1][r] - 6.0 * tr).abs() < 1e-12);
+            assert!((jets[2][r] - 6.0).abs() < 1e-12);
+            for xk in &jets[3..] {
+                assert!(xk[r].abs() < 1e-12, "row {r}: {:?}", xk);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_and_eval_helpers() {
+        let t = SeriesVec::time(&[0.5, -1.0], 2);
+        let wide = t.broadcast_cols(3);
+        assert_eq!(wide.rows(), 2);
+        assert_eq!(wide.cols(), 3);
+        assert_eq!(wide.coeff(0), &[0.5, 0.5, 0.5, -1.0, -1.0, -1.0]);
+        // eval at dt: t0 + dt per element
+        let vals = wide.eval(0.25);
+        for (e, v) in vals.iter().enumerate() {
+            let want = if e < 3 { 0.75 } else { -0.75 };
+            assert!((v - want).abs() < 1e-15);
+        }
+        // derivative matrices unnormalize with k!
+        let s = SeriesVec::new(
+            vec![vec![1.0], vec![1.0], vec![0.5], vec![1.0 / 6.0]],
+            1,
+            1,
+        );
+        for k in 0..4 {
+            assert!((s.derivative(k)[0] - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -19,8 +19,12 @@ impl Tensor {
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
-        assert_eq!(shape.iter().product::<usize>(), data.len(),
-                   "shape {shape:?} vs len {}", data.len());
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs len {}",
+            data.len()
+        );
         Tensor { shape: shape.to_vec(), data }
     }
 

@@ -106,8 +106,7 @@ mod tests {
         // note: a bare boolean flag must not be followed by a positional —
         // `--verbose extra` would bind "extra" as its value (documented
         // greedy-value semantics); positionals go first or use --flag=true.
-        let a = Args::parse(&v(&["train", "extra", "--lam", "0.1",
-                                 "--steps=8", "--verbose"]));
+        let a = Args::parse(&v(&["train", "extra", "--lam", "0.1", "--steps=8", "--verbose"]));
         assert_eq!(a.pos(0), Some("train"));
         assert_eq!(a.pos(1), Some("extra"));
         assert_eq!(a.f32_or("lam", 0.0).unwrap(), 0.1);
