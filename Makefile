@@ -5,3 +5,10 @@
 .PHONY: artifacts
 artifacts:
 	cd python && python compile/aot.py --out ../artifacts
+
+# Native training demo (no artifacts, no pjrt): trains the toy model with
+# the discrete adjoint at λ = 0 and λ = 1 and prints the adaptive-NFE
+# comparison.  CI runs this so the training path can't silently rot.
+.PHONY: train-demo
+train-demo:
+	cargo run --release --example train_native

@@ -1,0 +1,74 @@
+//! §Perf: the native discrete-adjoint training step.
+//!
+//! Reports the forward (recorded fixed-grid solve of the quadrature-
+//! augmented system) and the full train step (forward + per-stage tape
+//! VJPs + Adam) separately, at two model shapes: the 1-D toy and a
+//! projected-MNIST-sized state.  The adjoint/forward overhead (full step
+//! minus its forward half, over the forward) is the cost of
+//! reverse-over-Taylor on the tape — the number to watch when optimizing
+//! the tape (node pooling, SIMD columns, fewer zero-coefficient nodes).
+//!
+//! Correctness is asserted before anything is timed: adjoint gradients are
+//! finite and nonzero (their FD equivalence is property-tested in
+//! `coordinator::train_native`).
+
+use taynode::coordinator::train_native::NativeTrainer;
+use taynode::nn::Mlp;
+use taynode::solvers::tableau;
+use taynode::util::bench::{report, time_fn};
+use taynode::util::rng::Pcg;
+
+fn batch(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg::new(seed);
+    let x0: Vec<f32> = (0..n * dim).map(|_| rng.range(-1.2, 1.2)).collect();
+    let targets = x0.iter().map(|x| x + 0.3 * x * x * x).collect();
+    (x0, targets)
+}
+
+fn bench_shape(name: &str, dim: usize, hidden: &[usize], b: usize, order: usize) {
+    let (x0, targets) = batch(b, dim, 7);
+    let make = || {
+        let mlp = Mlp::new(dim, hidden, true, 42);
+        NativeTrainer::new(mlp, None, order, 0.1, 8, tableau::rk4(), 0.01)
+    };
+
+    // Honesty gate: the step must produce real gradients.
+    {
+        let mut tr = make();
+        let (m, grads) = tr.mse_grads(&x0, &targets);
+        assert!(m.loss.is_finite(), "{name}: loss not finite");
+        assert!(
+            grads.iter().all(|g| g.is_finite()),
+            "{name}: non-finite gradient"
+        );
+        assert!(
+            grads.iter().any(|g| g.abs() > 1e-10),
+            "{name}: gradients all zero"
+        );
+    }
+
+    let mut tr = make();
+    let fwd = time_fn(2, 8, || {
+        std::hint::black_box(tr.forward_record(&x0));
+    });
+    report(&format!("{name}: forward record (grid)"), &fwd);
+    let mut tr = make();
+    let step = time_fn(2, 8, || {
+        std::hint::black_box(tr.step_mse(&x0, &targets));
+    });
+    report(&format!("{name}: full train step (fwd+adjoint)"), &step);
+    // The adjoint's own cost relative to one forward (the full step minus
+    // its forward half, over the forward).
+    println!(
+        "{:<44} adjoint/forward overhead ~{:.1}x",
+        name,
+        ((step.p50 - fwd.p50) / fwd.p50.max(1e-12)).max(0.0)
+    );
+}
+
+fn main() {
+    println!("== native train-step throughput (K = R_K order) ==");
+    bench_shape("toy 1-d, hidden [16,16], B=64, K=2", 1, &[16, 16], 64, 2);
+    bench_shape("proj-mnist 16-d, hidden [32], B=32, K=2", 16, &[32], 32, 2);
+    bench_shape("proj-mnist 16-d, hidden [32], B=32, K=3", 16, &[32], 32, 3);
+}

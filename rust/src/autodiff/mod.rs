@@ -1,0 +1,443 @@
+//! Reverse-mode automatic differentiation on a tape of batch columns — the
+//! gradient engine of the native training subsystem.
+//!
+//! A [`Tape`] records a DAG of elementwise operations over `[rows]` f64
+//! columns (rows = batch size, so one node covers the whole batch); a
+//! [`Var`] is a handle to one node and implements the model-facing
+//! [`Value`](crate::nn::Value) algebra, which means any code written
+//! against `Value` — the MLP forward, the generic series arithmetic, the
+//! value-generic jet — records itself for free.  [`Tape::backward`] then
+//! walks the tape once in reverse, accumulating vector-Jacobian products:
+//! per-column cotangents for [`input`](Tape::input) leaves and row-summed
+//! scalar gradients for broadcast [`param`](Tape::param) leaves.
+//!
+//! Each tape is built for one VJP and dropped — the discrete adjoint
+//! (`coordinator::train_native`) constructs one per RK stage from the
+//! cached stage state, so tape lifetime never spans solver steps.
+//!
+//! ```
+//! use taynode::autodiff::Tape;
+//! use taynode::nn::Value;
+//!
+//! // d/dx of tanh(w·x) at x = [0.5, -1], w = 0.3.
+//! let tape = Tape::new(2);
+//! let x = tape.input(&[0.5, -1.0]);
+//! let w = tape.param(0, 0.3);
+//! let y = x.mul(&w).tanh();
+//! let g = tape.backward(&[(&y, &[1.0, 1.0])]);
+//! for (x0, g0) in [0.5f64, -1.0].iter().zip(g.wrt(&x)) {
+//!     let t = (0.3 * x0).tanh();
+//!     assert!((g0 - 0.3 * (1.0 - t * t)).abs() < 1e-12);
+//! }
+//! // The broadcast param's gradient sums over the batch rows.
+//! assert!(g.param(0).is_finite());
+//! ```
+
+pub mod optim;
+
+pub use optim::Adam;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::nn::Value;
+
+/// One recorded elementwise operation (operands are node ids).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Gradient-free constant (from `Value::lift` / `Tape::constant`).
+    Const,
+    /// Differentiable per-row input column.
+    Input,
+    /// Broadcast scalar parameter; gradient row-sums into slot `usize`.
+    Param(usize),
+    Add(usize, usize),
+    Sub(usize, usize),
+    Mul(usize, usize),
+    Scale(usize, f64),
+    Tanh(usize),
+}
+
+struct Node {
+    op: Op,
+    val: Vec<f64>,
+}
+
+struct TapeInner {
+    rows: usize,
+    nodes: Vec<Node>,
+}
+
+/// A recording of elementwise column operations, shared by its [`Var`]s.
+#[derive(Clone)]
+pub struct Tape {
+    inner: Rc<RefCell<TapeInner>>,
+}
+
+/// A handle to one tape node.  Cheap to clone; all arithmetic goes through
+/// the [`Value`](crate::nn::Value) impl.
+#[derive(Clone)]
+pub struct Var {
+    inner: Rc<RefCell<TapeInner>>,
+    id: usize,
+}
+
+impl Tape {
+    /// A fresh tape over `rows`-long batch columns.
+    pub fn new(rows: usize) -> Tape {
+        Tape { inner: Rc::new(RefCell::new(TapeInner { rows, nodes: vec![] })) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.inner.borrow().rows
+    }
+
+    /// Number of recorded nodes (for perf accounting in tests/benches).
+    pub fn len(&self) -> usize {
+        self.inner.borrow().nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.borrow().nodes.is_empty()
+    }
+
+    /// A differentiable per-row input column.
+    pub fn input(&self, vals: &[f64]) -> Var {
+        assert_eq!(vals.len(), self.rows(), "Tape::input: column length vs rows");
+        push(&self.inner, Op::Input, vals.to_vec())
+    }
+
+    /// A differentiable broadcast scalar (a model parameter): every row
+    /// sees `val`, and the backward pass row-sums the cotangent into
+    /// gradient slot `idx`.
+    pub fn param(&self, idx: usize, val: f64) -> Var {
+        let rows = self.rows();
+        push(&self.inner, Op::Param(idx), vec![val; rows])
+    }
+
+    /// A gradient-free broadcast constant.
+    pub fn constant(&self, val: f64) -> Var {
+        let rows = self.rows();
+        push(&self.inner, Op::Const, vec![val; rows])
+    }
+
+    /// Current forward value of a node.
+    pub fn value(&self, v: &Var) -> Vec<f64> {
+        assert!(Rc::ptr_eq(&self.inner, &v.inner), "Var from a different tape");
+        self.inner.borrow().nodes[v.id].val.clone()
+    }
+
+    /// Reverse sweep: seed the given output cotangent columns, walk the
+    /// tape backwards once, and return every node's accumulated adjoint
+    /// plus the row-summed parameter gradients.  Seeding the same `Var`
+    /// twice accumulates.
+    pub fn backward(&self, seeds: &[(&Var, &[f64])]) -> Grads {
+        let t = self.inner.borrow();
+        let rows = t.rows;
+        let mut adj = vec![vec![0.0f64; rows]; t.nodes.len()];
+        for (v, g) in seeds {
+            assert!(Rc::ptr_eq(&self.inner, &v.inner), "seed from a different tape");
+            assert_eq!(g.len(), rows, "seed column length vs rows");
+            for (a, gi) in adj[v.id].iter_mut().zip(*g) {
+                *a += *gi;
+            }
+        }
+        let mut params: Vec<f64> = Vec::new();
+        for id in (0..t.nodes.len()).rev() {
+            if adj[id].iter().all(|v| *v == 0.0) {
+                continue;
+            }
+            // Operand ids are strictly smaller than `id` (the tape only
+            // appends), so a split borrows this node's adjoint and its
+            // operands' simultaneously — no per-node clone in the sweep.
+            let (lo, hi) = adj.split_at_mut(id);
+            let g = &hi[0];
+            match t.nodes[id].op {
+                Op::Const | Op::Input => {}
+                Op::Param(pi) => {
+                    if params.len() <= pi {
+                        params.resize(pi + 1, 0.0);
+                    }
+                    params[pi] += g.iter().sum::<f64>();
+                }
+                Op::Add(a, b) => {
+                    for r in 0..rows {
+                        lo[a][r] += g[r];
+                    }
+                    for r in 0..rows {
+                        lo[b][r] += g[r];
+                    }
+                }
+                Op::Sub(a, b) => {
+                    for r in 0..rows {
+                        lo[a][r] += g[r];
+                    }
+                    for r in 0..rows {
+                        lo[b][r] -= g[r];
+                    }
+                }
+                Op::Mul(a, b) => {
+                    for r in 0..rows {
+                        lo[a][r] += g[r] * t.nodes[b].val[r];
+                    }
+                    for r in 0..rows {
+                        lo[b][r] += g[r] * t.nodes[a].val[r];
+                    }
+                }
+                Op::Scale(a, sc) => {
+                    for r in 0..rows {
+                        lo[a][r] += g[r] * sc;
+                    }
+                }
+                Op::Tanh(a) => {
+                    let y = &t.nodes[id].val;
+                    for r in 0..rows {
+                        lo[a][r] += g[r] * (1.0 - y[r] * y[r]);
+                    }
+                }
+            }
+        }
+        Grads { tape: self.inner.clone(), adj, params }
+    }
+}
+
+fn push(inner: &Rc<RefCell<TapeInner>>, op: Op, val: Vec<f64>) -> Var {
+    let mut t = inner.borrow_mut();
+    t.nodes.push(Node { op, val });
+    Var { inner: inner.clone(), id: t.nodes.len() - 1 }
+}
+
+impl Var {
+    /// This node's forward value.
+    pub fn value(&self) -> Vec<f64> {
+        self.inner.borrow().nodes[self.id].val.clone()
+    }
+}
+
+impl Value for Var {
+    fn lift(&self, a: f64) -> Var {
+        let rows = self.inner.borrow().rows;
+        push(&self.inner, Op::Const, vec![a; rows])
+    }
+
+    fn add(&self, o: &Var) -> Var {
+        assert!(Rc::ptr_eq(&self.inner, &o.inner), "Vars from different tapes");
+        let val: Vec<f64> = {
+            let t = self.inner.borrow();
+            let (a, b) = (&t.nodes[self.id].val, &t.nodes[o.id].val);
+            a.iter().zip(b).map(|(x, y)| x + y).collect()
+        };
+        push(&self.inner, Op::Add(self.id, o.id), val)
+    }
+
+    fn sub(&self, o: &Var) -> Var {
+        assert!(Rc::ptr_eq(&self.inner, &o.inner), "Vars from different tapes");
+        let val: Vec<f64> = {
+            let t = self.inner.borrow();
+            let (a, b) = (&t.nodes[self.id].val, &t.nodes[o.id].val);
+            a.iter().zip(b).map(|(x, y)| x - y).collect()
+        };
+        push(&self.inner, Op::Sub(self.id, o.id), val)
+    }
+
+    fn mul(&self, o: &Var) -> Var {
+        assert!(Rc::ptr_eq(&self.inner, &o.inner), "Vars from different tapes");
+        let val: Vec<f64> = {
+            let t = self.inner.borrow();
+            let (a, b) = (&t.nodes[self.id].val, &t.nodes[o.id].val);
+            a.iter().zip(b).map(|(x, y)| x * y).collect()
+        };
+        push(&self.inner, Op::Mul(self.id, o.id), val)
+    }
+
+    fn scale(&self, a: f64) -> Var {
+        let val: Vec<f64> = {
+            let t = self.inner.borrow();
+            t.nodes[self.id].val.iter().map(|x| a * x).collect()
+        };
+        push(&self.inner, Op::Scale(self.id, a), val)
+    }
+
+    fn tanh(&self) -> Var {
+        let val: Vec<f64> = {
+            let t = self.inner.borrow();
+            t.nodes[self.id].val.iter().map(|x| x.tanh()).collect()
+        };
+        push(&self.inner, Op::Tanh(self.id), val)
+    }
+}
+
+/// The result of one [`Tape::backward`] sweep.
+pub struct Grads {
+    /// The tape the sweep ran on — `wrt` refuses foreign `Var`s, since a
+    /// node id from another tape would silently alias a wrong adjoint.
+    tape: Rc<RefCell<TapeInner>>,
+    adj: Vec<Vec<f64>>,
+    params: Vec<f64>,
+}
+
+impl Grads {
+    /// Cotangent column of any node (zeros if untouched by the sweep).
+    pub fn wrt(&self, v: &Var) -> &[f64] {
+        assert!(Rc::ptr_eq(&self.tape, &v.inner), "Var from a different tape");
+        &self.adj[v.id]
+    }
+
+    /// Row-summed gradient of parameter slot `idx` (0 if untouched).
+    pub fn param(&self, idx: usize) -> f64 {
+        self.params.get(idx).copied().unwrap_or(0.0)
+    }
+
+    /// The dense parameter-gradient vector, padded to `n` slots.
+    pub fn param_vec(&self, n: usize) -> Vec<f64> {
+        let mut out = self.params.clone();
+        out.resize(n.max(out.len()), 0.0);
+        out.truncate(n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Central-difference gradient of `f` (a scalar function of `x`) —
+    /// the per-op reference every VJP is checked against.
+    fn fd_grad(f: &dyn Fn(&[f64]) -> f64, x: &[f64], eps: f64) -> Vec<f64> {
+        let mut g = Vec::with_capacity(x.len());
+        let mut xp = x.to_vec();
+        for i in 0..x.len() {
+            xp[i] = x[i] + eps;
+            let fp = f(&xp);
+            xp[i] = x[i] - eps;
+            let fm = f(&xp);
+            xp[i] = x[i];
+            g.push((fp - fm) / (2.0 * eps));
+        }
+        g
+    }
+
+    /// Build y = expr(vars) on a 1-row tape, seed 1.0, return input grads.
+    fn tape_grad(expr: fn(&[Var]) -> Var, x: &[f64]) -> Vec<f64> {
+        let tape = Tape::new(1);
+        let vars: Vec<Var> = x.iter().map(|v| tape.input(&[*v])).collect();
+        let y = expr(&vars);
+        let g = tape.backward(&[(&y, &[1.0])]);
+        vars.iter().map(|v| g.wrt(v)[0]).collect()
+    }
+
+    #[test]
+    fn per_op_gradients_match_finite_differences_property() {
+        // Every Op's VJP, alone and composed, vs central differences.
+        Prop::new(60).run("tape-op-fd", |rng: &mut Pcg, case| {
+            let x = gen::vec_f64(rng, 3, -1.5, 1.5);
+            let exprs: [fn(&[Var]) -> Var; 6] = [
+                |v| v[0].add(&v[1]).mul(&v[2]),
+                |v| v[0].sub(&v[1]).tanh(),
+                |v| v[0].mul(&v[1]).mul(&v[2]),
+                |v| v[0].scale(1.7).add(&v[1].scale(-0.4)),
+                |v| v[0].tanh().mul(&v[1].tanh()).add(&v[2]),
+                |v| v[0].mul(&v[0]).sub(&v[1].mul(&v[2]).scale(0.5)),
+            ];
+            let expr = exprs[case % exprs.len()];
+            let fns = |x: &[f64]| -> f64 {
+                // evaluate via a throwaway tape (forward values only)
+                let tape = Tape::new(1);
+                let vars: Vec<Var> = x.iter().map(|v| tape.input(&[*v])).collect();
+                expr(&vars).value()[0]
+            };
+            let want = fd_grad(&fns, &x, 1e-5);
+            let got = tape_grad(expr, &x);
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!(close(*g, *w, 1e-7), "input {i}: {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn param_gradients_sum_over_rows_and_uses() {
+        // y_r = p·x_r + p·x_r²: dL/dp with L = sum_r y_r must accumulate
+        // over both uses of p and over all rows.
+        let x = [0.5f64, -1.0, 2.0];
+        let p0 = 0.7f64;
+        let tape = Tape::new(3);
+        let xs = tape.input(&x);
+        let p = tape.param(0, p0);
+        let y = p.mul(&xs).add(&p.mul(&xs.mul(&xs)));
+        let g = tape.backward(&[(&y, &[1.0, 1.0, 1.0])]);
+        let want: f64 = x.iter().map(|v| v + v * v).sum();
+        assert!(close(g.param(0), want, 1e-12), "{} vs {want}", g.param(0));
+        // inputs: d y_r / d x_r = p + 2 p x_r
+        for (r, xv) in x.iter().enumerate() {
+            let w = p0 + 2.0 * p0 * xv;
+            assert!(close(g.wrt(&xs)[r], w, 1e-12), "row {r}");
+        }
+        // an untouched parameter slot reads as zero
+        assert_eq!(g.param(5), 0.0);
+        assert_eq!(g.param_vec(2), vec![want, 0.0]);
+    }
+
+    #[test]
+    fn constants_carry_no_gradient() {
+        let tape = Tape::new(2);
+        let x = tape.input(&[1.0, 2.0]);
+        let c = tape.constant(3.0);
+        let l = x.lift(4.0);
+        let y = x.mul(&c).add(&l);
+        let g = tape.backward(&[(&y, &[1.0, 1.0])]);
+        assert_eq!(g.wrt(&x), &[3.0, 3.0]);
+        // const/lift nodes accumulate adjoints but emit no param grads
+        assert!(g.param_vec(4).iter().all(|v| *v == 0.0));
+        assert_eq!(tape.value(&c), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn multi_output_seeds_accumulate() {
+        // Seeding two outputs in one sweep equals the sum of separate
+        // sweeps (linearity of the adjoint).
+        let tape = Tape::new(1);
+        let x = tape.input(&[0.8]);
+        let y1 = x.tanh();
+        let y2 = x.mul(&x);
+        let joint = tape.backward(&[(&y1, &[1.0]), (&y2, &[2.0])]);
+        let a = tape.backward(&[(&y1, &[1.0])]);
+        let b = tape.backward(&[(&y2, &[2.0])]);
+        assert!(close(joint.wrt(&x)[0], a.wrt(&x)[0] + b.wrt(&x)[0], 1e-15));
+    }
+
+    #[test]
+    #[should_panic(expected = "different tape")]
+    fn wrt_rejects_vars_from_another_tape() {
+        let t1 = Tape::new(1);
+        let t2 = Tape::new(1);
+        let x1 = t1.input(&[1.0]);
+        let x2 = t2.input(&[2.0]);
+        let y = x1.tanh();
+        let g = t1.backward(&[(&y, &[1.0])]);
+        let _ = g.wrt(&x2); // same node id, wrong tape: must panic, not alias
+    }
+
+    #[test]
+    fn columns_are_rowwise_independent() {
+        // Elementwise ops must not mix rows: per-row grads of y = x²·w
+        // depend only on that row's x.
+        let tape = Tape::new(4);
+        let x = tape.input(&[1.0, 2.0, 3.0, 4.0]);
+        let w = tape.param(0, 0.5);
+        let y = x.mul(&x).mul(&w);
+        let g = tape.backward(&[(&y, &[1.0, 0.0, 0.0, 1.0])]);
+        let gx = g.wrt(&x);
+        assert!(close(gx[0], 1.0, 1e-12)); // 2·x·w = 1
+        assert_eq!(gx[1], 0.0);
+        assert_eq!(gx[2], 0.0);
+        assert!(close(gx[3], 4.0, 1e-12));
+        // param grad only sums the seeded rows: x0² + x3² = 1 + 16
+        assert!(close(g.param(0), 17.0, 1e-12));
+    }
+}

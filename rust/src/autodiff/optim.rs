@@ -1,0 +1,106 @@
+//! Flat-parameter-vector optimizers for the native training path.
+//!
+//! The tape's parameter gradients come back as one dense `Vec<f64>` over
+//! the flat layout `nn::Mlp` (plus any head) exposes; [`Adam`] consumes
+//! exactly that.  Moments are kept in f64 — the parameters themselves are
+//! the solver-facing f32, the optimizer state is not.
+
+/// Adam (Kingma & Ba 2015) over a flat f32 parameter vector.
+///
+/// ```
+/// use taynode::autodiff::Adam;
+///
+/// // Minimize (p - 3)²: the iterates walk towards 3.
+/// let mut p = vec![0.0f32];
+/// let mut opt = Adam::new(1, 0.1);
+/// for _ in 0..200 {
+///     let g = vec![2.0 * (p[0] as f64 - 3.0)];
+///     opt.step(&mut p, &g);
+/// }
+/// assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+/// ```
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    t: usize,
+    m: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl Adam {
+    /// Standard hyperparameters (β₁ 0.9, β₂ 0.999, ε 1e-8) over `n` slots.
+    pub fn new(n: usize, lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Number of optimizer steps taken so far.
+    pub fn steps(&self) -> usize {
+        self.t
+    }
+
+    /// One bias-corrected update of `params` in place.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f64]) {
+        assert_eq!(params.len(), self.m.len(), "Adam: parameter arity");
+        assert_eq!(grads.len(), self.m.len(), "Adam: gradient arity");
+        self.t += 1;
+        let b1c = 1.0 - self.beta1.powi(self.t as i32);
+        let b2c = 1.0 - self.beta2.powi(self.t as i32);
+        let lr = self.lr as f64;
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1c;
+            let vhat = self.v[i] / b2c;
+            params[i] -= (lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic_bowl() {
+        // L(p) = Σ (p_i - c_i)²
+        let c = [1.0f64, -2.0, 0.5];
+        let mut p = vec![0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..400 {
+            let g: Vec<f64> = p.iter().zip(&c).map(|(pi, ci)| 2.0 * (*pi as f64 - ci)).collect();
+            opt.step(&mut p, &g);
+        }
+        for (pi, ci) in p.iter().zip(&c) {
+            assert!((*pi as f64 - ci).abs() < 0.05, "{pi} vs {ci}");
+        }
+        assert_eq!(opt.steps(), 400);
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // Bias correction makes the very first step ≈ lr · sign(g).
+        let mut p = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut p, &[123.4]);
+        assert!((p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut opt = Adam::new(2, 0.1);
+        let mut p = vec![0.0f32; 2];
+        opt.step(&mut p, &[1.0]);
+    }
+}

@@ -1,9 +1,11 @@
-//! L3 coordinator: training orchestration (`trainer`), evaluation
+//! L3 coordinator: training orchestration (the exported-artifact `trainer`
+//! and the native discrete-adjoint `train_native`), evaluation
 //! instrumentation (`evaluator`), schedules, and metrics persistence.
 
 pub mod evaluator;
 pub mod metrics;
 pub mod schedule;
+pub mod train_native;
 pub mod trainer;
 
 pub use evaluator::{
@@ -11,4 +13,5 @@ pub use evaluator::{
 };
 pub use metrics::MetricsLog;
 pub use schedule::Schedule;
+pub use train_native::{adjoint_grads, LinearHead, NativeMetrics, NativeTrainer};
 pub use trainer::{BatchInputs, StepMetrics, Trainer};

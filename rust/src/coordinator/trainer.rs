@@ -186,8 +186,12 @@ impl<'rt> Trainer<'rt> {
         if outputs.len() < n_state {
             bail!("train step returned {} outputs < state {}", outputs.len(), n_state);
         }
-        for (i, (role, pname)) in self.state_roles.clone().iter().enumerate() {
+        // Index loop: `state_roles` and `store` are disjoint fields, so the
+        // roles can be borrowed while the store is written — no need to
+        // clone the whole role Vec every optimizer step (as the seed did).
+        for i in 0..n_state {
             let data = outputs[i].to_vec::<f32>()?;
+            let (role, pname) = &self.state_roles[i];
             let idx = self.store.index_of(pname)?;
             if role == "param" {
                 self.store.set_value(idx, data);

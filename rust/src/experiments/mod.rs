@@ -5,6 +5,7 @@
 pub mod common;
 pub mod latent_figs;
 pub mod mnist_figs;
+pub mod native_train;
 pub mod orders;
 pub mod tables;
 pub mod toy_figs;
@@ -14,10 +15,11 @@ use anyhow::{bail, Result};
 pub use common::Scale;
 
 /// Unique regenerators: fig6 covers fig7, fig8 covers fig10, fig5 covers
-/// fig11 and fig12 (shared sweeps printed together).
+/// fig11 and fig12 (shared sweeps printed together).  `native` is the
+/// artifact-free λ-sweep through the native training subsystem.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9",
-    "table2", "table3", "table4",
+    "native", "table2", "table3", "table4",
 ];
 
 /// Run one experiment by paper id, printing its table(s).
@@ -52,6 +54,12 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         }
         "fig8" | "fig10" => mnist_figs::fig8_fig10(scale)?.print(),
         "fig9" => toy_figs::fig9(scale)?.print(),
+        "native" => {
+            println!("-- native λ-sweep: toy regression, discrete adjoint --");
+            native_train::lambda_sweep(scale)?.print();
+            println!("-- native synth-MNIST (projected) + classifier head --");
+            native_train::mnist_native(scale)?.print();
+        }
         "fig11" => mnist_figs::fig5_mnist(scale)?.print(),
         "fig12" => latent_figs::fig12(scale)?.print(),
         "table2" => tables::cnf_table("cnf_img", scale)?.print(),

@@ -15,9 +15,15 @@
 //! * [`taylor`] — truncated Taylor-series arithmetic / jets in pure Rust:
 //!   scalar `Series`/`ode_jet` plus the SoA `SeriesVec`/`ode_jet_batch`
 //!   that jets a whole `[B, n]` active set per sweep.
+//! * [`nn`] — native dynamics models (`Mlp`) written once against the
+//!   scalar-generic `Value` algebra, so one forward pass serves the f32
+//!   solver path, the Taylor-jet path, and the reverse-mode tape.
+//! * [`autodiff`] — tape-based reverse-mode VJP over batch columns, plus
+//!   the flat-vector `Adam` optimizer.
 //! * [`runtime`] — PJRT client (behind the `pjrt` feature; a thin stub
 //!   substitutes by default), artifact registry, parameter store.
-//! * [`coordinator`] — training loop, schedules, sweeps, metrics.
+//! * [`coordinator`] — training loop (XLA-artifact and native
+//!   discrete-adjoint paths), schedules, sweeps, metrics.
 //! * [`data`] — synthetic MNIST / PhysioNet / MINIBOONE generators.
 //! * [`experiments`] — one regenerator per paper table and figure.
 //! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench).
@@ -28,9 +34,11 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod autodiff;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod nn;
 pub mod runtime;
 pub mod solvers;
 pub mod taylor;

@@ -1,0 +1,266 @@
+//! A small MLP vector field over flat `[B, n]` SoA state — the native
+//! dynamics model of the training subsystem.
+//!
+//! The forward pass is written **once**, generically over [`Value`], and the
+//! three consumers instantiate it:
+//!
+//! * the solver hot path ([`BatchDynamics`]) runs it on order-0
+//!   [`SeriesVec`] columns (plain batched f64 arithmetic, cast to the
+//!   engine's f32 at the boundary);
+//! * the jet path ([`BatchSeriesDynamics`]) runs it on truncated series
+//!   columns, so `taylor::ode_jet_batch` and with it the whole native `R_K`
+//!   machinery (`RegularizedBatchDynamics`, `batch_rk_eval`) work on the
+//!   model unchanged;
+//! * the training path runs it on reverse-mode tape values
+//!   ([`Var`](crate::autodiff::Var), possibly inside
+//!   [`SeriesOf`](super::SeriesOf)), which is where the discrete adjoint
+//!   gets its VJPs.
+//!
+//! Architecture: `z` (n features), optionally with the time appended as an
+//! extra input, through `hidden` tanh layers to a linear n-dimensional
+//! output.  Parameters are one flat `Vec<f32>`: per layer, `W` (row-major
+//! `[in, out]`) then `b` (`[out]`) — the layout the flat-vector optimizer
+//! (`autodiff::Adam`) and the tape's parameter leaves share.
+
+use super::Value;
+use crate::solvers::batch::BatchDynamics;
+use crate::taylor::{BatchSeriesDynamics, SeriesVec};
+use crate::util::rng::Pcg;
+
+/// A multilayer perceptron vector field dz/dt = MLP([z, t]).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Feature widths at each layer boundary; `sizes[0]` includes the time
+    /// input when `with_time`, `sizes.last()` is always the state dim.
+    sizes: Vec<usize>,
+    n: usize,
+    with_time: bool,
+    /// Flat parameter vector (per layer: row-major `W [in, out]`, then `b`).
+    pub params: Vec<f32>,
+}
+
+impl Mlp {
+    /// Build with deterministic N(0, 1/in) weight init and zero biases.
+    pub fn new(n: usize, hidden: &[usize], with_time: bool, seed: u64) -> Mlp {
+        assert!(n > 0, "Mlp: state dimension must be positive");
+        let mut sizes = vec![n + usize::from(with_time)];
+        sizes.extend_from_slice(hidden);
+        sizes.push(n);
+        let mut rng = Pcg::new(seed);
+        let mut params = Vec::new();
+        for l in 0..sizes.len() - 1 {
+            let (win, wout) = (sizes[l], sizes[l + 1]);
+            let sd = 1.0 / (win as f32).sqrt();
+            for _ in 0..win * wout {
+                params.push(rng.normal() * sd);
+            }
+            for _ in 0..wout {
+                params.push(0.0);
+            }
+        }
+        Mlp { sizes, n, with_time, params }
+    }
+
+    /// The per-trajectory state dimension n.
+    pub fn state_dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Lift the flat f32 parameters into any [`Value`] carrier, using
+    /// `like`'s shape (its rows / order / tape).  The tape path does NOT use
+    /// this — it creates gradient-tracked parameter leaves instead.
+    pub fn lift_params<T: Value>(&self, like: &T) -> Vec<T> {
+        self.params.iter().map(|p| like.lift(*p as f64)).collect()
+    }
+
+    /// The generic forward pass: activations, parameters, and time all live
+    /// in the same [`Value`] carrier `T`.  `p` must be this model's
+    /// parameters lifted into `T` (see [`lift_params`](Mlp::lift_params));
+    /// `t` is required exactly when the model was built `with_time`.
+    pub fn forward<T: Value>(&self, p: &[T], z: &[T], t: Option<&T>) -> Vec<T> {
+        assert_eq!(z.len(), self.n, "Mlp::forward: state arity");
+        assert_eq!(p.len(), self.params.len(), "Mlp::forward: parameter arity");
+        let mut acts: Vec<T> = z.to_vec();
+        if self.with_time {
+            acts.push(t.expect("Mlp built with_time needs t").clone());
+        }
+        let mut off = 0;
+        for l in 0..self.sizes.len() - 1 {
+            let (win, wout) = (self.sizes[l], self.sizes[l + 1]);
+            let boff = off + win * wout;
+            let mut next: Vec<T> = Vec::with_capacity(wout);
+            for j in 0..wout {
+                // acc = b_j + sum_i act_i * W_ij, ascending i
+                let mut acc = p[boff + j].clone();
+                for i in 0..win {
+                    acc = acc.add(&acts[i].mul(&p[off + i * wout + j]));
+                }
+                if l + 1 < self.sizes.len() - 1 {
+                    acc = acc.tanh();
+                }
+                next.push(acc);
+            }
+            acts = next;
+            off = boff + wout;
+        }
+        acts
+    }
+
+    /// Plain per-example evaluation (the reference semantics for tests and
+    /// docs): `z` is one example's n features.
+    pub fn forward_f64(&self, z: &[f64], t: f64) -> Vec<f64> {
+        let p = self.lift_params(&t);
+        self.forward(&p, z, Some(&t))
+    }
+}
+
+/// The series lift: split the `[rows, n]` batch into `[rows, 1]` columns,
+/// run the generic forward, reassemble.  Elementwise `SeriesVec` ops apply
+/// the scalar op order, so each row is bit-identical to a per-example
+/// `Series` forward — which is what lets the existing batched-jet `R_K`
+/// machinery consume the model unchanged.
+impl BatchSeriesDynamics for Mlp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, _ids: &[usize], z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+        let p = self.lift_params(t);
+        let cols: Vec<SeriesVec> = (0..self.n).map(|j| z.col(j)).collect();
+        let out = self.forward(&p, &cols, Some(t));
+        SeriesVec::from_cols(&out)
+    }
+}
+
+/// The solver hot path is the order-0 specialization of the series lift:
+/// one code path, so the f32 engine, the jets, and the tape can never
+/// disagree about what the model computes.
+///
+/// Perf note: this round-trips through order-0 `SeriesVec` columns and so
+/// allocates O(n) small buffers per NFE — fine at training scale, but a
+/// serving-grade deployment should grow reusable staging buffers here (a
+/// ROADMAP follow-on), property-tested equal to this path.
+impl BatchDynamics for Mlp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        let rows = t.len();
+        let z64: Vec<f64> = y.iter().map(|v| *v as f64).collect();
+        let t64: Vec<f64> = t.iter().map(|v| *v as f64).collect();
+        let zs = SeriesVec::constant(&z64, rows, self.n, 0);
+        let ts = SeriesVec::time(&t64, 0);
+        let out = BatchSeriesDynamics::eval(self, ids, &zs, &ts);
+        for (d, v) in dy.iter_mut().zip(out.coeff(0)) {
+            *d = *v as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ode_jet_values, SeriesOf};
+    use crate::taylor::ode_jet_batch;
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let mlp = Mlp::new(3, &[5, 4], true, 0);
+        // (3+1)x5 + 5, 5x4 + 4, 4x3 + 3
+        assert_eq!(mlp.n_params(), 4 * 5 + 5 + 5 * 4 + 4 + 4 * 3 + 3);
+        assert_eq!(mlp.state_dim(), 3);
+        let out = mlp.forward_f64(&[0.1, -0.2, 0.3], 0.5);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_order0_matches_per_example_f64_property() {
+        // The f32 BatchDynamics path (order-0 SeriesVec columns) must equal
+        // the per-example f64 forward up to the final f32 cast.
+        Prop::new(40).run("mlp-batch-vs-scalar", |rng: &mut Pcg, _| {
+            let n = 1 + rng.below(3);
+            let h = 1 + rng.below(6);
+            let b = 1 + rng.below(5);
+            let with_time = rng.below(2) == 0;
+            let mut mlp = Mlp::new(n, &[h], with_time, rng.next_u64());
+            let y = gen::vec_f32(rng, b * n, 1.2);
+            let t: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+            let ids: Vec<usize> = (0..b).collect();
+            let mut dy = vec![0.0f32; b * n];
+            BatchDynamics::eval(&mut mlp, &ids, &t, &y, &mut dy);
+            for r in 0..b {
+                let z: Vec<f64> = y[r * n..(r + 1) * n].iter().map(|v| *v as f64).collect();
+                let want = mlp.forward_f64(&z, t[r] as f64);
+                for i in 0..n {
+                    assert!(
+                        close(dy[r * n + i] as f64, want[i], 1e-6),
+                        "row {r} dim {i}: {} vs {}",
+                        dy[r * n + i],
+                        want[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batched_jets_match_generic_jets_per_example_property() {
+        // ode_jet_batch over the SeriesVec lift vs ode_jet_values with
+        // T = f64 per example: the two series flavors must agree.
+        Prop::new(25).run("mlp-jet-batch-vs-values", |rng: &mut Pcg, _| {
+            let n = 1 + rng.below(2);
+            let b = 1 + rng.below(4);
+            let order = 1 + rng.below(3);
+            let mut mlp = Mlp::new(n, &[3], true, rng.next_u64());
+            let z0 = gen::vec_f64(rng, b * n, -1.0, 1.0);
+            let t0 = gen::vec_f64(rng, b, -0.5, 0.5);
+            let ids: Vec<usize> = (0..b).collect();
+            let jets = ode_jet_batch(&mut mlp, &ids, &z0, &t0, order);
+            for r in 0..b {
+                let zr: Vec<f64> = z0[r * n..(r + 1) * n].to_vec();
+                let mlp_ref = &mlp;
+                let want = ode_jet_values(
+                    &mut |zs: &[SeriesOf<f64>], ts: &SeriesOf<f64>| {
+                        let p = mlp_ref.lift_params(ts);
+                        mlp_ref.forward(&p, zs, Some(ts))
+                    },
+                    &zr,
+                    &t0[r],
+                    order,
+                );
+                for k in 0..order {
+                    for i in 0..n {
+                        assert!(
+                            close(jets[k][r * n + i], want[k][i], 1e-9),
+                            "row {r} order {k} dim {i}: {} vs {}",
+                            jets[k][r * n + i],
+                            want[k][i]
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn headless_single_layer_is_affine() {
+        // No hidden layers: the model is exactly z W + b, checkable by hand.
+        let mut mlp = Mlp::new(2, &[], false, 3);
+        mlp.params = vec![1.0, 0.0, 0.0, 1.0, 0.5, -0.5]; // W = I, b = (.5, -.5)
+        let out = mlp.forward_f64(&[2.0, 3.0], 0.0);
+        assert!(close(out[0], 2.5, 1e-12));
+        assert!(close(out[1], 2.5, 1e-12));
+    }
+}

@@ -1,0 +1,143 @@
+//! Neural dynamics models, generic over the scalar type — the native
+//! (no-XLA) counterpart of the exported `python/` models, and the substrate
+//! of the native training subsystem.
+//!
+//! The central abstraction is [`Value`]: the closed set of operations a
+//! dynamics model is allowed to use (affine maps, products, `tanh`).  One
+//! generic forward pass ([`Mlp::forward`]) then runs unchanged on
+//!
+//! * `f64` — plain per-example evaluation (the reference semantics);
+//! * [`Series`](crate::taylor::Series) / [`SeriesVec`](crate::taylor::SeriesVec)
+//!   — truncated Taylor series, so the *same* forward code is jetted by
+//!   `taylor::ode_jet_batch` and the paper's `R_K` regularizer rides the
+//!   batched solver engine for free;
+//! * [`Var`](crate::autodiff::Var) — reverse-mode tape values, so the same
+//!   forward code yields exact parameter/input gradients for the discrete
+//!   adjoint (`coordinator::train_native`);
+//! * [`SeriesOf<T>`](series::SeriesOf) — series *over* any of the above,
+//!   which is how `R_K`'s Taylor-mode integrand itself is differentiated
+//!   (series of tape values: Taylor mode outside, reverse mode inside).
+//!
+//! ```
+//! use taynode::nn::Mlp;
+//! use taynode::taylor::Series;
+//!
+//! // One forward pass, two scalar types: plain f64 and truncated series.
+//! let mlp = Mlp::new(1, &[4], true, 0);
+//! let y = mlp.forward_f64(&[0.3], 0.0);
+//! let p: Vec<Series> = mlp.lift_params(&Series::constant(0.0, 2));
+//! let z = Series::constant(0.3, 2);
+//! let t = Series::time(0.0, 2);
+//! let ys = mlp.forward(&p, &[z], Some(&t));
+//! assert!((ys[0].c[0] - y[0]).abs() < 1e-12);
+//! ```
+
+pub mod mlp;
+pub mod series;
+
+pub use mlp::Mlp;
+pub use series::{ode_jet_values, SeriesOf};
+
+use crate::taylor::{Series, SeriesVec};
+
+/// The scalar algebra a [`Mlp`] forward pass is written against.
+///
+/// Implementations must apply the *same* mathematical operation whatever
+/// the carrier is — a number, a whole `[B, 1]` batch column, a truncated
+/// Taylor series, or a tape node recording itself for reverse mode.
+/// `lift` turns an `f64` constant (a parameter, a coefficient) into a value
+/// of the receiver's shape; it is how shape-free constants meet shaped
+/// carriers without the trait needing shape arguments.
+pub trait Value: Clone {
+    /// A constant `a` with `self`'s shape (rows / series order / tape).
+    fn lift(&self, a: f64) -> Self;
+    fn add(&self, o: &Self) -> Self;
+    fn sub(&self, o: &Self) -> Self;
+    fn mul(&self, o: &Self) -> Self;
+    /// Multiply by an `f64` constant (cheaper than `lift` + `mul`).
+    fn scale(&self, a: f64) -> Self;
+    fn tanh(&self) -> Self;
+}
+
+impl Value for f64 {
+    fn lift(&self, a: f64) -> f64 {
+        a
+    }
+
+    fn add(&self, o: &f64) -> f64 {
+        self + o
+    }
+
+    fn sub(&self, o: &f64) -> f64 {
+        self - o
+    }
+
+    fn mul(&self, o: &f64) -> f64 {
+        self * o
+    }
+
+    fn scale(&self, a: f64) -> f64 {
+        a * self
+    }
+
+    fn tanh(&self) -> f64 {
+        f64::tanh(*self)
+    }
+}
+
+/// Scalar truncated Taylor series: the propagation rules of
+/// [`crate::taylor`], seen through the model-facing algebra.
+impl Value for Series {
+    fn lift(&self, a: f64) -> Series {
+        Series::constant(a, self.order())
+    }
+
+    fn add(&self, o: &Series) -> Series {
+        Series::add(self, o)
+    }
+
+    fn sub(&self, o: &Series) -> Series {
+        Series::sub(self, o)
+    }
+
+    fn mul(&self, o: &Series) -> Series {
+        Series::mul(self, o)
+    }
+
+    fn scale(&self, a: f64) -> Series {
+        Series::scale(self, a)
+    }
+
+    fn tanh(&self) -> Series {
+        Series::tanh(self)
+    }
+}
+
+/// Batched truncated Taylor series (an SoA `[rows, cols]` matrix per
+/// coefficient): model activations are `[B, 1]` columns, so one generic
+/// forward pass evaluates the whole active set.
+impl Value for SeriesVec {
+    fn lift(&self, a: f64) -> SeriesVec {
+        SeriesVec::fill(a, self.rows(), self.cols(), self.order())
+    }
+
+    fn add(&self, o: &SeriesVec) -> SeriesVec {
+        SeriesVec::add(self, o)
+    }
+
+    fn sub(&self, o: &SeriesVec) -> SeriesVec {
+        SeriesVec::sub(self, o)
+    }
+
+    fn mul(&self, o: &SeriesVec) -> SeriesVec {
+        SeriesVec::mul(self, o)
+    }
+
+    fn scale(&self, a: f64) -> SeriesVec {
+        SeriesVec::scale(self, a)
+    }
+
+    fn tanh(&self) -> SeriesVec {
+        SeriesVec::tanh(self)
+    }
+}

@@ -1,0 +1,304 @@
+//! Truncated Taylor series *over* an arbitrary [`Value`] carrier, plus the
+//! value-generic ODE-solution jet.
+//!
+//! [`SeriesOf<T>`] applies the scalar propagation rules of
+//! [`crate::taylor::Series`] with coefficients in `T` instead of `f64`.
+//! With `T = f64` it reproduces the scalar series; with
+//! `T = `[`Var`](crate::autodiff::Var) every coefficient is a reverse-mode
+//! tape node, so [`ode_jet_values`] — Algorithm 1 with value coefficients —
+//! makes the Taylor-mode `R_K` integrand itself differentiable: the
+//! discrete-adjoint backward pass seeds the K-th derivative's square and
+//! gets exact parameter cotangents through the whole jet recursion.
+//!
+//! ```
+//! use taynode::nn::{ode_jet_values, SeriesOf};
+//!
+//! // dz/dt = z with f64 coefficients: every derivative equals z0.
+//! let jets = ode_jet_values(
+//!     &mut |z: &[SeriesOf<f64>], _t: &SeriesOf<f64>| vec![z[0].clone()],
+//!     &[2.0f64],
+//!     &0.0,
+//!     3,
+//! );
+//! for x in &jets {
+//!     assert_eq!(x[0], 2.0);
+//! }
+//! ```
+
+use super::Value;
+use crate::taylor::factorial;
+
+/// A truncated Taylor polynomial `sum_k c[k] t^k` with coefficients in any
+/// [`Value`] carrier.
+#[derive(Clone, Debug)]
+pub struct SeriesOf<T> {
+    c: Vec<T>,
+}
+
+impl<T: Value> SeriesOf<T> {
+    pub fn new(c: Vec<T>) -> SeriesOf<T> {
+        assert!(!c.is_empty(), "SeriesOf needs at least the order-0 coefficient");
+        SeriesOf { c }
+    }
+
+    /// A constant series: `x` at order 0, zeros (of `x`'s shape) above.
+    pub fn constant(x: T, order: usize) -> SeriesOf<T> {
+        let zero = x.lift(0.0);
+        let mut c = Vec::with_capacity(order + 1);
+        c.push(x);
+        for _ in 0..order {
+            c.push(zero.clone());
+        }
+        SeriesOf { c }
+    }
+
+    /// The independent variable itself: `t0 + 1·t`.
+    pub fn time(t0: T, order: usize) -> SeriesOf<T> {
+        let one = t0.lift(1.0);
+        let zero = t0.lift(0.0);
+        let mut c = Vec::with_capacity(order + 1);
+        c.push(t0);
+        if order >= 1 {
+            c.push(one);
+        }
+        for _ in 1..order {
+            c.push(zero.clone());
+        }
+        SeriesOf { c }
+    }
+
+    pub fn order(&self) -> usize {
+        self.c.len() - 1
+    }
+
+    pub fn coeff(&self, k: usize) -> &T {
+        &self.c[k]
+    }
+}
+
+/// The scalar propagation rules of [`crate::taylor::Series`], coefficient
+/// arithmetic delegated to `T` — so a `SeriesOf<Var>` records every
+/// coefficient operation on the tape.
+impl<T: Value> Value for SeriesOf<T> {
+    fn lift(&self, a: f64) -> Self {
+        SeriesOf::constant(self.c[0].lift(a), self.order())
+    }
+
+    fn add(&self, o: &Self) -> Self {
+        assert_eq!(self.order(), o.order(), "SeriesOf::add: order mismatch");
+        let c = self.c.iter().zip(&o.c).map(|(a, b)| a.add(b)).collect();
+        SeriesOf { c }
+    }
+
+    fn sub(&self, o: &Self) -> Self {
+        assert_eq!(self.order(), o.order(), "SeriesOf::sub: order mismatch");
+        let c = self.c.iter().zip(&o.c).map(|(a, b)| a.sub(b)).collect();
+        SeriesOf { c }
+    }
+
+    /// Truncated Cauchy product (Table 1 row 2), inner terms in the scalar
+    /// operation order (ascending j).
+    fn mul(&self, o: &Self) -> Self {
+        assert_eq!(self.order(), o.order(), "SeriesOf::mul: order mismatch");
+        let k1 = self.c.len();
+        let mut out = Vec::with_capacity(k1);
+        for k in 0..k1 {
+            let mut acc = self.c[0].mul(&o.c[k]);
+            for j in 1..=k {
+                acc = acc.add(&self.c[j].mul(&o.c[k - j]));
+            }
+            out.push(acc);
+        }
+        SeriesOf { c: out }
+    }
+
+    fn scale(&self, a: f64) -> Self {
+        let c = self.c.iter().map(|x| x.scale(a)).collect();
+        SeriesOf { c }
+    }
+
+    /// tanh via the ODE s' = (1 - s²) z', coefficients in `T`.
+    fn tanh(&self) -> Self {
+        let k1 = self.c.len();
+        let mut s: Vec<T> = Vec::with_capacity(k1);
+        s.push(self.c[0].tanh());
+        for k in 1..k1 {
+            let mut acc: Option<T> = None;
+            for j in 1..=k {
+                let m = k - j;
+                // u[m] = delta_{m0} - (s*s)[m], with s[0..=m] already known
+                let mut ssm = s[0].mul(&s[m]);
+                for i in 1..=m {
+                    ssm = ssm.add(&s[i].mul(&s[m - i]));
+                }
+                let u = if m == 0 { ssm.lift(1.0).sub(&ssm) } else { ssm.scale(-1.0) };
+                let term = self.c[j].scale(j as f64).mul(&u);
+                acc = Some(match acc {
+                    Some(a) => a.add(&term),
+                    None => term,
+                });
+            }
+            s.push(acc.expect("k >= 1 always yields a term").scale(1.0 / k as f64));
+        }
+        SeriesOf { c: s }
+    }
+}
+
+/// Derivative coefficients `[x_1, ..., x_order]` (each a length-n vector of
+/// `T`) of the solution of dz/dt = f(z, t) through `(z0, t0)` — Algorithm 1
+/// with [`Value`] coefficients, mirroring
+/// [`ode_jet`](crate::taylor::ode_jet) / the batched
+/// [`ode_jet_batch`](crate::taylor::ode_jet_batch).
+///
+/// With `T = `[`Var`](crate::autodiff::Var), the returned jets are tape
+/// nodes: seeding a cotangent on (a function of) `x_K` back-propagates
+/// through the whole Taylor-mode recursion, including every inner `f`
+/// evaluation — exact reverse-over-Taylor, no truncation.
+pub fn ode_jet_values<T, F>(f: &mut F, z0: &[T], t0: &T, order: usize) -> Vec<Vec<T>>
+where
+    T: Value,
+    F: FnMut(&[SeriesOf<T>], &SeriesOf<T>) -> Vec<SeriesOf<T>>,
+{
+    let n = z0.len();
+    assert!(n > 0, "ode_jet_values: state must be non-empty");
+    assert!(order >= 1, "ode_jet_values: order must be >= 1");
+    let mut x: Vec<Vec<T>> = Vec::with_capacity(order);
+    // x_1 = f(z0, t0)
+    let zs: Vec<SeriesOf<T>> = z0.iter().map(|z| SeriesOf::constant(z.clone(), 0)).collect();
+    let y = f(&zs, &SeriesOf::time(t0.clone(), 0));
+    assert_eq!(y.len(), n, "ode_jet_values: f output arity");
+    x.push(y.into_iter().map(|s| s.c[0].clone()).collect());
+    for k in 1..order {
+        // The k-truncated solution path: [z0, x_1/1!, ..., x_k/k!].
+        let zs: Vec<SeriesOf<T>> = (0..n)
+            .map(|i| {
+                let mut c: Vec<T> = Vec::with_capacity(k + 1);
+                c.push(z0[i].clone());
+                for (j, xj) in x.iter().enumerate() {
+                    c.push(xj[i].scale(1.0 / factorial(j + 1)));
+                }
+                SeriesOf::new(c)
+            })
+            .collect();
+        let y = f(&zs, &SeriesOf::time(t0.clone(), k));
+        assert_eq!(y.len(), n, "ode_jet_values: f output arity");
+        // dz/dt = y  =>  x_{k+1} = k! * y_[k]
+        let fct = factorial(k);
+        x.push(y.into_iter().map(|s| s.c[k].scale(fct)).collect());
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taylor::{ode_jet, Series};
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn to_f64_series(s: &Series) -> SeriesOf<f64> {
+        SeriesOf::new(s.c.clone())
+    }
+
+    #[test]
+    fn generic_ops_match_scalar_series_property() {
+        // SeriesOf<f64> must reproduce the taylor::Series propagation rules
+        // (tolerance-level: the generic code uses scale where the scalar
+        // uses division, which differs in the last ulp).
+        Prop::new(80).run("seriesof-vs-series", |rng: &mut Pcg, _| {
+            let k = 1 + rng.below(5);
+            let a = Series::new(gen::vec_f64(rng, k + 1, -1.5, 1.5));
+            let b = Series::new(gen::vec_f64(rng, k + 1, -1.5, 1.5));
+            let (ga, gb) = (to_f64_series(&a), to_f64_series(&b));
+            let checks: [(Series, SeriesOf<f64>); 5] = [
+                (a.add(&b), ga.add(&gb)),
+                (a.sub(&b), ga.sub(&gb)),
+                (a.mul(&b), ga.mul(&gb)),
+                (a.scale(0.7), ga.scale(0.7)),
+                (a.tanh(), ga.tanh()),
+            ];
+            for (want, got) in &checks {
+                for (j, w) in want.c.iter().enumerate() {
+                    assert!(
+                        close(*got.coeff(j), *w, 1e-12),
+                        "coeff {j}: {} vs {w}",
+                        got.coeff(j)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn jet_matches_scalar_ode_jet_property() {
+        // ode_jet_values with T = f64 must agree with taylor::ode_jet on
+        // random nonlinear dynamics, orders, and expansion points.
+        Prop::new(60).run("jet-values-vs-scalar", |rng: &mut Pcg, _| {
+            let order = 1 + rng.below(5);
+            let z0 = rng.range(-1.2, 1.2) as f64;
+            let t0 = rng.range(-1.0, 1.0) as f64;
+            let (a, w) = (rng.range(-1.0, 1.0) as f64, rng.range(0.5, 2.0) as f64);
+            // dz/dt = a·tanh(z) + w·z·t, written once per series flavor with
+            // the same op sequence.
+            let scalar = ode_jet(
+                |z: &Series, t: &Series| z.tanh().scale(a).add(&z.mul(t).scale(w)),
+                z0,
+                t0,
+                order,
+            );
+            let generic = ode_jet_values(
+                &mut |z: &[SeriesOf<f64>], t: &SeriesOf<f64>| {
+                    vec![z[0].tanh().scale(a).add(&z[0].mul(t).scale(w))]
+                },
+                &[z0],
+                &t0,
+                order,
+            );
+            assert_eq!(generic.len(), order);
+            for (k, want) in scalar.iter().enumerate() {
+                assert!(
+                    close(generic[k][0], *want, 1e-10),
+                    "order {k}: {} vs {want}",
+                    generic[k][0]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn jet_multi_dim_coupled_system() {
+        // (x, v)' = (v, -x) through (1, 0) at t = 0: x^(k) cycles
+        // 1, 0, -1, 0 and v^(k) cycles 0, -1, 0, 1.
+        let jets = ode_jet_values(
+            &mut |z: &[SeriesOf<f64>], _t: &SeriesOf<f64>| {
+                vec![z[1].clone(), z[0].scale(-1.0)]
+            },
+            &[1.0f64, 0.0],
+            &0.0,
+            4,
+        );
+        let want_x = [0.0, -1.0, 0.0, 1.0];
+        let want_v = [-1.0, 0.0, 1.0, 0.0];
+        for k in 0..4 {
+            assert!(close(jets[k][0], want_x[k], 1e-12), "x order {k}");
+            assert!(close(jets[k][1], want_v[k], 1e-12), "v order {k}");
+        }
+    }
+
+    #[test]
+    fn time_and_constant_builders() {
+        let t = SeriesOf::time(0.5f64, 3);
+        assert_eq!(t.order(), 3);
+        assert_eq!(*t.coeff(0), 0.5);
+        assert_eq!(*t.coeff(1), 1.0);
+        assert_eq!(*t.coeff(2), 0.0);
+        let c = SeriesOf::constant(2.0f64, 0);
+        assert_eq!(c.order(), 0);
+        let l = c.lift(7.0);
+        assert_eq!(*l.coeff(0), 7.0);
+    }
+}

@@ -82,9 +82,13 @@ impl XlaDynamics {
         self.batch * self.dim
     }
 
+    /// The single NFE hot-path implementation: parameters/probes are bound
+    /// once at construction, only the state and time literals are created
+    /// per call, and the output tuple element is copied straight into the
+    /// solver's stage buffer (no Vec allocation per NFE — §Perf L3a).  The
+    /// old allocating `run` variant is gone; every caller goes through the
+    /// `Dynamics` impl below.
     fn run_into(&mut self, t: f32, y: &[f32], dy: &mut [f32]) -> Result<()> {
-        // §Perf L3a iteration 2: copy the output tuple element straight into
-        // the solver's stage buffer (no Vec allocation per NFE).
         let state_lit = literal_f32(&self.state_shape, y)?;
         let t_lit = Literal::scalar(t);
         let inputs: Vec<&Literal> = self
@@ -100,26 +104,6 @@ impl XlaDynamics {
         let out = self.exec.run(&inputs)?;
         out[0].copy_raw_to(dy)?;
         Ok(())
-    }
-
-    #[allow(dead_code)]
-    fn run(&mut self, t: f32, y: &[f32]) -> Result<Vec<f32>> {
-        // Parameters/probes are bound once at construction; only the state
-        // and time literals are created per call (no param copies per NFE).
-        let state_lit = literal_f32(&self.state_shape, y)?;
-        let t_lit = Literal::scalar(t);
-        let inputs: Vec<&Literal> = self
-            .slots
-            .iter()
-            .map(|s| match s {
-                Slot::Fixed(l) => l,
-                Slot::State => &state_lit,
-                Slot::Time => &t_lit,
-            })
-            .collect();
-        self.calls += 1;
-        let out = self.exec.run(&inputs)?;
-        Ok(out[0].to_vec::<f32>()?)
     }
 }
 

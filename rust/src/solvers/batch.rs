@@ -714,6 +714,28 @@ pub fn solve_fixed_batch_mut<F: BatchDynamics>(
     steps: usize,
     tb: &Tableau,
 ) -> (Vec<f32>, Vec<usize>) {
+    let b = y0.len() / f.dim().max(1);
+    let (y, stages) = fixed_batch_drive(f, t0, t1, y0, steps, tb, None);
+    if b == 0 {
+        return (y, vec![]);
+    }
+    (y, vec![steps * stages; b])
+}
+
+/// The single fixed-grid stage loop behind [`solve_fixed_batch`] and
+/// [`solve_fixed_batch_record`]: recording is a pure observer (clones of
+/// stage inputs), so the two entry points are arithmetically identical
+/// **by construction**, not by parallel maintenance.  Returns the final
+/// state and the stage count.
+fn fixed_batch_drive<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+    mut rec: Option<&mut FixedGridRecord>,
+) -> (Vec<f32>, usize) {
     assert!(steps > 0);
     let n = f.dim();
     assert!(n > 0, "BatchDynamics::dim() must be positive");
@@ -728,7 +750,7 @@ pub fn solve_fixed_batch_mut<F: BatchDynamics>(
     let mut tstage = vec![0.0f32; b];
     let ids: Vec<usize> = (0..b).collect();
     if b == 0 {
-        return (y, vec![]);
+        return (y, tbf.stages);
     }
 
     for s in 0..steps {
@@ -736,6 +758,12 @@ pub fn solve_fixed_batch_mut<F: BatchDynamics>(
         // stage 0
         for ts in tstage.iter_mut() {
             *ts = t;
+        }
+        if let Some(r) = &mut rec {
+            r.stage_t.push(Vec::with_capacity(tbf.stages));
+            r.stage_y.push(Vec::with_capacity(tbf.stages));
+            r.stage_t.last_mut().unwrap().push(t);
+            r.stage_y.last_mut().unwrap().push(y.clone());
         }
         {
             let (k0, _) = ks.split_at_mut(1);
@@ -756,6 +784,10 @@ pub fn solve_fixed_batch_mut<F: BatchDynamics>(
             for ts in tstage.iter_mut() {
                 *ts = tc;
             }
+            if let Some(r) = &mut rec {
+                r.stage_t.last_mut().unwrap().push(tc);
+                r.stage_y.last_mut().unwrap().push(ystage.clone());
+            }
             let (_, rest) = ks.split_at_mut(i + 1);
             f.eval(&ids, &tstage, &ystage, &mut rest[0]);
         }
@@ -769,7 +801,71 @@ pub fn solve_fixed_batch_mut<F: BatchDynamics>(
         }
         std::mem::swap(&mut y, &mut ynew);
     }
-    (y, vec![steps * tbf.stages; b])
+    (y, tbf.stages)
+}
+
+/// Everything the discrete-adjoint backward pass needs from a fixed-grid
+/// forward solve: every stage's input state and time, cached as the solve
+/// runs.  Recording and plain solving share ONE stage loop
+/// (`fixed_batch_drive`), so the final state is bit-identical to
+/// [`solve_fixed_batch`] by construction (pinned by a regression test
+/// below) — recording only adds copies, never changes the arithmetic.
+#[derive(Clone, Debug)]
+pub struct FixedGridRecord {
+    /// Per-trajectory state dimension of the recorded system.
+    pub n: usize,
+    /// Number of trajectories.
+    pub batch: usize,
+    pub steps: usize,
+    pub t0: f32,
+    /// Uniform step size (t1 - t0) / steps.
+    pub dt: f32,
+    /// Stage times, `[steps][stages]` (the grid is shared by every row).
+    pub stage_t: Vec<Vec<f32>>,
+    /// Stage input states, `[steps][stages]`, each row-major `[B, n]` —
+    /// stage 0's input is the step's starting state.
+    pub stage_y: Vec<Vec<Vec<f32>>>,
+    /// Final states, row-major `[B, n]`.
+    pub y: Vec<f32>,
+    /// Per-trajectory NFE spent (steps · stages).
+    pub nfe: usize,
+}
+
+/// [`solve_fixed_batch`] with stage-state caching — the forward half of the
+/// discrete adjoint (`coordinator::train_native`).  The backward pass
+/// re-evaluates the dynamics on a reverse-mode tape at exactly these cached
+/// `(state, time)` pairs, so no checkpointing/recomputation scheme is
+/// needed at fixed-grid training scale.
+pub fn solve_fixed_batch_record<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> FixedGridRecord {
+    assert!(steps > 0);
+    let n = f.dim();
+    assert!(n > 0, "BatchDynamics::dim() must be positive");
+    assert_eq!(y0.len() % n, 0, "batch state length vs dim");
+    let b = y0.len() / n;
+    let mut rec = FixedGridRecord {
+        n,
+        batch: b,
+        steps,
+        t0,
+        dt: (t1 - t0) / steps as f32,
+        stage_t: Vec::with_capacity(steps),
+        stage_y: Vec::with_capacity(steps),
+        y: vec![],
+        nfe: 0,
+    };
+    let (y, stages) = fixed_batch_drive(f, t0, t1, y0, steps, tb, Some(&mut rec));
+    rec.y = y;
+    if b > 0 {
+        rec.nfe = steps * stages;
+    }
+    rec
 }
 
 /// Batched grid-output solve (the latent-ODE evaluation path): adaptively
@@ -1015,6 +1111,49 @@ mod tests {
                         tb.name
                     );
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn record_driver_matches_fixed_batch_bit_for_bit() {
+        // Recording must not change the arithmetic: final states equal
+        // solve_fixed_batch exactly, and the cache has the right shape
+        // (stage 0's input is the step's starting state).
+        Prop::new(30).run("record-vs-fixed", |rng: &mut Pcg, case| {
+            let names = tableau::ALL;
+            let tb = tableau::by_name(names[case % names.len()]).unwrap();
+            let n = 1 + rng.below(3);
+            let b = 1 + rng.below(4);
+            let steps = 1 + rng.below(5);
+            let y0 = gen::vec_f32(rng, b * n, 1.0);
+            let (w, a, c) = (rng.range(1.0, 10.0), rng.range(0.2, 1.5), rng.range(-1.0, 1.0));
+            let (yb, nfes) = solve_fixed_batch(
+                Rowwise::new(test_dynamics(w, a, c), n),
+                0.0,
+                1.0,
+                &y0,
+                steps,
+                &tb,
+            );
+            let mut dynr = Rowwise::new(test_dynamics(w, a, c), n);
+            let rec = solve_fixed_batch_record(&mut dynr, 0.0, 1.0, &y0, steps, &tb);
+            assert_eq!(rec.batch, b);
+            assert_eq!(rec.steps, steps);
+            assert_eq!(rec.nfe, nfes[0], "{}", tb.name);
+            assert_eq!(rec.stage_t.len(), steps);
+            assert_eq!(rec.stage_y.len(), steps);
+            for s in 0..steps {
+                assert_eq!(rec.stage_t[s].len(), tb.stages);
+                assert_eq!(rec.stage_y[s].len(), tb.stages);
+                for u in &rec.stage_y[s] {
+                    assert_eq!(u.len(), b * n);
+                }
+            }
+            // stage 0 of step 0 is the initial state
+            assert_eq!(rec.stage_y[0][0], y0);
+            for (i, (ya, yw)) in rec.y.iter().zip(&yb).enumerate() {
+                assert_eq!(ya.to_bits(), yw.to_bits(), "{} y[{i}]", tb.name);
             }
         });
     }

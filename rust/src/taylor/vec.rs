@@ -115,6 +115,44 @@ impl SeriesVec {
         self.rows * self.cols
     }
 
+    /// Extract one state dimension as a `[rows, 1]` column series — how the
+    /// value-generic model forward (`nn::Mlp`) consumes a `[rows, n]` batch:
+    /// activations are columns, elementwise ops cover the whole batch.
+    pub fn col(&self, j: usize) -> SeriesVec {
+        assert!(j < self.cols, "col {j} out of {} columns", self.cols);
+        let c = self
+            .c
+            .iter()
+            .map(|ck| (0..self.rows).map(|r| ck[r * self.cols + j]).collect())
+            .collect();
+        SeriesVec { rows: self.rows, cols: 1, c }
+    }
+
+    /// Reassemble `[rows, 1]` column series into one `[rows, n]` batch —
+    /// the inverse of per-column [`col`](SeriesVec::col) extraction.
+    pub fn from_cols(cols: &[SeriesVec]) -> SeriesVec {
+        assert!(!cols.is_empty(), "from_cols needs at least one column");
+        let rows = cols[0].rows;
+        let ord = cols[0].order();
+        let n = cols.len();
+        for (j, cj) in cols.iter().enumerate() {
+            assert_eq!(cj.cols, 1, "from_cols: column {j} is not single-column");
+            assert_eq!(cj.rows, rows, "from_cols: column {j} row mismatch");
+            assert_eq!(cj.order(), ord, "from_cols: column {j} order mismatch");
+        }
+        let mut c = Vec::with_capacity(ord + 1);
+        for k in 0..=ord {
+            let mut out = Vec::with_capacity(rows * n);
+            for r in 0..rows {
+                for cj in cols {
+                    out.push(cj.c[k][r]);
+                }
+            }
+            c.push(out);
+        }
+        SeriesVec { rows, cols: n, c }
+    }
+
     /// Replicate a single-column batch across `cols` columns — how per-row
     /// time series meet `[rows, n]` states in elementwise vector fields.
     pub fn broadcast_cols(&self, cols: usize) -> SeriesVec {
@@ -716,6 +754,32 @@ mod tests {
                 assert!(xk[r].abs() < 1e-12, "row {r}: {:?}", xk);
             }
         }
+    }
+
+    #[test]
+    fn col_from_cols_roundtrip_property() {
+        Prop::new(40).run("col-roundtrip", |rng: &mut Pcg, _| {
+            let rows = 1 + rng.below(4);
+            let cols = 1 + rng.below(4);
+            let ord = 1 + rng.below(4);
+            let v = random_vec(rng, rows, cols, ord, -2.0, 2.0);
+            let split: Vec<SeriesVec> = (0..cols).map(|j| v.col(j)).collect();
+            for (j, cj) in split.iter().enumerate() {
+                assert_eq!(cj.rows(), rows);
+                assert_eq!(cj.cols(), 1);
+                for k in 0..=ord {
+                    for r in 0..rows {
+                        assert_eq!(
+                            cj.coeff(k)[r].to_bits(),
+                            v.coeff(k)[r * cols + j].to_bits(),
+                            "col {j} order {k} row {r}"
+                        );
+                    }
+                }
+            }
+            let back = SeriesVec::from_cols(&split);
+            assert_eq!(back, v);
+        });
     }
 
     #[test]

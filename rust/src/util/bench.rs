@@ -64,6 +64,10 @@ impl Table {
         self.rows.push(cells);
     }
 
+    pub fn row_count(&self) -> usize {
+        self.rows.len()
+    }
+
     pub fn print(&self) {
         let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {

@@ -158,3 +158,38 @@ fn cnf_eval_runs_and_latent_eval_runs() {
         .unwrap();
     assert!(lev.nfe > 0 && lev.mse.is_finite());
 }
+
+#[test]
+fn native_training_end_to_end_without_artifacts() {
+    // The native subsystem needs no runtime: MLP dynamics, discrete
+    // adjoint, Adam, then adaptive evaluation through the batched engine —
+    // the full train-then-measure loop of the paper, in the stub build.
+    use taynode::coordinator::train_native::NativeTrainer;
+    use taynode::nn::Mlp;
+
+    let mut rng = Pcg::new(3);
+    let x0: Vec<f32> = (0..12).map(|_| rng.range(-1.0, 1.0)).collect();
+    let targets: Vec<f32> = x0.iter().map(|x| x + x * x * x).collect();
+    let mlp = Mlp::new(1, &[8], true, 1);
+    let mut tr = NativeTrainer::new(mlp, None, 2, 0.5, 4, tableau::rk4(), 0.02);
+    let first = tr.step_mse(&x0, &targets);
+    let mut last = first.clone();
+    for _ in 0..20 {
+        last = tr.step_mse(&x0, &targets);
+    }
+    assert!(first.loss.is_finite() && last.loss.is_finite());
+    assert!(last.nfe > 0);
+    let ev = tr.eval_rk(&x0, &tableau::dopri5(), &AdaptiveOpts::default());
+    assert_eq!(ev.r_k.len(), 12);
+    assert!(ev.stats.iter().all(|s| s.nfe > 0));
+    assert!(ev.y.iter().all(|v| v.is_finite()));
+
+    // The training loop must not diverge (a small transient overshoot is
+    // tolerated; strict descent is asserted by the train_native tests).
+    assert!(
+        last.loss <= first.loss * 1.1 + 1e-3,
+        "loss diverged over 20 steps: {} -> {}",
+        first.loss,
+        last.loss
+    );
+}
