@@ -12,3 +12,14 @@ artifacts:
 .PHONY: train-demo
 train-demo:
 	cargo run --release --example train_native
+
+# Machine-readable perf trajectory: run the parallel-engine benches and
+# accumulate ops/sec, speedup vs serial, and the worker count into
+# BENCH_parallel.json (each bench merge-writes its own section).  Honor
+# TAYNODE_THREADS if set; equality with the serial path is asserted inside
+# the benches before anything is timed.
+.PHONY: bench-json
+bench-json:
+	rm -f BENCH_parallel.json
+	cargo bench --bench perf_batch -- --json BENCH_parallel.json
+	cargo bench --bench perf_train_native -- --json BENCH_parallel.json

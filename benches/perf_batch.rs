@@ -20,13 +20,22 @@
 //! (`RegularizedBatchDynamics` + `taylor::ode_jet_batch`) against the
 //! per-row scalar-jet loop it replaces — same staging-cost model, per-row
 //! results asserted bit-identical before anything is timed.
+//!
+//! A third section benchmarks the worker-pool sharded engine
+//! (`solve_adaptive_batch_pooled`) against the serial batched driver at
+//! B = 256 on compute-bound native dynamics (the pooled path's target
+//! shape) — results asserted bit-identical per trajectory first, speedup
+//! gated ≥ 2x when ≥ 4 workers are available.  `--json <path>` appends the
+//! machine-readable numbers (see `make bench-json`).
 
 use taynode::coordinator::batch_rk_eval;
 use taynode::solvers::adaptive::{solve_adaptive, solve_adaptive_mut, AdaptiveOpts, SolveStats};
-use taynode::solvers::batch::{solve_adaptive_batch_mut, BatchDynamics};
+use taynode::solvers::batch::{solve_adaptive_batch_mut, solve_adaptive_batch_pooled, BatchDynamics};
 use taynode::solvers::{tableau, Dynamics};
 use taynode::taylor::{ode_jet, ode_jet_batch, BatchSeriesDynamics, Series, SeriesVec};
-use taynode::util::bench::{fmt_secs, report, time_fn};
+use taynode::util::bench::{fmt_secs, json_path_arg, merge_bench_json, report, time_fn};
+use taynode::util::json::Json;
+use taynode::util::pool::Pool;
 use taynode::util::rng::Pcg;
 
 const B: usize = 64;
@@ -101,6 +110,50 @@ impl BatchDynamics for ServingDynamics {
         self.launch();
         for (r, tr) in t.iter().enumerate() {
             dy[r] = self.f(*tr, y[r]);
+        }
+    }
+}
+
+/// Batch size of the sharded-engine section (the acceptance shape).
+const POOL_B: usize = 256;
+/// Hidden width of the compute-bound pooled dynamics.
+const POOL_HIDDEN: usize = 64;
+
+/// Compute-bound native dynamics for the sharded-engine benchmark: a wider
+/// per-row MLP with NO per-launch dispatch cost — the pooled path's target
+/// shape (in-process models whose cost is arithmetic, so splitting the
+/// batch across workers splits real work; launch-shaped dynamics should
+/// stay on the serial driver, which amortizes dispatch instead).
+#[derive(Clone)]
+struct ComputeDynamics {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+}
+
+impl ComputeDynamics {
+    fn new(seed: u64) -> ComputeDynamics {
+        let mut rng = Pcg::new(seed);
+        ComputeDynamics {
+            w1: (0..POOL_HIDDEN).map(|_| rng.range(-1.5, 1.5)).collect(),
+            b1: (0..POOL_HIDDEN).map(|_| rng.range(-0.5, 0.5)).collect(),
+            w2: (0..POOL_HIDDEN).map(|_| rng.range(-0.7, 0.7)).collect(),
+        }
+    }
+}
+
+impl BatchDynamics for ComputeDynamics {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        for (r, tr) in t.iter().enumerate() {
+            let mut acc = 0.0f32;
+            for j in 0..POOL_HIDDEN {
+                acc += self.w2[j] * (self.w1[j] * y[r] + self.b1[j] + 0.1 * tr).tanh();
+            }
+            dy[r] = acc;
         }
     }
 }
@@ -389,4 +442,85 @@ fn main() {
          scalar-jet loop at B=64 (got {jet_speedup:.2}x)"
     );
     println!("\njet acceptance (>= 2x at B=64): PASS");
+
+    // -- worker-pool sharding vs the serial batched driver at B=256 --------
+    let pool = Pool::from_env();
+    println!(
+        "\n== sharded engine (worker pool, {} thread(s)) ==",
+        pool.threads()
+    );
+    let mut rng = Pcg::new(29);
+    let xp: Vec<f32> = (0..POOL_B).map(|_| rng.range(-1.2, 1.2)).collect();
+    let fp = ComputeDynamics::new(17);
+
+    // correctness first: per-trajectory bit-identity at several thread
+    // counts, including the environment's
+    let mut serial_f = fp.clone();
+    let sres = solve_adaptive_batch_mut(&mut serial_f, 0.0, 1.0, &xp, &tb, &opts);
+    for threads in [2usize, 4, pool.threads()] {
+        let check = Pool::new(threads.max(1));
+        let pres = solve_adaptive_batch_pooled(&check, &fp, 0.0, 1.0, &xp, &tb, &opts);
+        assert_eq!(sres.nfes(), pres.nfes(), "pooled NFE threads={threads}");
+        for r in 0..POOL_B {
+            assert_eq!(
+                sres.row(r)[0].to_bits(),
+                pres.row(r)[0].to_bits(),
+                "pooled row {r} must be bit-identical at {threads} threads"
+            );
+        }
+    }
+    println!("pooled == serial bit-for-bit at B={POOL_B} (threads 2, 4, env)");
+
+    let mut f_serial = fp.clone();
+    let s_serial = time_fn(3, 20, || {
+        let res = solve_adaptive_batch_mut(&mut f_serial, 0.0, 1.0, &xp, &tb, &opts);
+        std::hint::black_box(res.stats.len());
+    });
+    report(&format!("serial batched engine (B={POOL_B})"), &s_serial);
+    let s_pooled = time_fn(3, 20, || {
+        let res = solve_adaptive_batch_pooled(&pool, &fp, 0.0, 1.0, &xp, &tb, &opts);
+        std::hint::black_box(res.stats.len());
+    });
+    report(&format!("pooled batched engine (B={POOL_B})"), &s_pooled);
+    let pool_speedup = s_serial.mean / s_pooled.mean;
+    let serial_tps = POOL_B as f64 / s_serial.mean;
+    let pooled_tps = POOL_B as f64 / s_pooled.mean;
+    println!(
+        "\nsharded speedup over serial at B={POOL_B}: {pool_speedup:.2}x \
+         ({:.0} -> {:.0} trajectories/sec, {} worker(s))",
+        serial_tps,
+        pooled_tps,
+        pool.threads()
+    );
+    if pool.threads() >= 4 {
+        assert!(
+            pool_speedup >= 2.0,
+            "acceptance: sharded engine must be >= 2x over serial at \
+             B={POOL_B} with >= 4 workers (got {pool_speedup:.2}x)"
+        );
+        println!("pool acceptance (>= 2x at B={POOL_B}, >= 4 workers): PASS");
+    } else {
+        println!(
+            "pool acceptance gate skipped: only {} worker(s) available \
+             (needs >= 4)",
+            pool.threads()
+        );
+    }
+
+    if let Some(path) = json_path_arg() {
+        merge_bench_json(&path, "threads", Json::num(pool.threads() as f64));
+        merge_bench_json(
+            &path,
+            "perf_batch",
+            Json::obj(vec![
+                ("b", Json::num(POOL_B as f64)),
+                ("serial_trajs_per_sec", Json::num(serial_tps)),
+                ("pooled_trajs_per_sec", Json::num(pooled_tps)),
+                ("speedup_vs_serial", Json::num(pool_speedup)),
+                ("batched_vs_per_example_speedup", Json::num(speedup)),
+                ("jet_speedup", Json::num(jet_speedup)),
+            ]),
+        );
+        println!("\nwrote perf_batch section to {path}");
+    }
 }

@@ -1,21 +1,28 @@
-//! §Perf: the native discrete-adjoint training step.
+//! §Perf: the native discrete-adjoint training step, serial vs worker-pool.
 //!
 //! Reports the forward (recorded fixed-grid solve of the quadrature-
-//! augmented system) and the full train step (forward + per-stage tape
-//! VJPs + Adam) separately, at two model shapes: the 1-D toy and a
-//! projected-MNIST-sized state.  The adjoint/forward overhead (full step
-//! minus its forward half, over the forward) is the cost of
-//! reverse-over-Taylor on the tape — the number to watch when optimizing
-//! the tape (node pooling, SIMD columns, fewer zero-coefficient nodes).
+//! augmented system), the serial full train step, and the pooled full
+//! train step (sharded forward + sharded per-stage tape VJPs + Adam) at
+//! three model shapes: the 1-D toy, and a projected-MNIST-sized state at
+//! K = 2 and K = 3.  The
+//! adjoint/forward overhead (full step minus its forward half, over the
+//! forward) is the cost of reverse-over-Taylor on the tape — the number to
+//! watch when optimizing the tape (arena reuse, fewer zero-coefficient
+//! nodes, SIMD columns).
 //!
 //! Correctness is asserted before anything is timed: adjoint gradients are
-//! finite and nonzero (their FD equivalence is property-tested in
-//! `coordinator::train_native`).
+//! finite and nonzero, and the pooled step's loss and gradients are
+//! **bit-identical** to the single-thread step (their FD equivalence is
+//! property-tested in `coordinator::train_native`).  The ≥ 1.5x pooled
+//! speedup gate applies when ≥ 4 workers are available.  `--json <path>`
+//! appends the machine-readable numbers (see `make bench-json`).
 
 use taynode::coordinator::train_native::NativeTrainer;
 use taynode::nn::Mlp;
 use taynode::solvers::tableau;
-use taynode::util::bench::{report, time_fn};
+use taynode::util::bench::{json_path_arg, merge_bench_json, report, time_fn};
+use taynode::util::json::Json;
+use taynode::util::pool::Pool;
 use taynode::util::rng::Pcg;
 
 fn batch(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -25,16 +32,32 @@ fn batch(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
     (x0, targets)
 }
 
-fn bench_shape(name: &str, dim: usize, hidden: &[usize], b: usize, order: usize) {
+struct ShapeResult {
+    key: &'static str,
+    serial_steps_per_sec: f64,
+    pooled_steps_per_sec: f64,
+    speedup: f64,
+}
+
+fn bench_shape(
+    name: &str,
+    key: &'static str,
+    dim: usize,
+    hidden: &[usize],
+    b: usize,
+    order: usize,
+    threads: usize,
+) -> ShapeResult {
     let (x0, targets) = batch(b, dim, 7);
-    let make = || {
+    let make = |thr: usize| {
         let mlp = Mlp::new(dim, hidden, true, 42);
-        NativeTrainer::new(mlp, None, order, 0.1, 8, tableau::rk4(), 0.01)
+        NativeTrainer::new(mlp, None, order, 0.1, 8, tableau::rk4(), 0.01).with_threads(thr)
     };
 
-    // Honesty gate: the step must produce real gradients.
+    // Honesty gates: the step must produce real gradients, and the pooled
+    // step must reproduce the serial one bit-for-bit.
     {
-        let mut tr = make();
+        let mut tr = make(1);
         let (m, grads) = tr.mse_grads(&x0, &targets);
         assert!(m.loss.is_finite(), "{name}: loss not finite");
         assert!(
@@ -45,30 +68,117 @@ fn bench_shape(name: &str, dim: usize, hidden: &[usize], b: usize, order: usize)
             grads.iter().any(|g| g.abs() > 1e-10),
             "{name}: gradients all zero"
         );
+        let mut tp = make(threads);
+        let (mp, gp) = tp.mse_grads(&x0, &targets);
+        assert_eq!(
+            m.loss.to_bits(),
+            mp.loss.to_bits(),
+            "{name}: pooled loss must be bit-identical"
+        );
+        for (i, (a, w)) in gp.iter().zip(&grads).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                w.to_bits(),
+                "{name}: pooled grad[{i}] must be bit-identical"
+            );
+        }
     }
 
-    let mut tr = make();
+    let mut tr = make(threads);
     let fwd = time_fn(2, 8, || {
         std::hint::black_box(tr.forward_record(&x0));
     });
-    report(&format!("{name}: forward record (grid)"), &fwd);
-    let mut tr = make();
-    let step = time_fn(2, 8, || {
-        std::hint::black_box(tr.step_mse(&x0, &targets));
+    report(&format!("{name}: forward record (pooled)"), &fwd);
+    let mut ts = make(1);
+    let step_serial = time_fn(2, 8, || {
+        std::hint::black_box(ts.step_mse(&x0, &targets));
     });
-    report(&format!("{name}: full train step (fwd+adjoint)"), &step);
+    report(&format!("{name}: full step (serial)"), &step_serial);
+    let mut tp = make(threads);
+    let step_pooled = time_fn(2, 8, || {
+        std::hint::black_box(tp.step_mse(&x0, &targets));
+    });
+    report(&format!("{name}: full step (pooled)"), &step_pooled);
     // The adjoint's own cost relative to one forward (the full step minus
-    // its forward half, over the forward).
+    // its forward half, over the forward), plus the pooled speedup.
+    let speedup = step_serial.p50 / step_pooled.p50;
     println!(
-        "{:<44} adjoint/forward overhead ~{:.1}x",
+        "{:<44} adjoint/forward overhead ~{:.1}x, pooled step speedup {:.2}x",
         name,
-        ((step.p50 - fwd.p50) / fwd.p50.max(1e-12)).max(0.0)
+        ((step_pooled.p50 - fwd.p50) / fwd.p50.max(1e-12)).max(0.0),
+        speedup
     );
+    ShapeResult {
+        key,
+        serial_steps_per_sec: 1.0 / step_serial.p50.max(1e-12),
+        pooled_steps_per_sec: 1.0 / step_pooled.p50.max(1e-12),
+        speedup,
+    }
 }
 
 fn main() {
-    println!("== native train-step throughput (K = R_K order) ==");
-    bench_shape("toy 1-d, hidden [16,16], B=64, K=2", 1, &[16, 16], 64, 2);
-    bench_shape("proj-mnist 16-d, hidden [32], B=32, K=2", 16, &[32], 32, 2);
-    bench_shape("proj-mnist 16-d, hidden [32], B=32, K=3", 16, &[32], 32, 3);
+    let pool = Pool::from_env();
+    let threads = pool.threads();
+    println!("== native train-step throughput, serial vs {threads} worker(s) (K = R_K order) ==");
+    let shapes = [
+        bench_shape(
+            "toy 1-d, hidden [16,16], B=64, K=2",
+            "toy_b64_k2",
+            1,
+            &[16, 16],
+            64,
+            2,
+            threads,
+        ),
+        bench_shape(
+            "proj-mnist 16-d, hidden [32], B=32, K=2",
+            "mnist16_b32_k2",
+            16,
+            &[32],
+            32,
+            2,
+            threads,
+        ),
+        bench_shape(
+            "proj-mnist 16-d, hidden [32], B=32, K=3",
+            "mnist16_b32_k3",
+            16,
+            &[32],
+            32,
+            3,
+            threads,
+        ),
+    ];
+
+    if threads >= 4 {
+        let got = shapes[0].speedup;
+        assert!(
+            got >= 1.5,
+            "acceptance: pooled fwd+adjoint step must be >= 1.5x serial \
+             with >= 4 workers (toy B=64: got {got:.2}x)"
+        );
+        println!("\ntrain acceptance (>= 1.5x step speedup, >= 4 workers): PASS");
+    } else {
+        println!(
+            "\ntrain acceptance gate skipped: only {threads} worker(s) \
+             available (needs >= 4)"
+        );
+    }
+
+    if let Some(path) = json_path_arg() {
+        merge_bench_json(&path, "threads", Json::num(threads as f64));
+        let mut sections = Vec::new();
+        for s in &shapes {
+            sections.push((
+                s.key,
+                Json::obj(vec![
+                    ("serial_steps_per_sec", Json::num(s.serial_steps_per_sec)),
+                    ("pooled_steps_per_sec", Json::num(s.pooled_steps_per_sec)),
+                    ("speedup_vs_serial", Json::num(s.speedup)),
+                ]),
+            ));
+        }
+        merge_bench_json(&path, "perf_train_native", Json::obj(sections));
+        println!("wrote perf_train_native section to {path}");
+    }
 }

@@ -11,9 +11,14 @@
 //! per-column cotangents for [`input`](Tape::input) leaves and row-summed
 //! scalar gradients for broadcast [`param`](Tape::param) leaves.
 //!
-//! Each tape is built for one VJP and dropped — the discrete adjoint
-//! (`coordinator::train_native`) constructs one per RK stage from the
-//! cached stage state, so tape lifetime never spans solver steps.
+//! **Storage is a bump arena**: one flat node table (`Vec` of ops) plus one
+//! coefficient slab holding every node's `[rows]` column back to back, so
+//! recording a node is a table push plus a slab extension — no per-node
+//! allocation.  [`Tape::clear`] recycles both buffers for the next
+//! recording (the discrete adjoint builds one tape per RK stage, on the
+//! same arena, per worker shard); clearing bumps an epoch so stale [`Var`]s
+//! from the previous recording panic instead of silently aliasing new
+//! nodes.
 //!
 //! ```
 //! use taynode::autodiff::Tape;
@@ -58,14 +63,21 @@ enum Op {
     Tanh(usize),
 }
 
-struct Node {
-    op: Op,
-    val: Vec<f64>,
-}
-
 struct TapeInner {
     rows: usize,
-    nodes: Vec<Node>,
+    /// Recording generation; bumped by `clear` to invalidate old `Var`s.
+    epoch: u64,
+    /// Flat node table: `ops[k]` is node k's operation.
+    ops: Vec<Op>,
+    /// Bump arena: node k's forward column is `vals[k * rows..(k + 1) * rows]`.
+    vals: Vec<f64>,
+}
+
+impl TapeInner {
+    #[inline]
+    fn col(&self, id: usize) -> &[f64] {
+        &self.vals[id * self.rows..(id + 1) * self.rows]
+    }
 }
 
 /// A recording of elementwise column operations, shared by its [`Var`]s.
@@ -80,12 +92,20 @@ pub struct Tape {
 pub struct Var {
     inner: Rc<RefCell<TapeInner>>,
     id: usize,
+    epoch: u64,
 }
 
 impl Tape {
     /// A fresh tape over `rows`-long batch columns.
     pub fn new(rows: usize) -> Tape {
-        Tape { inner: Rc::new(RefCell::new(TapeInner { rows, nodes: vec![] })) }
+        Tape {
+            inner: Rc::new(RefCell::new(TapeInner {
+                rows,
+                epoch: 0,
+                ops: vec![],
+                vals: vec![],
+            })),
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -94,37 +114,49 @@ impl Tape {
 
     /// Number of recorded nodes (for perf accounting in tests/benches).
     pub fn len(&self) -> usize {
-        self.inner.borrow().nodes.len()
+        self.inner.borrow().ops.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.borrow().nodes.is_empty()
+        self.inner.borrow().ops.is_empty()
+    }
+
+    /// Drop every recorded node but keep the arena's allocations for the
+    /// next recording — how a worker reuses one tape across the per-stage
+    /// VJPs of the discrete adjoint.  `Var`s from before the clear belong
+    /// to the old recording; using one afterwards panics (epoch check)
+    /// rather than aliasing a new node.
+    pub fn clear(&self) {
+        let mut t = self.inner.borrow_mut();
+        t.ops.clear();
+        t.vals.clear();
+        t.epoch += 1;
     }
 
     /// A differentiable per-row input column.
     pub fn input(&self, vals: &[f64]) -> Var {
         assert_eq!(vals.len(), self.rows(), "Tape::input: column length vs rows");
-        push(&self.inner, Op::Input, vals.to_vec())
+        push_slice(&self.inner, Op::Input, vals)
     }
 
     /// A differentiable broadcast scalar (a model parameter): every row
     /// sees `val`, and the backward pass row-sums the cotangent into
     /// gradient slot `idx`.
     pub fn param(&self, idx: usize, val: f64) -> Var {
-        let rows = self.rows();
-        push(&self.inner, Op::Param(idx), vec![val; rows])
+        push_fill(&self.inner, Op::Param(idx), val)
     }
 
     /// A gradient-free broadcast constant.
     pub fn constant(&self, val: f64) -> Var {
-        let rows = self.rows();
-        push(&self.inner, Op::Const, vec![val; rows])
+        push_fill(&self.inner, Op::Const, val)
     }
 
     /// Current forward value of a node.
     pub fn value(&self, v: &Var) -> Vec<f64> {
         assert!(Rc::ptr_eq(&self.inner, &v.inner), "Var from a different tape");
-        self.inner.borrow().nodes[v.id].val.clone()
+        let t = self.inner.borrow();
+        v.check(&t);
+        t.col(v.id).to_vec()
     }
 
     /// Reverse sweep: seed the given output cotangent columns, walk the
@@ -134,25 +166,28 @@ impl Tape {
     pub fn backward(&self, seeds: &[(&Var, &[f64])]) -> Grads {
         let t = self.inner.borrow();
         let rows = t.rows;
-        let mut adj = vec![vec![0.0f64; rows]; t.nodes.len()];
+        let n = t.ops.len();
+        // One flat adjoint slab mirroring the value arena.
+        let mut adj = vec![0.0f64; n * rows];
         for (v, g) in seeds {
             assert!(Rc::ptr_eq(&self.inner, &v.inner), "seed from a different tape");
+            v.check(&t);
             assert_eq!(g.len(), rows, "seed column length vs rows");
-            for (a, gi) in adj[v.id].iter_mut().zip(*g) {
+            for (a, gi) in adj[v.id * rows..(v.id + 1) * rows].iter_mut().zip(*g) {
                 *a += *gi;
             }
         }
         let mut params: Vec<f64> = Vec::new();
-        for id in (0..t.nodes.len()).rev() {
-            if adj[id].iter().all(|v| *v == 0.0) {
+        for id in (0..n).rev() {
+            // Operand ids are strictly smaller than `id` (the tape only
+            // appends), so splitting the slab at this node borrows its
+            // adjoint and its operands' simultaneously — no per-node clone.
+            let (lo, hi) = adj.split_at_mut(id * rows);
+            let g = &hi[..rows];
+            if g.iter().all(|v| *v == 0.0) {
                 continue;
             }
-            // Operand ids are strictly smaller than `id` (the tape only
-            // appends), so a split borrows this node's adjoint and its
-            // operands' simultaneously — no per-node clone in the sweep.
-            let (lo, hi) = adj.split_at_mut(id);
-            let g = &hi[0];
-            match t.nodes[id].op {
+            match t.ops[id] {
                 Op::Const | Op::Input => {}
                 Op::Param(pi) => {
                     if params.len() <= pi {
@@ -162,108 +197,142 @@ impl Tape {
                 }
                 Op::Add(a, b) => {
                     for r in 0..rows {
-                        lo[a][r] += g[r];
+                        lo[a * rows + r] += g[r];
                     }
                     for r in 0..rows {
-                        lo[b][r] += g[r];
+                        lo[b * rows + r] += g[r];
                     }
                 }
                 Op::Sub(a, b) => {
                     for r in 0..rows {
-                        lo[a][r] += g[r];
+                        lo[a * rows + r] += g[r];
                     }
                     for r in 0..rows {
-                        lo[b][r] -= g[r];
+                        lo[b * rows + r] -= g[r];
                     }
                 }
                 Op::Mul(a, b) => {
+                    let (va, vb) = (t.col(a), t.col(b));
                     for r in 0..rows {
-                        lo[a][r] += g[r] * t.nodes[b].val[r];
+                        lo[a * rows + r] += g[r] * vb[r];
                     }
                     for r in 0..rows {
-                        lo[b][r] += g[r] * t.nodes[a].val[r];
+                        lo[b * rows + r] += g[r] * va[r];
                     }
                 }
                 Op::Scale(a, sc) => {
                     for r in 0..rows {
-                        lo[a][r] += g[r] * sc;
+                        lo[a * rows + r] += g[r] * sc;
                     }
                 }
                 Op::Tanh(a) => {
-                    let y = &t.nodes[id].val;
+                    let y = t.col(id);
                     for r in 0..rows {
-                        lo[a][r] += g[r] * (1.0 - y[r] * y[r]);
+                        lo[a * rows + r] += g[r] * (1.0 - y[r] * y[r]);
                     }
                 }
             }
         }
-        Grads { tape: self.inner.clone(), adj, params }
+        Grads {
+            tape: self.inner.clone(),
+            epoch: t.epoch,
+            rows,
+            adj,
+            params,
+        }
     }
-}
-
-fn push(inner: &Rc<RefCell<TapeInner>>, op: Op, val: Vec<f64>) -> Var {
-    let mut t = inner.borrow_mut();
-    t.nodes.push(Node { op, val });
-    Var { inner: inner.clone(), id: t.nodes.len() - 1 }
 }
 
 impl Var {
     /// This node's forward value.
     pub fn value(&self) -> Vec<f64> {
-        self.inner.borrow().nodes[self.id].val.clone()
+        let t = self.inner.borrow();
+        self.check(&t);
+        t.col(self.id).to_vec()
     }
+
+    #[inline]
+    fn check(&self, t: &TapeInner) {
+        assert_eq!(
+            self.epoch, t.epoch,
+            "Var from a cleared tape recording (epoch {} vs {})",
+            self.epoch, t.epoch
+        );
+    }
+}
+
+fn push_slice(inner: &Rc<RefCell<TapeInner>>, op: Op, vals: &[f64]) -> Var {
+    let mut t = inner.borrow_mut();
+    debug_assert_eq!(vals.len(), t.rows);
+    t.vals.extend_from_slice(vals);
+    t.ops.push(op);
+    Var { inner: inner.clone(), id: t.ops.len() - 1, epoch: t.epoch }
+}
+
+fn push_fill(inner: &Rc<RefCell<TapeInner>>, op: Op, val: f64) -> Var {
+    let mut t = inner.borrow_mut();
+    let end = t.vals.len() + t.rows;
+    t.vals.resize(end, val);
+    t.ops.push(op);
+    Var { inner: inner.clone(), id: t.ops.len() - 1, epoch: t.epoch }
+}
+
+fn push_unary(a: &Var, op: Op, f: impl Fn(f64) -> f64) -> Var {
+    let mut t = a.inner.borrow_mut();
+    a.check(&t);
+    let rows = t.rows;
+    let base = a.id * rows;
+    t.vals.reserve(rows);
+    for r in 0..rows {
+        let v = f(t.vals[base + r]);
+        t.vals.push(v);
+    }
+    t.ops.push(op);
+    Var { inner: a.inner.clone(), id: t.ops.len() - 1, epoch: t.epoch }
+}
+
+fn push_binary(a: &Var, b: &Var, op: Op, f: impl Fn(f64, f64) -> f64) -> Var {
+    assert!(Rc::ptr_eq(&a.inner, &b.inner), "Vars from different tapes");
+    let mut t = a.inner.borrow_mut();
+    a.check(&t);
+    b.check(&t);
+    let rows = t.rows;
+    let (ba, bb) = (a.id * rows, b.id * rows);
+    t.vals.reserve(rows);
+    for r in 0..rows {
+        let v = f(t.vals[ba + r], t.vals[bb + r]);
+        t.vals.push(v);
+    }
+    t.ops.push(op);
+    Var { inner: a.inner.clone(), id: t.ops.len() - 1, epoch: t.epoch }
 }
 
 impl Value for Var {
     fn lift(&self, a: f64) -> Var {
-        let rows = self.inner.borrow().rows;
-        push(&self.inner, Op::Const, vec![a; rows])
+        // Same staleness guard as every other op: lifting through a Var
+        // from a cleared recording must not silently mint current nodes.
+        self.check(&self.inner.borrow());
+        push_fill(&self.inner, Op::Const, a)
     }
 
     fn add(&self, o: &Var) -> Var {
-        assert!(Rc::ptr_eq(&self.inner, &o.inner), "Vars from different tapes");
-        let val: Vec<f64> = {
-            let t = self.inner.borrow();
-            let (a, b) = (&t.nodes[self.id].val, &t.nodes[o.id].val);
-            a.iter().zip(b).map(|(x, y)| x + y).collect()
-        };
-        push(&self.inner, Op::Add(self.id, o.id), val)
+        push_binary(self, o, Op::Add(self.id, o.id), |x, y| x + y)
     }
 
     fn sub(&self, o: &Var) -> Var {
-        assert!(Rc::ptr_eq(&self.inner, &o.inner), "Vars from different tapes");
-        let val: Vec<f64> = {
-            let t = self.inner.borrow();
-            let (a, b) = (&t.nodes[self.id].val, &t.nodes[o.id].val);
-            a.iter().zip(b).map(|(x, y)| x - y).collect()
-        };
-        push(&self.inner, Op::Sub(self.id, o.id), val)
+        push_binary(self, o, Op::Sub(self.id, o.id), |x, y| x - y)
     }
 
     fn mul(&self, o: &Var) -> Var {
-        assert!(Rc::ptr_eq(&self.inner, &o.inner), "Vars from different tapes");
-        let val: Vec<f64> = {
-            let t = self.inner.borrow();
-            let (a, b) = (&t.nodes[self.id].val, &t.nodes[o.id].val);
-            a.iter().zip(b).map(|(x, y)| x * y).collect()
-        };
-        push(&self.inner, Op::Mul(self.id, o.id), val)
+        push_binary(self, o, Op::Mul(self.id, o.id), |x, y| x * y)
     }
 
     fn scale(&self, a: f64) -> Var {
-        let val: Vec<f64> = {
-            let t = self.inner.borrow();
-            t.nodes[self.id].val.iter().map(|x| a * x).collect()
-        };
-        push(&self.inner, Op::Scale(self.id, a), val)
+        push_unary(self, Op::Scale(self.id, a), |x| a * x)
     }
 
     fn tanh(&self) -> Var {
-        let val: Vec<f64> = {
-            let t = self.inner.borrow();
-            t.nodes[self.id].val.iter().map(|x| x.tanh()).collect()
-        };
-        push(&self.inner, Op::Tanh(self.id), val)
+        push_unary(self, Op::Tanh(self.id), |x| x.tanh())
     }
 }
 
@@ -272,7 +341,10 @@ pub struct Grads {
     /// The tape the sweep ran on — `wrt` refuses foreign `Var`s, since a
     /// node id from another tape would silently alias a wrong adjoint.
     tape: Rc<RefCell<TapeInner>>,
-    adj: Vec<Vec<f64>>,
+    epoch: u64,
+    rows: usize,
+    /// Flat adjoint slab, laid out like the tape's value arena.
+    adj: Vec<f64>,
     params: Vec<f64>,
 }
 
@@ -280,7 +352,8 @@ impl Grads {
     /// Cotangent column of any node (zeros if untouched by the sweep).
     pub fn wrt(&self, v: &Var) -> &[f64] {
         assert!(Rc::ptr_eq(&self.tape, &v.inner), "Var from a different tape");
-        &self.adj[v.id]
+        assert_eq!(self.epoch, v.epoch, "Var from a different tape recording");
+        &self.adj[v.id * self.rows..(v.id + 1) * self.rows]
     }
 
     /// Row-summed gradient of parameter slot `idx` (0 if untouched).
@@ -439,5 +512,44 @@ mod tests {
         assert!(close(gx[3], 4.0, 1e-12));
         // param grad only sums the seeded rows: x0² + x3² = 1 + 16
         assert!(close(g.param(0), 17.0, 1e-12));
+    }
+
+    #[test]
+    fn clear_recycles_the_arena_and_reproduces_results() {
+        // Recording the same computation on a fresh tape and on a cleared
+        // (recycled-arena) tape must agree bit-for-bit — the invariant the
+        // per-shard tape reuse in the discrete adjoint relies on.
+        let fresh = |x: &[f64]| {
+            let tape = Tape::new(x.len());
+            let v = tape.input(x);
+            let w = tape.param(0, 0.4);
+            let y = v.mul(&w).tanh().add(&v.scale(0.25));
+            let ones = vec![1.0; x.len()];
+            let g = tape.backward(&[(&y, ones.as_slice())]);
+            (g.wrt(&v).to_vec(), g.param(0), tape.len())
+        };
+        let tape = Tape::new(3);
+        let (want, wantp, nodes) = fresh(&[0.3, -0.7, 1.1]);
+        for _ in 0..3 {
+            tape.clear();
+            let v = tape.input(&[0.3, -0.7, 1.1]);
+            let w = tape.param(0, 0.4);
+            let y = v.mul(&w).tanh().add(&v.scale(0.25));
+            let g = tape.backward(&[(&y, &[1.0, 1.0, 1.0])]);
+            assert_eq!(tape.len(), nodes);
+            for (a, b) in g.wrt(&v).iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(g.param(0).to_bits(), wantp.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cleared tape")]
+    fn stale_vars_panic_after_clear() {
+        let tape = Tape::new(1);
+        let x = tape.input(&[1.0]);
+        tape.clear();
+        let _ = x.tanh(); // old recording: must panic, not alias node 0
     }
 }

@@ -11,11 +11,12 @@ use crate::runtime::client::{literal_f32, literal_i32};
 use crate::runtime::{ParamStore, Runtime, XlaDynamics};
 use crate::solvers::adaptive::{solve_adaptive_mut, AdaptiveOpts, SolveStats};
 use crate::solvers::batch::{
-    solve_adaptive_batch, solve_to_times_batch, split_quadrature, RegularizedBatchDynamics,
-    Rowwise,
+    solve_adaptive_batch, solve_adaptive_batch_pooled, solve_to_times_batch, split_quadrature,
+    RegularizedBatchDynamics, Rowwise,
 };
 use crate::solvers::tableau::Tableau;
 use crate::taylor::BatchSeriesDynamics;
+use crate::util::pool::Pool;
 
 /// Split a flat row-major [B, W] state into the first `d` columns (flattened
 /// [B, d]) and per-row scalars for columns d..W.
@@ -193,6 +194,33 @@ pub fn batch_rk_eval<F: BatchSeriesDynamics>(
     let reg = RegularizedBatchDynamics::new(f, order);
     let aug = reg.augment(y0);
     let res = solve_adaptive_batch(reg, t0, t1, &aug, tb, opts);
+    let (y, r_k) = split_quadrature(&res);
+    let mean_r_k = mean(&r_k);
+    RkEval { n, y, r_k, mean_r_k, stats: res.stats }
+}
+
+/// [`batch_rk_eval`] sharded across a worker pool: the quadrature-augmented
+/// batch splits into contiguous per-worker sub-batches, each integrating on
+/// its own clone of the (series-generic) dynamics.  Per-trajectory results
+/// are bit-identical to the serial instrument at any thread count (see
+/// `solvers::batch` — no arithmetic crosses rows).
+pub fn batch_rk_eval_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    order: usize,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> RkEval
+where
+    F: BatchSeriesDynamics + Clone + Send + Sync,
+{
+    let n = f.dim();
+    let reg = RegularizedBatchDynamics::new(f.clone(), order);
+    let aug = reg.augment(y0);
+    let res = solve_adaptive_batch_pooled(pool, &reg, t0, t1, &aug, tb, opts);
     let (y, r_k) = split_quadrature(&res);
     let mean_r_k = mean(&r_k);
     RkEval { n, y, r_k, mean_r_k, stats: res.stats }
@@ -417,6 +445,27 @@ mod tests {
             want_mean /= y0.len() as f64;
             assert!((ev.mean_r_k - want_mean).abs() < 1e-2 * want_mean);
             assert!(ev.stats.iter().all(|s| s.nfe > 0 && s.accepted > 0));
+        }
+    }
+
+    #[test]
+    fn batch_rk_eval_pooled_matches_serial_bit_for_bit() {
+        // The pooled instrument must report exactly what the serial one
+        // does, per trajectory, at every thread count.
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let y0: Vec<f32> = (0..9).map(|i| 0.2 * i as f32 - 0.8).collect();
+        let f = SeriesFn::new(1, |_ids: &[usize], z: &SeriesVec, _t: &SeriesVec| z.clone());
+        let serial = batch_rk_eval(f.clone(), 2, 0.0, 1.0, &y0, &tb, &opts);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let ev = batch_rk_eval_pooled(&pool, &f, 2, 0.0, 1.0, &y0, &tb, &opts);
+            for r in 0..y0.len() {
+                assert_eq!(serial.y[r].to_bits(), ev.y[r].to_bits(), "y row {r}");
+                assert_eq!(serial.r_k[r].to_bits(), ev.r_k[r].to_bits(), "R_K row {r}");
+                assert_eq!(serial.stats[r].nfe, ev.stats[r].nfe, "NFE row {r}");
+            }
+            assert_eq!(serial.mean_r_k.to_bits(), ev.mean_r_k.to_bits());
         }
     }
 

@@ -9,9 +9,12 @@ pub mod train_native;
 pub mod trainer;
 
 pub use evaluator::{
-    batch_rk_eval, cnf_eval, latent_eval, mnist_eval, mnist_reg_quantities, toy_eval, RkEval,
+    batch_rk_eval, batch_rk_eval_pooled, cnf_eval, latent_eval, mnist_eval, mnist_reg_quantities,
+    toy_eval, RkEval,
 };
 pub use metrics::MetricsLog;
 pub use schedule::Schedule;
-pub use train_native::{adjoint_grads, LinearHead, NativeMetrics, NativeTrainer};
+pub use train_native::{
+    adjoint_grads, adjoint_grads_pooled, LinearHead, NativeMetrics, NativeTrainer,
+};
 pub use trainer::{BatchInputs, StepMetrics, Trainer};

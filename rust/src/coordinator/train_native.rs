@@ -10,9 +10,9 @@
 //! 1. **Forward** — the MLP dynamics, lifted by
 //!    [`RegularizedBatchDynamics`] into the quadrature-augmented system
 //!    `[y, q]` with `dq/dt = ‖d^K y/dt^K‖²/n`, is integrated on a fixed
-//!    grid by [`solve_fixed_batch_record`], which caches every stage's
-//!    input state — the whole active set per model evaluation, exactly the
-//!    serving-path engine.
+//!    grid by [`solve_fixed_batch_record_pooled`], which caches every
+//!    stage's input state — the whole active set per model evaluation,
+//!    exactly the serving-path engine, sharded across the worker pool.
 //! 2. **Backward** — [`adjoint_grads`] runs the textbook discrete adjoint
 //!    of the explicit RK step (Hairer; Sanz-Serna 2016): per step, in
 //!    reverse stage order, `k̄_i = h·b_i·ȳ' + Σ_{i'>i} h·a_{i'i}·ū_{i'}`,
@@ -20,7 +20,10 @@
 //!    `ū_i` and parameter cotangents.  The VJP re-evaluates the model at
 //!    the cached stage state on a reverse-mode tape — through the **whole
 //!    Taylor-mode jet** (`ode_jet_values` with tape coefficients), so the
-//!    `λ·R_K` term differentiates exactly, not by surrogate.
+//!    `λ·R_K` term differentiates exactly, not by surrogate.  The batch
+//!    shards across the pool (rows only couple through the final
+//!    row-summed `θ̄`), each worker reusing one arena tape across its
+//!    stage VJPs; results are bit-identical at every thread count.
 //! 3. **Update** — [`Adam`](crate::autodiff::Adam) on the flat parameter
 //!    vector (dynamics MLP, plus the linear classifier head when present).
 //!
@@ -29,27 +32,36 @@
 //! fewer adaptive-solver NFE at evaluation — is exercised by
 //! `experiments::native_train`.
 
+use std::ops::Range;
+
 use crate::autodiff::{Adam, Tape, Var};
 use crate::nn::{ode_jet_values, Mlp, SeriesOf, Value};
 use crate::solvers::adaptive::AdaptiveOpts;
-use crate::solvers::batch::{solve_fixed_batch_record, FixedGridRecord, RegularizedBatchDynamics};
+use crate::solvers::batch::{
+    solve_fixed_batch_record_pooled, FixedGridRecord, RegularizedBatchDynamics,
+};
 use crate::solvers::stage::TableauCoeffs;
 use crate::solvers::tableau::Tableau;
+use crate::util::pool::{shard_ranges, Pool};
 use crate::util::rng::Pcg;
 
-use super::evaluator::{batch_rk_eval, RkEval};
+use super::evaluator::{batch_rk_eval_pooled, RkEval};
 
 // ---------------------------------------------------------------------------
 // Stage VJP and the discrete adjoint
 // ---------------------------------------------------------------------------
 
 /// One tape VJP of the quadrature-augmented dynamics at a cached stage
-/// state `u` (`[B, n+1]`): seed the stage-output cotangent `kbar`, get the
-/// stage-input cotangent into `ubar` and accumulate parameter cotangents
-/// into `pbar`.  The augmented output is `[x_1, ‖x_K‖²/n]` with jets from
-/// [`ode_jet_values`] over tape values — the same recursion the f32
-/// forward ran through `ode_jet_batch`, now differentiable.
+/// state `u` (`[b, n+1]`, one worker shard's rows): seed the stage-output
+/// cotangent `kbar`, get the stage-input cotangent into `ubar` and
+/// accumulate parameter cotangents into `pbar`.  The augmented output is
+/// `[x_1, ‖x_K‖²/n]` with jets from [`ode_jet_values`] over tape values —
+/// the same recursion the f32 forward ran through `ode_jet_batch`, now
+/// differentiable.  `tape` is the worker's reused arena (`rows` must equal
+/// the shard batch); it is cleared here, so each call is a fresh recording
+/// on warm buffers.
 fn stage_vjp(
+    tape: &Tape,
     mlp: &Mlp,
     order: usize,
     u: &[f32],
@@ -61,7 +73,8 @@ fn stage_vjp(
     let n = mlp.state_dim();
     let w = n + 1;
     let b = u.len() / w;
-    let tape = Tape::new(b);
+    debug_assert_eq!(tape.rows(), b, "stage_vjp: tape rows vs shard batch");
+    tape.clear();
     let mut colbuf = vec![0.0f64; b];
     let zvars: Vec<Var> = (0..n)
         .map(|j| {
@@ -80,19 +93,14 @@ fn stage_vjp(
         .collect();
     let mut fs = |zs: &[SeriesOf<Var>], ts: &SeriesOf<Var>| {
         // Parameters as constant series over gradient-tracked order-0
-        // coefficients; one shared zero node pads the higher orders.
+        // coefficients: one shared zero node pads the higher orders, and
+        // the structural-zero mask keeps those columns from recording any
+        // arithmetic on the tape.
         let ord = ts.order();
         let zero = tvar.lift(0.0);
         let ps: Vec<SeriesOf<Var>> = pvars
             .iter()
-            .map(|p| {
-                let mut c = Vec::with_capacity(ord + 1);
-                c.push(p.clone());
-                for _ in 0..ord {
-                    c.push(zero.clone());
-                }
-                SeriesOf::new(c)
-            })
+            .map(|p| SeriesOf::constant_padded(p.clone(), &zero, ord))
             .collect();
         mlp.forward(&ps, zs, Some(ts))
     };
@@ -129,6 +137,14 @@ fn stage_vjp(
     }
 }
 
+/// Rows per adjoint worker shard.  The canonical layout splits a batch
+/// into `ceil(B / GRAD_SHARD_ROWS)` contiguous shards — a pure function of
+/// the batch size, never of the thread count, so the per-shard partial
+/// gradients and their fixed-order reduction are **bit-identical at every
+/// `TAYNODE_THREADS` setting**.  (A batch of at most this many rows is a
+/// single shard: exactly the unsharded full-batch recursion.)
+const GRAD_SHARD_ROWS: usize = 16;
+
 /// The discrete adjoint of a recorded fixed-grid solve of the
 /// quadrature-augmented system: given `∂L/∂y(T)` (`ybar_final`, laid out
 /// `[B, n+1]` like the record), return `(∂L/∂θ, ∂L/∂y(0))`.
@@ -141,6 +157,15 @@ fn stage_vjp(
 /// ū_i = (∂F/∂u)ᵀ k̄_i      (tape VJP; θ̄ += (∂F/∂θ)ᵀ k̄_i)
 /// ȳ  = ȳ' + Σ_i ū_i
 /// ```
+///
+/// The recursion is row-independent except for the row-sum into `θ̄`, so
+/// the batch shards across a worker pool ([`adjoint_grads_pooled`]; this
+/// wrapper uses the `TAYNODE_THREADS` pool): each worker runs the full
+/// reverse sweep for its rows on one reused arena tape, and the per-worker
+/// flat gradients reduce in fixed shard order.  State cotangents `ȳ(0)`
+/// are bit-identical to the unsharded sweep at any layout; `θ̄` is
+/// bit-identical across thread counts (fixed layout) and equal to the
+/// unsharded row-sum up to addition reordering across shards.
 pub fn adjoint_grads(
     mlp: &Mlp,
     order: usize,
@@ -148,15 +173,78 @@ pub fn adjoint_grads(
     tb: &Tableau,
     ybar_final: &[f64],
 ) -> (Vec<f64>, Vec<f64>) {
+    adjoint_grads_pooled(&Pool::from_env(), mlp, order, rec, tb, ybar_final)
+}
+
+/// [`adjoint_grads`] on an explicit worker pool (see there for the
+/// determinism contract).
+pub fn adjoint_grads_pooled(
+    pool: &Pool,
+    mlp: &Mlp,
+    order: usize,
+    rec: &FixedGridRecord,
+    tb: &Tableau,
+    ybar_final: &[f64],
+) -> (Vec<f64>, Vec<f64>) {
+    adjoint_grads_sharded(pool, mlp, order, rec, tb, ybar_final, GRAD_SHARD_ROWS)
+}
+
+/// Layout-parameterized core (tests pass `shard_rows >= B` to reproduce
+/// the unsharded full-batch recursion as a reference).
+fn adjoint_grads_sharded(
+    pool: &Pool,
+    mlp: &Mlp,
+    order: usize,
+    rec: &FixedGridRecord,
+    tb: &Tableau,
+    ybar_final: &[f64],
+    shard_rows: usize,
+) -> (Vec<f64>, Vec<f64>) {
     let n = mlp.state_dim();
     let w = n + 1;
     assert_eq!(rec.n, w, "record is not the quadrature-augmented system");
     let m = rec.batch * w;
     assert_eq!(ybar_final.len(), m, "cotangent length vs record");
+    assert!(shard_rows >= 1, "adjoint shard size must be positive");
     let tbf = TableauCoeffs::new(tb);
-    let h = rec.dt as f64;
+    let shards = shard_ranges(rec.batch, rec.batch.div_ceil(shard_rows));
+    if shards.is_empty() {
+        return (vec![0.0f64; mlp.n_params()], vec![]);
+    }
+    let parts = pool.run_shards(shards.len(), |s| {
+        adjoint_shard(mlp, order, rec, &tbf, ybar_final, shards[s].clone())
+    });
     let mut pbar = vec![0.0f64; mlp.n_params()];
-    let mut ybar = ybar_final.to_vec();
+    let mut ybar = Vec::with_capacity(m);
+    for (p, y) in parts {
+        // Deterministic reduction: fixed shard order, independent of which
+        // worker computed which shard.
+        for (acc, v) in pbar.iter_mut().zip(&p) {
+            *acc += *v;
+        }
+        ybar.extend(y);
+    }
+    (pbar, ybar)
+}
+
+/// The full reverse sweep for one contiguous row shard, on one reused
+/// arena tape: returns the shard's flat parameter cotangent and its rows'
+/// state cotangent `ȳ(0)`.
+fn adjoint_shard(
+    mlp: &Mlp,
+    order: usize,
+    rec: &FixedGridRecord,
+    tbf: &TableauCoeffs,
+    ybar_final: &[f64],
+    rows: Range<usize>,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = mlp.state_dim();
+    let w = n + 1;
+    let m = rows.len() * w;
+    let h = rec.dt as f64;
+    let tape = Tape::new(rows.len());
+    let mut pbar = vec![0.0f64; mlp.n_params()];
+    let mut ybar = ybar_final[rows.start * w..rows.end * w].to_vec();
     let mut kbar: Vec<Vec<f64>> = vec![vec![0.0f64; m]; tbf.stages];
     let mut ubar = vec![0.0f64; m];
     for s in (0..rec.stage_y.len()).rev() {
@@ -171,9 +259,10 @@ pub fn adjoint_grads(
                 continue; // a dead stage contributes neither ū nor θ̄
             }
             stage_vjp(
+                &tape,
                 mlp,
                 order,
-                &rec.stage_y[s][i],
+                &rec.stage_y[s][i][rows.start * w..rows.end * w],
                 rec.stage_t[s][i],
                 &kbar[i],
                 &mut pbar,
@@ -305,6 +394,8 @@ pub struct NativeTrainer {
     pub steps: usize,
     pub tb: Tableau,
     opt: Adam,
+    /// Worker pool behind the forward, the adjoint, and adaptive eval.
+    pool: Pool,
 }
 
 impl NativeTrainer {
@@ -331,7 +422,16 @@ impl NativeTrainer {
             steps,
             tb,
             opt: Adam::new(nprm, lr),
+            pool: Pool::from_env(),
         }
+    }
+
+    /// Override the worker-pool thread count (defaults to
+    /// `TAYNODE_THREADS` / available parallelism).  Forward solves and
+    /// gradients are bit-identical at any setting.
+    pub fn with_threads(mut self, threads: usize) -> NativeTrainer {
+        self.pool = Pool::new(threads);
+        self
     }
 
     /// Optimizer updates taken so far (the optimizer's own counter).
@@ -340,14 +440,14 @@ impl NativeTrainer {
     }
 
     /// The recorded forward solve of the quadrature-augmented system over
-    /// `t ∈ [0, 1]` — shared by training steps and loss evaluation.
+    /// `t ∈ [0, 1]` — shared by training steps and loss evaluation, and
+    /// sharded across the worker pool (each shard clones the model, so the
+    /// trainer's own instance is untouched).
     pub fn forward_record(&mut self, x0: &[f32]) -> FixedGridRecord {
         assert_eq!(x0.len() % self.mlp.state_dim(), 0, "batch shape");
-        let order = self.order;
-        let steps = self.steps;
-        let mut reg = RegularizedBatchDynamics::new(&mut self.mlp, order);
+        let reg = RegularizedBatchDynamics::new(self.mlp.clone(), self.order);
         let aug = reg.augment(x0);
-        solve_fixed_batch_record(&mut reg, 0.0, 1.0, &aug, steps, &self.tb)
+        solve_fixed_batch_record_pooled(&self.pool, &reg, 0.0, 1.0, &aug, self.steps, &self.tb)
     }
 
     /// Loss, metrics, and adjoint gradients of the MSE objective
@@ -374,7 +474,8 @@ impl NativeTrainer {
             ybar[r * w + n] = lam / bsz as f64;
             reg += rec.y[r * w + n] as f64 / bsz as f64;
         }
-        let (grads, _) = adjoint_grads(&self.mlp, self.order, &rec, &self.tb, &ybar);
+        let (grads, _) =
+            adjoint_grads_pooled(&self.pool, &self.mlp, self.order, &rec, &self.tb, &ybar);
         let metrics = NativeMetrics {
             loss: (task + lam * reg) as f32,
             task: task as f32,
@@ -425,7 +526,8 @@ impl NativeTrainer {
             ybar[r * w + n] = lam / bsz as f64;
             reg += rec.y[r * w + n] as f64 / bsz as f64;
         }
-        let (pbar, _) = adjoint_grads(&self.mlp, self.order, &rec, &self.tb, &ybar);
+        let (pbar, _) =
+            adjoint_grads_pooled(&self.pool, &self.mlp, self.order, &rec, &self.tb, &ybar);
         let mut grads = pbar;
         grads.extend_from_slice(&gw);
         grads.extend_from_slice(&gb);
@@ -454,10 +556,11 @@ impl NativeTrainer {
         metrics
     }
 
-    /// Adaptive evaluation of the current dynamics through the existing
-    /// batched evaluator: per-trajectory NFE, `R_K`, and final states.
+    /// Adaptive evaluation of the current dynamics through the batched
+    /// evaluator, sharded across the worker pool: per-trajectory NFE,
+    /// `R_K`, and final states.
     pub fn eval_rk(&mut self, x0: &[f32], tb: &Tableau, opts: &AdaptiveOpts) -> RkEval {
-        batch_rk_eval(&mut self.mlp, self.order, 0.0, 1.0, x0, tb, opts)
+        batch_rk_eval_pooled(&self.pool, &self.mlp, self.order, 0.0, 1.0, x0, tb, opts)
     }
 
     /// The flat parameter vector (dynamics, then head W, then head b) —
@@ -573,6 +676,115 @@ mod tests {
                 "param {i}: fd {fd} vs adjoint {}",
                 grads[i]
             );
+        }
+    }
+
+    #[test]
+    fn adjoint_bit_identical_across_thread_counts_and_vs_unsharded() {
+        // B = 40 spans three canonical shards.  The flat gradient and the
+        // state cotangent must be bit-identical at 1, 2, and 4 threads
+        // (fixed layout + fixed reduction order); the state cotangent must
+        // also equal the unsharded full-batch recursion bit-for-bit (rows
+        // never interact), while the sharded θ̄ matches it to
+        // addition-reordering tolerance.
+        let mlp = Mlp::new(1, &[5], true, 31);
+        let order = 2usize;
+        let steps = 2usize;
+        let tb = tableau::bosh3();
+        let b = 40usize;
+        let mut rng = Pcg::new(77);
+        let x0: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let reg = RegularizedBatchDynamics::new(mlp.clone(), order);
+        let aug = reg.augment(&x0);
+        let rec = crate::solvers::batch::solve_fixed_batch_record_pooled(
+            &Pool::new(1),
+            &reg,
+            0.0,
+            1.0,
+            &aug,
+            steps,
+            &tb,
+        );
+        let ybar: Vec<f64> = (0..b * 2).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let (p1, y1) = adjoint_grads_pooled(&Pool::new(1), &mlp, order, &rec, &tb, &ybar);
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            let (pt, yt) = adjoint_grads_pooled(&pool, &mlp, order, &rec, &tb, &ybar);
+            for (a, w) in pt.iter().zip(&p1) {
+                assert_eq!(a.to_bits(), w.to_bits(), "θ̄ threads={threads}");
+            }
+            for (a, w) in yt.iter().zip(&y1) {
+                assert_eq!(a.to_bits(), w.to_bits(), "ȳ threads={threads}");
+            }
+        }
+        // the unsharded reference: one shard spanning the whole batch
+        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &mlp, order, &rec, &tb, &ybar, b);
+        for (a, w) in y1.iter().zip(&yu) {
+            assert_eq!(a.to_bits(), w.to_bits(), "sharded ȳ vs unsharded");
+        }
+        for (i, (a, w)) in p1.iter().zip(&pu).enumerate() {
+            // addition reordering across 3 shards: ulp-level, but allow an
+            // absolute floor for cancellation-heavy slots
+            assert!(
+                (a - w).abs() <= 1e-10 + 1e-9 * a.abs().max(w.abs()),
+                "θ̄[{i}] sharded {a} vs unsharded {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_batch_adjoint_is_the_unsharded_recursion_bit_for_bit() {
+        // A batch that fits one canonical shard (B <= GRAD_SHARD_ROWS) IS
+        // the pre-refactor full-batch recursion: the public entry point
+        // must reproduce the shard_rows = B reference exactly, θ̄ included.
+        let mlp = Mlp::new(2, &[4], true, 9);
+        let order = 2usize;
+        let b = 6usize;
+        let mut rng = Pcg::new(5);
+        let x0: Vec<f32> = (0..b * 2).map(|_| rng.range(-1.0, 1.0)).collect();
+        let reg = RegularizedBatchDynamics::new(mlp.clone(), order);
+        let aug = reg.augment(&x0);
+        let tb = tableau::rk4();
+        let rec = crate::solvers::batch::solve_fixed_batch_record_pooled(
+            &Pool::new(1),
+            &reg,
+            0.0,
+            1.0,
+            &aug,
+            3,
+            &tb,
+        );
+        let ybar: Vec<f64> = (0..b * 3).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let (p, y) = adjoint_grads_pooled(&Pool::new(4), &mlp, order, &rec, &tb, &ybar);
+        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &mlp, order, &rec, &tb, &ybar, b);
+        for (a, w) in p.iter().zip(&pu) {
+            assert_eq!(a.to_bits(), w.to_bits(), "θ̄");
+        }
+        for (a, w) in y.iter().zip(&yu) {
+            assert_eq!(a.to_bits(), w.to_bits(), "ȳ");
+        }
+    }
+
+    #[test]
+    fn trainer_gradients_bit_identical_across_thread_counts() {
+        // End-to-end determinism: the whole train-step gradient (pooled
+        // forward record + pooled adjoint) is reproducible at any
+        // TAYNODE_THREADS setting.
+        let (x0, targets) = toy_batch(40, 3);
+        let grads_at = |threads: usize| {
+            let mlp = Mlp::new(1, &[6], true, 4);
+            let mut tr = NativeTrainer::new(mlp, None, 2, 0.3, 2, tableau::rk4(), 0.01)
+                .with_threads(threads);
+            tr.mse_grads(&x0, &targets)
+        };
+        let (m1, g1) = grads_at(1);
+        for threads in [2usize, 4] {
+            let (mt, gt) = grads_at(threads);
+            assert_eq!(m1.loss.to_bits(), mt.loss.to_bits(), "loss threads={threads}");
+            assert_eq!(m1.reg.to_bits(), mt.reg.to_bits(), "reg threads={threads}");
+            for (a, w) in gt.iter().zip(&g1) {
+                assert_eq!(a.to_bits(), w.to_bits(), "grad threads={threads}");
+            }
         }
     }
 

@@ -11,12 +11,13 @@
 use anyhow::Result;
 
 use super::common::Scale;
-use crate::coordinator::evaluator::batch_rk_eval;
+use crate::coordinator::evaluator::batch_rk_eval_pooled;
 use crate::solvers::adaptive::{solve_adaptive, AdaptiveOpts};
-use crate::solvers::batch::{solve_adaptive_batch, BatchDynamics};
+use crate::solvers::batch::{solve_adaptive_batch_pooled, BatchDynamics};
 use crate::solvers::tableau;
 use crate::taylor::{BatchSeriesDynamics, SeriesVec};
 use crate::util::bench::Table;
+use crate::util::pool::Pool;
 use crate::util::rng::Pcg;
 
 /// Coefficients of p'(t) for one seeded trajectory: degree k-1 (k = 0 ->
@@ -61,7 +62,9 @@ pub fn poly_nfe(solver: &tableau::Tableau, k: usize, seed: u64) -> usize {
 /// A batch of degree-k polynomial trajectories, one per seed.  Dynamics are
 /// conditioned per trajectory (each row has its own coefficients), so the
 /// model keys rows on the engine-provided stable `ids` — row position
-/// changes as finished trajectories compact out of the working set.
+/// changes as finished trajectories compact out of the working set, and the
+/// pooled drivers hand each worker shard global ids.
+#[derive(Clone)]
 struct PolySweep {
     coeffs: Vec<Vec<f32>>,
 }
@@ -115,13 +118,16 @@ impl BatchSeriesDynamics for PolySweep {
 }
 
 /// Batched variant of [`poly_nfe`]: all seeds of one (solver, degree) cell
-/// integrate as one batch with per-trajectory step control.  Per-seed NFE
-/// is identical to the scalar loop (verified in tests); the sweep costs one
-/// solve instead of `seeds.len()`.
+/// integrate as one batch with per-trajectory step control, sharded across
+/// the `TAYNODE_THREADS` worker pool.  Per-seed NFE is identical to the
+/// scalar loop (verified in tests, at any thread count); the sweep costs
+/// one solve instead of `seeds.len()`.
 pub fn poly_nfe_batch(solver: &tableau::Tableau, k: usize, seeds: &[u64]) -> Vec<usize> {
     let coeffs: Vec<Vec<f32>> = seeds.iter().map(|s| poly_coeffs(k, *s)).collect();
     let y0 = vec![0.0f32; seeds.len()];
-    let res = solve_adaptive_batch(PolySweep { coeffs }, 0.0, 1.0, &y0, solver, &fig2_opts());
+    let sweep = PolySweep { coeffs };
+    let pool = Pool::from_env();
+    let res = solve_adaptive_batch_pooled(&pool, &sweep, 0.0, 1.0, &y0, solver, &fig2_opts());
     res.nfes()
 }
 
@@ -133,8 +139,10 @@ pub fn poly_nfe_batch(solver: &tableau::Tableau, k: usize, seeds: &[u64]) -> Vec
 pub fn poly_rk_batch(k: usize, seeds: &[u64], order: usize) -> Vec<f32> {
     let coeffs: Vec<Vec<f32>> = seeds.iter().map(|s| poly_coeffs(k, *s)).collect();
     let y0 = vec![0.0f32; seeds.len()];
-    let ev = batch_rk_eval(
-        PolySweep { coeffs },
+    let sweep = PolySweep { coeffs };
+    let ev = batch_rk_eval_pooled(
+        &Pool::from_env(),
+        &sweep,
         order,
         0.0,
         1.0,

@@ -26,7 +26,9 @@
 //!   discrete-adjoint paths), schedules, sweeps, metrics.
 //! * [`data`] — synthetic MNIST / PhysioNet / MINIBOONE generators.
 //! * [`experiments`] — one regenerator per paper table and figure.
-//! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench).
+//! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench,
+//!   and the scoped worker pool `util::pool` behind the parallel
+//!   execution layer).
 
 // Numerical-kernel style: index loops over parallel slices mirror the
 // reference equations (Hairer et al.) more faithfully than iterator chains;

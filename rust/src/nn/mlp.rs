@@ -4,9 +4,10 @@
 //! The forward pass is written **once**, generically over [`Value`], and the
 //! three consumers instantiate it:
 //!
-//! * the solver hot path ([`BatchDynamics`]) runs it on order-0
-//!   [`SeriesVec`] columns (plain batched f64 arithmetic, cast to the
-//!   engine's f32 at the boundary);
+//! * the solver hot path ([`BatchDynamics`]) runs a staged direct f64
+//!   evaluation over reusable buffers that is bit-for-bit the order-0
+//!   specialization of the series lift (property-tested), cast to the
+//!   engine's f32 at the boundary;
 //! * the jet path ([`BatchSeriesDynamics`]) runs it on truncated series
 //!   columns, so `taylor::ode_jet_batch` and with it the whole native `R_K`
 //!   machinery (`RegularizedBatchDynamics`, `batch_rk_eval`) work on the
@@ -37,6 +38,10 @@ pub struct Mlp {
     with_time: bool,
     /// Flat parameter vector (per layer: row-major `W [in, out]`, then `b`).
     pub params: Vec<f32>,
+    /// Reusable `[rows, width]` activation staging for the f32 solver hot
+    /// path (ping-pong pair) — scratch only, never observable.
+    stage_in: Vec<f64>,
+    stage_out: Vec<f64>,
 }
 
 impl Mlp {
@@ -58,7 +63,7 @@ impl Mlp {
                 params.push(0.0);
             }
         }
-        Mlp { sizes, n, with_time, params }
+        Mlp { sizes, n, with_time, params, stage_in: vec![], stage_out: vec![] }
     }
 
     /// The per-trajectory state dimension n.
@@ -136,27 +141,58 @@ impl BatchSeriesDynamics for Mlp {
     }
 }
 
-/// The solver hot path is the order-0 specialization of the series lift:
-/// one code path, so the f32 engine, the jets, and the tape can never
-/// disagree about what the model computes.
-///
-/// Perf note: this round-trips through order-0 `SeriesVec` columns and so
-/// allocates O(n) small buffers per NFE — fine at training scale, but a
-/// serving-grade deployment should grow reusable staging buffers here (a
-/// ROADMAP follow-on), property-tested equal to this path.
+/// The solver hot path: a direct staged evaluation over reusable `[rows,
+/// width]` activation buffers — zero allocation per NFE once the buffers
+/// are warm.  Per element it applies the **identical f64 operation
+/// sequence** as the generic forward on order-0 series columns (bias, then
+/// `+= act·w` in ascending input order, tanh on hidden layers), so it is
+/// bit-for-bit the order-0 specialization of the series lift
+/// (property-tested below) — the f32 engine, the jets, and the tape still
+/// cannot disagree about what the model computes.
 impl BatchDynamics for Mlp {
     fn dim(&self) -> usize {
         self.n
     }
 
-    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+    fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
         let rows = t.len();
-        let z64: Vec<f64> = y.iter().map(|v| *v as f64).collect();
-        let t64: Vec<f64> = t.iter().map(|v| *v as f64).collect();
-        let zs = SeriesVec::constant(&z64, rows, self.n, 0);
-        let ts = SeriesVec::time(&t64, 0);
-        let out = BatchSeriesDynamics::eval(self, ids, &zs, &ts);
-        for (d, v) in dy.iter_mut().zip(out.coeff(0)) {
+        let n = self.n;
+        debug_assert_eq!(y.len(), rows * n);
+        debug_assert_eq!(dy.len(), rows * n);
+        // Stage the inputs: features, then the time column when present.
+        self.stage_in.clear();
+        self.stage_in.reserve(rows * self.sizes[0]);
+        for (r, tr) in t.iter().enumerate() {
+            for v in &y[r * n..(r + 1) * n] {
+                self.stage_in.push(*v as f64);
+            }
+            if self.with_time {
+                self.stage_in.push(*tr as f64);
+            }
+        }
+        let mut off = 0;
+        for l in 0..self.sizes.len() - 1 {
+            let (win, wout) = (self.sizes[l], self.sizes[l + 1]);
+            let boff = off + win * wout;
+            let hidden = l + 1 < self.sizes.len() - 1;
+            self.stage_out.clear();
+            self.stage_out.reserve(rows * wout);
+            for r in 0..rows {
+                let arow = &self.stage_in[r * win..(r + 1) * win];
+                for j in 0..wout {
+                    // acc = b_j + sum_i act_i * W_ij, ascending i — the
+                    // exact op order of the generic `forward`
+                    let mut acc = self.params[boff + j] as f64;
+                    for (i, ai) in arow.iter().enumerate() {
+                        acc += ai * self.params[off + i * wout + j] as f64;
+                    }
+                    self.stage_out.push(if hidden { acc.tanh() } else { acc });
+                }
+            }
+            std::mem::swap(&mut self.stage_in, &mut self.stage_out);
+            off = boff + wout;
+        }
+        for (d, v) in dy.iter_mut().zip(&self.stage_in) {
             *d = *v as f32;
         }
     }
@@ -183,6 +219,42 @@ mod tests {
         let out = mlp.forward_f64(&[0.1, -0.2, 0.3], 0.5);
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn f32_hot_path_matches_order0_series_route_bit_for_bit() {
+        // The staged-buffer fast path must be the exact order-0
+        // specialization of the series lift: same f64 ops in the same
+        // order, so the f32 outputs agree bit-for-bit with the (previous)
+        // SeriesVec round-trip — and repeated evaluations through the
+        // reused buffers stay bit-stable.
+        Prop::new(40).run("mlp-fast-vs-series", |rng: &mut Pcg, _| {
+            let n = 1 + rng.below(3);
+            let hidden: Vec<usize> = (0..rng.below(3)).map(|_| 1 + rng.below(6)).collect();
+            let b = 1 + rng.below(6);
+            let with_time = rng.below(2) == 0;
+            let mut mlp = Mlp::new(n, &hidden, with_time, rng.next_u64());
+            let y = gen::vec_f32(rng, b * n, 1.2);
+            let t: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+            let ids: Vec<usize> = (0..b).collect();
+            let mut dy = vec![0.0f32; b * n];
+            for _ in 0..2 {
+                // twice: the second pass reuses warm staging buffers
+                BatchDynamics::eval(&mut mlp, &ids, &t, &y, &mut dy);
+                let z64: Vec<f64> = y.iter().map(|v| *v as f64).collect();
+                let t64: Vec<f64> = t.iter().map(|v| *v as f64).collect();
+                let zs = SeriesVec::constant(&z64, b, n, 0);
+                let ts = SeriesVec::time(&t64, 0);
+                let out = BatchSeriesDynamics::eval(&mut mlp, &ids, &zs, &ts);
+                for (e, (d, v)) in dy.iter().zip(out.coeff(0)).enumerate() {
+                    assert_eq!(
+                        d.to_bits(),
+                        (*v as f32).to_bits(),
+                        "elem {e}: fast {d} vs series {v}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

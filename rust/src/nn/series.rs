@@ -10,6 +10,18 @@
 //! discrete-adjoint backward pass seeds the K-th derivative's square and
 //! gets exact parameter cotangents through the whole jet recursion.
 //!
+//! Every series carries a **structural-zero mask**: coefficients known to
+//! be exactly zero by construction (the pads of a constant parameter
+//! series, the orders ≥ 2 of the time series) are marked, and the
+//! propagation rules skip them — a product term with a structurally-zero
+//! factor is never computed, an addition with a structurally-zero side is a
+//! clone of the other side.  On a tape carrier that means the jet closure
+//! stops recording the zero columns of every parameter series (the bulk of
+//! a constant-parameter Cauchy product), shrinking the per-stage VJP tape;
+//! on any carrier the skipped work is exactly zero-valued (results can
+//! differ from the dense evaluation only in the sign of zero, or when an
+//! operand is non-finite).
+//!
 //! ```
 //! use taynode::nn::{ode_jet_values, SeriesOf};
 //!
@@ -33,38 +45,59 @@ use crate::taylor::factorial;
 #[derive(Clone, Debug)]
 pub struct SeriesOf<T> {
     c: Vec<T>,
+    /// Structural-zero mask: `nz[k] == false` guarantees `c[k]` holds an
+    /// exact zero value, so ops may skip it (see module docs).
+    nz: Vec<bool>,
 }
 
 impl<T: Value> SeriesOf<T> {
+    /// A dense series from explicit coefficients (none assumed zero).
     pub fn new(c: Vec<T>) -> SeriesOf<T> {
         assert!(!c.is_empty(), "SeriesOf needs at least the order-0 coefficient");
-        SeriesOf { c }
+        let nz = vec![true; c.len()];
+        SeriesOf { c, nz }
     }
 
-    /// A constant series: `x` at order 0, zeros (of `x`'s shape) above.
+    /// A constant series: `x` at order 0, structural zeros above.
     pub fn constant(x: T, order: usize) -> SeriesOf<T> {
         let zero = x.lift(0.0);
-        let mut c = Vec::with_capacity(order + 1);
-        c.push(x);
-        for _ in 0..order {
-            c.push(zero.clone());
-        }
-        SeriesOf { c }
+        SeriesOf::constant_padded(x, &zero, order)
     }
 
-    /// The independent variable itself: `t0 + 1·t`.
+    /// [`constant`](SeriesOf::constant) with a caller-supplied zero value
+    /// (which must be an exact 0.0 of `x`'s shape): the pads are clones of
+    /// `zero`, so on a tape carrier every constant series built from the
+    /// same `zero` shares ONE zero node instead of lifting its own.
+    pub fn constant_padded(x: T, zero: &T, order: usize) -> SeriesOf<T> {
+        let mut c = Vec::with_capacity(order + 1);
+        let mut nz = Vec::with_capacity(order + 1);
+        c.push(x);
+        nz.push(true);
+        for _ in 0..order {
+            c.push(zero.clone());
+            nz.push(false);
+        }
+        SeriesOf { c, nz }
+    }
+
+    /// The independent variable itself: `t0 + 1·t` (structural zeros above
+    /// order 1).
     pub fn time(t0: T, order: usize) -> SeriesOf<T> {
         let one = t0.lift(1.0);
         let zero = t0.lift(0.0);
         let mut c = Vec::with_capacity(order + 1);
+        let mut nz = Vec::with_capacity(order + 1);
         c.push(t0);
+        nz.push(true);
         if order >= 1 {
             c.push(one);
+            nz.push(true);
         }
         for _ in 1..order {
             c.push(zero.clone());
+            nz.push(false);
         }
-        SeriesOf { c }
+        SeriesOf { c, nz }
     }
 
     pub fn order(&self) -> usize {
@@ -74,11 +107,24 @@ impl<T: Value> SeriesOf<T> {
     pub fn coeff(&self, k: usize) -> &T {
         &self.c[k]
     }
+
+    /// An exact zero of this series' coefficient shape, preferring a clone
+    /// of an existing structurally-zero coefficient (no new tape node) over
+    /// lifting a fresh one.
+    fn zero_like(&self, o: &SeriesOf<T>) -> T {
+        if let Some(k) = self.nz.iter().position(|z| !*z) {
+            return self.c[k].clone();
+        }
+        if let Some(k) = o.nz.iter().position(|z| !*z) {
+            return o.c[k].clone();
+        }
+        self.c[0].lift(0.0)
+    }
 }
 
 /// The scalar propagation rules of [`crate::taylor::Series`], coefficient
 /// arithmetic delegated to `T` — so a `SeriesOf<Var>` records every
-/// coefficient operation on the tape.
+/// (structurally nonzero) coefficient operation on the tape.
 impl<T: Value> Value for SeriesOf<T> {
     fn lift(&self, a: f64) -> Self {
         SeriesOf::constant(self.c[0].lift(a), self.order())
@@ -86,45 +132,120 @@ impl<T: Value> Value for SeriesOf<T> {
 
     fn add(&self, o: &Self) -> Self {
         assert_eq!(self.order(), o.order(), "SeriesOf::add: order mismatch");
-        let c = self.c.iter().zip(&o.c).map(|(a, b)| a.add(b)).collect();
-        SeriesOf { c }
+        let k1 = self.c.len();
+        let mut c = Vec::with_capacity(k1);
+        let mut nz = Vec::with_capacity(k1);
+        for k in 0..k1 {
+            match (self.nz[k], o.nz[k]) {
+                (true, true) => {
+                    c.push(self.c[k].add(&o.c[k]));
+                    nz.push(true);
+                }
+                (true, false) => {
+                    c.push(self.c[k].clone());
+                    nz.push(true);
+                }
+                (false, true) => {
+                    c.push(o.c[k].clone());
+                    nz.push(true);
+                }
+                (false, false) => {
+                    c.push(self.c[k].clone());
+                    nz.push(false);
+                }
+            }
+        }
+        SeriesOf { c, nz }
     }
 
     fn sub(&self, o: &Self) -> Self {
         assert_eq!(self.order(), o.order(), "SeriesOf::sub: order mismatch");
-        let c = self.c.iter().zip(&o.c).map(|(a, b)| a.sub(b)).collect();
-        SeriesOf { c }
+        let k1 = self.c.len();
+        let mut c = Vec::with_capacity(k1);
+        let mut nz = Vec::with_capacity(k1);
+        for k in 0..k1 {
+            if !o.nz[k] {
+                // x − 0: clone the left side (still zero if both are).
+                c.push(self.c[k].clone());
+                nz.push(self.nz[k]);
+            } else {
+                // 0 − x is recorded as a real subtraction (not a negation)
+                // to keep the exact scalar semantics, including zero signs.
+                c.push(self.c[k].sub(&o.c[k]));
+                nz.push(true);
+            }
+        }
+        SeriesOf { c, nz }
     }
 
     /// Truncated Cauchy product (Table 1 row 2), inner terms in the scalar
-    /// operation order (ascending j).
+    /// operation order (ascending j), structurally-zero terms skipped.
     fn mul(&self, o: &Self) -> Self {
         assert_eq!(self.order(), o.order(), "SeriesOf::mul: order mismatch");
         let k1 = self.c.len();
-        let mut out = Vec::with_capacity(k1);
+        let mut c = Vec::with_capacity(k1);
+        let mut nz = Vec::with_capacity(k1);
+        let mut zero: Option<T> = None;
         for k in 0..k1 {
-            let mut acc = self.c[0].mul(&o.c[k]);
-            for j in 1..=k {
-                acc = acc.add(&self.c[j].mul(&o.c[k - j]));
+            let mut acc: Option<T> = None;
+            for j in 0..=k {
+                if !self.nz[j] || !o.nz[k - j] {
+                    continue; // a structurally-zero factor: the term is 0
+                }
+                let term = self.c[j].mul(&o.c[k - j]);
+                acc = Some(match acc {
+                    Some(a) => a.add(&term),
+                    None => term,
+                });
             }
-            out.push(acc);
+            match acc {
+                Some(v) => {
+                    c.push(v);
+                    nz.push(true);
+                }
+                None => {
+                    let z = zero.get_or_insert_with(|| self.zero_like(o));
+                    c.push(z.clone());
+                    nz.push(false);
+                }
+            }
         }
-        SeriesOf { c: out }
+        SeriesOf { c, nz }
     }
 
     fn scale(&self, a: f64) -> Self {
-        let c = self.c.iter().map(|x| x.scale(a)).collect();
-        SeriesOf { c }
+        let mut c = Vec::with_capacity(self.c.len());
+        for (ck, nzk) in self.c.iter().zip(&self.nz) {
+            // a·0 stays an exact zero: keep the shared zero coefficient.
+            c.push(if *nzk { ck.scale(a) } else { ck.clone() });
+        }
+        SeriesOf { c, nz: self.nz.clone() }
     }
 
-    /// tanh via the ODE s' = (1 - s²) z', coefficients in `T`.
+    /// tanh via the ODE s' = (1 - s²) z', coefficients in `T`.  A constant
+    /// series short-circuits to a constant result (its derivative
+    /// coefficients are structurally zero).
     fn tanh(&self) -> Self {
         let k1 = self.c.len();
+        if self.nz.iter().skip(1).all(|z| !*z) {
+            let mut c = Vec::with_capacity(k1);
+            let mut nz = Vec::with_capacity(k1);
+            c.push(self.c[0].tanh());
+            nz.push(true);
+            for k in 1..k1 {
+                c.push(self.c[k].clone()); // the input's exact zeros
+                nz.push(false);
+            }
+            return SeriesOf { c, nz };
+        }
         let mut s: Vec<T> = Vec::with_capacity(k1);
         s.push(self.c[0].tanh());
         for k in 1..k1 {
             let mut acc: Option<T> = None;
             for j in 1..=k {
+                if !self.nz[j] {
+                    continue; // z' term with a structurally-zero coefficient
+                }
                 let m = k - j;
                 // u[m] = delta_{m0} - (s*s)[m], with s[0..=m] already known
                 let mut ssm = s[0].mul(&s[m]);
@@ -138,9 +259,15 @@ impl<T: Value> Value for SeriesOf<T> {
                     None => term,
                 });
             }
-            s.push(acc.expect("k >= 1 always yields a term").scale(1.0 / k as f64));
+            // At least one order 1..=k coefficient is structurally nonzero
+            // (the constant case returned above), but not necessarily one
+            // with j <= k — pad with an exact zero when every term skipped.
+            s.push(match acc {
+                Some(a) => a.scale(1.0 / k as f64),
+                None => s[0].lift(0.0),
+            });
         }
-        SeriesOf { c: s }
+        SeriesOf { c: s, nz: vec![true; k1] }
     }
 }
 
@@ -192,6 +319,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autodiff::Tape;
     use crate::taylor::{ode_jet, Series};
     use crate::util::ptest::{gen, Prop};
     use crate::util::rng::Pcg;
@@ -231,6 +359,79 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn masked_constants_match_dense_evaluation_property() {
+        // The structural-zero skip must not change any value: random
+        // expressions over a masked constant (SeriesOf::constant), the
+        // masked time series, and a dense series must agree with the same
+        // expressions over fully-dense operands.  Plain `==` is the right
+        // comparison: skipped terms are exact zeros, so only the sign of a
+        // zero may differ, and -0.0 == 0.0.
+        Prop::new(60).run("seriesof-masked-vs-dense", |rng: &mut Pcg, _| {
+            let ord = 1 + rng.below(5);
+            let p = rng.range(-1.5, 1.5) as f64;
+            let t0 = rng.range(-1.0, 1.0) as f64;
+            let z = SeriesOf::new(gen::vec_f64(rng, ord + 1, -1.5, 1.5));
+            // dense twins: same values, no masks
+            let mut cp = vec![0.0f64; ord + 1];
+            cp[0] = p;
+            let mut ct = vec![0.0f64; ord + 1];
+            ct[0] = t0;
+            if ord >= 1 {
+                ct[1] = 1.0;
+            }
+            let (pm, pd) = (SeriesOf::constant(p, ord), SeriesOf::new(cp));
+            let (tm, td) = (SeriesOf::time(t0, ord), SeriesOf::new(ct));
+            let run = |pv: &SeriesOf<f64>, tv: &SeriesOf<f64>| {
+                // the shape of one MLP neuron: tanh(z·w + b) (+ time mix)
+                z.mul(pv)
+                    .add(&pv.scale(0.5))
+                    .tanh()
+                    .mul(&tv.mul(pv))
+                    .sub(&tv.scale(-0.7))
+            };
+            let (got, want) = (run(&pm, &tm), run(&pd, &td));
+            for k in 0..=ord {
+                assert!(
+                    got.coeff(k) == want.coeff(k),
+                    "coeff {k}: masked {} vs dense {}",
+                    got.coeff(k),
+                    want.coeff(k)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn masked_constants_record_fewer_tape_nodes() {
+        // The point of the mask: a constant parameter series on the tape
+        // must not record arithmetic for its structurally-zero columns.
+        let ord = 4usize;
+        let count = |dense: bool| {
+            let tape = Tape::new(2);
+            let z = SeriesOf::new(
+                (0..=ord).map(|k| tape.input(&[0.3 + k as f64, -0.9])).collect(),
+            );
+            let p = tape.param(0, 0.7);
+            let ps = if dense {
+                let zero = tape.constant(0.0);
+                let mut c = vec![p];
+                c.extend((0..ord).map(|_| zero.clone()));
+                SeriesOf::new(c)
+            } else {
+                SeriesOf::constant(p, ord)
+            };
+            let before = tape.len();
+            let _ = z.mul(&ps).tanh();
+            tape.len() - before
+        };
+        let (dense, masked) = (count(true), count(false));
+        assert!(
+            masked < dense,
+            "masked {masked} nodes should beat dense {dense}"
+        );
     }
 
     #[test]
@@ -300,5 +501,10 @@ mod tests {
         assert_eq!(c.order(), 0);
         let l = c.lift(7.0);
         assert_eq!(*l.coeff(0), 7.0);
+        // the shared-zero builder pins the same structure as `constant`
+        let shared = SeriesOf::constant_padded(2.0f64, &0.0, 3);
+        for k in 0..=3 {
+            assert_eq!(shared.coeff(k), SeriesOf::constant(2.0f64, 3).coeff(k));
+        }
     }
 }

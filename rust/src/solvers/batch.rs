@@ -23,6 +23,18 @@
 //! per-trajectory stats), since step doubling re-enters the fixed driver
 //! and cannot share stage evaluations across rows with distinct h.
 //!
+//! Every driver also has a `_pooled` variant that shards the working set
+//! into contiguous per-worker sub-batches over a
+//! [`Pool`](crate::util::pool::Pool) — each shard runs the full driver with
+//! its own active set, step control, and RK scratch, and the per-trajectory
+//! results merge back in stable trajectory order.  Because no arithmetic
+//! ever crosses rows, the pooled results are **bit-identical to the serial
+//! driver at every thread count** (property-tested below).  Sharding is for
+//! natively-vectorized in-process dynamics (each shard clones the model);
+//! dynamics with a fixed per-launch dispatch cost (an XLA executable) lose
+//! launch amortization when split and should stay on the serial entry
+//! points.
+//!
 //! [`RegularizedBatchDynamics`] closes the loop with the paper: it lifts a
 //! series-generic vector field ([`BatchSeriesDynamics`]) into an augmented
 //! system whose extra column integrates the regularizer
@@ -55,6 +67,7 @@ use super::tableau::Tableau;
 use super::Dynamics;
 use crate::taylor::{ode_jet_batch, BatchSeriesDynamics};
 use crate::tensor::axpy;
+use crate::util::pool::{shard_ranges, Pool};
 
 /// Dynamics over a batch of trajectories: `dy[r] = f(t[r], y[r])` for every
 /// active row r, where `y` and `dy` are row-major `[t.len(), dim()]`.
@@ -198,6 +211,7 @@ pub fn split_quadrature(res: &BatchResult) -> (Vec<f32>, Vec<f32>) {
 /// regularizer integrand come out of the same sweep.  Per-row results are
 /// bit-identical to a scalar augmented solve built on the scalar
 /// [`ode_jet`](crate::taylor::ode_jet) (tested below).
+#[derive(Clone)]
 pub struct RegularizedBatchDynamics<F> {
     inner: F,
     order: usize,
@@ -914,6 +928,213 @@ pub fn solve_to_times_batch<F: BatchDynamics>(
     (traj, agg)
 }
 
+// ---------------------------------------------------------------------------
+// Worker-pool sharding: every driver over per-worker sub-batches
+// ---------------------------------------------------------------------------
+
+/// Adapter that shifts the engine's shard-local trajectory ids back to the
+/// caller's global ids, so per-trajectory-conditioned models stay correctly
+/// keyed inside a worker shard (shard row 0 is global trajectory `base`).
+struct OffsetIds<F> {
+    f: F,
+    base: usize,
+    ids: Vec<usize>,
+}
+
+impl<F: BatchDynamics> OffsetIds<F> {
+    fn new(f: F, base: usize) -> OffsetIds<F> {
+        OffsetIds { f, base, ids: vec![] }
+    }
+}
+
+impl<F: BatchDynamics> BatchDynamics for OffsetIds<F> {
+    fn dim(&self) -> usize {
+        self.f.dim()
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        self.ids.clear();
+        self.ids.extend(ids.iter().map(|id| id + self.base));
+        self.f.eval(&self.ids, t, y, dy);
+    }
+}
+
+/// Shard layout shared by the pooled drivers, plus the common shape checks.
+fn solver_shards<F: BatchDynamics>(
+    pool: &Pool,
+    f: &F,
+    y0: &[f32],
+) -> (usize, usize, Vec<std::ops::Range<usize>>) {
+    let n = f.dim();
+    assert!(n > 0, "BatchDynamics::dim() must be positive");
+    assert_eq!(y0.len() % n, 0, "batch state length vs dim");
+    let b = y0.len() / n;
+    (n, b, shard_ranges(b, pool.threads()))
+}
+
+/// [`solve_adaptive_batch`] sharded across a worker pool: the batch splits
+/// into contiguous per-worker sub-batches, each with its own working set,
+/// active-set compaction, and per-shard clone of the dynamics; results
+/// merge by stable trajectory id.  Bit-identical to the serial driver at
+/// any thread count (no arithmetic crosses rows).
+pub fn solve_adaptive_batch_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> BatchResult
+where
+    F: BatchDynamics + Clone + Send + Sync,
+{
+    let (n, b, shards) = solver_shards(pool, f, y0);
+    if shards.len() <= 1 {
+        let mut own = f.clone();
+        return batch_segment(&mut own, t0, t1, y0, tb, opts, None);
+    }
+    let parts = pool.run_shards(shards.len(), |s| {
+        let r = &shards[s];
+        let mut g = OffsetIds::new(f.clone(), r.start);
+        batch_segment(&mut g, t0, t1, &y0[r.start * n..r.end * n], tb, opts, None)
+    });
+    let mut y = Vec::with_capacity(b * n);
+    let mut t = Vec::with_capacity(b);
+    let mut stats = Vec::with_capacity(b);
+    for p in parts {
+        // shard order == ascending original trajectory id
+        y.extend_from_slice(&p.y);
+        t.extend_from_slice(&p.t);
+        stats.extend(p.stats);
+    }
+    BatchResult { n, y, t, stats }
+}
+
+/// [`solve_fixed_batch`] sharded across a worker pool (per-shard dynamics
+/// clones, merge by stable trajectory id; bit-identical to serial).
+pub fn solve_fixed_batch_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> (Vec<f32>, Vec<usize>)
+where
+    F: BatchDynamics + Clone + Send + Sync,
+{
+    let (n, b, shards) = solver_shards(pool, f, y0);
+    if shards.len() <= 1 {
+        return solve_fixed_batch(f.clone(), t0, t1, y0, steps, tb);
+    }
+    let parts = pool.run_shards(shards.len(), |s| {
+        let r = &shards[s];
+        let mut g = OffsetIds::new(f.clone(), r.start);
+        fixed_batch_drive(&mut g, t0, t1, &y0[r.start * n..r.end * n], steps, tb, None)
+    });
+    // Every shard ran the same tableau, so the stage count is uniform.
+    let stages = parts[0].1;
+    let mut y = Vec::with_capacity(b * n);
+    for (py, ps) in parts {
+        debug_assert_eq!(ps, stages);
+        y.extend_from_slice(&py);
+    }
+    (y, vec![steps * stages; b])
+}
+
+/// [`solve_fixed_batch_record`] sharded across a worker pool: each shard
+/// records its own rows; the per-stage caches concatenate back in stable
+/// trajectory order, so the merged record is bit-identical to a serial
+/// recording (the stage grid is shared, the rows never interact).
+pub fn solve_fixed_batch_record_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    steps: usize,
+    tb: &Tableau,
+) -> FixedGridRecord
+where
+    F: BatchDynamics + Clone + Send + Sync,
+{
+    let (n, b, shards) = solver_shards(pool, f, y0);
+    if shards.len() <= 1 {
+        let mut own = f.clone();
+        return solve_fixed_batch_record(&mut own, t0, t1, y0, steps, tb);
+    }
+    let parts = pool.run_shards(shards.len(), |s| {
+        let r = &shards[s];
+        let mut g = OffsetIds::new(f.clone(), r.start);
+        solve_fixed_batch_record(&mut g, t0, t1, &y0[r.start * n..r.end * n], steps, tb)
+    });
+    let mut rec = FixedGridRecord {
+        n,
+        batch: b,
+        steps,
+        t0,
+        dt: parts[0].dt,
+        stage_t: parts[0].stage_t.clone(),
+        stage_y: Vec::with_capacity(parts[0].stage_y.len()),
+        y: Vec::with_capacity(b * n),
+        nfe: parts[0].nfe,
+    };
+    for s in 0..parts[0].stage_y.len() {
+        let stages = parts[0].stage_y[s].len();
+        let mut step_cache = Vec::with_capacity(stages);
+        for i in 0..stages {
+            let mut m = Vec::with_capacity(b * n);
+            for p in &parts {
+                m.extend_from_slice(&p.stage_y[s][i]);
+            }
+            step_cache.push(m);
+        }
+        rec.stage_y.push(step_cache);
+    }
+    for p in parts {
+        rec.y.extend_from_slice(&p.y);
+    }
+    rec
+}
+
+/// [`solve_to_times_batch`] sharded across a worker pool: each shard walks
+/// the whole output grid for its rows (per-trajectory warm starts stay
+/// per-trajectory), and every grid snapshot merges back in stable
+/// trajectory order.  Bit-identical to the serial grid driver.
+pub fn solve_to_times_batch_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    times: &[f32],
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> (Vec<Vec<f32>>, Vec<SolveStats>)
+where
+    F: BatchDynamics + Clone + Send + Sync,
+{
+    let (n, b, shards) = solver_shards(pool, f, y0);
+    if shards.len() <= 1 {
+        return solve_to_times_batch(f.clone(), times, y0, tb, opts);
+    }
+    let parts = pool.run_shards(shards.len(), |s| {
+        let r = &shards[s];
+        let g = OffsetIds::new(f.clone(), r.start);
+        solve_to_times_batch(g, times, &y0[r.start * n..r.end * n], tb, opts)
+    });
+    let snaps = parts[0].0.len();
+    let mut traj: Vec<Vec<f32>> = (0..snaps).map(|_| Vec::with_capacity(b * n)).collect();
+    let mut stats = Vec::with_capacity(b);
+    for (ptraj, pstats) in parts {
+        for (k, snap) in ptraj.into_iter().enumerate() {
+            traj[k].extend(snap);
+        }
+        stats.extend(pstats);
+    }
+    (traj, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1197,6 +1418,129 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    // -- worker-pool sharding ----------------------------------------------
+
+    /// Per-trajectory-conditioned, Clone-able dynamics for the pooled
+    /// tests: keyed on the engine's stable *global* ids, so a shard that
+    /// leaked local row indices would produce visibly wrong trajectories.
+    #[derive(Clone)]
+    struct CondDyn {
+        a: Vec<f32>,
+        w: Vec<f32>,
+    }
+
+    impl CondDyn {
+        fn new(rng: &mut Pcg, b: usize) -> CondDyn {
+            CondDyn {
+                a: (0..b).map(|_| rng.range(0.3, 1.5)).collect(),
+                w: (0..b).map(|_| rng.range(1.0, 20.0)).collect(),
+            }
+        }
+    }
+
+    impl BatchDynamics for CondDyn {
+        fn dim(&self) -> usize {
+            1
+        }
+
+        fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+            for (r, (id, tr)) in ids.iter().zip(t).enumerate() {
+                dy[r] = self.a[*id] * (self.w[*id] * tr + y[r]).sin() - 0.3 * y[r];
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_drivers_bit_identical_to_serial_across_thread_counts() {
+        // The determinism acceptance: sharded adaptive and fixed solves
+        // must equal the serial driver bit-for-bit (states, times, stats)
+        // at thread counts 1, 2, and 4, over random embedded tableaux,
+        // tolerances, and per-trajectory-conditioned dynamics.
+        Prop::new(12).run("pooled-solver-equiv", |rng: &mut Pcg, case| {
+            let tb = tableau::by_name(EMBEDDED[case % EMBEDDED.len()]).unwrap();
+            let b = 5 + rng.below(8);
+            let steps = 1 + rng.below(4);
+            let f = CondDyn::new(rng, b);
+            let y0 = gen::vec_f32(rng, b, 1.0);
+            let opts = random_opts(rng);
+
+            let serial = solve_adaptive_batch(f.clone(), 0.0, 1.0, &y0, &tb, &opts);
+            let (fy, fnfe) = solve_fixed_batch(f.clone(), 0.0, 1.0, &y0, steps, &tb);
+            for threads in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+                let pooled = solve_adaptive_batch_pooled(&pool, &f, 0.0, 1.0, &y0, &tb, &opts);
+                assert_eq!(pooled.batch(), b);
+                for r in 0..b {
+                    assert_eq!(
+                        serial.row(r)[0].to_bits(),
+                        pooled.row(r)[0].to_bits(),
+                        "{} threads={threads} row {r}",
+                        tb.name
+                    );
+                    assert_eq!(serial.t[r].to_bits(), pooled.t[r].to_bits());
+                    assert_stats_eq(
+                        &serial.stats[r],
+                        &pooled.stats[r],
+                        &format!("{} threads={threads} row {r}", tb.name),
+                    );
+                }
+                let (py, pnfe) = solve_fixed_batch_pooled(&pool, &f, 0.0, 1.0, &y0, steps, &tb);
+                assert_eq!(fnfe, pnfe, "fixed NFE threads={threads}");
+                for (i, (a, p)) in fy.iter().zip(&py).enumerate() {
+                    assert_eq!(a.to_bits(), p.to_bits(), "fixed y[{i}] threads={threads}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_record_and_grid_drivers_match_serial() {
+        // The stage caches and grid snapshots must merge back in stable
+        // trajectory order, bit-identical to the serial recordings.
+        let mut rng = Pcg::new(91);
+        let b = 7usize;
+        let f = CondDyn::new(&mut rng, b);
+        let y0 = gen::vec_f32(&mut rng, b, 1.0);
+        let tb = tableau::dopri5();
+        let steps = 3usize;
+        let mut serial_f = f.clone();
+        let rec_s = solve_fixed_batch_record(&mut serial_f, 0.0, 1.0, &y0, steps, &tb);
+        let times = [0.0f32, 0.4, 1.0];
+        let (traj_s, stats_s) =
+            solve_to_times_batch(f.clone(), &times, &y0, &tb, &AdaptiveOpts::default());
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            let rec_p = solve_fixed_batch_record_pooled(&pool, &f, 0.0, 1.0, &y0, steps, &tb);
+            assert_eq!(rec_p.batch, b);
+            assert_eq!(rec_p.nfe, rec_s.nfe);
+            assert_eq!(rec_p.dt.to_bits(), rec_s.dt.to_bits());
+            assert_eq!(rec_p.stage_t, rec_s.stage_t);
+            assert_eq!(rec_p.stage_y.len(), rec_s.stage_y.len());
+            for (sp, ss) in rec_p.stage_y.iter().zip(&rec_s.stage_y) {
+                assert_eq!(sp.len(), ss.len());
+                for (up, us) in sp.iter().zip(ss) {
+                    for (a, w) in up.iter().zip(us) {
+                        assert_eq!(a.to_bits(), w.to_bits(), "stage cache threads={threads}");
+                    }
+                }
+            }
+            for (a, w) in rec_p.y.iter().zip(&rec_s.y) {
+                assert_eq!(a.to_bits(), w.to_bits());
+            }
+            let (traj_p, stats_p) =
+                solve_to_times_batch_pooled(&pool, &f, &times, &y0, &tb, &AdaptiveOpts::default());
+            assert_eq!(traj_p.len(), traj_s.len());
+            for (k, (sp, ss)) in traj_p.iter().zip(&traj_s).enumerate() {
+                for (a, w) in sp.iter().zip(ss) {
+                    assert_eq!(a.to_bits(), w.to_bits(), "snap {k} threads={threads}");
+                }
+            }
+            for (r, (a, w)) in stats_p.iter().zip(&stats_s).enumerate() {
+                assert_stats_eq(a, w, &format!("grid row {r} threads={threads}"));
             }
         }
     }

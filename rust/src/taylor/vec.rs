@@ -426,6 +426,8 @@ impl<T: BatchSeriesDynamics + ?Sized> BatchSeriesDynamics for &mut T {
 
 /// Adapter: a series-generic closure `(ids, z, t) -> dz` plus its row
 /// dimension (mirrors [`BatchFn`](crate::solvers::batch::BatchFn)).
+/// `Clone` (for cloneable closures) lets it ride the pooled drivers.
+#[derive(Clone)]
 pub struct SeriesFn<F> {
     f: F,
     n: usize,

@@ -1,11 +1,14 @@
 //! Benchmark harness (criterion is unavailable offline).
 //!
 //! `cargo bench` targets are `harness = false` binaries that use this module
-//! for warmup, timed repetitions, percentile reporting, and the aligned
-//! table printer the table/figure regenerators share.
+//! for warmup, timed repetitions, percentile reporting, the aligned table
+//! printer the table/figure regenerators share, and machine-readable JSON
+//! emission (`--json <path>` merges a section per bench into one file, so
+//! `make bench-json` accumulates `BENCH_parallel.json` across targets).
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::{summarize, Summary};
 
 /// Time `f` for `iters` iterations after `warmup` unmeasured runs.
@@ -94,6 +97,41 @@ pub fn f(x: f64, prec: usize) -> String {
     format!("{x:.prec$}")
 }
 
+/// The `--json <path>` argument of a bench invocation, if present
+/// (`cargo bench --bench X -- --json BENCH_parallel.json`).
+pub fn json_path_arg() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next();
+        }
+    }
+    None
+}
+
+/// Merge-write one bench's results into a shared JSON report: reads `path`
+/// if it already holds a JSON object, replaces key `section` with `value`,
+/// and writes the whole object back — so several bench binaries can
+/// accumulate sections in one machine-readable file.
+pub fn merge_bench_json(path: &str, section: &str, value: Json) {
+    let existing = std::fs::read_to_string(path).ok();
+    let mut root = existing
+        .as_deref()
+        .map(|s| match Json::parse(s) {
+            Ok(Json::Obj(m)) => m,
+            _ => {
+                // An unreadable report (interrupted run, hand edit) is
+                // replaced, but never silently.
+                eprintln!("warning: {path} held no JSON object; starting a fresh report");
+                Default::default()
+            }
+        })
+        .unwrap_or_default();
+    root.insert(section.to_string(), value);
+    std::fs::write(path, Json::Obj(root).to_string())
+        .unwrap_or_else(|e| panic!("writing bench json {path}: {e}"));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +159,20 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn merge_bench_json_accumulates_sections() {
+        let path = std::env::temp_dir().join("taynode_bench_json_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        merge_bench_json(&path, "a", Json::obj(vec![("x", Json::num(1.0))]));
+        merge_bench_json(&path, "b", Json::num(2.0));
+        // overwrite an existing section, keep the other
+        merge_bench_json(&path, "a", Json::num(3.0));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.req("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.req("b").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(&path);
     }
 }

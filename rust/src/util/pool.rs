@@ -1,0 +1,219 @@
+//! Dependency-free scoped worker pool — the parallel substrate of the
+//! batched solver and the discrete adjoint.
+//!
+//! A [`Pool`] is only a thread *count*: every [`run_shards`](Pool::run_shards)
+//! call spins up at most that many scoped workers (`std::thread::scope`, so
+//! borrowed data crosses into workers without `'static` bounds or `Arc`),
+//! drains a shared index queue, and joins before returning.  There are no
+//! long-lived threads, channels, or locks — idle cost is zero, and a pool of
+//! one thread executes every shard inline on the caller's stack.
+//!
+//! **Determinism contract:** shard *outputs* are returned in shard order, no
+//! matter which worker computed what or in what order shards finished.  As
+//! long as the shard layout is a pure function of the problem (see
+//! [`shard_ranges`]) and each shard's computation is deterministic, results
+//! are bit-identical at every thread count — the property the solver and
+//! adjoint tests pin.
+//!
+//! The thread count comes from the `TAYNODE_THREADS` environment variable
+//! when set (a positive integer; `1` disables threading entirely), else
+//! from [`std::thread::available_parallelism`].
+//!
+//! ```
+//! use taynode::util::pool::{shard_ranges, Pool};
+//!
+//! let pool = Pool::new(4);
+//! let shards = shard_ranges(10, pool.threads());
+//! let sums: Vec<usize> = pool.run_shards(shards.len(), |s| shards[s].clone().sum());
+//! assert_eq!(sums.iter().sum::<usize>(), (0..10usize).sum::<usize>());
+//! ```
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The environment variable that pins the worker count (see [`Pool::from_env`]).
+pub const THREADS_ENV: &str = "TAYNODE_THREADS";
+
+/// A scoped worker pool: a thread budget plus the shard-dispatch logic.
+/// Cheap to construct and to clone; holds no OS resources.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool of exactly `threads` workers (>= 1).  `Pool::new(1)` runs
+    /// every shard inline with no thread spawns at all.
+    pub fn new(threads: usize) -> Pool {
+        assert!(threads >= 1, "Pool: thread count must be positive");
+        Pool { threads }
+    }
+
+    /// Thread count from `TAYNODE_THREADS` (positive integer), defaulting
+    /// to the machine's available parallelism (1 if unknown).  An invalid
+    /// setting (zero, negative, non-numeric) is never silently honored or
+    /// dropped: it warns once per call and falls back to the default.
+    pub fn from_env() -> Pool {
+        let default = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = match std::env::var(THREADS_ENV) {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!(
+                        "warning: {THREADS_ENV}={v:?} is not a positive integer; \
+                         using the default worker count"
+                    );
+                    default()
+                }
+            },
+            Err(_) => default(),
+        };
+        Pool { threads }
+    }
+
+    /// The worker budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), ..., f(n - 1)` on up to `threads` scoped workers and
+    /// return the results **in shard order** (never in completion order).
+    /// Shards are drained from a shared atomic queue, so any worker may
+    /// compute any shard; with one worker (or one shard) everything runs
+    /// inline on the caller's thread.  A panicking shard propagates.
+    pub fn run_shards<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return vec![];
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut got: Vec<(usize, T)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            got.push((i, f(i)));
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, v) in h.join().expect("pool worker panicked") {
+                    out[i] = Some(v);
+                }
+            }
+        });
+        out.into_iter().map(|v| v.expect("pool shard produced no result")).collect()
+    }
+}
+
+/// Balanced contiguous shard ranges covering `0..total`: `min(total,
+/// max_shards)` non-empty ranges whose lengths differ by at most one, in
+/// ascending order.  A **pure function** of its arguments — callers that
+/// need bit-stable reductions across thread counts derive `max_shards` from
+/// the problem size alone and feed the ranges to [`Pool::run_shards`],
+/// reducing in range order.
+pub fn shard_ranges(total: usize, max_shards: usize) -> Vec<Range<usize>> {
+    if total == 0 || max_shards == 0 {
+        return vec![];
+    }
+    let n = max_shards.min(total);
+    let base = total / n;
+    let extra = total % n; // the first `extra` shards get one more row
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for s in 0..n {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        for total in 0..40usize {
+            for max in 1..9usize {
+                let shards = shard_ranges(total, max);
+                if total == 0 {
+                    assert!(shards.is_empty());
+                    continue;
+                }
+                assert_eq!(shards.len(), max.min(total));
+                // contiguous cover, each non-empty, sizes within one of each
+                // other
+                let mut next = 0usize;
+                let (mut lo, mut hi) = (usize::MAX, 0usize);
+                for r in &shards {
+                    assert_eq!(r.start, next);
+                    assert!(r.end > r.start);
+                    lo = lo.min(r.end - r.start);
+                    hi = hi.max(r.end - r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, total);
+                assert!(hi - lo <= 1, "unbalanced: {shards:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_layout_is_independent_of_threads() {
+        // The determinism precondition: the layout depends on the problem,
+        // never on the pool.
+        assert_eq!(shard_ranges(10, 4), shard_ranges(10, 4));
+        assert_eq!(shard_ranges(10, 4), vec![0..3, 3..6, 6..8, 8..10]);
+    }
+
+    #[test]
+    fn run_shards_returns_in_shard_order() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.run_shards(17, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_shards_borrows_caller_data() {
+        let data: Vec<u64> = (0..100).collect();
+        let pool = Pool::new(4);
+        let shards = shard_ranges(data.len(), 7);
+        let partial: Vec<u64> =
+            pool.run_shards(shards.len(), |s| shards[s].clone().map(|i| data[i]).sum());
+        assert_eq!(partial.len(), 7);
+        assert_eq!(partial.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn zero_shards_is_empty() {
+        let pool = Pool::new(4);
+        let out: Vec<usize> = pool.run_shards(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "thread count must be positive")]
+    fn zero_threads_rejected() {
+        let _ = Pool::new(0);
+    }
+}
