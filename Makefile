@@ -15,11 +15,13 @@ train-demo:
 
 # Machine-readable perf trajectory: run the parallel-engine benches and
 # accumulate ops/sec, speedup vs serial, and the worker count into
-# BENCH_parallel.json (each bench merge-writes its own section).  Honor
-# TAYNODE_THREADS if set; equality with the serial path is asserted inside
-# the benches before anything is timed.
+# BENCH_parallel.json, and the CNF stack (divergence engine, log-det
+# solves, NLL training) into BENCH_cnf.json (each bench merge-writes its
+# own section).  Honor TAYNODE_THREADS if set; equality with the serial
+# path is asserted inside the benches before anything is timed.
 .PHONY: bench-json
 bench-json:
-	rm -f BENCH_parallel.json
+	rm -f BENCH_parallel.json BENCH_cnf.json
 	cargo bench --bench perf_batch -- --json BENCH_parallel.json
 	cargo bench --bench perf_train_native -- --json BENCH_parallel.json
+	cargo bench --bench perf_cnf -- --json BENCH_cnf.json

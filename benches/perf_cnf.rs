@@ -1,0 +1,173 @@
+//! §Perf: the native CNF stack — the divergence engine (exact VJP sweeps
+//! vs one-probe Hutchinson), the log-det + `R_K` augmented adaptive solve
+//! (serial vs the chunk-queue pooled driver), and the full NLL train step
+//! (recorded forward + log-det discrete adjoint + Adam).
+//!
+//! Correctness is asserted before anything is timed: both divergence modes
+//! see identical forward values, the fixed-seed estimator is exactly
+//! reproducible, the pooled solve is **bit-identical** to serial, and the
+//! pooled train step reproduces the serial loss and gradients bit-for-bit
+//! (their FD correctness is property-tested in
+//! `coordinator::train_native`).  The ≥ 1.5x pooled-solve speedup gate
+//! applies when ≥ 4 workers are available.  `--json <path>` appends the
+//! machine-readable numbers (see `make bench-json`, which routes this
+//! bench into `BENCH_cnf.json`).
+
+use taynode::autodiff::div::{batch_divergence, Divergence};
+use taynode::coordinator::train_native::NativeCnfTrainer;
+use taynode::data::toy_density;
+use taynode::nn::Cnf;
+use taynode::solvers::adaptive::AdaptiveOpts;
+use taynode::solvers::batch::{
+    solve_adaptive_batch, solve_adaptive_batch_mut, solve_adaptive_batch_pooled,
+    LogDetBatchDynamics,
+};
+use taynode::solvers::tableau;
+use taynode::util::bench::{json_path_arg, merge_bench_json, report, time_fn};
+use taynode::util::json::Json;
+use taynode::util::pool::Pool;
+use taynode::util::rng::Pcg;
+
+fn main() {
+    let pool = Pool::from_env();
+    let threads = pool.threads();
+    println!("== native CNF stack: divergence engine, log-det solves, NLL training ==");
+
+    // -- divergence engine: exact (d sweeps) vs hutchinson (1 sweep) --------
+    let d = 8usize;
+    let b = 64usize;
+    let mut rng = Pcg::new(3);
+    let mut cnf = Cnf::new(d, &[32], 42);
+    for p in cnf.params.iter_mut() {
+        if *p == 0.0 {
+            *p = rng.range(-0.5, 0.5);
+        }
+    }
+    let z: Vec<f64> = (0..b * d).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+    let t: Vec<f64> = (0..b).map(|_| rng.range(0.0, 1.0) as f64).collect();
+    let ids: Vec<usize> = (0..b).collect();
+    let hutch = Divergence::Hutchinson { probes: 1, seed: 7 };
+    let (dy_e, div_e) = batch_divergence(&cnf, &ids, &t, &z, &Divergence::Exact);
+    let (dy_h, div_h) = batch_divergence(&cnf, &ids, &t, &z, &hutch);
+    let (_, div_h2) = batch_divergence(&cnf, &ids, &t, &z, &hutch);
+    assert!(div_e.iter().all(|v| v.is_finite()), "exact divergence not finite");
+    for (a, w) in dy_h.iter().zip(&dy_e) {
+        assert_eq!(a.to_bits(), w.to_bits(), "modes must share the forward");
+    }
+    for (a, w) in div_h.iter().zip(&div_h2) {
+        assert_eq!(a.to_bits(), w.to_bits(), "fixed-seed estimate must reproduce");
+    }
+    let ex = time_fn(2, 10, || {
+        std::hint::black_box(batch_divergence(&cnf, &ids, &t, &z, &Divergence::Exact));
+    });
+    report(&format!("divergence d={d} B={b}: exact ({d} VJP sweeps)"), &ex);
+    let hu = time_fn(2, 10, || {
+        std::hint::black_box(batch_divergence(&cnf, &ids, &t, &z, &hutch));
+    });
+    report(&format!("divergence d={d} B={b}: hutchinson-1 (1 sweep)"), &hu);
+    println!("exact/hutchinson cost ratio: {:.2}x\n", ex.p50 / hu.p50.max(1e-12));
+
+    // -- log-det + R_2 adaptive solve, serial vs chunk-queue pooled ----------
+    let d2 = 2usize;
+    let b2 = 128usize;
+    let mut flow = Cnf::new(d2, &[16], 11);
+    for p in flow.params.iter_mut() {
+        if *p == 0.0 {
+            *p = rng.range(-0.5, 0.5);
+        }
+    }
+    let y0: Vec<f32> = (0..b2 * d2).map(|_| rng.range(-1.5, 1.5)).collect();
+    let tb = tableau::dopri5();
+    let opts = AdaptiveOpts { rtol: 1e-5, atol: 1e-7, ..Default::default() };
+    let ld = LogDetBatchDynamics::new(flow, Divergence::Exact).with_regularizer(2);
+    let aug = ld.augment(&y0);
+    let serial = solve_adaptive_batch(ld.clone(), 0.0, 1.0, &aug, &tb, &opts);
+    let pooled = solve_adaptive_batch_pooled(&pool, &ld, 0.0, 1.0, &aug, &tb, &opts);
+    for (i, (a, w)) in pooled.y.iter().zip(&serial.y).enumerate() {
+        assert_eq!(a.to_bits(), w.to_bits(), "pooled logdet y[{i}] must be bit-identical");
+    }
+    let mut own = ld.clone();
+    let s1 = time_fn(1, 5, || {
+        std::hint::black_box(solve_adaptive_batch_mut(&mut own, 0.0, 1.0, &aug, &tb, &opts));
+    });
+    report(&format!("logdet+R_2 adaptive solve B={b2} (serial)"), &s1);
+    let sp = time_fn(1, 5, || {
+        std::hint::black_box(solve_adaptive_batch_pooled(&pool, &ld, 0.0, 1.0, &aug, &tb, &opts));
+    });
+    report(&format!("logdet+R_2 adaptive solve B={b2} ({threads} workers, chunk queue)"), &sp);
+    let solve_speedup = s1.p50 / sp.p50.max(1e-12);
+    println!("pooled solve speedup: {solve_speedup:.2}x\n");
+
+    // -- the full NLL train step ---------------------------------------------
+    let x = toy_density::sample("two_gaussians", 64, 5);
+    let make = |thr: usize| {
+        NativeCnfTrainer::new(Cnf::new(2, &[16], 42), 2, 0.1, 8, tableau::rk4(), 0.01)
+            .with_threads(thr)
+    };
+    {
+        let mut a = make(1);
+        let (m1, g1) = a.nll_grads(&x);
+        assert!(m1.loss.is_finite(), "CNF loss not finite");
+        assert!(g1.iter().any(|g| g.abs() > 1e-10), "CNF gradients all zero");
+        let mut bp = make(threads);
+        let (mt, gt) = bp.nll_grads(&x);
+        assert_eq!(
+            m1.loss.to_bits(),
+            mt.loss.to_bits(),
+            "pooled CNF loss must be bit-identical"
+        );
+        for (i, (p, w)) in gt.iter().zip(&g1).enumerate() {
+            assert_eq!(p.to_bits(), w.to_bits(), "pooled CNF grad[{i}] must be bit-identical");
+        }
+    }
+    let mut tr = make(1);
+    let fwd = time_fn(2, 8, || {
+        std::hint::black_box(tr.forward_record(&x));
+    });
+    report("cnf forward record (fixed grid, exact divergence)", &fwd);
+    let step_serial = time_fn(2, 8, || {
+        std::hint::black_box(tr.step_nll(&x));
+    });
+    report("cnf full NLL step (serial)", &step_serial);
+    let mut tp = make(threads);
+    let step_pooled = time_fn(2, 8, || {
+        std::hint::black_box(tp.step_nll(&x));
+    });
+    report("cnf full NLL step (pooled)", &step_pooled);
+    let step_speedup = step_serial.p50 / step_pooled.p50.max(1e-12);
+    println!(
+        "adjoint/forward overhead ~{:.1}x, pooled step speedup {step_speedup:.2}x",
+        ((step_serial.p50 - fwd.p50) / fwd.p50.max(1e-12)).max(0.0)
+    );
+
+    if threads >= 4 {
+        assert!(
+            solve_speedup >= 1.5,
+            "acceptance: pooled logdet solve must be >= 1.5x serial with \
+             >= 4 workers (got {solve_speedup:.2}x)"
+        );
+        println!("\ncnf acceptance (>= 1.5x pooled solve speedup, >= 4 workers): PASS");
+    } else {
+        println!(
+            "\ncnf acceptance gate skipped: only {threads} worker(s) \
+             available (needs >= 4)"
+        );
+    }
+
+    if let Some(path) = json_path_arg() {
+        merge_bench_json(&path, "threads", Json::num(threads as f64));
+        merge_bench_json(
+            &path,
+            "perf_cnf",
+            Json::obj(vec![
+                ("divergence_exact_evals_per_sec", Json::num(1.0 / ex.p50.max(1e-12))),
+                ("divergence_hutch1_evals_per_sec", Json::num(1.0 / hu.p50.max(1e-12))),
+                ("logdet_solve_speedup_vs_serial", Json::num(solve_speedup)),
+                ("nll_steps_per_sec_serial", Json::num(1.0 / step_serial.p50.max(1e-12))),
+                ("nll_steps_per_sec_pooled", Json::num(1.0 / step_pooled.p50.max(1e-12))),
+                ("nll_step_speedup", Json::num(step_speedup)),
+            ]),
+        );
+        println!("wrote perf_cnf section to {path}");
+    }
+}

@@ -1,47 +1,65 @@
-//! FFJORD density estimation on synthetic tabular data (paper §5.3 /
-//! Table 4): unregularized vs RNODE (Finlay et al.) vs TayNODE R_2,
-//! evaluated with adaptive solvers (NFE + nats + integrated R_2/B/K).
+//! Native density estimation: train a concat-squash CNF on the 2-D
+//! two-Gaussians toy density with the exact NLL objective (log-det
+//! discrete adjoint), then compare λ = 0 vs λ = 0.1 under the adaptive
+//! solver — no artifacts, no Python, no `pjrt`.  (The artifact-backed
+//! FFJORD tables live in `benches/table2_ffjord.rs` /
+//! `benches/table4_miniboone.rs`.)
 //!
-//! Run: `make artifacts && cargo run --release --example density_estimation`
+//! Run: `cargo run --release --example density_estimation`
 
-use taynode::coordinator::evaluator::cnf_eval;
-use taynode::experiments::common::{eval_opts, load_runtime, train_cnf, CnfHarness};
+use taynode::autodiff::div::{batch_divergence, Divergence};
+use taynode::coordinator::train_native::NativeCnfTrainer;
+use taynode::data::toy_density;
+use taynode::nn::Cnf;
+use taynode::solvers::adaptive::AdaptiveOpts;
 use taynode::solvers::tableau;
 use taynode::util::bench::Table;
-use taynode::util::rng::Pcg;
 
-fn main() -> anyhow::Result<()> {
-    let rt = load_runtime()?;
-    let h = CnfHarness::new(&rt, "cnf_tab", 768, 37)?;
-    println!("FFJORD on synthetic tabular data: d={}, batch {}\n", h.d, h.b);
+fn main() {
+    let x = toy_density::sample("two_gaussians", 32, 11);
+    let x_eval = toy_density::sample("two_gaussians", 32, 12);
     let tb = tableau::dopri5();
-    let opts = eval_opts();
-    let iters = 150;
+    let opts = AdaptiveOpts { rtol: 1e-5, atol: 1e-7, ..Default::default() };
 
-    let mut table = Table::new(&["variant", "lambda", "secs", "test_nll", "NFE", "R_2", "B", "K"]);
-    for (artifact, lam) in [
-        ("cnf_tab_train_unreg_s8", 0.0f32),
-        ("cnf_tab_train_rnode_s8", 0.05),
-        ("cnf_tab_train_k2_s8", 0.05),
-    ] {
-        let (tr, secs, _) = train_cnf(&rt, &h, artifact, iters, lam, 2)?;
-        let mut rng = Pcg::new(61);
-        let probe = rng.rademacher(h.b * h.d);
-        let ev = cnf_eval(&rt, "cnf_tab", &tr.store, &h.test, &probe, &tb, &opts)?;
-        println!("[{artifact}] nll {:.3}  NFE {}  R2 {:.2}  B {:.3}  K {:.3}",
-                 ev.nll, ev.nfe, ev.r2, ev.jacobian, ev.kinetic);
+    // Divergence engine sanity on the untrained flow: the exact trace vs a
+    // 64-probe fixed-seed Hutchinson estimate at one point.
+    let cnf = Cnf::new(2, &[16], 42);
+    let z = [0.4f64, -0.7];
+    let (_, exact) = batch_divergence(&cnf, &[0], &[0.0], &z, &Divergence::Exact);
+    let (_, est) = batch_divergence(
+        &cnf,
+        &[0],
+        &[0.0],
+        &z,
+        &Divergence::Hutchinson { probes: 64, seed: 9 },
+    );
+    println!(
+        "divergence at (0.4, -0.7): exact {:.5}, hutchinson-64 {:.5}\n",
+        exact[0], est[0]
+    );
+
+    let mut table = Table::new(&["lambda", "train_nll", "eval_nll", "R_K", "mean NFE"]);
+    for lam in [0.0f32, 0.1] {
+        let cnf = Cnf::new(2, &[16], 42);
+        let mut tr = NativeCnfTrainer::new(cnf, 2, lam, 8, tableau::rk4(), 0.02);
+        let mut last = f32::NAN;
+        for step in 0..60 {
+            let m = tr.step_nll(&x);
+            last = m.task;
+            if step % 20 == 0 {
+                println!("λ={lam} step {step:>3}: nll {:.4}  R_K {:.3e}", m.task, m.reg);
+            }
+        }
+        let ev = tr.eval_nll(&x_eval, &tb, &opts);
+        let nfe = ev.stats.iter().map(|s| s.nfe as f64).sum::<f64>() / ev.stats.len() as f64;
         table.row(vec![
-            artifact.into(),
             format!("{lam}"),
-            format!("{secs:.1}"),
-            format!("{:.3}", ev.nll),
-            format!("{}", ev.nfe),
-            format!("{:.2}", ev.r2),
-            format!("{:.3}", ev.jacobian),
-            format!("{:.3}", ev.kinetic),
+            format!("{last:.4}"),
+            format!("{:.4}", ev.nll),
+            format!("{:.3e}", ev.mean_r_k),
+            format!("{nfe:.1}"),
         ]);
     }
     println!();
     table.print();
-    Ok(())
 }

@@ -1,0 +1,357 @@
+//! The divergence engine: `∇·f(z, t)` for a whole batch, out of one tape
+//! recording — the instantaneous change-of-variables term of a continuous
+//! normalizing flow (`d log p(z(t))/dt = −∇·f`).
+//!
+//! [`batch_divergence`] records a [`ValueDynamics`] forward **once** on a
+//! reverse-mode [`Tape`] over `[B]` columns and then pulls the trace of the
+//! state Jacobian out of it two ways:
+//!
+//! * **[`Divergence::Exact`]** — one backward sweep per state dimension,
+//!   each seeding `e_i` on output `f_i` and reading `∂f_i/∂z_i` (n VJPs for
+//!   the exact trace; the FFJORD `O(n)` cost).
+//! * **[`Divergence::Hutchinson`]** — the stochastic trace estimator
+//!   `E_v[vᵀ(∂f/∂z)v] = tr(∂f/∂z)`: one backward sweep per probe, seeding a
+//!   **fixed-seed Rademacher** vector `v` and dotting the VJP `vᵀJ` with
+//!   `v` again.  Probes are keyed on the *trajectory id* (never the row
+//!   position), so the estimate is a deterministic function of the
+//!   trajectory: the augmented vector field stays continuous across solver
+//!   steps, active-set compaction, and worker-pool sharding — pooled and
+//!   serial solves are bit-identical.
+//!
+//! [`divergence_values`] is the *forward-mode* twin over any [`Value`]
+//! carrier (n first-order [`SeriesOf`] probes).  With `T = `[`Var`] the
+//! divergence comes out as a **tape node**, which is how the training path
+//! differentiates *through* the log-det dynamics (reverse-over-forward —
+//! the tape cannot run reverse-over-reverse).
+//!
+//! ```
+//! use taynode::autodiff::div::{batch_divergence, Divergence};
+//! use taynode::nn::Mlp;
+//!
+//! // A linear field f = z·W + b has ∇·f = tr(W) everywhere.
+//! let mut mlp = Mlp::new(2, &[], false, 0);
+//! mlp.params = vec![0.5, 2.0, -1.0, 0.25, 0.1, -0.2]; // W, then b
+//! let (dy, div) = batch_divergence(
+//!     &mlp,
+//!     &[0, 1],
+//!     &[0.0, 0.3],
+//!     &[1.0, -1.0, 0.5, 2.0],
+//!     &Divergence::Exact,
+//! );
+//! assert_eq!(dy.len(), 4);
+//! for d in &div {
+//!     assert!((d - 0.75).abs() < 1e-12); // tr(W) = 0.5 + 0.25
+//! }
+//! ```
+
+use super::{Tape, Var};
+use crate::nn::{SeriesOf, Value, ValueDynamics};
+use crate::util::rng::Pcg;
+
+/// How [`batch_divergence`] turns the recorded Jacobian into a trace.
+#[derive(Clone, Debug)]
+pub enum Divergence {
+    /// n backward sweeps — the exact trace.
+    Exact,
+    /// `probes` Rademacher sweeps averaged — the Hutchinson estimate.
+    /// `seed` pins the probe vectors; together with the trajectory id it
+    /// fully determines them (see [`rademacher_probe`]).
+    Hutchinson { probes: usize, seed: u64 },
+}
+
+/// The fixed-seed Rademacher probe for one trajectory: n entries in
+/// `{−1, +1}`, a pure function of `(seed, id, probe)` — never of the row
+/// position or the thread count, which is what keeps Hutchinson-augmented
+/// solves deterministic under compaction and pooling.
+pub fn rademacher_probe(seed: u64, id: usize, probe: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; n];
+    fill_rademacher_probe(seed, id, probe, &mut out);
+    out
+}
+
+/// [`rademacher_probe`] into a caller-owned buffer — the engine's
+/// no-allocation path (one probe fill per row per sweep on the solver hot
+/// path).
+pub fn fill_rademacher_probe(seed: u64, id: usize, probe: usize, out: &mut [f64]) {
+    let mut rng = Pcg::with_stream(
+        seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        0x5bd1_e995 ^ probe as u64,
+    );
+    for v in out.iter_mut() {
+        *v = if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 };
+    }
+}
+
+/// Evaluate `f` and its divergence for a batch: `z` is row-major `[B, n]`,
+/// `t` the per-row times, `ids` the stable trajectory ids (Hutchinson keys
+/// its probes on them).  Returns `(dy, div)` with `dy` row-major `[B, n]`
+/// and `div[r] = ∇·f(z_r, t_r)` (or its estimate).
+///
+/// One forward recording serves every sweep; parameters enter as tape
+/// constants (this is the *solver-path* engine — the training path builds
+/// gradient-tracked leaves and uses [`divergence_values`] instead).
+pub fn batch_divergence<D: ValueDynamics>(
+    f: &D,
+    ids: &[usize],
+    t: &[f64],
+    z: &[f64],
+    mode: &Divergence,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = f.dim();
+    assert!(n > 0, "batch_divergence: dim must be positive");
+    let b = t.len();
+    assert_eq!(z.len(), b * n, "batch_divergence: state shape");
+    assert_eq!(ids.len(), b, "batch_divergence: ids length");
+    if b == 0 {
+        return (vec![], vec![]);
+    }
+    let tape = Tape::new(b);
+    let mut colbuf = vec![0.0f64; b];
+    let zvars: Vec<Var> = (0..n)
+        .map(|j| {
+            for (r, cv) in colbuf.iter_mut().enumerate() {
+                *cv = z[r * n + j];
+            }
+            tape.input(&colbuf)
+        })
+        .collect();
+    let tvar = tape.input(t);
+    let out = f.forward_values(&zvars, &tvar);
+    assert_eq!(out.len(), n, "batch_divergence: f output arity");
+    let mut dy = vec![0.0f64; b * n];
+    for (j, oj) in out.iter().enumerate() {
+        for (r, v) in oj.value().iter().enumerate() {
+            dy[r * n + j] = *v;
+        }
+    }
+    let mut div = vec![0.0f64; b];
+    match mode {
+        Divergence::Exact => {
+            let ones = vec![1.0f64; b];
+            for i in 0..n {
+                let g = tape.backward(&[(&out[i], ones.as_slice())]);
+                for (dv, gr) in div.iter_mut().zip(g.wrt(&zvars[i])) {
+                    *dv += *gr;
+                }
+            }
+        }
+        Divergence::Hutchinson { probes, seed } => {
+            assert!(*probes >= 1, "Hutchinson needs at least one probe");
+            let mut vcols: Vec<Vec<f64>> = vec![vec![0.0f64; b]; n];
+            let mut vr = vec![0.0f64; n];
+            for p in 0..*probes {
+                for (r, id) in ids.iter().enumerate() {
+                    fill_rademacher_probe(*seed, *id, p, &mut vr);
+                    for (vc, vi) in vcols.iter_mut().zip(&vr) {
+                        vc[r] = *vi;
+                    }
+                }
+                let seeds: Vec<(&Var, &[f64])> = out
+                    .iter()
+                    .zip(&vcols)
+                    .map(|(o, v)| (o, v.as_slice()))
+                    .collect();
+                let g = tape.backward(&seeds);
+                for (i, vc) in vcols.iter().enumerate() {
+                    let gz = g.wrt(&zvars[i]);
+                    for r in 0..b {
+                        div[r] += gz[r] * vc[r];
+                    }
+                }
+            }
+            let inv = 1.0 / *probes as f64;
+            for dv in div.iter_mut() {
+                *dv *= inv;
+            }
+        }
+    }
+    (dy, div)
+}
+
+/// Forward-mode exact divergence over any [`Value`] carrier: n first-order
+/// series probes through `f` (direction `e_i` in z, time held constant),
+/// summing coefficient 1 of output i.  `f` takes the same closure shape as
+/// [`ode_jet_values`](crate::nn::ode_jet_values), so the training path
+/// records jets and divergence through ONE closure on one tape — with
+/// `T = `[`Var`], seeding a cotangent on the returned value
+/// back-propagates through the whole Jacobian-trace computation.
+pub fn divergence_values<T, F>(f: &mut F, z: &[T], t: &T) -> T
+where
+    T: Value,
+    F: FnMut(&[SeriesOf<T>], &SeriesOf<T>) -> Vec<SeriesOf<T>>,
+{
+    let n = z.len();
+    assert!(n > 0, "divergence_values: state must be non-empty");
+    let zero = t.lift(0.0);
+    let one = t.lift(1.0);
+    let ts = SeriesOf::constant_padded(t.clone(), &zero, 1);
+    let mut div: Option<T> = None;
+    for i in 0..n {
+        let zs: Vec<SeriesOf<T>> = (0..n)
+            .map(|j| {
+                if j == i {
+                    SeriesOf::new(vec![z[j].clone(), one.clone()])
+                } else {
+                    SeriesOf::constant_padded(z[j].clone(), &zero, 1)
+                }
+            })
+            .collect();
+        let out = f(&zs, &ts);
+        assert_eq!(out.len(), n, "divergence_values: f output arity");
+        let d = out[i].coeff(1).clone();
+        div = Some(match div {
+            Some(a) => a.add(&d),
+            None => d,
+        });
+    }
+    div.expect("n > 0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Cnf, Mlp};
+    use crate::util::rng::Pcg;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// A headless linear Mlp: f = z·W + b, so the Jacobian is Wᵀ and the
+    /// divergence is exactly tr(W) everywhere.
+    fn linear_field(w: &[f32], b: &[f32]) -> Mlp {
+        let n = b.len();
+        assert_eq!(w.len(), n * n);
+        let mut mlp = Mlp::new(n, &[], false, 0);
+        let mut params = w.to_vec();
+        params.extend_from_slice(b);
+        mlp.params = params;
+        mlp
+    }
+
+    #[test]
+    fn exact_trace_matches_analytic_divergence_on_linear_field() {
+        // W row-major [in, out]: tr(W) = 0.7 - 0.3 + 0.2 = 0.6.
+        let mlp = linear_field(
+            &[0.7, 0.4, -0.9, 0.1, -0.3, 0.6, 0.2, -0.5, 0.2],
+            &[0.1, -0.2, 0.3],
+        );
+        let mut rng = Pcg::new(5);
+        let b = 6usize;
+        let z: Vec<f64> = (0..b * 3).map(|_| rng.range(-2.0, 2.0) as f64).collect();
+        let t: Vec<f64> = (0..b).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let ids: Vec<usize> = (0..b).collect();
+        let (dy, div) = batch_divergence(&mlp, &ids, &t, &z, &Divergence::Exact);
+        for (r, d) in div.iter().enumerate() {
+            assert!(close(*d, 0.6, 1e-12), "row {r}: {d}");
+        }
+        // dy is the plain forward
+        for r in 0..b {
+            let want = mlp.forward_f64(&z[r * 3..(r + 1) * 3], t[r]);
+            for i in 0..3 {
+                assert!(close(dy[r * 3 + i], want[i], 1e-12), "row {r} dim {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn hutchinson_is_exact_on_a_diagonal_jacobian() {
+        // With J diagonal, vᵀJv = Σ v_i² J_ii = tr(J) for EVERY Rademacher
+        // v (v_i² = 1) — the estimator has zero variance, so one probe must
+        // already equal the exact trace.
+        let mlp = linear_field(&[1.3, 0.0, 0.0, -0.8], &[0.0, 0.5]);
+        let mut rng = Pcg::new(9);
+        let b = 5usize;
+        let z: Vec<f64> = (0..b * 2).map(|_| rng.range(-1.5, 1.5) as f64).collect();
+        let t = vec![0.0f64; b];
+        let ids: Vec<usize> = (0..b).map(|r| 10 + r).collect();
+        let (_, exact) = batch_divergence(&mlp, &ids, &t, &z, &Divergence::Exact);
+        let (_, est) =
+            batch_divergence(&mlp, &ids, &t, &z, &Divergence::Hutchinson { probes: 1, seed: 7 });
+        for (e, x) in est.iter().zip(&exact) {
+            assert!(close(*e, *x, 1e-12), "{e} vs {x}");
+        }
+    }
+
+    #[test]
+    fn hutchinson_single_probe_structure_and_mean_convergence() {
+        // 2-D: a single-probe estimate is tr(W) ± (W01 + W10) exactly
+        // (v0·v1 = ±1), and averaging many probes converges to the trace —
+        // the unbiasedness direction, deterministic under the fixed seed.
+        let (tr, off) = (0.4f64, 0.5f64);
+        let mlp = linear_field(&[0.7, 0.4, 0.1, -0.3], &[0.0, 0.0]);
+        let mut rng = Pcg::new(3);
+        let b = 8usize;
+        let z: Vec<f64> = (0..b * 2).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let t = vec![0.2f64; b];
+        let ids: Vec<usize> = (0..b).collect();
+        let (_, one) =
+            batch_divergence(&mlp, &ids, &t, &z, &Divergence::Hutchinson { probes: 1, seed: 11 });
+        for (r, e) in one.iter().enumerate() {
+            let hit = close(*e, tr + off, 1e-10) || close(*e, tr - off, 1e-10);
+            assert!(hit, "row {r}: {e} is not tr ± off");
+        }
+        // both signs occur across trajectories (it IS an estimator)
+        assert!(one.iter().any(|e| *e > tr) && one.iter().any(|e| *e < tr));
+        let (_, many) =
+            batch_divergence(&mlp, &ids, &t, &z, &Divergence::Hutchinson { probes: 256, seed: 11 });
+        let mean: f64 = many.iter().sum::<f64>() / b as f64;
+        assert!((mean - tr).abs() < 0.05, "mean {mean} vs trace {tr}");
+        for (r, e) in many.iter().enumerate() {
+            assert!((e - tr).abs() < 0.2, "row {r}: {e} vs {tr}");
+        }
+    }
+
+    #[test]
+    fn probes_are_keyed_on_trajectory_ids_not_rows() {
+        // Swapping two rows AND their ids must swap the estimates exactly —
+        // the invariant that makes Hutchinson solves compaction- and
+        // pool-safe.
+        let mlp = linear_field(&[0.7, 0.4, 0.1, -0.3], &[0.1, -0.1]);
+        let z = [0.3f64, -0.8, 1.1, 0.4];
+        let zsw = [1.1f64, 0.4, 0.3, -0.8];
+        let t = [0.1f64, 0.9];
+        let tsw = [0.9f64, 0.1];
+        let mode = Divergence::Hutchinson { probes: 3, seed: 21 };
+        let (_, a) = batch_divergence(&mlp, &[5, 9], &t, &z, &mode);
+        let (_, b) = batch_divergence(&mlp, &[9, 5], &tsw, &zsw, &mode);
+        assert_eq!(a[0].to_bits(), b[1].to_bits());
+        assert_eq!(a[1].to_bits(), b[0].to_bits());
+        // same (seed, id, probe) => same probe vector; different id => not
+        // all equal
+        assert_eq!(rademacher_probe(21, 5, 0, 4), rademacher_probe(21, 5, 0, 4));
+        assert_ne!(
+            (0..8).map(|p| rademacher_probe(21, 5, p, 4)).collect::<Vec<_>>(),
+            (0..8).map(|p| rademacher_probe(21, 9, p, 4)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn forward_mode_divergence_matches_tape_vjp_on_the_cnf() {
+        // divergence_values (n first-order series probes) vs the exact
+        // tape-VJP engine, on a real concat-squash field: the training
+        // path's divergence and the solver path's divergence must agree.
+        let mut rng = Pcg::new(17);
+        let mut cnf = Cnf::new(2, &[4], 77);
+        for p in cnf.params.iter_mut() {
+            if *p == 0.0 {
+                *p = rng.range(-0.6, 0.6);
+            }
+        }
+        for case in 0..10 {
+            let z = [rng.range(-1.2, 1.2) as f64, rng.range(-1.2, 1.2) as f64];
+            let t = rng.range(-0.5, 0.5) as f64;
+            let (_, div) = batch_divergence(&cnf, &[0], &[t], &z, &Divergence::Exact);
+            let cnf_ref = &cnf;
+            let fwd = divergence_values(
+                &mut |zs: &[SeriesOf<f64>], ts: &SeriesOf<f64>| {
+                    let p = cnf_ref.lift_params(ts);
+                    cnf_ref.forward(&p, zs, ts)
+                },
+                &z,
+                &t,
+            );
+            assert!(close(fwd, div[0], 1e-10), "case {case}: {fwd} vs {}", div[0]);
+        }
+    }
+}

@@ -38,8 +38,10 @@
 //! assert!(g.param(0).is_finite());
 //! ```
 
+pub mod div;
 pub mod optim;
 
+pub use div::{batch_divergence, divergence_values, Divergence};
 pub use optim::Adam;
 
 use std::cell::RefCell;
@@ -61,6 +63,8 @@ enum Op {
     Mul(usize, usize),
     Scale(usize, f64),
     Tanh(usize),
+    Exp(usize),
+    Sigmoid(usize),
 }
 
 struct TapeInner {
@@ -231,6 +235,18 @@ impl Tape {
                         lo[a * rows + r] += g[r] * (1.0 - y[r] * y[r]);
                     }
                 }
+                Op::Exp(a) => {
+                    let y = t.col(id);
+                    for r in 0..rows {
+                        lo[a * rows + r] += g[r] * y[r];
+                    }
+                }
+                Op::Sigmoid(a) => {
+                    let y = t.col(id);
+                    for r in 0..rows {
+                        lo[a * rows + r] += g[r] * y[r] * (1.0 - y[r]);
+                    }
+                }
             }
         }
         Grads {
@@ -334,6 +350,14 @@ impl Value for Var {
     fn tanh(&self) -> Var {
         push_unary(self, Op::Tanh(self.id), |x| x.tanh())
     }
+
+    fn exp(&self) -> Var {
+        push_unary(self, Op::Exp(self.id), f64::exp)
+    }
+
+    fn sigmoid(&self) -> Var {
+        push_unary(self, Op::Sigmoid(self.id), |x| 1.0 / (1.0 + (-x).exp()))
+    }
 }
 
 /// The result of one [`Tape::backward`] sweep.
@@ -410,13 +434,16 @@ mod tests {
         // Every Op's VJP, alone and composed, vs central differences.
         Prop::new(60).run("tape-op-fd", |rng: &mut Pcg, case| {
             let x = gen::vec_f64(rng, 3, -1.5, 1.5);
-            let exprs: [fn(&[Var]) -> Var; 6] = [
+            let exprs: [fn(&[Var]) -> Var; 8] = [
                 |v| v[0].add(&v[1]).mul(&v[2]),
                 |v| v[0].sub(&v[1]).tanh(),
                 |v| v[0].mul(&v[1]).mul(&v[2]),
                 |v| v[0].scale(1.7).add(&v[1].scale(-0.4)),
                 |v| v[0].tanh().mul(&v[1].tanh()).add(&v[2]),
                 |v| v[0].mul(&v[0]).sub(&v[1].mul(&v[2]).scale(0.5)),
+                // the CNF gate ops: exp and sigmoid, alone and composed
+                |v| v[0].exp().mul(&v[1].sigmoid()).add(&v[2]),
+                |v| v[0].mul(&v[1]).sigmoid().sub(&v[2].scale(0.3).exp()),
             ];
             let expr = exprs[case % exprs.len()];
             let fns = |x: &[f64]| -> f64 {

@@ -7,12 +7,14 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::autodiff::div::Divergence;
+use crate::nn::ValueDynamics;
 use crate::runtime::client::{literal_f32, literal_i32};
 use crate::runtime::{ParamStore, Runtime, XlaDynamics};
 use crate::solvers::adaptive::{solve_adaptive_mut, AdaptiveOpts, SolveStats};
 use crate::solvers::batch::{
-    solve_adaptive_batch, solve_adaptive_batch_pooled, solve_to_times_batch, split_quadrature,
-    RegularizedBatchDynamics, Rowwise,
+    solve_adaptive_batch, solve_adaptive_batch_pooled, solve_to_times_batch, split_aug_cols,
+    split_quadrature, LogDetBatchDynamics, RegularizedBatchDynamics, Rowwise,
 };
 use crate::solvers::tableau::Tableau;
 use crate::taylor::BatchSeriesDynamics;
@@ -224,6 +226,77 @@ where
     let (y, r_k) = split_quadrature(&res);
     let mean_r_k = mean(&r_k);
     RkEval { n, y, r_k, mean_r_k, stats: res.stats }
+}
+
+// ---------------------------------------------------------------------------
+// Native CNF NLL (log-det augmented solve — no XLA artifact needed)
+// ---------------------------------------------------------------------------
+
+/// Adaptive-solver evaluation of a **native** CNF: one log-det + `R_K`
+/// augmented batched solve, scored as negative log-likelihood in nats
+/// under the standard-normal base distribution.  (The artifact-backed
+/// FFJORD instrument is [`cnf_eval`] below; this one needs no runtime.)
+#[derive(Clone, Debug)]
+pub struct CnfNllEval {
+    /// Un-augmented per-trajectory state dimension.
+    pub n: usize,
+    /// Batch-mean NLL in nats — the FFJORD table column.
+    pub nll: f64,
+    /// Per-trajectory NLL.
+    pub per_nll: Vec<f32>,
+    /// Final latent states, row-major `[B, n]`.
+    pub y: Vec<f32>,
+    /// Batch-mean integrated log-determinant.
+    pub mean_logdet: f64,
+    /// Batch-mean `R_K`.
+    pub mean_r_k: f64,
+    /// Per-trajectory stats of the augmented solve.
+    pub stats: Vec<SolveStats>,
+}
+
+/// Integrate the `[z, ℓ, q]` system adaptively for the whole batch,
+/// sharded across the pool, and score each trajectory:
+/// `NLL = ½‖z(1)‖² + (n/2)·ln 2π − ℓ(1)` (data → base over `t ∈ [0, 1]`,
+/// so `ℓ` accumulates `+∇·f`).  The divergence mode is the caller's:
+/// exact for table columns, Hutchinson to measure the estimator's cost —
+/// either way the pooled solve is bit-identical to serial.
+pub fn cnf_nll_eval_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    order: usize,
+    div: &Divergence,
+    x0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+) -> CnfNllEval
+where
+    F: ValueDynamics + BatchSeriesDynamics + Clone + Send + Sync,
+{
+    let n = ValueDynamics::dim(f);
+    let aug_dyn = LogDetBatchDynamics::new(f.clone(), div.clone()).with_regularizer(order);
+    let aug = aug_dyn.augment(x0);
+    let res = solve_adaptive_batch_pooled(pool, &aug_dyn, 0.0, 1.0, &aug, tb, opts);
+    let (y, cols) = split_aug_cols(&res, n);
+    let half_ln_2pi = 0.5 * (2.0 * std::f64::consts::PI).ln();
+    let b = res.batch();
+    let mut per_nll = Vec::with_capacity(b);
+    for r in 0..b {
+        let mut sq = 0.0f64;
+        for i in 0..n {
+            let zi = y[r * n + i] as f64;
+            sq += zi * zi;
+        }
+        per_nll.push((0.5 * sq + n as f64 * half_ln_2pi - cols[0][r] as f64) as f32);
+    }
+    CnfNllEval {
+        n,
+        nll: mean(&per_nll),
+        per_nll,
+        y,
+        mean_logdet: mean(&cols[0]),
+        mean_r_k: mean(&cols[1]),
+        stats: res.stats,
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -31,47 +31,88 @@
 //! (tests below), and the λ-sweep direction — larger λ ⇒ smaller `R_K` ⇒
 //! fewer adaptive-solver NFE at evaluation — is exercised by
 //! `experiments::native_train`.
+//!
+//! The adjoint recursion itself is **model-agnostic**: everything specific
+//! to the augmented system lives in one [`StageVjp`] implementation.
+//! [`RkStageVjp`] is the `[y, q]` regression/classification path above;
+//! [`CnfStageVjp`] is the `[z, ℓ, q]` density-estimation path, where
+//! [`NativeCnfTrainer`] trains a concat-squash CNF on the exact NLL
+//! objective `mean(½‖z(1)‖² + (n/2)·ln 2π − ℓ(1)) + λ·R_K` — the log-det
+//! column's cotangent flows back through a forward-mode Jacobian-trace
+//! recomputation on the tape ([`divergence_values`]), so even the
+//! divergence differentiates exactly.
 
 use std::ops::Range;
 
+use crate::autodiff::div::{divergence_values, Divergence};
 use crate::autodiff::{Adam, Tape, Var};
-use crate::nn::{ode_jet_values, Mlp, SeriesOf, Value};
+use crate::nn::{ode_jet_values, Cnf, Mlp, SeriesOf, Value};
 use crate::solvers::adaptive::AdaptiveOpts;
 use crate::solvers::batch::{
-    solve_fixed_batch_record_pooled, FixedGridRecord, RegularizedBatchDynamics,
+    solve_fixed_batch_record_pooled, FixedGridRecord, LogDetBatchDynamics,
+    RegularizedBatchDynamics,
 };
 use crate::solvers::stage::TableauCoeffs;
 use crate::solvers::tableau::Tableau;
 use crate::util::pool::{shard_ranges, Pool};
 use crate::util::rng::Pcg;
 
-use super::evaluator::{batch_rk_eval_pooled, RkEval};
+use super::evaluator::{batch_rk_eval_pooled, cnf_nll_eval_pooled, CnfNllEval, RkEval};
 
 // ---------------------------------------------------------------------------
 // Stage VJP and the discrete adjoint
 // ---------------------------------------------------------------------------
 
-/// One tape VJP of the quadrature-augmented dynamics at a cached stage
-/// state `u` (`[b, n+1]`, one worker shard's rows): seed the stage-output
-/// cotangent `kbar`, get the stage-input cotangent into `ubar` and
-/// accumulate parameter cotangents into `pbar`.  The augmented output is
-/// `[x_1, ‖x_K‖²/n]` with jets from [`ode_jet_values`] over tape values —
-/// the same recursion the f32 forward ran through `ode_jet_batch`, now
-/// differentiable.  `tape` is the worker's reused arena (`rows` must equal
-/// the shard batch); it is cleared here, so each call is a fresh recording
-/// on warm buffers.
-fn stage_vjp(
+/// One stage's reverse-mode pullback, pluggable into the generic discrete
+/// adjoint ([`adjoint_stage_grads_pooled`]): given a cached stage input `u`
+/// (`[b, width]`, one worker shard's rows) and the stage-output cotangent
+/// `kbar`, write the stage-input cotangent into `ubar` and accumulate
+/// parameter cotangents into `pbar`.  Implementations re-record their
+/// augmented dynamics on the worker's reused arena `tape` (`tape.rows()`
+/// must equal the shard batch); each call clears it, so every stage is a
+/// fresh recording on warm buffers.
+pub trait StageVjp: Sync {
+    /// Width of the augmented per-trajectory state the record carries.
+    fn width(&self) -> usize;
+    /// Flat dynamics-parameter count `pbar` accumulates into.
+    fn n_params(&self) -> usize;
+    fn stage_vjp(
+        &self,
+        tape: &Tape,
+        u: &[f32],
+        t: f32,
+        kbar: &[f64],
+        pbar: &mut [f64],
+        ubar: &mut [f64],
+    );
+}
+
+/// The shared body of both stage VJPs: record the z columns, the
+/// gradient-tracked parameter leaves, the Taylor jets (x₁ and the `R_K`
+/// integrand `‖x_K‖²/n`), and — when `with_divergence` — the forward-mode
+/// Jacobian trace, all through ONE model closure on the worker's tape;
+/// then seed the augmented cotangent columns (`[x̄₁…, (d̄,) ḡ]`) and pull
+/// back.  `model` maps (lifted parameter series, state series, time
+/// series) to the dynamics output; the parameters enter as constant series
+/// over gradient-tracked order-0 coefficients — one shared zero node pads
+/// the higher orders, and the structural-zero mask keeps those columns
+/// from recording any arithmetic on the tape.
+fn augmented_stage_vjp<F>(
     tape: &Tape,
-    mlp: &Mlp,
+    params: &[f32],
+    n: usize,
     order: usize,
+    with_divergence: bool,
     u: &[f32],
     t: f32,
     kbar: &[f64],
     pbar: &mut [f64],
     ubar: &mut [f64],
-) {
-    let n = mlp.state_dim();
-    let w = n + 1;
+    model: F,
+) where
+    F: Fn(&[SeriesOf<Var>], &[SeriesOf<Var>], &SeriesOf<Var>) -> Vec<SeriesOf<Var>>,
+{
+    let w = n + 1 + usize::from(with_divergence);
     let b = u.len() / w;
     debug_assert_eq!(tape.rows(), b, "stage_vjp: tape rows vs shard batch");
     tape.clear();
@@ -85,24 +126,19 @@ fn stage_vjp(
         })
         .collect();
     let tvar = tape.constant(t as f64);
-    let pvars: Vec<Var> = mlp
-        .params
+    let pvars: Vec<Var> = params
         .iter()
         .enumerate()
         .map(|(i, p)| tape.param(i, *p as f64))
         .collect();
     let mut fs = |zs: &[SeriesOf<Var>], ts: &SeriesOf<Var>| {
-        // Parameters as constant series over gradient-tracked order-0
-        // coefficients: one shared zero node pads the higher orders, and
-        // the structural-zero mask keeps those columns from recording any
-        // arithmetic on the tape.
         let ord = ts.order();
         let zero = tvar.lift(0.0);
         let ps: Vec<SeriesOf<Var>> = pvars
             .iter()
             .map(|p| SeriesOf::constant_padded(p.clone(), &zero, ord))
             .collect();
-        mlp.forward(&ps, zs, Some(ts))
+        model(&ps, zs, ts)
     };
     let jets = ode_jet_values(&mut fs, &zvars, &tvar, order);
     let x1 = &jets[0];
@@ -112,6 +148,11 @@ fn stage_vjp(
         g = g.add(&xi.mul(xi));
     }
     let g = g.scale(1.0 / n as f64);
+    let d = if with_divergence {
+        Some(divergence_values(&mut fs, &zvars, &tvar))
+    } else {
+        None
+    };
     let mut seed_cols: Vec<Vec<f64>> = Vec::with_capacity(w);
     for j in 0..w {
         seed_cols.push((0..b).map(|r| kbar[r * w + j]).collect());
@@ -120,9 +161,12 @@ fn stage_vjp(
     for (j, xj) in x1.iter().enumerate() {
         seeds.push((xj, &seed_cols[j]));
     }
-    seeds.push((&g, &seed_cols[n]));
+    if let Some(dv) = &d {
+        seeds.push((dv, &seed_cols[n]));
+    }
+    seeds.push((&g, &seed_cols[w - 1]));
     let grads = tape.backward(&seeds);
-    for (pb, gp) in pbar.iter_mut().zip(grads.param_vec(mlp.n_params())) {
+    for (pb, gp) in pbar.iter_mut().zip(grads.param_vec(params.len())) {
         *pb += gp;
     }
     for (j, zv) in zvars.iter().enumerate() {
@@ -131,9 +175,104 @@ fn stage_vjp(
             ubar[r * w + j] = *gr;
         }
     }
-    // The integrand is independent of the quadrature column itself.
+    // The integrands read none of the augmented columns (ℓ, q).
     for r in 0..b {
-        ubar[r * w + n] = 0.0;
+        for j in n..w {
+            ubar[r * w + j] = 0.0;
+        }
+    }
+}
+
+/// The `[y, q]` quadrature-augmented system of [`RegularizedBatchDynamics`]
+/// over an [`Mlp`] — the regression/classification training path.  The
+/// augmented output is `[x_1, ‖x_K‖²/n]` with jets from [`ode_jet_values`]
+/// over tape values — the same recursion the f32 forward ran through
+/// `ode_jet_batch`, now differentiable.
+pub struct RkStageVjp<'a> {
+    pub mlp: &'a Mlp,
+    pub order: usize,
+}
+
+impl StageVjp for RkStageVjp<'_> {
+    fn width(&self) -> usize {
+        self.mlp.state_dim() + 1
+    }
+
+    fn n_params(&self) -> usize {
+        self.mlp.n_params()
+    }
+
+    fn stage_vjp(
+        &self,
+        tape: &Tape,
+        u: &[f32],
+        t: f32,
+        kbar: &[f64],
+        pbar: &mut [f64],
+        ubar: &mut [f64],
+    ) {
+        let mlp = self.mlp;
+        augmented_stage_vjp(
+            tape,
+            &mlp.params,
+            mlp.state_dim(),
+            self.order,
+            false,
+            u,
+            t,
+            kbar,
+            pbar,
+            ubar,
+            |ps, zs, ts| mlp.forward(ps, zs, Some(ts)),
+        );
+    }
+}
+
+/// The `[z, ℓ, q]` log-det + quadrature system of [`LogDetBatchDynamics`]
+/// over a [`Cnf`] — the density-estimation training path.  Jets and
+/// divergence both record through ONE closure on the worker's tape: the
+/// jets give `x_1` and the `R_K` integrand exactly as in [`RkStageVjp`],
+/// and the divergence is recomputed in *forward* mode
+/// ([`divergence_values`]: n first-order series probes), so seeding the ℓ̄
+/// column back-propagates exactly through the Jacobian trace
+/// (reverse-over-forward — matching the exact-divergence forward solve).
+pub struct CnfStageVjp<'a> {
+    pub cnf: &'a Cnf,
+    pub order: usize,
+}
+
+impl StageVjp for CnfStageVjp<'_> {
+    fn width(&self) -> usize {
+        self.cnf.state_dim() + 2
+    }
+
+    fn n_params(&self) -> usize {
+        self.cnf.n_params()
+    }
+
+    fn stage_vjp(
+        &self,
+        tape: &Tape,
+        u: &[f32],
+        t: f32,
+        kbar: &[f64],
+        pbar: &mut [f64],
+        ubar: &mut [f64],
+    ) {
+        let cnf = self.cnf;
+        augmented_stage_vjp(
+            tape,
+            &cnf.params,
+            cnf.state_dim(),
+            self.order,
+            true,
+            u,
+            t,
+            kbar,
+            pbar,
+            ubar,
+            |ps, zs, ts| cnf.forward(ps, zs, ts),
+        );
     }
 }
 
@@ -186,35 +325,47 @@ pub fn adjoint_grads_pooled(
     tb: &Tableau,
     ybar_final: &[f64],
 ) -> (Vec<f64>, Vec<f64>) {
-    adjoint_grads_sharded(pool, mlp, order, rec, tb, ybar_final, GRAD_SHARD_ROWS)
+    adjoint_stage_grads_pooled(pool, &RkStageVjp { mlp, order }, rec, tb, ybar_final)
+}
+
+/// The model-agnostic adjoint entry point: the same recursion for ANY
+/// augmented system, with everything model-specific behind one
+/// [`StageVjp`].  Same determinism contract as [`adjoint_grads`] (fixed
+/// shard layout from the batch size alone, fixed reduction order).
+pub fn adjoint_stage_grads_pooled<V: StageVjp>(
+    pool: &Pool,
+    vjp: &V,
+    rec: &FixedGridRecord,
+    tb: &Tableau,
+    ybar_final: &[f64],
+) -> (Vec<f64>, Vec<f64>) {
+    adjoint_grads_sharded(pool, vjp, rec, tb, ybar_final, GRAD_SHARD_ROWS)
 }
 
 /// Layout-parameterized core (tests pass `shard_rows >= B` to reproduce
 /// the unsharded full-batch recursion as a reference).
-fn adjoint_grads_sharded(
+fn adjoint_grads_sharded<V: StageVjp>(
     pool: &Pool,
-    mlp: &Mlp,
-    order: usize,
+    vjp: &V,
     rec: &FixedGridRecord,
     tb: &Tableau,
     ybar_final: &[f64],
     shard_rows: usize,
 ) -> (Vec<f64>, Vec<f64>) {
-    let n = mlp.state_dim();
-    let w = n + 1;
-    assert_eq!(rec.n, w, "record is not the quadrature-augmented system");
+    let w = vjp.width();
+    assert_eq!(rec.n, w, "record width vs the stage VJP's augmented system");
     let m = rec.batch * w;
     assert_eq!(ybar_final.len(), m, "cotangent length vs record");
     assert!(shard_rows >= 1, "adjoint shard size must be positive");
     let tbf = TableauCoeffs::new(tb);
     let shards = shard_ranges(rec.batch, rec.batch.div_ceil(shard_rows));
     if shards.is_empty() {
-        return (vec![0.0f64; mlp.n_params()], vec![]);
+        return (vec![0.0f64; vjp.n_params()], vec![]);
     }
     let parts = pool.run_shards(shards.len(), |s| {
-        adjoint_shard(mlp, order, rec, &tbf, ybar_final, shards[s].clone())
+        adjoint_shard(vjp, rec, &tbf, ybar_final, shards[s].clone())
     });
-    let mut pbar = vec![0.0f64; mlp.n_params()];
+    let mut pbar = vec![0.0f64; vjp.n_params()];
     let mut ybar = Vec::with_capacity(m);
     for (p, y) in parts {
         // Deterministic reduction: fixed shard order, independent of which
@@ -230,20 +381,18 @@ fn adjoint_grads_sharded(
 /// The full reverse sweep for one contiguous row shard, on one reused
 /// arena tape: returns the shard's flat parameter cotangent and its rows'
 /// state cotangent `ȳ(0)`.
-fn adjoint_shard(
-    mlp: &Mlp,
-    order: usize,
+fn adjoint_shard<V: StageVjp>(
+    vjp: &V,
     rec: &FixedGridRecord,
     tbf: &TableauCoeffs,
     ybar_final: &[f64],
     rows: Range<usize>,
 ) -> (Vec<f64>, Vec<f64>) {
-    let n = mlp.state_dim();
-    let w = n + 1;
+    let w = vjp.width();
     let m = rows.len() * w;
     let h = rec.dt as f64;
     let tape = Tape::new(rows.len());
-    let mut pbar = vec![0.0f64; mlp.n_params()];
+    let mut pbar = vec![0.0f64; vjp.n_params()];
     let mut ybar = ybar_final[rows.start * w..rows.end * w].to_vec();
     let mut kbar: Vec<Vec<f64>> = vec![vec![0.0f64; m]; tbf.stages];
     let mut ubar = vec![0.0f64; m];
@@ -258,10 +407,8 @@ fn adjoint_shard(
             if kbar[i].iter().all(|v| *v == 0.0) {
                 continue; // a dead stage contributes neither ū nor θ̄
             }
-            stage_vjp(
+            vjp.stage_vjp(
                 &tape,
-                mlp,
-                order,
                 &rec.stage_y[s][i][rows.start * w..rows.end * w],
                 rec.stage_t[s][i],
                 &kbar[i],
@@ -595,6 +742,138 @@ impl NativeTrainer {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The CNF trainer: NLL through the log-det discrete adjoint
+// ---------------------------------------------------------------------------
+
+/// The native density-estimation trainer: a concat-squash [`Cnf`] flows
+/// data → base over `t ∈ [0, 1]` with the exact-divergence log-det and the
+/// `R_K` quadrature integrated alongside ([`LogDetBatchDynamics`]), and
+/// each step descends `L = NLL + λ·R_K` with
+/// `NLL = mean_r(½‖z_r(1)‖² + (n/2)·ln 2π − ℓ_r(1))` — the standard-normal
+/// change-of-variables objective — via the generic discrete adjoint
+/// ([`CnfStageVjp`]) and Adam.  Gradients are exact through the log-det
+/// path (FD-verified in the tests) and bit-identical at every thread
+/// count, exactly like [`NativeTrainer`].
+pub struct NativeCnfTrainer {
+    pub cnf: Cnf,
+    /// The paper's K in `R_K`.
+    pub order: usize,
+    /// Regularization weight λ (0 turns the objective term off; `R_K` is
+    /// still measured and reported).
+    pub lam: f32,
+    /// Fixed-grid steps per solve.
+    pub steps: usize,
+    pub tb: Tableau,
+    opt: Adam,
+    /// Worker pool behind the forward, the adjoint, and adaptive eval.
+    pool: Pool,
+}
+
+impl NativeCnfTrainer {
+    pub fn new(
+        cnf: Cnf,
+        order: usize,
+        lam: f32,
+        steps: usize,
+        tb: Tableau,
+        lr: f32,
+    ) -> NativeCnfTrainer {
+        assert!(order >= 1, "R_K needs K >= 1");
+        assert!(steps > 0);
+        let nprm = cnf.n_params();
+        NativeCnfTrainer {
+            cnf,
+            order,
+            lam,
+            steps,
+            tb,
+            opt: Adam::new(nprm, lr),
+            pool: Pool::from_env(),
+        }
+    }
+
+    /// Override the worker-pool thread count (defaults to
+    /// `TAYNODE_THREADS` / available parallelism).  Forward solves and
+    /// gradients are bit-identical at any setting.
+    pub fn with_threads(mut self, threads: usize) -> NativeCnfTrainer {
+        self.pool = Pool::new(threads);
+        self
+    }
+
+    /// Optimizer updates taken so far (the optimizer's own counter).
+    pub fn steps_taken(&self) -> usize {
+        self.opt.steps()
+    }
+
+    /// The recorded forward solve of the `[z, ℓ, q]` system over
+    /// `t ∈ [0, 1]`: **exact** divergence (training differentiates the same
+    /// trace the forward integrated; Hutchinson is an evaluation-cost mode,
+    /// not a training mode), `R_K` quadrature composed in, sharded across
+    /// the worker pool.
+    pub fn forward_record(&self, x0: &[f32]) -> FixedGridRecord {
+        assert_eq!(x0.len() % self.cnf.state_dim(), 0, "batch shape");
+        let aug_dyn = LogDetBatchDynamics::new(self.cnf.clone(), Divergence::Exact)
+            .with_regularizer(self.order);
+        let aug = aug_dyn.augment(x0);
+        solve_fixed_batch_record_pooled(&self.pool, &aug_dyn, 0.0, 1.0, &aug, self.steps, &self.tb)
+    }
+
+    /// Loss, metrics, and adjoint gradients of the NLL objective — no
+    /// parameter update.  `task` in the metrics is the mean NLL in nats.
+    pub fn nll_grads(&mut self, x0: &[f32]) -> (NativeMetrics, Vec<f64>) {
+        let n = self.cnf.state_dim();
+        let bsz = x0.len() / n;
+        assert!(bsz > 0, "nll_grads: empty batch");
+        let rec = self.forward_record(x0);
+        let w = n + 2;
+        let lam = self.lam as f64;
+        let half_ln_2pi = 0.5 * (2.0 * std::f64::consts::PI).ln();
+        let mut task = 0.0f64;
+        let mut reg = 0.0f64;
+        let mut ybar = vec![0.0f64; bsz * w];
+        for r in 0..bsz {
+            let mut sq = 0.0f64;
+            for i in 0..n {
+                let zi = rec.y[r * w + i] as f64;
+                sq += zi * zi;
+                ybar[r * w + i] = zi / bsz as f64;
+            }
+            let ldet = rec.y[r * w + n] as f64;
+            task += (0.5 * sq + n as f64 * half_ln_2pi - ldet) / bsz as f64;
+            ybar[r * w + n] = -1.0 / bsz as f64;
+            ybar[r * w + n + 1] = lam / bsz as f64;
+            reg += rec.y[r * w + n + 1] as f64 / bsz as f64;
+        }
+        let vjp = CnfStageVjp { cnf: &self.cnf, order: self.order };
+        let (grads, _) = adjoint_stage_grads_pooled(&self.pool, &vjp, &rec, &self.tb, &ybar);
+        let metrics = NativeMetrics {
+            loss: (task + lam * reg) as f32,
+            task: task as f32,
+            reg: reg as f32,
+            err_rate: f32::NAN,
+            nfe: rec.nfe,
+        };
+        (metrics, grads)
+    }
+
+    /// One density-estimation train step (forward, adjoint, Adam).  The
+    /// CNF has no classifier head, so the flat optimizer vector IS the
+    /// model's parameter vector — no round-trip copy.
+    pub fn step_nll(&mut self, x0: &[f32]) -> NativeMetrics {
+        let (metrics, grads) = self.nll_grads(x0);
+        self.opt.step(&mut self.cnf.params, &grads);
+        metrics
+    }
+
+    /// Adaptive evaluation of the current flow through the batched
+    /// evaluator, sharded across the worker pool: NLL, per-trajectory NFE,
+    /// log-det, and `R_K`.
+    pub fn eval_nll(&self, x0: &[f32], tb: &Tableau, opts: &AdaptiveOpts) -> CnfNllEval {
+        cnf_nll_eval_pooled(&self.pool, &self.cnf, self.order, &Divergence::Exact, x0, tb, opts)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -718,7 +997,8 @@ mod tests {
             }
         }
         // the unsharded reference: one shard spanning the whole batch
-        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &mlp, order, &rec, &tb, &ybar, b);
+        let vjp = RkStageVjp { mlp: &mlp, order };
+        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &vjp, &rec, &tb, &ybar, b);
         for (a, w) in y1.iter().zip(&yu) {
             assert_eq!(a.to_bits(), w.to_bits(), "sharded ȳ vs unsharded");
         }
@@ -756,7 +1036,8 @@ mod tests {
         );
         let ybar: Vec<f64> = (0..b * 3).map(|_| rng.range(-1.0, 1.0) as f64).collect();
         let (p, y) = adjoint_grads_pooled(&Pool::new(4), &mlp, order, &rec, &tb, &ybar);
-        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &mlp, order, &rec, &tb, &ybar, b);
+        let vjp = RkStageVjp { mlp: &mlp, order };
+        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &vjp, &rec, &tb, &ybar, b);
         for (a, w) in p.iter().zip(&pu) {
             assert_eq!(a.to_bits(), w.to_bits(), "θ̄");
         }
@@ -848,6 +1129,124 @@ mod tests {
             flat.len(),
             tr.mlp.n_params() + tr.head.as_ref().unwrap().n_params()
         );
+    }
+
+    #[test]
+    fn cnf_adjoint_matches_finite_differences_nll() {
+        // The density-estimation acceptance criterion: adjoint gradients of
+        // the full NLL + λ·R_K objective — the log-det path included —
+        // through a 2-step fixed-grid solve match central finite
+        // differences of the actual forward loss to 1e-3 relative, for
+        // every parameter (weights, biases, gates, time biases).
+        let cnf = Cnf::new(2, &[3], 5);
+        let mut tr = NativeCnfTrainer::new(cnf, 2, 0.3, 2, tableau::bosh3(), 0.01);
+        let mut rng = Pcg::new(19);
+        let x0: Vec<f32> = (0..6).map(|_| rng.range(-1.2, 1.2)).collect();
+        let (_, grads) = tr.nll_grads(&x0);
+        let flat = tr.cnf.params.clone();
+        assert_eq!(grads.len(), flat.len());
+        assert!(grads.iter().any(|g| g.abs() > 1e-8), "gradients all ~0");
+        let eps = 4e-3f32;
+        for i in 0..flat.len() {
+            tr.cnf.params[i] = flat[i] + eps;
+            let (mp, _) = tr.nll_grads(&x0);
+            tr.cnf.params[i] = flat[i] - eps;
+            let (mm, _) = tr.nll_grads(&x0);
+            tr.cnf.params[i] = flat[i];
+            let fd = (mp.loss as f64 - mm.loss as f64) / (2.0 * eps as f64);
+            assert!(
+                fd_close(fd, grads[i]),
+                "param {i}: fd {fd} vs adjoint {}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn cnf_gradients_bit_identical_across_thread_counts() {
+        // End-to-end determinism for the CNF path: pooled forward record
+        // (chunk queue) + pooled adjoint (fixed shard layout) reproduce the
+        // same loss and gradient bits at any TAYNODE_THREADS setting.
+        let mut rng = Pcg::new(29);
+        let x0: Vec<f32> = (0..40 * 2).map(|_| rng.range(-1.2, 1.2)).collect();
+        let grads_at = |threads: usize| {
+            let cnf = Cnf::new(2, &[5], 4);
+            let mut tr = NativeCnfTrainer::new(cnf, 2, 0.3, 2, tableau::rk4(), 0.01)
+                .with_threads(threads);
+            tr.nll_grads(&x0)
+        };
+        let (m1, g1) = grads_at(1);
+        for threads in [2usize, 4] {
+            let (mt, gt) = grads_at(threads);
+            assert_eq!(m1.loss.to_bits(), mt.loss.to_bits(), "loss threads={threads}");
+            assert_eq!(m1.reg.to_bits(), mt.reg.to_bits(), "reg threads={threads}");
+            for (a, w) in gt.iter().zip(&g1) {
+                assert_eq!(a.to_bits(), w.to_bits(), "grad threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn cnf_training_reduces_nll_on_the_toy_density() {
+        // The subsystem must actually do density estimation: NLL on the
+        // 2-D two-Gaussians toy density decreases over training.
+        let x = crate::data::toy_density::sample("two_gaussians", 24, 7);
+        let cnf = Cnf::new(2, &[8], 3);
+        let mut tr = NativeCnfTrainer::new(cnf, 2, 0.0, 4, tableau::rk4(), 0.02);
+        let (init, _) = tr.nll_grads(&x);
+        let mut last = init.clone();
+        for _ in 0..40 {
+            last = tr.step_nll(&x);
+        }
+        assert!(last.task.is_finite());
+        assert!(
+            last.task < init.task,
+            "NLL did not decrease: {} -> {}",
+            init.task,
+            last.task
+        );
+        assert_eq!(tr.steps_taken(), 40);
+    }
+
+    #[test]
+    fn cnf_lambda_regularization_reduces_rk() {
+        // The paper's density-estimation smoke direction: training from the
+        // same init with λ = 1 must end with R_K no larger than λ = 0, and
+        // both NLLs stay finite.
+        let x = crate::data::toy_density::sample("two_gaussians", 16, 23);
+        let train = |lam: f32| {
+            let cnf = Cnf::new(2, &[8], 9);
+            let mut tr = NativeCnfTrainer::new(cnf, 2, lam, 4, tableau::rk4(), 0.02);
+            let mut last = tr.nll_grads(&x).0;
+            for _ in 0..50 {
+                last = tr.step_nll(&x);
+            }
+            last
+        };
+        let f0 = train(0.0);
+        let f1 = train(1.0);
+        assert!(f0.task.is_finite() && f1.task.is_finite());
+        assert!(
+            f1.reg <= f0.reg + 1e-6,
+            "R_K with λ=1 ({}) exceeds λ=0 ({})",
+            f1.reg,
+            f0.reg
+        );
+    }
+
+    #[test]
+    fn cnf_eval_wires_the_nll_evaluator() {
+        let cnf = Cnf::new(2, &[4], 2);
+        let tr = NativeCnfTrainer::new(cnf, 2, 0.0, 4, tableau::rk4(), 0.01);
+        let opts = AdaptiveOpts::default();
+        let x0 = [0.3f32, -0.5, 0.8, 0.1];
+        let ev = tr.eval_nll(&x0, &tableau::dopri5(), &opts);
+        assert_eq!(ev.n, 2);
+        assert_eq!(ev.per_nll.len(), 2);
+        assert!(ev.nll.is_finite());
+        assert!(ev.mean_logdet.is_finite());
+        assert!(ev.mean_r_k.is_finite());
+        assert!(ev.stats.iter().all(|s| s.nfe > 0));
     }
 
     #[test]

@@ -5,5 +5,6 @@ pub mod loader;
 pub mod miniboone_sim;
 pub mod physionet_sim;
 pub mod synth_mnist;
+pub mod toy_density;
 
 pub use loader::{Batch, Batcher, Dataset};

@@ -3,6 +3,7 @@
 //! also wrapped by a `benches/` target.
 
 pub mod common;
+pub mod density;
 pub mod latent_figs;
 pub mod mnist_figs;
 pub mod native_train;
@@ -16,10 +17,11 @@ pub use common::Scale;
 
 /// Unique regenerators: fig6 covers fig7, fig8 covers fig10, fig5 covers
 /// fig11 and fig12 (shared sweeps printed together).  `native` is the
-/// artifact-free λ-sweep through the native training subsystem.
+/// artifact-free λ-sweep through the native training subsystem; `cnf` is
+/// its density-estimation counterpart (native CNF, NLL + log-det adjoint).
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9",
-    "native", "table2", "table3", "table4",
+    "native", "cnf", "table2", "table3", "table4",
 ];
 
 /// Run one experiment by paper id, printing its table(s).
@@ -59,6 +61,12 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
             native_train::lambda_sweep(scale)?.print();
             println!("-- native synth-MNIST (projected) + classifier head --");
             native_train::mnist_native(scale)?.print();
+        }
+        "cnf" => {
+            println!("-- native CNF λ-sweep: 2-D toy density, NLL + log-det adjoint --");
+            density::cnf_lambda_sweep(scale)?.print();
+            println!("-- native CNF tabular (miniboone_sim): exact vs Hutchinson --");
+            density::cnf_tabular(scale)?.print();
         }
         "fig11" => mnist_figs::fig5_mnist(scale)?.print(),
         "fig12" => latent_figs::fig12(scale)?.print(),

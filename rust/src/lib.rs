@@ -10,16 +10,19 @@
 //! * [`solvers`] — fixed & adaptive Runge-Kutta suite with NFE accounting,
 //!   shared stage machinery, and the batched multi-trajectory engine
 //!   (`solvers::batch`: per-trajectory step control, active-set compaction
-//!   over a `WorkingSet`, and `RegularizedBatchDynamics` — native `R_K`
-//!   quadrature over batched Taylor jets).
+//!   over a `WorkingSet`, `RegularizedBatchDynamics` — native `R_K`
+//!   quadrature over batched Taylor jets — and `LogDetBatchDynamics`, the
+//!   CNF log-det augmentation over the divergence engine).
 //! * [`taylor`] — truncated Taylor-series arithmetic / jets in pure Rust:
 //!   scalar `Series`/`ode_jet` plus the SoA `SeriesVec`/`ode_jet_batch`
 //!   that jets a whole `[B, n]` active set per sweep.
-//! * [`nn`] — native dynamics models (`Mlp`) written once against the
-//!   scalar-generic `Value` algebra, so one forward pass serves the f32
-//!   solver path, the Taylor-jet path, and the reverse-mode tape.
-//! * [`autodiff`] — tape-based reverse-mode VJP over batch columns, plus
-//!   the flat-vector `Adam` optimizer.
+//! * [`nn`] — native dynamics models (`Mlp`, the concat-squash `Cnf`)
+//!   written once against the scalar-generic `Value` algebra, so one
+//!   forward pass serves the f32 solver path, the Taylor-jet path, and
+//!   the reverse-mode tape.
+//! * [`autodiff`] — tape-based reverse-mode VJP over batch columns, the
+//!   divergence engine (`autodiff::div`: exact trace + fixed-seed
+//!   Hutchinson), plus the flat-vector `Adam` optimizer.
 //! * [`runtime`] — PJRT client (behind the `pjrt` feature; a thin stub
 //!   substitutes by default), artifact registry, parameter store.
 //! * [`coordinator`] — training loop (XLA-artifact and native

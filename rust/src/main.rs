@@ -58,7 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  usage:\n  repro info\n  repro solvers\n  \
                  repro train --artifact mnist_train_k2_s8 [--iters N] [--lam F] [--lr F]\n  \
                  repro eval --model toy|mnist [--solver dopri5] [--rtol F]\n  \
-                 repro experiment <fig1..fig12|native|table2|table3|table4|all> [--quick]"
+                 repro experiment <fig1..fig12|native|cnf|table2|table3|table4|all> [--quick]"
             );
             Ok(())
         }

@@ -1,0 +1,346 @@
+//! Concat-squash dynamics for continuous normalizing flows — the native
+//! counterpart of the exported FFJORD models (`cnf_tab` / `cnf_img`), and
+//! the density-estimation workload of the training subsystem.
+//!
+//! A [`ConcatSquash`] layer (Grathwohl et al., FFJORD) modulates a linear
+//! map of the state by a *time gate* and a *time bias*:
+//!
+//! ```text
+//! out_j = (b_j + Σ_i act_i W_ij) · σ(g_j t + gb_j) + h_j t
+//! ```
+//!
+//! so the vector field can reshape itself along the flow without `t` ever
+//! being concatenated into the state.  [`Cnf`] stacks these layers with
+//! tanh between them, written **once** against [`Value`] — exactly like
+//! [`Mlp`](super::Mlp), so the same forward serves
+//!
+//! * the f32 solver path ([`BatchDynamics`], order-0 series columns),
+//! * the Taylor-jet `R_K` path ([`BatchSeriesDynamics`], so
+//!   [`RegularizedBatchDynamics`](crate::solvers::batch::RegularizedBatchDynamics)
+//!   and the quadrature column of
+//!   [`LogDetBatchDynamics`](crate::solvers::batch::LogDetBatchDynamics)
+//!   consume it unchanged),
+//! * the divergence engine ([`ValueDynamics`], tape columns — where the
+//!   instantaneous change-of-variables term comes from), and
+//! * the training tape (reverse-mode [`Var`](crate::autodiff::Var)
+//!   parameters in `coordinator::train_native`).
+//!
+//! ```
+//! use taynode::nn::Cnf;
+//! use taynode::taylor::Series;
+//!
+//! // One forward pass, two scalar types: plain f64 and truncated series.
+//! let cnf = Cnf::new(2, &[8], 0);
+//! let dz = cnf.forward_f64(&[0.3, -0.1], 0.5);
+//! assert_eq!(dz.len(), 2);
+//! let p: Vec<Series> = cnf.lift_params(&Series::constant(0.0, 2));
+//! let z = [Series::constant(0.3, 2), Series::constant(-0.1, 2)];
+//! let t = Series::time(0.5, 2);
+//! let ds = cnf.forward(&p, &z, &t);
+//! assert!((ds[0].c[0] - dz[0]).abs() < 1e-12);
+//! ```
+
+use super::{Value, ValueDynamics};
+use crate::solvers::batch::BatchDynamics;
+use crate::taylor::{BatchSeriesDynamics, SeriesVec};
+use crate::util::rng::Pcg;
+
+/// One concat-squash layer: shapes plus the offset of its parameters in
+/// the model's flat vector.  Layout at `off`: `W` (row-major `[win, wout]`),
+/// then `b`, `g` (gate weight on t), `gb` (gate bias), `h` (time bias),
+/// each `[wout]`.
+#[derive(Clone, Copy, Debug)]
+pub struct ConcatSquash {
+    win: usize,
+    wout: usize,
+    off: usize,
+}
+
+impl ConcatSquash {
+    /// Parameters this layer owns: `win·wout` weights + 4 `wout` vectors.
+    pub fn n_params(&self) -> usize {
+        self.win * self.wout + 4 * self.wout
+    }
+
+    /// Apply the layer generically: `(b + acts·W) ⊙ σ(g t + gb) + h t`,
+    /// with the linear accumulation in [`Mlp`](super::Mlp)'s op order
+    /// (bias, then `+= act·w` ascending i).
+    pub fn apply<T: Value>(&self, p: &[T], acts: &[T], t: &T) -> Vec<T> {
+        let (win, wout) = (self.win, self.wout);
+        debug_assert_eq!(acts.len(), win, "ConcatSquash::apply: input arity");
+        let boff = self.off + win * wout;
+        let goff = boff + wout;
+        let gboff = goff + wout;
+        let hoff = gboff + wout;
+        let mut out = Vec::with_capacity(wout);
+        for j in 0..wout {
+            let mut lin = p[boff + j].clone();
+            for i in 0..win {
+                lin = lin.add(&acts[i].mul(&p[self.off + i * wout + j]));
+            }
+            let gate = t.mul(&p[goff + j]).add(&p[gboff + j]).sigmoid();
+            out.push(lin.mul(&gate).add(&t.mul(&p[hoff + j])));
+        }
+        out
+    }
+}
+
+/// A concat-squash MLP vector field dz/dt = CNF(z, t) over flat `[B, n]`
+/// SoA state — tanh between layers, linear n-dimensional output.
+/// Parameters are one flat `Vec<f32>` (per layer, the [`ConcatSquash`]
+/// layout), shared with the flat-vector optimizer and the tape's
+/// parameter leaves.
+#[derive(Clone, Debug)]
+pub struct Cnf {
+    layers: Vec<ConcatSquash>,
+    n: usize,
+    /// Flat parameter vector (per layer: `W`, `b`, `g`, `gb`, `h`).
+    pub params: Vec<f32>,
+}
+
+impl Cnf {
+    /// Build with deterministic N(0, 1/in) weight init; biases, gate, and
+    /// time-bias parameters start at zero (every gate opens at σ(0) = ½).
+    pub fn new(n: usize, hidden: &[usize], seed: u64) -> Cnf {
+        assert!(n > 0, "Cnf: state dimension must be positive");
+        let mut sizes = vec![n];
+        sizes.extend_from_slice(hidden);
+        sizes.push(n);
+        let mut rng = Pcg::new(seed);
+        let mut layers = Vec::with_capacity(sizes.len() - 1);
+        let mut params = Vec::new();
+        for l in 0..sizes.len() - 1 {
+            let (win, wout) = (sizes[l], sizes[l + 1]);
+            layers.push(ConcatSquash { win, wout, off: params.len() });
+            let sd = 1.0 / (win as f32).sqrt();
+            for _ in 0..win * wout {
+                params.push(rng.normal() * sd);
+            }
+            for _ in 0..4 * wout {
+                params.push(0.0);
+            }
+        }
+        Cnf { layers, n, params }
+    }
+
+    /// The per-trajectory state dimension n.
+    pub fn state_dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Lift the flat f32 parameters into any [`Value`] carrier, using
+    /// `like`'s shape.  The training tape does NOT use this — it creates
+    /// gradient-tracked parameter leaves instead.
+    pub fn lift_params<T: Value>(&self, like: &T) -> Vec<T> {
+        self.params.iter().map(|p| like.lift(*p as f64)).collect()
+    }
+
+    /// The generic forward pass: activations, parameters, and time all in
+    /// the same [`Value`] carrier `T`.  `p` must be this model's parameters
+    /// lifted into `T` (see [`lift_params`](Cnf::lift_params)).
+    pub fn forward<T: Value>(&self, p: &[T], z: &[T], t: &T) -> Vec<T> {
+        assert_eq!(z.len(), self.n, "Cnf::forward: state arity");
+        assert_eq!(p.len(), self.params.len(), "Cnf::forward: parameter arity");
+        let mut acts: Vec<T> = z.to_vec();
+        for (l, layer) in self.layers.iter().enumerate() {
+            acts = layer.apply(p, &acts, t);
+            if l + 1 < self.layers.len() {
+                for a in acts.iter_mut() {
+                    *a = a.tanh();
+                }
+            }
+        }
+        acts
+    }
+
+    /// Plain per-example evaluation (the reference semantics for tests and
+    /// docs): `z` is one example's n features.
+    pub fn forward_f64(&self, z: &[f64], t: f64) -> Vec<f64> {
+        let p = self.lift_params(&t);
+        self.forward(&p, z, &t)
+    }
+}
+
+/// The series lift, exactly like [`Mlp`](super::Mlp)'s: split the `[rows,
+/// n]` batch into `[rows, 1]` columns, run the generic forward, reassemble
+/// — so the batched-jet `R_K` machinery consumes the CNF unchanged.
+impl BatchSeriesDynamics for Cnf {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, _ids: &[usize], z: &SeriesVec, t: &SeriesVec) -> SeriesVec {
+        let p = self.lift_params(t);
+        let cols: Vec<SeriesVec> = (0..self.n).map(|j| z.col(j)).collect();
+        let out = self.forward(&p, &cols, t);
+        SeriesVec::from_cols(&out)
+    }
+}
+
+/// The f32 solver path, routed through order-0 series columns (the same
+/// arithmetic as every other carrier by construction).  The CNF's real
+/// serving path is the divergence-augmented
+/// [`LogDetBatchDynamics`](crate::solvers::batch::LogDetBatchDynamics); a
+/// hand-staged fast path like [`Mlp`](super::Mlp)'s is not worth the
+/// duplication here.
+impl BatchDynamics for Cnf {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        let rows = t.len();
+        debug_assert_eq!(y.len(), rows * self.n);
+        debug_assert_eq!(dy.len(), rows * self.n);
+        let z64: Vec<f64> = y.iter().map(|v| *v as f64).collect();
+        let t64: Vec<f64> = t.iter().map(|v| *v as f64).collect();
+        let zs = SeriesVec::constant(&z64, rows, self.n, 0);
+        let ts = SeriesVec::time(&t64, 0);
+        let out = BatchSeriesDynamics::eval(self, ids, &zs, &ts);
+        for (d, v) in dy.iter_mut().zip(out.coeff(0)) {
+            *d = *v as f32;
+        }
+    }
+}
+
+/// The divergence-engine hook: the same generic forward on any carrier,
+/// parameters lifted as constants of the carrier's shape.
+impl ValueDynamics for Cnf {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn forward_values<T: Value>(&self, z: &[T], t: &T) -> Vec<T> {
+        let p = self.lift_params(t);
+        self.forward(&p, z, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ode_jet_values, SeriesOf};
+    use crate::taylor::ode_jet_batch;
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let cnf = Cnf::new(3, &[5, 4], 0);
+        // 3x5 + 4·5, 5x4 + 4·4, 4x3 + 4·3
+        assert_eq!(cnf.n_params(), 3 * 5 + 20 + 5 * 4 + 16 + 4 * 3 + 12);
+        assert_eq!(cnf.state_dim(), 3);
+        let out = cnf.forward_f64(&[0.1, -0.2, 0.3], 0.5);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn single_layer_closed_form() {
+        // One layer, n = 2: out = (b + z W) · σ(g t + gb) + h t, checkable
+        // by hand with W = I.
+        let mut cnf = Cnf::new(2, &[], 3);
+        // layout: W [2, 2], b [2], g [2], gb [2], h [2]
+        cnf.params = vec![
+            1.0, 0.0, 0.0, 1.0, // W = I
+            0.5, -0.5, // b
+            2.0, 0.0, // g
+            0.0, 1.0, // gb
+            3.0, 0.0, // h
+        ];
+        let t = 0.25f64;
+        let out = cnf.forward_f64(&[2.0, 3.0], t);
+        let s0 = 1.0 / (1.0 + (-(2.0 * t)).exp());
+        let s1 = 1.0 / (1.0 + (-1.0f64).exp());
+        assert!(close(out[0], 2.5 * s0 + 3.0 * t, 1e-12), "{}", out[0]);
+        assert!(close(out[1], 2.5 * s1, 1e-12), "{}", out[1]);
+    }
+
+    #[test]
+    fn batched_order0_matches_per_example_f64_property() {
+        // The f32 BatchDynamics path (order-0 SeriesVec columns) must equal
+        // the per-example f64 forward up to the final f32 cast.
+        Prop::new(40).run("cnf-batch-vs-scalar", |rng: &mut Pcg, _| {
+            let n = 1 + rng.below(3);
+            let h = 1 + rng.below(6);
+            let b = 1 + rng.below(5);
+            let mut cnf = Cnf::new(n, &[h], rng.next_u64());
+            // give the gates and time biases non-trivial values
+            for p in cnf.params.iter_mut() {
+                if *p == 0.0 {
+                    *p = rng.range(-0.8, 0.8);
+                }
+            }
+            let y = gen::vec_f32(rng, b * n, 1.2);
+            let t: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+            let ids: Vec<usize> = (0..b).collect();
+            let mut dy = vec![0.0f32; b * n];
+            BatchDynamics::eval(&mut cnf, &ids, &t, &y, &mut dy);
+            for r in 0..b {
+                let z: Vec<f64> = y[r * n..(r + 1) * n].iter().map(|v| *v as f64).collect();
+                let want = cnf.forward_f64(&z, t[r] as f64);
+                for i in 0..n {
+                    assert!(
+                        close(dy[r * n + i] as f64, want[i], 1e-6),
+                        "row {r} dim {i}: {} vs {}",
+                        dy[r * n + i],
+                        want[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batched_jets_match_generic_jets_per_example_property() {
+        // ode_jet_batch over the SeriesVec lift vs ode_jet_values with
+        // T = f64 per example: the two series flavors must agree — the
+        // sigmoid gate's propagation rule included.
+        Prop::new(25).run("cnf-jet-batch-vs-values", |rng: &mut Pcg, _| {
+            let n = 1 + rng.below(2);
+            let b = 1 + rng.below(4);
+            let order = 1 + rng.below(3);
+            let mut cnf = Cnf::new(n, &[3], rng.next_u64());
+            for p in cnf.params.iter_mut() {
+                if *p == 0.0 {
+                    *p = rng.range(-0.8, 0.8);
+                }
+            }
+            let z0 = gen::vec_f64(rng, b * n, -1.0, 1.0);
+            let t0 = gen::vec_f64(rng, b, -0.5, 0.5);
+            let ids: Vec<usize> = (0..b).collect();
+            let jets = ode_jet_batch(&mut cnf, &ids, &z0, &t0, order);
+            for r in 0..b {
+                let zr: Vec<f64> = z0[r * n..(r + 1) * n].to_vec();
+                let cnf_ref = &cnf;
+                let want = ode_jet_values(
+                    &mut |zs: &[SeriesOf<f64>], ts: &SeriesOf<f64>| {
+                        let p = cnf_ref.lift_params(ts);
+                        cnf_ref.forward(&p, zs, ts)
+                    },
+                    &zr,
+                    &t0[r],
+                    order,
+                );
+                for k in 0..order {
+                    for i in 0..n {
+                        assert!(
+                            close(jets[k][r * n + i], want[k][i], 1e-9),
+                            "row {r} order {k} dim {i}: {} vs {}",
+                            jets[k][r * n + i],
+                            want[k][i]
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

@@ -23,7 +23,7 @@
 //! `[in, out]`) then `b` (`[out]`) — the layout the flat-vector optimizer
 //! (`autodiff::Adam`) and the tape's parameter leaves share.
 
-use super::Value;
+use super::{Value, ValueDynamics};
 use crate::solvers::batch::BatchDynamics;
 use crate::taylor::{BatchSeriesDynamics, SeriesVec};
 use crate::util::rng::Pcg;
@@ -195,6 +195,20 @@ impl BatchDynamics for Mlp {
         for (d, v) in dy.iter_mut().zip(&self.stage_in) {
             *d = *v as f32;
         }
+    }
+}
+
+/// The divergence-engine hook ([`crate::autodiff::div`]): the same generic
+/// forward on any carrier, parameters lifted as constants of the carrier's
+/// shape (no gradients — the training tape builds its own leaves).
+impl ValueDynamics for Mlp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn forward_values<T: Value>(&self, z: &[T], t: &T) -> Vec<T> {
+        let p = self.lift_params(t);
+        self.forward(&p, z, Some(t))
     }
 }
 

@@ -32,9 +32,11 @@
 //! assert!((ys[0].c[0] - y[0]).abs() < 1e-12);
 //! ```
 
+pub mod cnf;
 pub mod mlp;
 pub mod series;
 
+pub use cnf::{Cnf, ConcatSquash};
 pub use mlp::Mlp;
 pub use series::{ode_jet_values, SeriesOf};
 
@@ -57,6 +59,29 @@ pub trait Value: Clone {
     /// Multiply by an `f64` constant (cheaper than `lift` + `mul`).
     fn scale(&self, a: f64) -> Self;
     fn tanh(&self) -> Self;
+    fn exp(&self) -> Self;
+    /// Logistic sigmoid `1/(1 + e^{-x})` — the concat-squash gate
+    /// nonlinearity ([`cnf::ConcatSquash`]).
+    fn sigmoid(&self) -> Self;
+}
+
+/// A vector field `dz/dt = f(z, t)` written **once** against [`Value`] and
+/// evaluable on *any* carrier per call — the capability the divergence
+/// engine ([`crate::autodiff::div`]) needs: it runs the same forward on
+/// reverse-mode tape columns (`T = `[`Var`](crate::autodiff::Var)) to pull
+/// exact or Hutchinson-estimated divergences out of one recording, and
+/// tests run it on plain `f64`.  Parameters are lifted internally as
+/// constants of the carrier's shape (the *training* tape path does not go
+/// through this trait — it creates gradient-tracked parameter leaves).
+///
+/// Unlike [`BatchDynamics`](crate::solvers::batch::BatchDynamics) this is
+/// carrier-polymorphic per call, so it cannot be a trait object; use it as
+/// a generic bound.
+pub trait ValueDynamics {
+    /// Per-trajectory state dimension n.
+    fn dim(&self) -> usize;
+    /// Evaluate `f(z, t)` with activations, parameters, and time in `T`.
+    fn forward_values<T: Value>(&self, z: &[T], t: &T) -> Vec<T>;
 }
 
 impl Value for f64 {
@@ -82,6 +107,14 @@ impl Value for f64 {
 
     fn tanh(&self) -> f64 {
         f64::tanh(*self)
+    }
+
+    fn exp(&self) -> f64 {
+        f64::exp(*self)
+    }
+
+    fn sigmoid(&self) -> f64 {
+        1.0 / (1.0 + f64::exp(-self))
     }
 }
 
@@ -111,6 +144,14 @@ impl Value for Series {
     fn tanh(&self) -> Series {
         Series::tanh(self)
     }
+
+    fn exp(&self) -> Series {
+        Series::exp(self)
+    }
+
+    fn sigmoid(&self) -> Series {
+        Series::sigmoid(self)
+    }
 }
 
 /// Batched truncated Taylor series (an SoA `[rows, cols]` matrix per
@@ -139,5 +180,13 @@ impl Value for SeriesVec {
 
     fn tanh(&self) -> SeriesVec {
         SeriesVec::tanh(self)
+    }
+
+    fn exp(&self) -> SeriesVec {
+        SeriesVec::exp(self)
+    }
+
+    fn sigmoid(&self) -> SeriesVec {
+        SeriesVec::sigmoid(self)
     }
 }

@@ -269,6 +269,87 @@ impl<T: Value> Value for SeriesOf<T> {
         }
         SeriesOf { c: s, nz: vec![true; k1] }
     }
+
+    /// exp via the ODE y' = y z', coefficients in `T` (the recurrence of
+    /// [`Series::exp`](crate::taylor::Series::exp)).  A constant series
+    /// short-circuits to a constant result.
+    fn exp(&self) -> Self {
+        let k1 = self.c.len();
+        if self.nz.iter().skip(1).all(|z| !*z) {
+            let mut c = Vec::with_capacity(k1);
+            let mut nz = Vec::with_capacity(k1);
+            c.push(self.c[0].exp());
+            nz.push(true);
+            for k in 1..k1 {
+                c.push(self.c[k].clone()); // the input's exact zeros
+                nz.push(false);
+            }
+            return SeriesOf { c, nz };
+        }
+        let mut y: Vec<T> = Vec::with_capacity(k1);
+        y.push(self.c[0].exp());
+        for k in 1..k1 {
+            let mut acc: Option<T> = None;
+            for j in 1..=k {
+                if !self.nz[j] {
+                    continue; // z' term with a structurally-zero coefficient
+                }
+                let term = self.c[j].scale(j as f64).mul(&y[k - j]);
+                acc = Some(match acc {
+                    Some(a) => a.add(&term),
+                    None => term,
+                });
+            }
+            y.push(match acc {
+                Some(a) => a.scale(1.0 / k as f64),
+                None => y[0].lift(0.0),
+            });
+        }
+        SeriesOf { c: y, nz: vec![true; k1] }
+    }
+
+    /// Logistic sigmoid via the ODE s' = s (1 - s) z', coefficients in `T`.
+    /// A constant series short-circuits to a constant result.
+    fn sigmoid(&self) -> Self {
+        let k1 = self.c.len();
+        if self.nz.iter().skip(1).all(|z| !*z) {
+            let mut c = Vec::with_capacity(k1);
+            let mut nz = Vec::with_capacity(k1);
+            c.push(self.c[0].sigmoid());
+            nz.push(true);
+            for k in 1..k1 {
+                c.push(self.c[k].clone()); // the input's exact zeros
+                nz.push(false);
+            }
+            return SeriesOf { c, nz };
+        }
+        let mut s: Vec<T> = Vec::with_capacity(k1);
+        s.push(self.c[0].sigmoid());
+        for k in 1..k1 {
+            let mut acc: Option<T> = None;
+            for j in 1..=k {
+                if !self.nz[j] {
+                    continue; // z' term with a structurally-zero coefficient
+                }
+                let m = k - j;
+                // u[m] = s[m] - (s*s)[m], with s[0..=m] already known
+                let mut ssm = s[0].mul(&s[m]);
+                for i in 1..=m {
+                    ssm = ssm.add(&s[i].mul(&s[m - i]));
+                }
+                let term = self.c[j].scale(j as f64).mul(&s[m].sub(&ssm));
+                acc = Some(match acc {
+                    Some(a) => a.add(&term),
+                    None => term,
+                });
+            }
+            s.push(match acc {
+                Some(a) => a.scale(1.0 / k as f64),
+                None => s[0].lift(0.0),
+            });
+        }
+        SeriesOf { c: s, nz: vec![true; k1] }
+    }
 }
 
 /// Derivative coefficients `[x_1, ..., x_order]` (each a length-n vector of
@@ -342,12 +423,14 @@ mod tests {
             let a = Series::new(gen::vec_f64(rng, k + 1, -1.5, 1.5));
             let b = Series::new(gen::vec_f64(rng, k + 1, -1.5, 1.5));
             let (ga, gb) = (to_f64_series(&a), to_f64_series(&b));
-            let checks: [(Series, SeriesOf<f64>); 5] = [
+            let checks: [(Series, SeriesOf<f64>); 7] = [
                 (a.add(&b), ga.add(&gb)),
                 (a.sub(&b), ga.sub(&gb)),
                 (a.mul(&b), ga.mul(&gb)),
                 (a.scale(0.7), ga.scale(0.7)),
                 (a.tanh(), ga.tanh()),
+                (a.exp(), ga.exp()),
+                (a.sigmoid(), ga.sigmoid()),
             ];
             for (want, got) in &checks {
                 for (j, w) in want.c.iter().enumerate() {
@@ -385,12 +468,14 @@ mod tests {
             let (pm, pd) = (SeriesOf::constant(p, ord), SeriesOf::new(cp));
             let (tm, td) = (SeriesOf::time(t0, ord), SeriesOf::new(ct));
             let run = |pv: &SeriesOf<f64>, tv: &SeriesOf<f64>| {
-                // the shape of one MLP neuron: tanh(z·w + b) (+ time mix)
+                // the shape of one concat-squash neuron: a tanh body, a
+                // sigmoid time gate, and a linear time bias
                 z.mul(pv)
                     .add(&pv.scale(0.5))
                     .tanh()
-                    .mul(&tv.mul(pv))
+                    .mul(&tv.mul(pv).sigmoid())
                     .sub(&tv.scale(-0.7))
+                    .add(&z.mul(pv).exp().scale(0.1))
             };
             let (got, want) = (run(&pm, &tm), run(&pd, &td));
             for k in 0..=ord {

@@ -23,17 +23,20 @@
 //! per-trajectory stats), since step doubling re-enters the fixed driver
 //! and cannot share stage evaluations across rows with distinct h.
 //!
-//! Every driver also has a `_pooled` variant that shards the working set
-//! into contiguous per-worker sub-batches over a
-//! [`Pool`](crate::util::pool::Pool) — each shard runs the full driver with
-//! its own active set, step control, and RK scratch, and the per-trajectory
-//! results merge back in stable trajectory order.  Because no arithmetic
-//! ever crosses rows, the pooled results are **bit-identical to the serial
-//! driver at every thread count** (property-tested below).  Sharding is for
-//! natively-vectorized in-process dynamics (each shard clones the model);
-//! dynamics with a fixed per-launch dispatch cost (an XLA executable) lose
-//! launch amortization when split and should stay on the serial entry
-//! points.
+//! Every driver also has a `_pooled` variant that splits the batch into
+//! contiguous row chunks ([`chunk_ranges`]: several per worker) claimed
+//! dynamically from the [`Pool`](crate::util::pool::Pool)'s atomic queue —
+//! each chunk runs the full driver with its own active set, step control,
+//! and RK scratch on a clone of the dynamics, and the per-trajectory
+//! results merge back in stable trajectory order.  Oversubscribing the
+//! workers is what absorbs skewed per-trajectory costs: a straggler-heavy
+//! chunk tails on one worker while the rest drain the queue.  Because no
+//! arithmetic ever crosses rows and the merge is by stable id, the pooled
+//! results are **bit-identical to the serial driver at every thread count**
+//! (property-tested below).  Sharding is for natively-vectorized in-process
+//! dynamics; dynamics with a fixed per-launch dispatch cost (an XLA
+//! executable) lose launch amortization when split and should stay on the
+//! serial entry points.
 //!
 //! [`RegularizedBatchDynamics`] closes the loop with the paper: it lifts a
 //! series-generic vector field ([`BatchSeriesDynamics`]) into an augmented
@@ -65,9 +68,11 @@ use super::adaptive::{solve_adaptive_mut, AdaptiveOpts, SolveStats};
 use super::stage::{self, TableauCoeffs};
 use super::tableau::Tableau;
 use super::Dynamics;
+use crate::autodiff::div::{batch_divergence, Divergence};
+use crate::nn::ValueDynamics;
 use crate::taylor::{ode_jet_batch, BatchSeriesDynamics};
 use crate::tensor::axpy;
-use crate::util::pool::{shard_ranges, Pool};
+use crate::util::pool::{chunk_ranges, Pool};
 
 /// Dynamics over a batch of trajectories: `dy[r] = f(t[r], y[r])` for every
 /// active row r, where `y` and `dy` are row-major `[t.len(), dim()]`.
@@ -165,19 +170,49 @@ impl<F: BatchDynamics> Dynamics for OneRow<'_, F> {
 // Native R_K: quadrature-augmented dynamics over batched Taylor jets
 // ---------------------------------------------------------------------------
 
+/// Append `extra` zero-initialized columns to a row-major `[B, n]` state,
+/// producing the `[B, n + extra]` augmented state the quadrature/log-det
+/// adapters integrate.
+pub fn augment_cols(y0: &[f32], n: usize, extra: usize) -> Vec<f32> {
+    assert!(n > 0, "augment_cols: dim must be positive");
+    assert_eq!(y0.len() % n, 0, "augment_cols: state length vs dim");
+    let b = y0.len() / n;
+    let mut out = Vec::with_capacity(b * (n + extra));
+    for r in 0..b {
+        out.extend_from_slice(&y0[r * n..(r + 1) * n]);
+        for _ in 0..extra {
+            out.push(0.0);
+        }
+    }
+    out
+}
+
 /// Append one zero-initialized quadrature column to a row-major `[B, n]`
 /// state, producing the `[B, n + 1]` augmented state a
 /// [`RegularizedBatchDynamics`] integrates.
 pub fn augment_quadrature(y0: &[f32], n: usize) -> Vec<f32> {
-    assert!(n > 0, "augment_quadrature: dim must be positive");
-    assert_eq!(y0.len() % n, 0, "augment_quadrature: state length vs dim");
-    let b = y0.len() / n;
-    let mut out = Vec::with_capacity(b * (n + 1));
+    augment_cols(y0, n, 1)
+}
+
+/// Split an augmented result `[B, n + extra]` into the plain `[B, n]`
+/// states and one `[B]` vector per augmented column (for
+/// [`LogDetBatchDynamics`]: the log-determinant, then the `R_K` quadrature
+/// when the adapter carries one).
+pub fn split_aug_cols(res: &BatchResult, n: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let w = res.n;
+    assert!(w > n, "split_aug_cols needs an augmented [B, n + extra] result");
+    let b = res.batch();
+    let mut y = Vec::with_capacity(b * n);
+    // (vec![..; k] would clone away the capacity)
+    let mut cols: Vec<Vec<f32>> = (0..w - n).map(|_| Vec::with_capacity(b)).collect();
     for r in 0..b {
-        out.extend_from_slice(&y0[r * n..(r + 1) * n]);
-        out.push(0.0);
+        let row = res.row(r);
+        y.extend_from_slice(&row[..n]);
+        for (k, c) in cols.iter_mut().enumerate() {
+            c.push(row[n + k]);
+        }
     }
-    out
+    (y, cols)
 }
 
 /// Split the result of a quadrature-augmented solve back into the plain
@@ -278,6 +313,125 @@ impl<F: BatchSeriesDynamics> BatchDynamics for RegularizedBatchDynamics<F> {
                 sq += v * v;
             }
             dy[r * w + n] = (sq / n as f64) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native CNF: log-det (+ R_K) augmented dynamics over the divergence engine
+// ---------------------------------------------------------------------------
+
+/// Adapter that turns a divergence-capable vector field into a
+/// [`BatchDynamics`] over the augmented state `[z, ℓ]` with
+/// `dℓ/dt = ∇·f(z, t)` — the instantaneous change-of-variables term of a
+/// continuous normalizing flow, so one ordinary batched solve yields final
+/// states *and* per-trajectory log-determinants
+/// (`log p(z(0)) = log p_base(z(1)) + ℓ(1)` when integrating data → base
+/// over `t ∈ [0, 1]`).
+///
+/// Mirrors [`RegularizedBatchDynamics`] and **composes** with it:
+/// [`with_regularizer`](LogDetBatchDynamics::with_regularizer) adds the
+/// `R_K` quadrature as a third block, `dq/dt = ‖d^K z/dt^K‖²/n` over
+/// batched Taylor jets of the *state* dynamics, so a single augmented solve
+/// yields dy, log-det, and `R_K` (the log-det column is a function of z
+/// alone and feeds nothing back, so the state jets are self-contained).
+///
+/// Per solver NFE the adapter spends one tape recording of the inner
+/// forward plus the trace sweeps of its [`Divergence`] mode (n backward
+/// sweeps exact, one per Hutchinson probe), and — when regularizing — one
+/// [`ode_jet_batch`] sweep.  Hutchinson probes are keyed on trajectory ids,
+/// so pooled and serial solves are bit-identical in every mode (tested
+/// below).
+#[derive(Clone)]
+pub struct LogDetBatchDynamics<F> {
+    inner: F,
+    div: Divergence,
+    reg_order: Option<usize>,
+    // f64 staging for the divergence/jet sweeps, reused across evaluations
+    z0: Vec<f64>,
+    t0: Vec<f64>,
+}
+
+impl<F: ValueDynamics + BatchSeriesDynamics> LogDetBatchDynamics<F> {
+    /// Wrap `inner` to integrate its divergence alongside the state.
+    pub fn new(inner: F, div: Divergence) -> LogDetBatchDynamics<F> {
+        assert!(
+            ValueDynamics::dim(&inner) > 0,
+            "LogDetBatchDynamics: dim must be positive"
+        );
+        assert_eq!(
+            ValueDynamics::dim(&inner),
+            BatchSeriesDynamics::dim(&inner),
+            "LogDetBatchDynamics: inner trait dims disagree"
+        );
+        LogDetBatchDynamics { inner, div, reg_order: None, z0: vec![], t0: vec![] }
+    }
+
+    /// Also integrate `R_order` (the paper's K ≥ 1) as a third state block.
+    pub fn with_regularizer(mut self, order: usize) -> LogDetBatchDynamics<F> {
+        assert!(order >= 1, "LogDetBatchDynamics: R_K needs K >= 1");
+        self.reg_order = Some(order);
+        self
+    }
+
+    /// The un-augmented per-trajectory state dimension.
+    pub fn state_dim(&self) -> usize {
+        ValueDynamics::dim(&self.inner)
+    }
+
+    /// Augmented columns beyond the state: ℓ, plus q when regularizing.
+    fn extra(&self) -> usize {
+        1 + usize::from(self.reg_order.is_some())
+    }
+
+    /// Build the `[B, n + 1]` (or `[B, n + 2]`) augmented initial state.
+    pub fn augment(&self, y0: &[f32]) -> Vec<f32> {
+        augment_cols(y0, self.state_dim(), self.extra())
+    }
+
+    pub fn into_inner(self) -> F {
+        self.inner
+    }
+}
+
+impl<F: ValueDynamics + BatchSeriesDynamics> BatchDynamics for LogDetBatchDynamics<F> {
+    fn dim(&self) -> usize {
+        self.state_dim() + self.extra()
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        let n = self.state_dim();
+        let w = n + self.extra();
+        let m = t.len();
+        self.z0.clear();
+        self.t0.clear();
+        for (r, tr) in t.iter().enumerate() {
+            self.t0.push(*tr as f64);
+            for i in 0..n {
+                self.z0.push(y[r * w + i] as f64);
+            }
+        }
+        // The tape inside batch_divergence is rebuilt per evaluation: a
+        // cached Tape is Rc-backed (!Send) and would disqualify this
+        // adapter from the pooled drivers' Clone + Send bounds.
+        let (f0, div) = batch_divergence(&self.inner, ids, &self.t0, &self.z0, &self.div);
+        for r in 0..m {
+            for i in 0..n {
+                dy[r * w + i] = f0[r * n + i] as f32;
+            }
+            dy[r * w + n] = div[r] as f32;
+        }
+        if let Some(order) = self.reg_order {
+            let jets = ode_jet_batch(&mut self.inner, ids, &self.z0, &self.t0, order);
+            let xk = &jets[order - 1];
+            for r in 0..m {
+                let mut sq = 0.0f64;
+                for i in 0..n {
+                    let v = xk[r * n + i];
+                    sq += v * v;
+                }
+                dy[r * w + n + 1] = (sq / n as f64) as f32;
+            }
         }
     }
 }
@@ -959,7 +1113,11 @@ impl<F: BatchDynamics> BatchDynamics for OffsetIds<F> {
     }
 }
 
-/// Shard layout shared by the pooled drivers, plus the common shape checks.
+/// Chunk layout shared by the pooled drivers, plus the common shape
+/// checks.  Several chunks per worker ([`chunk_ranges`]) are claimed from
+/// the pool's atomic queue, so skewed per-trajectory costs rebalance
+/// dynamically instead of tailing on whichever worker drew the straggler
+/// shard; the merge in the callers stays in fixed chunk order.
 fn solver_shards<F: BatchDynamics>(
     pool: &Pool,
     f: &F,
@@ -969,14 +1127,15 @@ fn solver_shards<F: BatchDynamics>(
     assert!(n > 0, "BatchDynamics::dim() must be positive");
     assert_eq!(y0.len() % n, 0, "batch state length vs dim");
     let b = y0.len() / n;
-    (n, b, shard_ranges(b, pool.threads()))
+    (n, b, chunk_ranges(b, pool.threads()))
 }
 
 /// [`solve_adaptive_batch`] sharded across a worker pool: the batch splits
-/// into contiguous per-worker sub-batches, each with its own working set,
-/// active-set compaction, and per-shard clone of the dynamics; results
-/// merge by stable trajectory id.  Bit-identical to the serial driver at
-/// any thread count (no arithmetic crosses rows).
+/// into contiguous row chunks (several per worker, claimed from the pool's
+/// atomic queue), each with its own working set, active-set compaction,
+/// and clone of the dynamics; results merge by stable trajectory id.
+/// Bit-identical to the serial driver at any thread count (no arithmetic
+/// crosses rows).
 pub fn solve_adaptive_batch_pooled<F>(
     pool: &Pool,
     f: &F,
@@ -1718,6 +1877,97 @@ mod tests {
                 );
             }
         });
+    }
+
+    // -- LogDetBatchDynamics ----------------------------------------------
+
+    #[test]
+    fn logdet_linear_field_integrates_the_trace() {
+        // f = z·W + b has constant divergence tr(W), so ℓ(1) = tr(W)
+        // whatever the trajectory does.
+        use crate::nn::Mlp;
+        let mut mlp = Mlp::new(2, &[], false, 0);
+        mlp.params = vec![0.4, 0.9, -0.2, -0.1, 0.3, -0.6]; // W, then b
+        let tr = 0.4 - 0.1;
+        let ld = LogDetBatchDynamics::new(mlp, Divergence::Exact);
+        let y0 = [0.5f32, -1.0, 2.0, 0.25];
+        let aug = ld.augment(&y0);
+        assert_eq!(aug.len(), 6);
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+        let res = solve_adaptive_batch(ld, 0.0, 1.0, &aug, &tb, &opts);
+        let (y, cols) = split_aug_cols(&res, 2);
+        assert_eq!(y.len(), 4);
+        assert_eq!(cols.len(), 1);
+        for (r, l) in cols[0].iter().enumerate() {
+            assert!((*l as f64 - tr).abs() < 1e-5, "row {r}: {l} vs {tr}");
+        }
+    }
+
+    #[test]
+    fn logdet_composes_with_the_quadrature_column() {
+        // A constant field dz/dt = c: divergence 0 (ℓ stays 0), and
+        // R_1 = ∫‖c‖²/n dt = (1.5² + 0.5²)/2 over [0, 1] — one augmented
+        // solve yields dy, log-det, and the R_K quadrature.
+        use crate::nn::Mlp;
+        let mut mlp = Mlp::new(2, &[], false, 0);
+        mlp.params = vec![0.0, 0.0, 0.0, 0.0, 1.5, 0.5]; // W = 0, b = c
+        let ld = LogDetBatchDynamics::new(mlp, Divergence::Exact).with_regularizer(1);
+        let y0 = [0.0f32, 2.0];
+        let aug = ld.augment(&y0);
+        assert_eq!(aug, vec![0.0, 2.0, 0.0, 0.0]);
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts { rtol: 1e-6, atol: 1e-8, ..Default::default() };
+        let res = solve_adaptive_batch(ld, 0.0, 1.0, &aug, &tb, &opts);
+        let (y, cols) = split_aug_cols(&res, 2);
+        assert!((y[0] - 1.5).abs() < 1e-5);
+        assert!((y[1] - 2.5).abs() < 1e-5);
+        assert!(cols[0][0].abs() < 1e-6, "log-det of a constant field");
+        assert!((cols[1][0] - 1.25).abs() < 1e-5, "R_1 = {}", cols[1][0]);
+    }
+
+    #[test]
+    fn pooled_logdet_solves_bit_identical_to_serial() {
+        // The satellite acceptance: log-det-augmented solves (exact AND
+        // fixed-seed Hutchinson, with the composed R_K column) must be
+        // bit-identical between the serial driver and the chunk-queue
+        // pooled driver at threads 1, 2, and 4 — id-keyed probes included.
+        use crate::nn::Cnf;
+        let mut rng = Pcg::new(41);
+        let mut cnf = Cnf::new(2, &[4], 13);
+        for p in cnf.params.iter_mut() {
+            if *p == 0.0 {
+                *p = rng.range(-0.6, 0.6);
+            }
+        }
+        let b = 9usize;
+        let y0 = gen::vec_f32(&mut rng, b * 2, 1.0);
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts { rtol: 1e-4, atol: 1e-6, ..Default::default() };
+        for div in [Divergence::Exact, Divergence::Hutchinson { probes: 2, seed: 3 }] {
+            let ld = LogDetBatchDynamics::new(cnf.clone(), div).with_regularizer(2);
+            let aug = ld.augment(&y0);
+            let serial = solve_adaptive_batch(ld.clone(), 0.0, 1.0, &aug, &tb, &opts);
+            for threads in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+                let pooled = solve_adaptive_batch_pooled(&pool, &ld, 0.0, 1.0, &aug, &tb, &opts);
+                assert_eq!(pooled.batch(), b);
+                for r in 0..b {
+                    for i in 0..4 {
+                        assert_eq!(
+                            serial.row(r)[i].to_bits(),
+                            pooled.row(r)[i].to_bits(),
+                            "threads={threads} row {r} col {i}"
+                        );
+                    }
+                    assert_stats_eq(
+                        &serial.stats[r],
+                        &pooled.stats[r],
+                        &format!("threads={threads} row {r}"),
+                    );
+                }
+            }
+        }
     }
 
     #[test]

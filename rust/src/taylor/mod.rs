@@ -198,6 +198,27 @@ impl Series {
         Series::new(s)
     }
 
+    /// Logistic sigmoid via the ODE s' = s (1 - s) z'.
+    pub fn sigmoid(&self) -> Series {
+        let k1 = self.c.len();
+        let mut s = vec![0.0; k1];
+        s[0] = 1.0 / (1.0 + (-self.c[0]).exp());
+        for k in 1..k1 {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                let m = k - j;
+                // u[m] = s[m] - (s*s)[m], with s[0..=m] already known
+                let mut ssm = 0.0;
+                for i in 0..=m {
+                    ssm += s[i] * s[m - i];
+                }
+                acc += j as f64 * self.c[j] * (s[m] - ssm);
+            }
+            s[k] = acc / k as f64;
+        }
+        Series::new(s)
+    }
+
     pub fn powi(&self, n: usize) -> Series {
         let mut out = Series::constant(1.0, self.order());
         for _ in 0..n {

@@ -378,6 +378,32 @@ impl SeriesVec {
         SeriesVec { rows: self.rows, cols: self.cols, c: s }
     }
 
+    /// Logistic sigmoid via the ODE s' = s (1 - s) z', elementwise.
+    pub fn sigmoid(&self) -> SeriesVec {
+        let k1 = self.c.len();
+        let m = self.elems();
+        let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
+        s.push(self.c[0].iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect());
+        for k in 1..k1 {
+            let mut out = vec![0.0; m];
+            for e in 0..m {
+                let mut acc = 0.0;
+                for j in 1..=k {
+                    let mj = k - j;
+                    // u[mj] = s[mj] - (s*s)[mj], s[0..=mj] known
+                    let mut ssm = 0.0;
+                    for i in 0..=mj {
+                        ssm += s[i][e] * s[mj - i][e];
+                    }
+                    acc += j as f64 * self.c[j][e] * (s[mj][e] - ssm);
+                }
+                out[e] = acc / k as f64;
+            }
+            s.push(out);
+        }
+        SeriesVec { rows: self.rows, cols: self.cols, c: s }
+    }
+
     pub fn powi(&self, n: usize) -> SeriesVec {
         let mut out = SeriesVec::fill(1.0, self.rows, self.cols, self.order());
         for _ in 0..n {

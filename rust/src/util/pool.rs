@@ -121,6 +121,33 @@ impl Pool {
     }
 }
 
+/// Chunks per worker in [`chunk_ranges`]: enough oversubscription that a
+/// worker finishing a cheap chunk pulls another off the queue instead of
+/// idling behind a straggler, small enough that per-chunk setup (dynamics
+/// clones, working-set allocation) stays amortized.
+pub const CHUNKS_PER_WORKER: usize = 4;
+
+/// Work-stealing chunk layout for [`Pool::run_shards`]'s atomic queue:
+/// `threads · CHUNKS_PER_WORKER` balanced contiguous ranges (capped at one
+/// row each), instead of one static range per worker.  Workers claim chunks
+/// dynamically from the shared queue, so a skew-heavy chunk tails on *one*
+/// worker while the others drain the rest — but results still come back in
+/// chunk order, so a reduction in range order is unchanged.  With one
+/// thread the layout collapses to a single range (everything runs inline).
+///
+/// Like [`shard_ranges`] this is a pure function of its arguments; note the
+/// layout depends on the thread count, which is fine for row-independent
+/// work merged by stable ids (the batched solvers) but NOT for reductions
+/// that must be bit-stable across thread counts — those keep deriving a
+/// fixed layout from the problem size alone (see
+/// `coordinator::train_native`'s gradient shards).
+pub fn chunk_ranges(total: usize, threads: usize) -> Vec<Range<usize>> {
+    if threads <= 1 {
+        return shard_ranges(total, 1);
+    }
+    shard_ranges(total, threads.saturating_mul(CHUNKS_PER_WORKER))
+}
+
 /// Balanced contiguous shard ranges covering `0..total`: `min(total,
 /// max_shards)` non-empty ranges whose lengths differ by at most one, in
 /// ascending order.  A **pure function** of its arguments — callers that
@@ -182,6 +209,28 @@ mod tests {
         // never on the pool.
         assert_eq!(shard_ranges(10, 4), shard_ranges(10, 4));
         assert_eq!(shard_ranges(10, 4), vec![0..3, 3..6, 6..8, 8..10]);
+    }
+
+    #[test]
+    fn chunk_ranges_oversubscribe_without_changing_the_cover() {
+        // threads = 1 stays a single inline range; otherwise the layout is
+        // threads · CHUNKS_PER_WORKER balanced ranges (capped at one row
+        // each), covering 0..total contiguously.
+        assert_eq!(chunk_ranges(10, 1), vec![0..10]);
+        assert_eq!(chunk_ranges(0, 4), Vec::<Range<usize>>::new());
+        for total in 1..50usize {
+            for threads in 2..6usize {
+                let chunks = chunk_ranges(total, threads);
+                assert_eq!(chunks.len(), (threads * CHUNKS_PER_WORKER).min(total));
+                let mut next = 0usize;
+                for r in &chunks {
+                    assert_eq!(r.start, next);
+                    assert!(r.end > r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, total);
+            }
+        }
     }
 
     #[test]
