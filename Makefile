@@ -19,9 +19,22 @@ train-demo:
 # solves, NLL training) into BENCH_cnf.json (each bench merge-writes its
 # own section).  Honor TAYNODE_THREADS if set; equality with the serial
 # path is asserted inside the benches before anything is timed.
+#
+# Each file accumulates in a .tmp scratch path and moves into place only
+# after every contributing bench succeeded, so a mid-run failure (or ^C)
+# leaves the committed baselines untouched.
 .PHONY: bench-json
 bench-json:
-	rm -f BENCH_parallel.json BENCH_cnf.json
-	cargo bench --bench perf_batch -- --json BENCH_parallel.json
-	cargo bench --bench perf_train_native -- --json BENCH_parallel.json
-	cargo bench --bench perf_cnf -- --json BENCH_cnf.json
+	rm -f BENCH_parallel.json.tmp BENCH_cnf.json.tmp
+	cargo bench --bench perf_batch -- --json BENCH_parallel.json.tmp
+	cargo bench --bench perf_train_native -- --json BENCH_parallel.json.tmp
+	cargo bench --bench perf_cnf -- --json BENCH_cnf.json.tmp
+	mv BENCH_parallel.json.tmp BENCH_parallel.json
+	mv BENCH_cnf.json.tmp BENCH_cnf.json
+
+# Determinism lint: taylint walks rust/src, rust/tests, benches/, and
+# examples/ and enforces the invariant catalog (D1-D5; `taylint --rules`
+# prints it).  Exits nonzero on any diagnostic; CI runs this blocking.
+.PHONY: lint
+lint:
+	cargo run --release --bin taylint

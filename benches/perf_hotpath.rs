@@ -18,6 +18,33 @@ use taynode::util::bench::{report, time_fn};
 use taynode::util::rng::Pcg;
 
 fn main() -> anyhow::Result<()> {
+    // Equality before timing (lint rule D5): the native adaptive solve the
+    // L3b section times must be run-to-run deterministic, bit for bit.
+    {
+        let tb = tableau::dopri5();
+        let y0 = vec![0.1f32; 64];
+        let solve = || {
+            solve_adaptive(
+                |t: f32, y: &[f32], dy: &mut [f32]| {
+                    for i in 0..y.len() {
+                        dy[i] = (t + y[i]).sin();
+                    }
+                },
+                0.0,
+                1.0,
+                &y0,
+                &tb,
+                &AdaptiveOpts::default(),
+            )
+        };
+        let (a, b) = (solve(), solve());
+        assert_eq!(a.stats.nfe, b.stats.nfe, "perf_hotpath: NFE must be deterministic");
+        assert!(
+            a.y.iter().zip(&b.y).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "perf_hotpath: repeated solves must agree bit for bit"
+        );
+    }
+
     let rt = load_runtime()?;
     let h = MnistHarness::new(&rt, 256, 0)?;
     let tr = Trainer::new(&rt, "mnist_train_unreg_s2", 0)?;

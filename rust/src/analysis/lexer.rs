@@ -1,0 +1,414 @@
+//! Comment- and string-aware Rust tokenizer for `taylint`.
+//!
+//! Hand-rolled because the container is offline (`syn` is unavailable) and
+//! the lint needs a token stream, never a full AST: identifiers,
+//! punctuation, and literals with 1-based line numbers, with comment and
+//! string *bodies* skipped entirely — so a `HashMap` inside a doc comment
+//! or a format string can never trip a rule.  Handled verbatim: nested
+//! `/* /* */ */` block comments, `"…"` strings with escapes, raw strings
+//! `r#"…"#` at any hash depth, byte strings, char literals vs lifetimes,
+//! and numeric literals (so `0..4` lexes as two numbers around `..`, not a
+//! float).
+//!
+//! Allowlist markers are collected from line comments during the same
+//! scan: a comment whose text begins with `taylint: allow(<rules>) --
+//! <reason>` yields an [`Allow`]; a comment that begins with `taylint:`
+//! but does not parse (missing rule list or missing reason) is reported as
+//! a malformed-directive error so a typo can never silently suppress
+//! diagnostics.
+
+/// Token class — just enough structure for the pattern rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Operator / delimiter; `::` is one token, everything else one char.
+    Punct,
+    /// String / char / numeric literal — preserved but never rule-matched.
+    Lit,
+}
+
+/// One lexed token with the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A parsed `// taylint: allow(<rules>) -- <reason>` marker.  It
+/// suppresses matching diagnostics on its own line and on the line
+/// directly below, so it works both as a trailing comment and as a
+/// whole-line comment above the flagged statement.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: u32,
+    pub rules: Vec<String>,
+}
+
+/// Lexer output: the token stream, the allow markers, and malformed
+/// directives (surfaced as `A0` diagnostics by the driver).
+#[derive(Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+    pub errors: Vec<(u32, String)>,
+}
+
+impl Lexed {
+    fn push(&mut self, kind: TokKind, text: String, line: u32) {
+        self.toks.push(Tok { kind, text, line });
+    }
+}
+
+/// Tokenize one source file.  Never fails: unterminated constructs lex to
+/// end-of-file (the compiler, not the lint, owns syntax errors).
+pub fn lex(src: &str) -> Lexed {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. /// and //!): scan to newline, check directive
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            let comment: String = s[i..j].iter().collect();
+            scan_directive(&comment, line, &mut out);
+            i = j;
+            continue;
+        }
+        // block comment — Rust block comments nest
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // char literal or lifetime
+        if c == '\'' {
+            if i + 1 < n && (s[i + 1].is_alphabetic() || s[i + 1] == '_') {
+                // scan the name; a trailing quote makes it a char literal
+                let mut j = i + 1;
+                while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                    j += 1;
+                }
+                if j < n && s[j] == '\'' {
+                    out.push(TokKind::Lit, s[i..=j].iter().collect(), line);
+                    i = j + 1;
+                } else {
+                    // lifetime: emit the quote, skip the name
+                    out.push(TokKind::Punct, "'".to_string(), line);
+                    i = j;
+                }
+                continue;
+            }
+            // char literal with escape or punctuation payload
+            let mut j = i + 1;
+            while j < n && s[j] != '\'' {
+                j += if s[j] == '\\' { 2 } else { 1 };
+            }
+            let end = j.min(n.saturating_sub(1));
+            out.push(TokKind::Lit, s[i..=end].iter().collect(), line);
+            i = j + 1;
+            continue;
+        }
+        // identifier / keyword — or a raw/byte string prefix
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            let word: String = s[i..j].iter().collect();
+            let is_str_prefix = matches!(word.as_str(), "r" | "b" | "br" | "rb");
+            if is_str_prefix && j < n && (s[j] == '"' || s[j] == '#') {
+                if let Some((end, nl)) = scan_prefixed_string(&s, i, j, line) {
+                    out.push(TokKind::Lit, s[i..end].iter().collect(), line);
+                    line = nl;
+                    i = end;
+                    continue;
+                }
+            }
+            out.push(TokKind::Ident, word, line);
+            i = j;
+            continue;
+        }
+        // plain string literal
+        if c == '"' {
+            let (end, nl) = scan_escaped_string(&s, i, line);
+            out.push(TokKind::Lit, s[i..end].iter().collect(), line);
+            line = nl;
+            i = end;
+            continue;
+        }
+        // numeric literal: alnum run, optional .digit fraction + exponent
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            if j < n && s[j] == '.' && j + 1 < n && s[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                    j += 1;
+                }
+            }
+            if j < n && (s[j] == '+' || s[j] == '-') && matches!(s[j - 1], 'e' | 'E') {
+                j += 1;
+                while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                    j += 1;
+                }
+            }
+            out.push(TokKind::Lit, s[i..j].iter().collect(), line);
+            i = j;
+            continue;
+        }
+        // punctuation; `::` is one token
+        if c == ':' && i + 1 < n && s[i + 1] == ':' {
+            out.push(TokKind::Punct, "::".to_string(), line);
+            i += 2;
+            continue;
+        }
+        out.push(TokKind::Punct, c.to_string(), line);
+        i += 1;
+    }
+    out
+}
+
+/// `"…"` with `\` escapes; returns (index after the closing quote, line).
+fn scan_escaped_string(s: &[char], start: usize, mut line: u32) -> (usize, u32) {
+    let n = s.len();
+    let mut j = start + 1;
+    while j < n {
+        match s[j] {
+            '\\' => j += 2,
+            '\n' => {
+                line += 1;
+                j += 1;
+            }
+            '"' => return (j + 1, line),
+            _ => j += 1,
+        }
+    }
+    (n, line)
+}
+
+/// Raw / byte string starting at `start` (the prefix) with the quote or
+/// first `#` at `hash_start`.  Returns (index after the close, line), or
+/// None if this isn't actually a string (e.g. `r # !` attribute-ish).
+fn scan_prefixed_string(
+    s: &[char],
+    start: usize,
+    hash_start: usize,
+    line: u32,
+) -> Option<(usize, u32)> {
+    let n = s.len();
+    let mut k = hash_start;
+    let mut hashes = 0usize;
+    while k < n && s[k] == '#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= n || s[k] != '"' {
+        return None;
+    }
+    let prefix: String = s[start..hash_start].iter().collect();
+    if hashes == 0 && (prefix == "b" || prefix == "rb") {
+        // b"…" keeps backslash escapes
+        let (end, nl) = scan_escaped_string(s, k, line);
+        return Some((end, nl));
+    }
+    // raw string: ends at `"` followed by the same number of `#`s
+    let mut j = k + 1;
+    let mut nl = line;
+    while j < n {
+        if s[j] == '\n' {
+            nl += 1;
+            j += 1;
+            continue;
+        }
+        if s[j] == '"' {
+            let mut h = 0usize;
+            while j + 1 + h < n && h < hashes && s[j + 1 + h] == '#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some((j + 1 + hashes, nl));
+            }
+        }
+        j += 1;
+    }
+    Some((n, nl))
+}
+
+/// Parse a `taylint:` directive from one line comment.  Only a comment
+/// whose text *begins* with the directive counts — prose that merely
+/// mentions the syntax mid-sentence is ignored.
+fn scan_directive(comment: &str, line: u32, out: &mut Lexed) {
+    let body = comment.trim_start_matches('/').trim_start_matches('!').trim_start();
+    let Some(rest) = body.strip_prefix("taylint:") else {
+        return;
+    };
+    let rest = rest.trim_start();
+    let malformed = |out: &mut Lexed| {
+        out.errors.push((
+            line,
+            "malformed taylint directive: expected `taylint: allow(<rule>) -- <reason>`"
+                .to_string(),
+        ));
+    };
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        malformed(out);
+        return;
+    };
+    let Some(close) = rest.find(')') else {
+        malformed(out);
+        return;
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let reason_ok = rest[close + 1..]
+        .split_once("--")
+        .is_some_and(|(_, reason)| !reason.trim().is_empty());
+    if rules.is_empty() || !reason_ok {
+        malformed(out);
+        return;
+    }
+    out.allows.push(Allow { line, rules });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_yield_no_idents() {
+        // the banned names appear only inside literals and comments, so
+        // the token stream must contain none of them
+        let src = r####"
+            // HashMap in a line comment
+            /// HashMap in a doc comment
+            /* HashMap in /* a nested */ block comment */
+            let a = "HashMap in a string";
+            let b = r#"HashMap in a raw string"#;
+            let c = b"HashMap in a byte string";
+            let d = r##"quote " and hash # inside"##;
+        "####;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|i| i == "HashMap"), "leaked from: {ids:?}");
+        assert!(ids.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn lines_are_attributed_correctly() {
+        let l = lex("a\nbb \"s\ntring\" cc\ndd");
+        let find = |name: &str| {
+            l.toks
+                .iter()
+                .find(|t| t.text == name)
+                .map(|t| t.line)
+                .unwrap_or(0)
+        };
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("bb"), 2);
+        assert_eq!(find("cc"), 3); // the string body swallowed one newline
+        assert_eq!(find("dd"), 4);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lits: Vec<_> = l.toks.iter().filter(|t| t.kind == TokKind::Lit).collect();
+        assert_eq!(lits.len(), 1);
+        assert_eq!(lits[0].text, "'x'");
+        // lifetime names never surface as identifiers
+        assert!(!l.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "a"));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal() {
+        let l = lex(r"let q = '\''; let b = '\\'; x");
+        assert!(l.toks.iter().any(|t| t.text == "x"), "lexer resynced after escapes");
+    }
+
+    #[test]
+    fn ranges_do_not_merge_into_floats() {
+        let l = lex("for i in 0..4 { y[i] = 1.5e-3; }");
+        let texts: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"0"));
+        assert!(texts.contains(&"4"));
+        assert!(texts.contains(&"1.5e-3"));
+    }
+
+    #[test]
+    fn double_colon_is_one_token() {
+        let l = lex("std::sync::atomic");
+        let texts: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["std", "::", "sync", "::", "atomic"]);
+    }
+
+    #[test]
+    fn allow_directives_parse() {
+        let l = lex("// taylint: allow(D1, D4) -- fixture reason\nlet x = 1;");
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].line, 1);
+        assert_eq!(l.allows[0].rules, vec!["D1".to_string(), "D4".to_string()]);
+        assert!(l.errors.is_empty());
+    }
+
+    #[test]
+    fn malformed_directives_are_errors() {
+        // missing reason, missing rules, unknown verb — all malformed
+        for bad in [
+            "// taylint: allow(D1)",
+            "// taylint: allow(D1) -- ",
+            "// taylint: allow() -- why",
+            "// taylint: disable(D1) -- why",
+        ] {
+            let l = lex(bad);
+            assert_eq!(l.allows.len(), 0, "{bad}");
+            assert_eq!(l.errors.len(), 1, "{bad}");
+        }
+        // prose mentioning the syntax mid-comment is NOT a directive
+        let l = lex("// the marker `taylint: allow(D2) -- why` suppresses a line");
+        assert!(l.allows.is_empty() && l.errors.is_empty());
+    }
+}

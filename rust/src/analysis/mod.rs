@@ -1,0 +1,145 @@
+//! `taylint` — the repo's determinism lint.
+//!
+//! The crate's core guarantee is that pooled solves, adjoints, and CNF
+//! evaluations are bit-identical to their serial counterparts at any
+//! `TAYNODE_THREADS`.  That guarantee is easy to break silently: one keyed
+//! collection feeding a float reduction, one stray atomic merge, one
+//! wall-clock read in a library path.  This module is a dependency-free
+//! static-analysis pass (the container is offline, so no `syn`) that walks
+//! `rust/src`, `rust/tests`, `benches/`, and `examples/` and enforces the
+//! invariant catalog:
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | D1 | no `HashMap`/`HashSet`/`BTreeMap` in the numeric crates (`solvers`, `autodiff`, `taylor`, `nn`, `coordinator`) |
+//! | D2 | atomics / `std::sync` only on allowlisted lines of `util/pool.rs` |
+//! | D3 | no `std::env`, time, or RNG-seeding reads outside `util/{pool,cli,rng}.rs` |
+//! | D4 | no `.unwrap()`/`.expect()` in library code outside `#[cfg(test)]` |
+//! | D5 | every public `*_pooled` fn is named by a test asserting bit-equality against its serial counterpart; every `benches/perf_*.rs` asserts equality before timing |
+//! | A0 | allowlist markers must be well-formed |
+//! | A1 | allowlist markers must suppress something |
+//!
+//! A line can opt out of a rule with a marker of the form
+//! `taylint: allow(<rule>) -- <reason>` in a line comment; it covers its
+//! own line and the line directly below, the reason is mandatory, and a
+//! marker that suppresses nothing is itself a diagnostic (A1).  Run the
+//! pass with `make lint` (or `cargo run --release --bin taylint`); CI
+//! treats a nonzero exit as a build failure, next to fmt/clippy/doc.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One file presented to the lint: repo-relative forward-slash path plus
+/// full text.  Tests construct these in memory; the binary loads them via
+/// [`collect_sources`].
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// One diagnostic, keyed and deduplicated by `(path, line, rule)`.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run the full rule catalog over a set of sources and return the
+/// surviving diagnostics, sorted by `(path, line, rule)`.
+pub fn lint_sources(files: &[SourceFile]) -> Vec<Diag> {
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut facts = rules::Facts::default();
+    let mut allows: Vec<(usize, lexer::Allow)> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        let lexed = lexer::lex(&f.text);
+        for (line, msg) in &lexed.errors {
+            diags.push(Diag { path: f.path.clone(), line: *line, rule: "A0", msg: msg.clone() });
+        }
+        let whole_file = f.path.starts_with("rust/tests/");
+        let in_test = rules::test_regions(&lexed.toks, whole_file);
+        rules::lint_file(&f.path, &lexed.toks, &in_test, &mut diags);
+        rules::collect_facts(&f.path, &lexed.toks, &in_test, &mut facts, &mut diags);
+        for a in lexed.allows {
+            allows.push((fi, a));
+        }
+    }
+    rules::check_pooled_coverage(&facts, &mut diags);
+
+    let key = |d: &Diag| (d.path.clone(), d.line, d.rule);
+    diags.sort_by_key(key);
+    diags.dedup_by(|a, b| a.path == b.path && a.line == b.line && a.rule == b.rule);
+
+    // Allowlist pass: a marker suppresses matching rules on its own line
+    // and the line directly below; every marker must earn its keep.
+    let mut used = vec![false; allows.len()];
+    diags.retain(|d| {
+        let mut suppressed = false;
+        for (k, (fi, a)) in allows.iter().enumerate() {
+            if files[*fi].path == d.path
+                && a.rules.iter().any(|r| r == d.rule)
+                && (a.line == d.line || a.line + 1 == d.line)
+            {
+                used[k] = true;
+                suppressed = true;
+            }
+        }
+        !suppressed
+    });
+    for (k, (fi, a)) in allows.iter().enumerate() {
+        if !used[k] {
+            diags.push(Diag {
+                path: files[*fi].path.clone(),
+                line: a.line,
+                rule: "A1",
+                msg: format!(
+                    "unused allowlist marker for {}: nothing suppressed on this \
+                     or the next line",
+                    a.rules.join(", ")
+                ),
+            });
+        }
+    }
+    diags.sort_by_key(key);
+    diags
+}
+
+/// Load every `.rs` file the lint covers, as repo-relative forward-slash
+/// paths in deterministic (sorted) order.
+pub fn collect_sources(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    for top in ["rust/src", "rust/tests", "benches", "examples"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, top, &mut files)?;
+        }
+    }
+    Ok(files)
+}
+
+fn walk(dir: &Path, rel: &str, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let path = e.path();
+        let rel = format!("{rel}/{name}");
+        if path.is_dir() {
+            walk(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(SourceFile { path: rel, text: fs::read_to_string(&path)? });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,634 @@
+//! The determinism-invariant catalog (rules `D1`–`D5`) over the token
+//! stream of [`super::lexer`].
+//!
+//! Every rule has a machine-readable id, a file scope, and a line-level
+//! allowlist escape (`// taylint: allow(<id>) -- <reason>`); the catalog
+//! itself is data ([`RULES`]) so the binary's `--rules` listing and the
+//! README table can't drift from the implementation silently.
+//!
+//! Scope conventions, applied by path prefix:
+//! * *numeric crates* — `rust/src/{solvers,autodiff,taylor,nn,coordinator}`:
+//!   the modules whose float reductions carry the bit-identity guarantee.
+//! * *library code* — everything under `rust/src/` except the `repro`
+//!   binary (`main.rs`) and `rust/src/bin/`: entry points may read the
+//!   environment and panic on bad invocations; the library must not.
+//! * `#[cfg(test)]` / `#[test]` items and `rust/tests/` are exempt from
+//!   D1–D4 (tests assert with `unwrap` freely and may time things), but
+//!   they are exactly where D5 *looks* for the determinism proofs.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Tok, TokKind};
+use super::Diag;
+
+/// One catalog entry; `detail` is the one-line rationale shown by
+/// `taylint --rules` and mirrored in the README table.
+pub struct Rule {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub detail: &'static str,
+}
+
+/// The invariant catalog.  `A0`/`A1` police the allowlist itself.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D1",
+        title: "no keyed-collection iteration in numeric crates",
+        detail: "HashMap/HashSet/BTreeMap in solvers, autodiff, taylor, nn, coordinator: \
+                 keyed iteration order must never feed a float reduction",
+    },
+    Rule {
+        id: "D2",
+        title: "sync primitives only in the sanctioned pool queue",
+        detail: "atomics and std::sync appear only on allowlisted lines of util/pool.rs — \
+                 every other concurrent construct bypasses the determinism contract",
+    },
+    Rule {
+        id: "D3",
+        title: "nondeterminism enters only through sanctioned doors",
+        detail: "std::env, time, and RNG seeding live in util/{pool,cli,rng}.rs; \
+                 library code reads neither clocks nor the environment",
+    },
+    Rule {
+        id: "D4",
+        title: "panic-free library hot paths",
+        detail: "no .unwrap()/.expect() in library code outside #[cfg(test)]; \
+                 justified invariants carry an allow marker instead",
+    },
+    Rule {
+        id: "D5",
+        title: "pooled entry points ship with their determinism proof",
+        detail: "every public *_pooled fn is named by a test that asserts bit-equality \
+                 against its serial counterpart, and every benches/perf_*.rs asserts \
+                 equality before timing",
+    },
+    Rule {
+        id: "A0",
+        title: "well-formed allowlist markers",
+        detail: "a comment starting `taylint:` must parse as `allow(<rule>) -- <reason>`; \
+                 a typo must not silently suppress anything",
+    },
+    Rule {
+        id: "A1",
+        title: "no stale allowlist markers",
+        detail: "an allow that suppresses nothing on its own or the next line is rot \
+                 and must be removed",
+    },
+];
+
+const NUMERIC_CRATES: &[&str] = &[
+    "rust/src/solvers/",
+    "rust/src/autodiff/",
+    "rust/src/taylor/",
+    "rust/src/nn/",
+    "rust/src/coordinator/",
+];
+
+/// `util/{pool,cli,rng}.rs` — the sanctioned nondeterminism doors (D3).
+const D3_DOORS: &[&str] =
+    &["rust/src/util/pool.rs", "rust/src/util/cli.rs", "rust/src/util/rng.rs"];
+
+/// Sync-primitive identifiers beyond the `Atomic*` family (D2).
+const SYNC_IDENTS: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "Barrier",
+    "OnceLock",
+    "mpsc",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_or",
+    "fetch_and",
+    "fetch_xor",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// Seeding-from-the-world identifiers (D3); the repo's own `Pcg` takes
+/// explicit seeds, so none of these should ever appear.
+const RNG_SEED_IDENTS: &[&str] = &["from_entropy", "thread_rng", "getrandom", "RandomState"];
+
+/// Environment readers reached through a bare `env::` path (D3).
+const ENV_READS: &[&str] = &["var", "vars", "var_os", "args", "args_os", "temp_dir"];
+
+fn is_numeric_crate(path: &str) -> bool {
+    NUMERIC_CRATES.iter().any(|p| path.starts_with(p))
+}
+
+fn is_library(path: &str) -> bool {
+    path.starts_with("rust/src/")
+        && !path.starts_with("rust/src/bin/")
+        && path != "rust/src/main.rs"
+}
+
+fn is_punct(t: &Tok, p: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == p
+}
+
+/// Does the token text sequence `pat` start at `i`?
+fn tseq(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    i + pat.len() <= toks.len() && pat.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+/// Mark every token covered by a `#[test]` / `#[cfg(test)]` item (the
+/// attribute through the item's closing brace or semicolon).  Files under
+/// `rust/tests/` are test code wholesale (`whole_file`).
+pub fn test_regions(toks: &[Tok], whole_file: bool) -> Vec<bool> {
+    let mut mark = vec![whole_file; toks.len()];
+    if whole_file {
+        return mark;
+    }
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_punct(&toks[i], "#") && i + 1 < toks.len() && is_punct(&toks[i + 1], "[") {
+            // attribute extent + the identifiers inside it
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut idents: Vec<&str> = Vec::new();
+            while j < toks.len() {
+                if is_punct(&toks[j], "[") {
+                    depth += 1;
+                } else if is_punct(&toks[j], "]") {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth >= 1 && toks[j].kind == TokKind::Ident {
+                    idents.push(&toks[j].text);
+                }
+                j += 1;
+            }
+            let is_test = idents == ["test"]
+                || (idents.first() == Some(&"cfg")
+                    && idents.contains(&"test")
+                    && !idents.contains(&"not"));
+            if is_test {
+                let end = item_end(toks, j + 1);
+                for m in mark.iter_mut().take(end + 1).skip(i) {
+                    *m = true;
+                }
+                i = end + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    mark
+}
+
+/// Index of the token ending the item starting at `from`: the matching
+/// close of its first brace block, or a top-level `;`, whichever first.
+fn item_end(toks: &[Tok], from: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = from;
+    while k < toks.len() {
+        if is_punct(&toks[k], "{") {
+            depth += 1;
+        } else if is_punct(&toks[k], "}") {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return k;
+            }
+        } else if is_punct(&toks[k], ";") && depth == 0 {
+            return k;
+        }
+        k += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Apply the line-level rules D1–D4 to one file's tokens.
+pub fn lint_file(path: &str, toks: &[Tok], in_test: &[bool], diags: &mut Vec<Diag>) {
+    let mut push = |line: u32, rule: &'static str, msg: String, out: &mut Vec<Diag>| {
+        out.push(Diag { path: path.to_string(), line, rule, msg });
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        // D1 — keyed collections in the numeric crates
+        if is_numeric_crate(path)
+            && t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "HashMap" | "HashSet" | "BTreeMap")
+        {
+            push(
+                t.line,
+                "D1",
+                format!(
+                    "keyed collection `{}` in a numeric crate: iteration order \
+                     can feed a float reduction",
+                    t.text
+                ),
+                diags,
+            );
+        }
+        // D2 — sync primitives anywhere (the pool's own queue is allowlisted)
+        if t.kind == TokKind::Ident
+            && (t.text.starts_with("Atomic") || SYNC_IDENTS.contains(&t.text.as_str()))
+        {
+            push(
+                t.line,
+                "D2",
+                format!("sync primitive `{}` outside the sanctioned pool queue", t.text),
+                diags,
+            );
+        }
+        if t.text == "std" && tseq(toks, i, &["std", "::", "sync"]) {
+            push(
+                t.line,
+                "D2",
+                "`std::sync` outside the sanctioned pool queue".to_string(),
+                diags,
+            );
+        }
+        // D3 — clocks, environment, world-seeded RNG
+        if is_library(path) && !D3_DOORS.contains(&path) {
+            let hit = if tseq(toks, i, &["std", "::", "env"]) {
+                Some("std::env")
+            } else if tseq(toks, i, &["std", "::", "time"]) {
+                Some("std::time")
+            } else if tseq(toks, i, &["Instant", "::", "now"]) {
+                Some("Instant::now")
+            } else if t.kind == TokKind::Ident && t.text == "SystemTime" {
+                Some("SystemTime")
+            } else if t.kind == TokKind::Ident && RNG_SEED_IDENTS.contains(&t.text.as_str()) {
+                Some(t.text.as_str())
+            } else if t.kind == TokKind::Ident
+                && t.text == "env"
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "::"
+                && ENV_READS.contains(&toks[i + 2].text.as_str())
+            {
+                Some("env::*")
+            } else {
+                None
+            };
+            if let Some(h) = hit {
+                push(
+                    t.line,
+                    "D3",
+                    format!("nondeterminism door `{h}` outside util/{{pool,cli,rng}}.rs"),
+                    diags,
+                );
+            }
+        }
+        // D4 — panicking extractors in library code
+        if is_library(path)
+            && is_punct(t, ".")
+            && i + 2 < toks.len()
+            && toks[i + 1].kind == TokKind::Ident
+            && matches!(toks[i + 1].text.as_str(), "unwrap" | "expect")
+            && is_punct(&toks[i + 2], "(")
+        {
+            push(
+                toks[i + 1].line,
+                "D4",
+                format!(
+                    "`.{}()` in library code outside #[cfg(test)]",
+                    toks[i + 1].text
+                ),
+                diags,
+            );
+        }
+    }
+}
+
+/// One test function's searchable surface for the D5 cross-reference.
+pub struct TestFn {
+    pub name: String,
+    pub idents: BTreeSet<String>,
+    /// Body contains `Pool::new(1)` — the serial reference when a pooled
+    /// entry point has no standalone serial twin.
+    pub pool_one: bool,
+}
+
+/// Cross-file facts gathered in one pass, consumed by
+/// [`check_pooled_coverage`].
+#[derive(Default)]
+pub struct Facts {
+    /// `(path, line, name)` of every public `*_pooled` fn in library code.
+    pub pooled: Vec<(String, u32, String)>,
+    pub tests: Vec<TestFn>,
+}
+
+/// Collect D5 facts from one file and emit the per-bench half of D5
+/// (equality asserted before the first `time_fn` call) directly.
+pub fn collect_facts(
+    path: &str,
+    toks: &[Tok],
+    in_test: &[bool],
+    facts: &mut Facts,
+    diags: &mut Vec<Diag>,
+) {
+    // public pooled entry points (library code only, outside tests)
+    if path.starts_with("rust/src/") {
+        for i in 0..toks.len().saturating_sub(2) {
+            if !in_test[i]
+                && toks[i].text == "pub"
+                && toks[i + 1].text == "fn"
+                && toks[i + 2].kind == TokKind::Ident
+                && toks[i + 2].text.ends_with("_pooled")
+            {
+                facts.pooled.push((
+                    path.to_string(),
+                    toks[i + 2].line,
+                    toks[i + 2].text.clone(),
+                ));
+            }
+        }
+    }
+    // test fns: name + ident set + Pool::new(1) marker
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].text == "fn" && in_test[i] && toks[i + 1].kind == TokKind::Ident {
+            let end = item_end(toks, i + 2);
+            let body = &toks[i..=end.min(toks.len() - 1)];
+            let idents: BTreeSet<String> = body
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.clone())
+                .collect();
+            let pool_one =
+                (0..body.len()).any(|k| tseq(body, k, &["Pool", "::", "new", "(", "1", ")"]));
+            facts.tests.push(TestFn { name: toks[i + 1].text.clone(), idents, pool_one });
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    // perf benches must assert before they time
+    let is_perf_bench = path.starts_with("benches/perf_") && path.ends_with(".rs");
+    if is_perf_bench {
+        let mut assert_seen = false;
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind == TokKind::Ident
+                && (t.text.starts_with("assert") || t.text.starts_with("debug_assert"))
+            {
+                assert_seen = true;
+            }
+            if t.kind == TokKind::Ident
+                && t.text == "time_fn"
+                && k + 1 < toks.len()
+                && is_punct(&toks[k + 1], "(")
+            {
+                if !assert_seen {
+                    diags.push(Diag {
+                        path: path.to_string(),
+                        line: t.line,
+                        rule: "D5",
+                        msg: "perf bench times before asserting equality with the \
+                              reference path"
+                            .to_string(),
+                    });
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// The cross-reference half of D5: every public `*_pooled` fn must be
+/// named by a test that also asserts and carries serial evidence — the
+/// serial counterpart's exact identifier, or a `Pool::new(1)` reference.
+pub fn check_pooled_coverage(facts: &Facts, diags: &mut Vec<Diag>) {
+    for (path, line, name) in &facts.pooled {
+        let serial = name.trim_end_matches("_pooled");
+        let proven = facts.tests.iter().any(|t| {
+            let mentions = t.name.contains(name.as_str()) || t.idents.contains(name.as_str());
+            let serial_evidence = t.idents.contains(serial) || t.pool_one;
+            let asserts = t
+                .idents
+                .iter()
+                .any(|x| x.starts_with("assert") || x.starts_with("debug_assert"));
+            mentions && serial_evidence && asserts
+        });
+        if !proven {
+            diags.push(Diag {
+                path: path.clone(),
+                line: *line,
+                rule: "D5",
+                msg: format!(
+                    "public pooled entry point `{name}` has no test asserting \
+                     bit-equality against `{serial}` (or a Pool::new(1) reference)"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_sources, SourceFile};
+    use crate::util::ptest::Prop;
+
+    fn run(files: &[(&str, &str)]) -> Vec<super::Diag> {
+        let files: Vec<SourceFile> = files
+            .iter()
+            .map(|(p, s)| SourceFile { path: p.to_string(), text: s.to_string() })
+            .collect();
+        lint_sources(&files)
+    }
+
+    fn rules_of(diags: &[super::Diag]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    // -- seeded-violation fixtures: each rule must trip ------------------
+
+    #[test]
+    fn d1_trips_on_keyed_collections_in_numeric_crates() {
+        let d = run(&[(
+            "rust/src/solvers/bad.rs",
+            "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, f32> = HashMap::new(); }\n",
+        )]);
+        assert!(rules_of(&d).contains(&"D1"), "{d:?}");
+        // the same text outside a numeric crate is D1-clean
+        let d = run(&[("rust/src/util/ok.rs", "use std::collections::HashMap;\n")]);
+        assert!(!rules_of(&d).contains(&"D1"), "{d:?}");
+    }
+
+    #[test]
+    fn d2_trips_on_sync_primitives() {
+        let d = run(&[(
+            "rust/src/tensor/bad.rs",
+            "use std::sync::atomic::AtomicUsize;\nstatic N: AtomicUsize = AtomicUsize::new(0);\n",
+        )]);
+        assert!(rules_of(&d).contains(&"D2"), "{d:?}");
+        // benches are covered too
+        let d = run(&[("benches/fig0_bad.rs", "use std::sync::Mutex;\nfn main() {}\n")]);
+        assert!(rules_of(&d).contains(&"D2"), "{d:?}");
+    }
+
+    #[test]
+    fn d3_trips_on_clocks_env_and_seeding() {
+        for src in [
+            "fn f() -> u128 { std::time::Instant::now().elapsed().as_nanos() }\n",
+            "fn f() -> Option<String> { std::env::var(\"HOME\").ok() }\n",
+            "fn f() { let _ = SystemTime::now(); }\n",
+            "fn f() { let rng = thread_rng(); }\n",
+        ] {
+            let d = run(&[("rust/src/nn/bad.rs", src)]);
+            assert!(rules_of(&d).contains(&"D3"), "{src}: {d:?}");
+        }
+        // the sanctioned doors are exempt by scope
+        let d = run(&[(
+            "rust/src/util/cli.rs",
+            "pub fn argv() -> Vec<String> { std::env::args().collect() }\n",
+        )]);
+        assert!(!rules_of(&d).contains(&"D3"), "{d:?}");
+    }
+
+    #[test]
+    fn d4_trips_on_unwrap_in_library_code() {
+        let d = run(&[(
+            "rust/src/util/bad.rs",
+            "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\npub fn g(x: Option<u32>) -> u32 { x.expect(\"set\") }\n",
+        )]);
+        assert_eq!(rules_of(&d), vec!["D4", "D4"], "{d:?}");
+        // binaries may panic on bad invocations
+        let d = run(&[(
+            "rust/src/bin/tool.rs",
+            "fn main() { std::env::args().next().unwrap(); }\n",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+        // unwrap_or and friends are fine
+        let d = run(&[(
+            "rust/src/util/ok.rs",
+            "pub fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn d5_trips_on_unproven_pooled_fn_and_accepts_a_proof() {
+        let lib = "pub fn frobnicate_pooled(x: u32) -> u32 { frobnicate(x) }\npub fn frobnicate(x: u32) -> u32 { x }\n";
+        let d = run(&[("rust/src/solvers/p.rs", lib)]);
+        assert!(rules_of(&d).contains(&"D5"), "{d:?}");
+        // a test naming pooled + serial + asserting is the proof
+        let test = "#[cfg(test)]\nmod tests {\n  #[test]\n  fn frob_pooled_matches_serial() {\n    assert_eq!(super::frobnicate_pooled(3), super::frobnicate(3));\n  }\n}\n";
+        let d = run(&[("rust/src/solvers/p.rs", &format!("{lib}{test}"))]);
+        assert!(!rules_of(&d).contains(&"D5"), "{d:?}");
+    }
+
+    #[test]
+    fn d5_trips_on_bench_that_times_before_asserting() {
+        let bad = "fn main() { time_fn(1, 5, || {}); assert_eq!(1, 1); }\n";
+        let d = run(&[("benches/perf_bad.rs", bad)]);
+        assert!(rules_of(&d).contains(&"D5"), "{d:?}");
+        let good = "fn main() { assert_eq!(two(), 2); time_fn(1, 5, || {}); }\nfn two() -> u32 { 2 }\n";
+        let d = run(&[("benches/perf_good.rs", good)]);
+        assert!(!rules_of(&d).contains(&"D5"), "{d:?}");
+        // only perf_* benches are held to the equality-first contract
+        let d = run(&[("benches/fig9_x.rs", bad)]);
+        assert!(!rules_of(&d).contains(&"D5"), "{d:?}");
+    }
+
+    // -- no false positives from strings, comments, tests ----------------
+
+    #[test]
+    fn strings_comments_and_cfg_test_do_not_trip() {
+        let src = r#"
+// HashMap in a comment is fine
+/* std::sync::Mutex in a block comment too */
+pub fn f() -> &'static str {
+    "HashMap std::env thread_rng .unwrap()"
+}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    #[test]
+    fn t() {
+        let m: HashMap<u32, u32> = HashMap::new();
+        assert_eq!(m.len(), 0);
+        let _ = std::env::var("X");
+        Some(1).unwrap();
+    }
+}
+"#;
+        let d = run(&[("rust/src/solvers/clean.rs", src)]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn integration_test_files_are_exempt_from_line_rules() {
+        let d = run(&[(
+            "rust/tests/integration.rs",
+            "fn t() { Some(1).unwrap(); let _ = std::env::var(\"X\"); }\n",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    // -- the allowlist ---------------------------------------------------
+
+    #[test]
+    fn allow_suppresses_on_own_and_next_line() {
+        let src = "// taylint: allow(D1) -- fixture: order never feeds a reduction\nuse std::collections::HashMap;\n";
+        let d = run(&[("rust/src/solvers/allowed.rs", src)]);
+        assert!(d.is_empty(), "{d:?}");
+        let trailing = "use std::collections::HashMap; // taylint: allow(D1) -- fixture\n";
+        let d = run(&[("rust/src/solvers/allowed.rs", trailing)]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "// taylint: allow(D2) -- fixture\nuse std::collections::HashMap;\n";
+        let d = run(&[("rust/src/solvers/allowed.rs", src)]);
+        let r = rules_of(&d);
+        assert!(r.contains(&"D1"), "{d:?}");
+        assert!(r.contains(&"A1"), "wrong-rule allow must surface as unused: {d:?}");
+    }
+
+    #[test]
+    fn unused_allow_is_flagged() {
+        let d = run(&[(
+            "rust/src/util/ok.rs",
+            "// taylint: allow(D4) -- fixture: nothing here needs it\npub fn f() {}\n",
+        )]);
+        assert_eq!(rules_of(&d), vec!["A1"], "{d:?}");
+    }
+
+    #[test]
+    fn malformed_directive_is_flagged() {
+        let d = run(&[(
+            "rust/src/util/ok.rs",
+            "// taylint: allow(D4)\npub fn f() {}\n",
+        )]);
+        assert_eq!(rules_of(&d), vec!["A0"], "{d:?}");
+    }
+
+    #[test]
+    fn rule_catalog_ids_are_unique() {
+        let mut ids: Vec<&str> = super::RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    // -- property: detection depends only on the embedding site ----------
+
+    #[test]
+    fn banned_ident_trips_iff_it_is_code() {
+        Prop::new(64).run("site determines detection", |rng, _| {
+            let fillers = ["fn okay() {}", "const Z: u32 = 3;", "// quiet line", ""];
+            let pre = fillers[rng.below(fillers.len())];
+            let post = fillers[rng.below(fillers.len())];
+            let (site, trips) = match rng.below(6) {
+                0 => ("use std::collections::HashMap;", true),
+                1 => ("// a HashMap mention in a comment", false),
+                2 => ("/* HashMap\n   across lines */", false),
+                3 => ("const S: &str = \"HashMap\";", false),
+                4 => ("const R: &str = r#\"HashMap\"#;", false),
+                _ => ("#[cfg(test)]\nmod t { use std::collections::HashMap; }", false),
+            };
+            let src = format!("{pre}\n{site}\n{post}\n");
+            let d = run(&[("rust/src/taylor/p.rs", &src)]);
+            let hit = d.iter().any(|x| x.rule == "D1");
+            assert_eq!(hit, trips, "site {site:?} in:\n{src}\n{d:?}");
+        });
+    }
+}

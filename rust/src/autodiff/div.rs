@@ -204,7 +204,7 @@ where
             None => d,
         });
     }
-    div.expect("n > 0")
+    div.expect("n > 0") // taylint: allow(D4) -- arity asserted above; the fold ran at least once
 }
 
 #[cfg(test)]

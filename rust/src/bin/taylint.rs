@@ -1,0 +1,58 @@
+//! Determinism lint driver: walk the repo, run the rule catalog, print
+//! `path:line: RULE message` diagnostics, exit nonzero on any hit.
+//!
+//! Usage: `taylint [--rules] [root]` (root defaults to the current
+//! directory; `make lint` runs it from the repo root).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use taynode::analysis::{collect_sources, lint_sources, rules};
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--rules" => {
+                for r in rules::RULES {
+                    println!("{}  {}\n    {}", r.id, r.title, r.detail);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "taylint — determinism lint for the taynode repo\n\n\
+                     usage: taylint [--rules] [root]\n\n\
+                     Walks rust/src, rust/tests, benches/, examples/ under <root>\n\
+                     (default: .) and enforces the invariant catalog (see --rules).\n\
+                     Suppress a line with: // taylint: allow(<rule>) -- <reason>\n\
+                     Exits 0 when clean, 1 when any diagnostic survives."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => root = PathBuf::from(other),
+        }
+    }
+    let files = match collect_sources(&root) {
+        Ok(files) => files,
+        Err(e) => {
+            eprintln!("taylint: cannot read sources under {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if files.is_empty() {
+        eprintln!("taylint: no .rs sources found under {}", root.display());
+        return ExitCode::FAILURE;
+    }
+    let diags = lint_sources(&files);
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("taylint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("taylint: {} diagnostic(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}

@@ -393,7 +393,7 @@ pub fn latent_eval(
             .iter()
             .find(|i| i.name == "x")
             .map(|i| i.shape.clone())
-            .unwrap();
+            .ok_or_else(|| anyhow!("latent_encode artifact has no input `x`"))?;
     }
     let out = enc.run(&inputs)?;
     let mu = out[0].to_vec::<f32>()?; // posterior mean as z0
@@ -539,6 +539,34 @@ mod tests {
                 assert_eq!(serial.stats[r].nfe, ev.stats[r].nfe, "NFE row {r}");
             }
             assert_eq!(serial.mean_r_k.to_bits(), ev.mean_r_k.to_bits());
+        }
+    }
+
+    #[test]
+    fn cnf_nll_eval_pooled_matches_pool_of_one_bit_for_bit() {
+        // There is no standalone serial `cnf_nll_eval`; a Pool::new(1)
+        // solve runs every shard inline on the caller's thread and is the
+        // serial reference the determinism contract (lint rule D5) pins.
+        use crate::nn::Cnf;
+        let cnf = Cnf::new(2, &[6], 11);
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let x0: Vec<f32> = (0..10).map(|i| 0.15 * i as f32 - 0.7).collect(); // [B=5, n=2]
+        let serial =
+            cnf_nll_eval_pooled(&Pool::new(1), &cnf, 2, &Divergence::Exact, &x0, &tb, &opts);
+        for threads in [2usize, 3, 4] {
+            let pool = Pool::new(threads);
+            let ev = cnf_nll_eval_pooled(&pool, &cnf, 2, &Divergence::Exact, &x0, &tb, &opts);
+            assert_eq!(serial.nll.to_bits(), ev.nll.to_bits(), "{threads} threads");
+            assert_eq!(serial.mean_logdet.to_bits(), ev.mean_logdet.to_bits());
+            assert_eq!(serial.mean_r_k.to_bits(), ev.mean_r_k.to_bits());
+            for r in 0..serial.per_nll.len() {
+                assert_eq!(serial.per_nll[r].to_bits(), ev.per_nll[r].to_bits(), "row {r}");
+                assert_eq!(serial.stats[r].nfe, ev.stats[r].nfe, "NFE row {r}");
+            }
+            for (a, b) in serial.y.iter().zip(&ev.y) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

@@ -37,7 +37,7 @@ impl MetricsLog {
     }
 
     pub fn last(&self, name: &str) -> f64 {
-        *self.col(name).last().expect("non-empty log")
+        *self.col(name).last().expect("non-empty log") // taylint: allow(D4) -- asking for the last value of an empty log is a caller bug
     }
 
     /// Mean of the last `k` entries of a column (smoothed terminal value).

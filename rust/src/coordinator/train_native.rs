@@ -362,8 +362,8 @@ fn adjoint_grads_sharded<V: StageVjp>(
     if shards.is_empty() {
         return (vec![0.0f64; vjp.n_params()], vec![]);
     }
-    let parts = pool.run_shards(shards.len(), |s| {
-        adjoint_shard(vjp, rec, &tbf, ybar_final, shards[s].clone())
+    let parts = pool.run_range_shards(&shards, |_, r| {
+        adjoint_shard(vjp, rec, &tbf, ybar_final, r.clone())
     });
     let mut pbar = vec![0.0f64; vjp.n_params()];
     let mut ybar = Vec::with_capacity(m);
@@ -642,7 +642,7 @@ impl NativeTrainer {
         assert_eq!(x0.len(), bsz * n, "ce_grads: batch shape");
         let rec = self.forward_record(x0);
         let w = n + 1;
-        let head = self.head.as_ref().expect("ce_grads needs a classifier head");
+        let head = self.head.as_ref().expect("ce_grads needs a classifier head"); // taylint: allow(D4) -- documented precondition of the CE path
         let c = head.classes;
         let lam = self.lam as f64;
         let mut ce = 0.0f64;
@@ -1009,6 +1009,43 @@ mod tests {
                 (a - w).abs() <= 1e-10 + 1e-9 * a.abs().max(w.abs()),
                 "θ̄[{i}] sharded {a} vs unsharded {w}"
             );
+        }
+    }
+
+    #[test]
+    fn adjoint_stage_grads_pooled_matches_pool_of_one_bit_for_bit() {
+        // The model-agnostic entry point has no standalone serial twin; a
+        // Pool::new(1) sweep runs every gradient shard inline and is the
+        // serial reference the determinism contract (lint rule D5) pins.
+        let mlp = Mlp::new(1, &[4], true, 13);
+        let order = 2usize;
+        let b = 25usize; // spans two canonical GRAD_SHARD_ROWS shards
+        let mut rng = Pcg::new(21);
+        let x0: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let reg = RegularizedBatchDynamics::new(mlp.clone(), order);
+        let aug = reg.augment(&x0);
+        let tb = tableau::rk4();
+        let rec = crate::solvers::batch::solve_fixed_batch_record_pooled(
+            &Pool::new(1),
+            &reg,
+            0.0,
+            1.0,
+            &aug,
+            2,
+            &tb,
+        );
+        let ybar: Vec<f64> = (0..b * 2).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let vjp = RkStageVjp { mlp: &mlp, order };
+        let (p1, y1) = adjoint_stage_grads_pooled(&Pool::new(1), &vjp, &rec, &tb, &ybar);
+        for threads in [2usize, 3, 4] {
+            let pool = Pool::new(threads);
+            let (pt, yt) = adjoint_stage_grads_pooled(&pool, &vjp, &rec, &tb, &ybar);
+            for (a, w) in pt.iter().zip(&p1) {
+                assert_eq!(a.to_bits(), w.to_bits(), "θ̄ threads={threads}");
+            }
+            for (a, w) in yt.iter().zip(&y1) {
+                assert_eq!(a.to_bits(), w.to_bits(), "ȳ threads={threads}");
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! whole fused train step (ODE solve + loss + `R_K` via jet + optimizer),
 //! exactly the paper's fixed-grid training regime.
 
-use std::collections::BTreeMap;
+use std::collections::BTreeMap; // taylint: allow(D1) -- ordered by name, never feeds a float reduction
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
@@ -19,7 +19,7 @@ use crate::util::rng::Pcg;
 /// (i32) — filled by the experiment's data pipeline each step.
 #[derive(Default)]
 pub struct BatchInputs {
-    pub f32s: BTreeMap<String, Vec<f32>>,
+    pub f32s: BTreeMap<String, Vec<f32>>, // taylint: allow(D1) -- keyed lookup by input name; iteration is name-sorted and deterministic
     pub i32s: BTreeMap<String, Vec<i32>>,
 }
 
@@ -139,8 +139,12 @@ impl<'rt> Trainer<'rt> {
                 "opt" => {
                     let mut parts = inp.role.splitn(3, ':');
                     parts.next();
-                    let slot = parts.next().unwrap();
-                    let pname = parts.next().unwrap();
+                    let slot = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("opt role {:?} is missing its slot", inp.role))?;
+                    let pname = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("opt role {:?} is missing its param", inp.role))?;
                     literal_f32(&inp.shape, self.store.slot_value(slot, pname)?)?
                 }
                 "batch" => {
@@ -196,7 +200,9 @@ impl<'rt> Trainer<'rt> {
             if role == "param" {
                 self.store.set_value(idx, data);
             } else {
-                let slot = role.strip_prefix("opt:").unwrap();
+                let slot = role
+                    .strip_prefix("opt:")
+                    .ok_or_else(|| anyhow!("unexpected state role {role:?}"))?;
                 self.store.set_slot_value(slot, idx, data);
             }
         }

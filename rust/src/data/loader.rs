@@ -114,9 +114,9 @@ impl<'a> Batcher<'a> {
         let row = self.ds.row;
         let mut x = Vec::with_capacity(self.batch * row);
         let mut labels = Vec::with_capacity(self.batch);
-        let (r2, has2) = match &self.ds.x2 {
-            Some((_, r2)) => (*r2, true),
-            None => (0, false),
+        let r2 = match &self.ds.x2 {
+            Some((_, r2)) => *r2,
+            None => 0,
         };
         let mut x2 = Vec::with_capacity(self.batch * r2);
         for &i in idx {
@@ -124,8 +124,7 @@ impl<'a> Batcher<'a> {
             if let Some(l) = &self.ds.labels {
                 labels.push(l[i]);
             }
-            if has2 {
-                let (xs, _) = self.ds.x2.as_ref().unwrap();
+            if let Some((xs, _)) = &self.ds.x2 {
                 x2.extend_from_slice(&xs[i * r2..(i + 1) * r2]);
             }
         }

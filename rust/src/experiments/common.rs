@@ -79,7 +79,7 @@ impl MnistHarness {
     pub fn eval_batch<'a>(&'a self, which: &'a Dataset, idx: usize) -> (Vec<f32>, Vec<i32>) {
         let start = (idx * self.b) % (which.n - self.b + 1);
         let x = which.x[start * self.d..(start + self.b) * self.d].to_vec();
-        let l = which.labels.as_ref().unwrap()[start..start + self.b].to_vec();
+        let l = which.labels.as_ref().unwrap()[start..start + self.b].to_vec(); // taylint: allow(D4) -- the harness constructor always attaches labels
         (x, l)
     }
 }
@@ -182,6 +182,7 @@ pub fn train_cnf<'rt>(
 ) -> Result<(Trainer<'rt>, f64, f32)> {
     let mut tr = Trainer::new(rt, artifact, seed)?;
     let mut rng = Pcg::new(seed ^ 0xc4f);
+    // taylint: allow(D3) -- wall-clock for the reported seconds column only
     let t0 = std::time::Instant::now();
     let mut last = f32::NAN;
     for _ in 0..iters {

@@ -99,7 +99,7 @@ pub fn mnist_native(scale: Scale) -> Result<Table> {
     let ds = Dataset::new(x, d).with_labels(raw.labels);
     let (train, test) = ds.split(0.25);
     let xt = test.x[..b * d].to_vec();
-    let lt = test.labels.as_ref().expect("labels")[..b].to_vec();
+    let lt = test.labels.as_ref().expect("labels")[..b].to_vec(); // taylint: allow(D4) -- the dataset was built with_labels four lines up
     let opts = eval_opts();
     let dopri = tableau::dopri5();
     let mut table = Table::new(&["lambda", "test_ce", "test_err", "R_K", "mean NFE"]);
@@ -113,7 +113,7 @@ pub fn mnist_native(scale: Scale) -> Result<Table> {
             tr.step_ce(&bt.x, &bt.labels);
         }
         let ev = tr.eval_rk(&xt, &dopri, &opts);
-        let (ce, err) = tr.head.as_ref().expect("head").metrics(&ev.y, &lt);
+        let (ce, err) = tr.head.as_ref().expect("head").metrics(&ev.y, &lt); // taylint: allow(D4) -- the trainer was constructed with Some(head) above
         let nfe = mean_f64(ev.stats.iter().map(|s| s.nfe as f64));
         table.row(vec![
             format!("{lam}"),

@@ -32,6 +32,10 @@
 //! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench,
 //!   and the scoped worker pool `util::pool` behind the parallel
 //!   execution layer).
+//! * [`analysis`] — `taylint`, the in-repo determinism lint: a
+//!   dependency-free tokenizer + rule catalog (D1–D5) that machine-checks
+//!   the bit-identity invariants the pool guarantees (run via `make lint`
+//!   or the `taylint` binary).
 
 // Numerical-kernel style: index loops over parallel slices mirror the
 // reference equations (Hairer et al.) more faithfully than iterator chains;
@@ -39,6 +43,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod autodiff;
 pub mod coordinator;
 pub mod data;

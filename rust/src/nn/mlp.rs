@@ -91,7 +91,7 @@ impl Mlp {
         assert_eq!(p.len(), self.params.len(), "Mlp::forward: parameter arity");
         let mut acts: Vec<T> = z.to_vec();
         if self.with_time {
-            acts.push(t.expect("Mlp built with_time needs t").clone());
+            acts.push(t.expect("Mlp built with_time needs t").clone()); // taylint: allow(D4) -- documented contract of forward()
         }
         let mut off = 0;
         for l in 0..self.sizes.len() - 1 {

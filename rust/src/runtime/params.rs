@@ -63,7 +63,7 @@ impl ParamStore {
     }
 
     pub fn set_slot_value(&mut self, slot: &str, idx: usize, data: Vec<f32>) {
-        let s = self.slots.get_mut(slot).expect("slot exists");
+        let s = self.slots.get_mut(slot).expect("slot exists"); // taylint: allow(D4) -- slots are fixed at store construction
         assert_eq!(data.len(), s[idx].len());
         s[idx] = data;
     }

@@ -930,7 +930,8 @@ fn fixed_batch_drive<F: BatchDynamics>(
         if let Some(r) = &mut rec {
             r.stage_t.push(Vec::with_capacity(tbf.stages));
             r.stage_y.push(Vec::with_capacity(tbf.stages));
-            r.stage_t.last_mut().unwrap().push(t);
+            // the step's caches were pushed two lines up, so last_mut is Some
+            r.stage_t.last_mut().unwrap().push(t); // taylint: allow(D4) -- see above
             r.stage_y.last_mut().unwrap().push(y.clone());
         }
         {
@@ -953,7 +954,8 @@ fn fixed_batch_drive<F: BatchDynamics>(
                 *ts = tc;
             }
             if let Some(r) = &mut rec {
-                r.stage_t.last_mut().unwrap().push(tc);
+                // stage 0 created this step's caches, so last_mut is Some
+                r.stage_t.last_mut().unwrap().push(tc); // taylint: allow(D4) -- see above
                 r.stage_y.last_mut().unwrap().push(ystage.clone());
             }
             let (_, rest) = ks.split_at_mut(i + 1);
@@ -1153,8 +1155,7 @@ where
         let mut own = f.clone();
         return batch_segment(&mut own, t0, t1, y0, tb, opts, None);
     }
-    let parts = pool.run_shards(shards.len(), |s| {
-        let r = &shards[s];
+    let parts = pool.run_range_shards(&shards, |_, r| {
         let mut g = OffsetIds::new(f.clone(), r.start);
         batch_segment(&mut g, t0, t1, &y0[r.start * n..r.end * n], tb, opts, None)
     });
@@ -1188,8 +1189,7 @@ where
     if shards.len() <= 1 {
         return solve_fixed_batch(f.clone(), t0, t1, y0, steps, tb);
     }
-    let parts = pool.run_shards(shards.len(), |s| {
-        let r = &shards[s];
+    let parts = pool.run_range_shards(&shards, |_, r| {
         let mut g = OffsetIds::new(f.clone(), r.start);
         fixed_batch_drive(&mut g, t0, t1, &y0[r.start * n..r.end * n], steps, tb, None)
     });
@@ -1224,8 +1224,7 @@ where
         let mut own = f.clone();
         return solve_fixed_batch_record(&mut own, t0, t1, y0, steps, tb);
     }
-    let parts = pool.run_shards(shards.len(), |s| {
-        let r = &shards[s];
+    let parts = pool.run_range_shards(&shards, |_, r| {
         let mut g = OffsetIds::new(f.clone(), r.start);
         solve_fixed_batch_record(&mut g, t0, t1, &y0[r.start * n..r.end * n], steps, tb)
     });
@@ -1277,8 +1276,7 @@ where
     if shards.len() <= 1 {
         return solve_to_times_batch(f.clone(), times, y0, tb, opts);
     }
-    let parts = pool.run_shards(shards.len(), |s| {
-        let r = &shards[s];
+    let parts = pool.run_range_shards(&shards, |_, r| {
         let g = OffsetIds::new(f.clone(), r.start);
         solve_to_times_batch(g, times, &y0[r.start * n..r.end * n], tb, opts)
     });

@@ -6,7 +6,7 @@
 //! emission (`--json <path>` merges a section per bench into one file, so
 //! `make bench-json` accumulates `BENCH_parallel.json` across targets).
 
-use std::time::Instant;
+use std::time::Instant; // taylint: allow(D3) -- the bench harness IS the sanctioned timer
 
 use super::json::Json;
 use super::stats::{summarize, Summary};
@@ -18,7 +18,7 @@ pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // taylint: allow(D3) -- timing is this function's purpose
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
@@ -100,7 +100,7 @@ pub fn f(x: f64, prec: usize) -> String {
 /// The `--json <path>` argument of a bench invocation, if present
 /// (`cargo bench --bench X -- --json BENCH_parallel.json`).
 pub fn json_path_arg() -> Option<String> {
-    let mut args = std::env::args().skip(1);
+    let mut args = std::env::args().skip(1); // taylint: allow(D3) -- bench CLI flag parsing, not numerics
     while let Some(a) = args.next() {
         if a == "--json" {
             return args.next();

@@ -19,6 +19,13 @@
 //! when set (a positive integer; `1` disables threading entirely), else
 //! from [`std::thread::available_parallelism`].
 //!
+//! The one disjointness property the static lint (`taylint`, rule D2)
+//! cannot see — that shards merged into one output buffer claim
+//! non-overlapping ranges — is checked dynamically in debug builds:
+//! [`run_range_shards`](Pool::run_range_shards) records every shard's
+//! claimed output range at dispatch and panics with both shard ids if any
+//! two overlap, so every `cargo test` run doubles as a race audit.
+//!
 //! ```
 //! use taynode::util::pool::{shard_ranges, Pool};
 //!
@@ -29,6 +36,7 @@
 //! ```
 
 use std::ops::Range;
+// taylint: allow(D2) -- pool.rs IS the sanctioned index queue (rule D2's one exception)
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The environment variable that pins the worker count (see [`Pool::from_env`]).
@@ -93,6 +101,7 @@ impl Pool {
         if workers <= 1 {
             return (0..n).map(f).collect();
         }
+        // taylint: allow(D2) -- the shared claim counter of the sanctioned queue
         let next = AtomicUsize::new(0);
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
         std::thread::scope(|s| {
@@ -101,6 +110,16 @@ impl Pool {
                     s.spawn(|| {
                         let mut got: Vec<(usize, T)> = Vec::new();
                         loop {
+                            // Relaxed is sufficient: the counter is claim-only.
+                            // Each fetch_add hands out a unique index (RMW
+                            // atomicity needs no ordering), no worker reads or
+                            // writes data published by another worker's claim,
+                            // and the happens-before edges that make the shard
+                            // *results* visible come from scope join, not from
+                            // this counter.  Claim order affects scheduling
+                            // only; outputs are merged by index, so results
+                            // are identical at any interleaving.
+                            // taylint: allow(D2) -- claim-only fetch_add of the sanctioned queue
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             if i >= n {
                                 break;
@@ -112,12 +131,59 @@ impl Pool {
                 })
                 .collect();
             for h in handles {
+                // taylint: allow(D4) -- a panicked worker must re-panic the caller
                 for (i, v) in h.join().expect("pool worker panicked") {
                     out[i] = Some(v);
                 }
             }
         });
+        // taylint: allow(D4) -- the queue hands out every index exactly once
         out.into_iter().map(|v| v.expect("pool shard produced no result")).collect()
+    }
+
+    /// [`run_shards`](Pool::run_shards) for callers whose shards each own a
+    /// contiguous output range (the batched solvers, the adjoint's gradient
+    /// shards): `f(s, &shards[s])` runs for every shard, results return in
+    /// shard order.  In debug builds the claimed ranges are recorded at
+    /// dispatch and any overlap panics with both shard ids — the shard-write
+    /// race detector.  Release builds skip the check entirely.
+    pub fn run_range_shards<T, F>(&self, shards: &[Range<usize>], f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &Range<usize>) -> T + Sync,
+    {
+        if cfg!(debug_assertions) {
+            let mut claims = ShardClaims::default();
+            for (s, r) in shards.iter().enumerate() {
+                claims.claim(s, r);
+            }
+        }
+        self.run_shards(shards.len(), |s| f(s, &shards[s]))
+    }
+}
+
+/// Debug-build shard-write race detector: ownership ranges recorded at
+/// dispatch (on the caller's thread, before any worker runs — no
+/// synchronization needed), with overlap a panic naming both shards.
+#[derive(Debug, Default)]
+struct ShardClaims {
+    claims: Vec<(usize, Range<usize>)>,
+}
+
+impl ShardClaims {
+    fn claim(&mut self, shard: usize, r: &Range<usize>) {
+        if r.is_empty() {
+            return; // an empty range owns nothing and cannot race
+        }
+        for (other, prev) in &self.claims {
+            if r.start < prev.end && prev.start < r.end {
+                panic!(
+                    "shard race: shard {shard} claims output range {r:?} \
+                     overlapping shard {other}'s range {prev:?}"
+                );
+            }
+        }
+        self.claims.push((shard, r.clone()));
     }
 }
 
@@ -264,5 +330,66 @@ mod tests {
     #[should_panic(expected = "thread count must be positive")]
     fn zero_threads_rejected() {
         let _ = Pool::new(0);
+    }
+
+    #[test]
+    fn run_range_shards_matches_run_shards_on_disjoint_layouts() {
+        let data: Vec<u64> = (0..101).collect();
+        for threads in [1usize, 2, 3, 4, 8] {
+            let pool = Pool::new(threads);
+            let shards = shard_ranges(data.len(), 7);
+            let got: Vec<u64> =
+                pool.run_range_shards(&shards, |_, r| r.clone().map(|i| data[i]).sum());
+            let want: Vec<u64> =
+                pool.run_shards(shards.len(), |s| shards[s].clone().map(|i| data[i]).sum());
+            assert_eq!(got, want);
+            assert_eq!(got.iter().sum::<u64>(), data.iter().sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn run_range_shards_passes_shard_ids_in_order() {
+        let pool = Pool::new(3);
+        let shards = chunk_ranges(23, pool.threads());
+        let ids: Vec<usize> = pool.run_range_shards(&shards, |s, _| s);
+        assert_eq!(ids, (0..shards.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_ranges_do_not_trip_the_race_detector() {
+        let pool = Pool::new(2);
+        let shards = vec![0..4, 4..4, 4..9, 9..9];
+        let lens: Vec<usize> = pool.run_range_shards(&shards, |_, r| r.len());
+        assert_eq!(lens, vec![4, 0, 5, 0]);
+    }
+
+    // The detector only exists in debug builds (`cargo test --release`
+    // would see no panic), so the should_panic tests are debug-gated.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "shard race")]
+    fn overlapping_ranges_panic_in_debug_builds() {
+        let pool = Pool::new(2);
+        let shards = vec![0..6, 4..9]; // rows 4 and 5 claimed twice
+        let _: Vec<usize> = pool.run_range_shards(&shards, |_, r| r.len());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn race_panic_names_both_shards() {
+        let pool = Pool::new(2);
+        let shards = vec![0..3, 5..8, 2..6];
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _: Vec<usize> = pool.run_range_shards(&shards, |_, r| r.len());
+        }));
+        let Err(payload) = caught else {
+            panic!("overlapping claim did not panic");
+        };
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("shard 2"), "missing claimer id: {msg}");
+        assert!(msg.contains("shard 0"), "missing prior owner id: {msg}");
     }
 }

@@ -21,7 +21,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
     let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
         / n.max(1) as f64;
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     Summary {
         n,
         mean,
@@ -75,7 +75,7 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut out = vec![0.0; xs.len()];
     for (rank, &i) in idx.iter().enumerate() {
         out[i] = rank as f64;
