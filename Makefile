@@ -16,21 +16,25 @@ train-demo:
 # Machine-readable perf trajectory: run the parallel-engine benches and
 # accumulate ops/sec, speedup vs serial, and the worker count into
 # BENCH_parallel.json, and the CNF stack (divergence engine, log-det
-# solves, NLL training) into BENCH_cnf.json (each bench merge-writes its
-# own section).  Honor TAYNODE_THREADS if set; equality with the serial
-# path is asserted inside the benches before anything is timed.
+# solves, NLL training) into BENCH_cnf.json, and the continuous-batching
+# serving engine (p50/p99 latency + occupancy vs the drain baseline at
+# B in {64, 256, 1024}) into BENCH_serving.json (each bench merge-writes
+# its own section).  Honor TAYNODE_THREADS if set; equality with the
+# serial path is asserted inside the benches before anything is timed.
 #
 # Each file accumulates in a .tmp scratch path and moves into place only
 # after every contributing bench succeeded, so a mid-run failure (or ^C)
 # leaves the committed baselines untouched.
 .PHONY: bench-json
 bench-json:
-	rm -f BENCH_parallel.json.tmp BENCH_cnf.json.tmp
+	rm -f BENCH_parallel.json.tmp BENCH_cnf.json.tmp BENCH_serving.json.tmp
 	cargo bench --bench perf_batch -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_train_native -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_cnf -- --json BENCH_cnf.json.tmp
+	cargo bench --bench perf_serving -- --json BENCH_serving.json.tmp
 	mv BENCH_parallel.json.tmp BENCH_parallel.json
 	mv BENCH_cnf.json.tmp BENCH_cnf.json
+	mv BENCH_serving.json.tmp BENCH_serving.json
 
 # Determinism lint: taylint walks rust/src, rust/tests, benches/, and
 # examples/ and enforces the invariant catalog (D1-D5; `taylint --rules`

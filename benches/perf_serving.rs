@@ -1,0 +1,147 @@
+//! §Perf: the continuous-batching serving engine under Poisson load.
+//!
+//! Drives the demo host (`toy` / `mnist` / `density`) at capacities
+//! B ∈ {64, 256, 1024} with arrival rate B/4 per step and 6·B total
+//! requests, stamping wall-clock submit→retire latency per request and
+//! reporting p50/p99 alongside mean batch occupancy.  Each load point is
+//! replayed under the drain-to-stragglers admission baseline at the
+//! identical seed (same requests, same arrivals) and the continuous
+//! drive's occupancy is **asserted strictly higher** — the acceptance
+//! criterion behind the serving tentpole.
+//!
+//! Determinism is asserted before anything is timed: two same-seed
+//! drives must replay bit-identical traces (wall-clock latency lives
+//! only in this bench; the trace itself is a pure function of the seed).
+//! `--json <path>` appends the machine-readable numbers (see
+//! `make bench-json`, which routes this bench into `BENCH_serving.json`).
+
+use std::time::Instant;
+
+use taynode::serving::{
+    demo_host, run_poisson, run_poisson_drain, trace_hash, PoissonArrivals, RequestGen,
+    ServeResponse,
+};
+use taynode::util::bench::{json_path_arg, merge_bench_json, Table};
+use taynode::util::json::Json;
+use taynode::util::stats::summarize;
+
+/// One wall-clock-stamped drive.  The trace fields replicate
+/// `serving::drive_poisson` exactly (same arrivals, same generator, same
+/// submit/step interleaving) — the stamps only observe, never steer.
+struct TimedDrive {
+    responses: Vec<ServeResponse>,
+    latencies_ms: Vec<f64>,
+    steps: u64,
+    occupancy: f64,
+}
+
+fn drive_timed(seed: u64, capacity: usize, rate: f64, total: u64) -> TimedDrive {
+    let mut host = demo_host(seed, capacity);
+    let mut arrivals = PoissonArrivals::new(seed, rate);
+    let mut gen = RequestGen::new(seed, host.model_specs());
+    // Request ids are the sequential submit index, so they index straight
+    // into the stamp vector.
+    let mut submit_at: Vec<Instant> = Vec::with_capacity(total as usize);
+    let mut responses = Vec::new();
+    let mut latencies_ms = Vec::new();
+    let mut submitted = 0u64;
+    let mut steps = 0u64;
+    while submitted < total || !host.is_idle() {
+        if submitted < total {
+            let k = (arrivals.next_count() as u64).min(total - submitted);
+            for _ in 0..k {
+                let req = gen.next(submitted);
+                submitted += 1;
+                submit_at.push(Instant::now());
+                if let Some(err) = host.submit(&req) {
+                    responses.push(err);
+                }
+            }
+        }
+        let done = host.step();
+        let now = Instant::now();
+        for r in done {
+            let dt = now.duration_since(submit_at[r.id as usize]);
+            latencies_ms.push(dt.as_secs_f64() * 1e3);
+            responses.push(r);
+        }
+        steps += 1;
+    }
+    TimedDrive { responses, latencies_ms, steps, occupancy: host.occupancy() }
+}
+
+fn main() {
+    println!("== continuous-batching serving: latency + occupancy under Poisson load ==");
+
+    // -- determinism, asserted before anything is timed ----------------------
+    let a = run_poisson(11, 64, 16.0, 400);
+    let b = run_poisson(11, 64, 16.0, 400);
+    assert_eq!(a.submitted, 400);
+    assert_eq!(a.errors, 0, "demo request stream must be well-formed");
+    assert_eq!(a, b, "same-seed serving traces must replay bit-identically");
+    assert_eq!(trace_hash(&a.responses), trace_hash(&b.responses));
+    println!(
+        "replay OK: 400 requests, {} steps, trace hash {:016x}\n",
+        a.steps,
+        trace_hash(&a.responses)
+    );
+
+    let seed = 17u64;
+    let mut table = Table::new(&[
+        "B", "rate", "requests", "steps", "p50 ms", "p99 ms", "occupancy", "drain occ", "miss",
+    ]);
+    let mut sections: Vec<(String, Json)> = Vec::new();
+    for capacity in [64usize, 256, 1024] {
+        let rate = capacity as f64 / 4.0;
+        let total = 6 * capacity as u64;
+        let timed = drive_timed(seed, capacity, rate, total);
+        assert_eq!(timed.responses.len() as u64, total, "every request must answer");
+        let drain = run_poisson_drain(seed, capacity, rate, total);
+        // The tentpole claim: at equal load (same seed → same requests and
+        // arrivals), continuous admission keeps the batch strictly fuller
+        // than draining to stragglers.
+        assert!(
+            timed.occupancy > drain.mean_occupancy,
+            "B={capacity}: continuous occupancy {} must beat drain {}",
+            timed.occupancy,
+            drain.mean_occupancy
+        );
+        let s = summarize(&timed.latencies_ms);
+        let misses = timed.responses.iter().filter(|r| r.deadline_miss).count();
+        let hash = trace_hash(&timed.responses);
+        table.row(vec![
+            capacity.to_string(),
+            format!("{rate:.0}"),
+            total.to_string(),
+            timed.steps.to_string(),
+            format!("{:.3}", s.p50),
+            format!("{:.3}", s.p99),
+            format!("{:.3}", timed.occupancy),
+            format!("{:.3}", drain.mean_occupancy),
+            misses.to_string(),
+        ]);
+        sections.push((
+            format!("b{capacity}"),
+            Json::obj(vec![
+                ("batch", Json::num(capacity as f64)),
+                ("rate", Json::num(rate)),
+                ("requests", Json::num(total as f64)),
+                ("steps", Json::num(timed.steps as f64)),
+                ("p50_ms", Json::num(s.p50)),
+                ("p99_ms", Json::num(s.p99)),
+                ("mean_occupancy", Json::num(timed.occupancy)),
+                ("drain_occupancy", Json::num(drain.mean_occupancy)),
+                ("deadline_misses", Json::num(misses as f64)),
+                ("trace_hash", Json::str(format!("{hash:016x}"))),
+            ]),
+        ));
+    }
+    table.print();
+
+    if let Some(path) = json_path_arg() {
+        let pairs: Vec<(&str, Json)> =
+            sections.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        merge_bench_json(&path, "serving", Json::obj(pairs));
+        println!("\nwrote serving section to {path}");
+    }
+}

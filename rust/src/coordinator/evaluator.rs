@@ -232,6 +232,20 @@ where
 // Native CNF NLL (log-det augmented solve — no XLA artifact needed)
 // ---------------------------------------------------------------------------
 
+/// Standard-normal NLL of one latent state with its integrated log-det:
+/// `½‖z‖² + (n/2)·ln 2π − ℓ`, accumulated in f64 exactly like the CNF
+/// trainer, cast once at the end.  Shared by [`cnf_nll_eval_pooled`] and
+/// the serving layer's density handler so both score bit-identically.
+pub fn latent_nll(z: &[f32], logdet: f32) -> f32 {
+    let half_ln_2pi = 0.5 * (2.0 * std::f64::consts::PI).ln();
+    let mut sq = 0.0f64;
+    for zi in z {
+        let z64 = f64::from(*zi);
+        sq += z64 * z64;
+    }
+    (0.5 * sq + z.len() as f64 * half_ln_2pi - logdet as f64) as f32
+}
+
 /// Adaptive-solver evaluation of a **native** CNF: one log-det + `R_K`
 /// augmented batched solve, scored as negative log-likelihood in nats
 /// under the standard-normal base distribution.  (The artifact-backed
@@ -277,16 +291,10 @@ where
     let aug = aug_dyn.augment(x0);
     let res = solve_adaptive_batch_pooled(pool, &aug_dyn, 0.0, 1.0, &aug, tb, opts);
     let (y, cols) = split_aug_cols(&res, n);
-    let half_ln_2pi = 0.5 * (2.0 * std::f64::consts::PI).ln();
     let b = res.batch();
     let mut per_nll = Vec::with_capacity(b);
     for r in 0..b {
-        let mut sq = 0.0f64;
-        for i in 0..n {
-            let zi = y[r * n + i] as f64;
-            sq += zi * zi;
-        }
-        per_nll.push((0.5 * sq + n as f64 * half_ln_2pi - cols[0][r] as f64) as f32);
+        per_nll.push(latent_nll(&y[r * n..(r + 1) * n], cols[0][r]));
     }
     CnfNllEval {
         n,

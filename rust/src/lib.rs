@@ -25,6 +25,11 @@
 //!   Hutchinson), plus the flat-vector `Adam` optimizer.
 //! * [`runtime`] — PJRT client (behind the `pjrt` feature; a thin stub
 //!   substitutes by default), artifact registry, parameter store.
+//! * [`serving`] — the continuous-batching inference engine: an admission
+//!   queue over the batched driver (`BatchStepper`) with per-request
+//!   deadline/tolerance classes, the `ServeRequest`/`ServeResponse` wire
+//!   format, seeded Poisson load generation, and model-backed hosts for
+//!   the toy / synth-MNIST / CNF workloads.
 //! * [`coordinator`] — training loop (XLA-artifact and native
 //!   discrete-adjoint paths), schedules, sweeps, metrics.
 //! * [`data`] — synthetic MNIST / PhysioNet / MINIBOONE generators.
@@ -50,6 +55,7 @@ pub mod data;
 pub mod experiments;
 pub mod nn;
 pub mod runtime;
+pub mod serving;
 pub mod solvers;
 pub mod taylor;
 pub mod tensor;

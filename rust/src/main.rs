@@ -6,14 +6,18 @@
 //!   eval  --model NAME           — adaptive-solver evaluation of a model
 //!   experiment <id|all> [--quick]— regenerate a paper table/figure
 //!   solvers                      — list the RK tableau suite
+//!   serve [--quick]              — continuous-batching serving demo
 
 use anyhow::{bail, Result};
 
 use taynode::coordinator::{evaluator, BatchInputs, Trainer};
 use taynode::data::{synth_mnist, Batcher, Dataset};
 use taynode::experiments::{self, Scale};
+use taynode::serving;
 use taynode::solvers::tableau;
+use taynode::util::bench::Table;
 use taynode::util::cli::Args;
+use taynode::util::pool::Pool;
 use taynode::util::rng::Pcg;
 
 fn main() {
@@ -34,6 +38,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let scale = if args.bool("quick") { Scale::quick() } else { Scale::full() };
             experiments::run(&id, scale)
         }
+        "serve" => serve(args),
         "solvers" => {
             println!(
                 "{:<12} {:>6} {:>7} {:>9} {:>6}",
@@ -58,11 +63,88 @@ fn dispatch(args: &Args) -> Result<()> {
                  usage:\n  repro info\n  repro solvers\n  \
                  repro train --artifact mnist_train_k2_s8 [--iters N] [--lam F] [--lr F]\n  \
                  repro eval --model toy|mnist [--solver dopri5] [--rtol F]\n  \
-                 repro experiment <fig1..fig12|native|cnf|table2|table3|table4|all> [--quick]"
+                 repro experiment <fig1..fig12|native|cnf|table2|table3|table4|all> [--quick]\n  \
+                 repro serve [--quick] [--seed N] [--requests N] [--batch N] [--rate F]"
             );
             Ok(())
         }
     }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let quick = args.bool("quick");
+    let seed = args.u64_or("seed", 7)?;
+    let total = args.usize_or("requests", if quick { 120 } else { 600 })? as u64;
+    let capacity = args.usize_or("batch", if quick { 16 } else { 64 })?;
+    let rate = args.f64_or("rate", capacity as f64 / 8.0)?;
+    let pool = Pool::from_env();
+    let threads = pool.threads();
+
+    let run = || {
+        if threads > 1 {
+            serving::run_poisson_pooled(&pool, seed, capacity, rate, total)
+        } else {
+            serving::run_poisson(seed, capacity, rate, total)
+        }
+    };
+    let trace = run();
+    // The determinism guarantee, checked live: a same-seed replay must be
+    // bit-identical (and across thread counts — compare the printed hash).
+    if trace != run() {
+        bail!("serve: same-seed replay diverged — determinism broken");
+    }
+
+    println!(
+        "served {} requests in {} steps  (threads {threads}, capacity {capacity}, rate {rate})",
+        trace.submitted, trace.steps
+    );
+    println!(
+        "occupancy {:.3}  errors {}  replay OK  trace hash {:016x}",
+        trace.mean_occupancy,
+        trace.errors,
+        serving::trace_hash(&trace.responses)
+    );
+    let mut table = Table::new(&["class", "count", "miss", "p50 steps", "p99 steps", "mean NFE"]);
+    for c in serving::CLASSES {
+        let mut lats: Vec<u64> = trace
+            .responses
+            .iter()
+            .filter(|r| r.ok && r.class == c.name)
+            .map(|r| r.done_step - r.admit_step + 1)
+            .collect();
+        lats.sort_unstable();
+        let misses = trace
+            .responses
+            .iter()
+            .filter(|r| r.class == c.name && r.deadline_miss)
+            .count();
+        let nfe: u64 = trace
+            .responses
+            .iter()
+            .filter(|r| r.ok && r.class == c.name)
+            .map(|r| r.nfe)
+            .sum();
+        let mean_nfe = if lats.is_empty() { 0.0 } else { nfe as f64 / lats.len() as f64 };
+        table.row(vec![
+            c.name.to_string(),
+            lats.len().to_string(),
+            misses.to_string(),
+            pct(&lats, 0.50).to_string(),
+            pct(&lats, 0.99).to_string(),
+            format!("{mean_nfe:.1}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (0 when empty).
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i]
 }
 
 fn info() -> Result<()> {

@@ -1,0 +1,97 @@
+//! Seeded Poisson arrival process for serving load generation.
+//!
+//! One [`PoissonArrivals`] draws the number of requests arriving in each
+//! unit time slot (one engine step).  It owns a [`Pcg`] stream derived
+//! from the caller's seed — `util::rng` is the sanctioned RNG door
+//! (taylint D3) — so the whole arrival sequence is a pure function of the
+//! seed and replays bit-identically.
+
+use crate::util::rng::Pcg;
+
+/// Poisson-process load generator: `next_count() ~ Poisson(rate)` per slot.
+pub struct PoissonArrivals {
+    rng: Pcg,
+    rate: f64,
+}
+
+impl PoissonArrivals {
+    /// A process with the given mean arrivals per engine step.
+    pub fn new(seed: u64, rate: f64) -> PoissonArrivals {
+        assert!(
+            rate.is_finite() && rate >= 0.0,
+            "PoissonArrivals: rate must be finite and non-negative"
+        );
+        PoissonArrivals { rng: Pcg::with_stream(seed, 0xA221_7E55), rate }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Arrivals in the next slot.
+    ///
+    /// Knuth's product-of-uniforms, chunked at λ = 30: a Poisson(λ₁+λ₂)
+    /// draw is the sum of independent Poisson(λ₁) and Poisson(λ₂) draws,
+    /// and e^{−30} ≈ 9e-14 keeps the threshold comfortably inside f64
+    /// range at any serving rate (e^{−λ} underflows outright near λ = 745,
+    /// turning the textbook loop into an infinite one).
+    pub fn next_count(&mut self) -> usize {
+        let mut remaining = self.rate;
+        let mut k = 0usize;
+        while remaining > 0.0 {
+            let lambda = remaining.min(30.0);
+            remaining -= lambda;
+            let l = (-lambda).exp();
+            let mut p = 1.0f64;
+            loop {
+                p *= self.rng.uniform() as f64;
+                if p <= l {
+                    break;
+                }
+                k += 1;
+            }
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_the_same_arrival_sequence() {
+        let mut a = PoissonArrivals::new(99, 7.5);
+        let mut b = PoissonArrivals::new(99, 7.5);
+        let xs: Vec<usize> = (0..200).map(|_| a.next_count()).collect();
+        let ys: Vec<usize> = (0..200).map(|_| b.next_count()).collect();
+        assert_eq!(xs, ys);
+        // ... and a different seed diverges somewhere.
+        let mut c = PoissonArrivals::new(100, 7.5);
+        let zs: Vec<usize> = (0..200).map(|_| c.next_count()).collect();
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn sample_mean_tracks_the_rate_including_the_chunked_regime() {
+        // λ = 120 exercises the chunked path (4 sub-draws per slot); the
+        // sample mean over 4000 slots stays within a few percent of λ for
+        // a correct sampler (variance λ/n → σ ≈ 0.17 here).
+        for (rate, slots) in [(0.5f64, 20_000usize), (6.0, 8_000), (120.0, 4_000)] {
+            let mut p = PoissonArrivals::new(7, rate);
+            let total: usize = (0..slots).map(|_| p.next_count()).sum();
+            let mean = total as f64 / slots as f64;
+            let sigma = (rate / slots as f64).sqrt();
+            assert!(
+                (mean - rate).abs() < 6.0 * sigma.max(1e-3),
+                "rate {rate}: sample mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_produces_arrivals() {
+        let mut p = PoissonArrivals::new(3, 0.0);
+        assert!((0..100).all(|_| p.next_count() == 0));
+    }
+}

@@ -1,0 +1,457 @@
+//! The continuous-batching core: an admission queue in front of a
+//! [`BatchStepper`].
+//!
+//! A [`ServingEngine`] owns one model's dynamics and a FIFO queue of
+//! requests.  Every [`step`](ServingEngine::step) first admits queued
+//! requests into free rows of the active set (continuous batching — the
+//! batch stays full under load instead of draining to stragglers), then
+//! advances every active trajectory by one solver attempt and hands back
+//! the requests that retired.
+//!
+//! **Determinism.** The engine adds no arithmetic of its own: admission
+//! only regroups model evaluations, and the [`BatchStepper`] guarantees
+//! per-row arithmetic never crosses rows.  A request's state, NFE, and
+//! accept/reject history are therefore bit-identical to a solo solve with
+//! the same [`ToleranceClass`] — whenever it was admitted, whatever else
+//! shared the batch (property-tested below and at the stepper layer).
+//!
+//! **Deadlines.** A class's `deadline_steps` is its per-request attempt
+//! budget, enforced by the solver's own `max_steps` (one engine step is
+//! one attempt for every active row), so the deadline changes *when* a
+//! request retires but never the arithmetic along the way.  A request
+//! that runs out retires with [`ServeOutcome::deadline_miss`] set and the
+//! furthest state reached.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::solvers::batch::{BatchDynamics, BatchStepper, Retired};
+use crate::solvers::{AdaptiveOpts, SolveStats, Tableau};
+
+/// A named (tolerance, deadline) service level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ToleranceClass {
+    pub name: &'static str,
+    pub rtol: f32,
+    pub atol: f32,
+    /// Attempt budget counted from admission; see the module docs.
+    pub deadline_steps: usize,
+}
+
+/// Loose tolerance, tight deadline: interactive traffic.
+pub const REALTIME: ToleranceClass =
+    ToleranceClass { name: "realtime", rtol: 1e-3, atol: 1e-5, deadline_steps: 64 };
+
+/// The solver defaults, with a generous deadline.
+pub const STANDARD: ToleranceClass =
+    ToleranceClass { name: "standard", rtol: 1e-5, atol: 1e-7, deadline_steps: 512 };
+
+/// Paper-grade tolerance for offline evaluation traffic.
+pub const PRECISE: ToleranceClass =
+    ToleranceClass { name: "precise", rtol: 1e-7, atol: 1e-9, deadline_steps: 4096 };
+
+/// The wire-nameable classes, loosest first.
+pub const CLASSES: &[ToleranceClass] = &[REALTIME, STANDARD, PRECISE];
+
+impl ToleranceClass {
+    /// Look up a wire name (`realtime` / `standard` / `precise`).
+    pub fn by_name(name: &str) -> Option<ToleranceClass> {
+        CLASSES.iter().copied().find(|c| c.name == name)
+    }
+
+    /// The solver options this class maps onto.  `deadline_steps` becomes
+    /// the per-row `max_steps` budget, which is what keeps a served solve
+    /// bit-identical to a solo [`crate::solvers::solve_adaptive_batch`]
+    /// call under the same options.
+    pub fn opts(&self) -> AdaptiveOpts {
+        AdaptiveOpts {
+            rtol: self.rtol,
+            atol: self.atol,
+            max_steps: self.deadline_steps,
+            ..AdaptiveOpts::default()
+        }
+    }
+}
+
+/// When queued requests may join the active set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Fill free rows before every step (continuous batching).
+    Continuous,
+    /// Only admit into an empty active set — the drain-to-stragglers
+    /// baseline the serving bench compares occupancy against.
+    Drain,
+}
+
+/// A retired request: the engine's answer before model-specific scoring.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// The caller's request id.
+    pub id: u64,
+    /// The class it ran under.
+    pub class: ToleranceClass,
+    /// Final state (`dim()` entries), at time `t`.
+    pub y: Vec<f32>,
+    /// Final integration time (`t1`, or short of it on a deadline miss).
+    pub t: f32,
+    pub stats: SolveStats,
+    /// Engine step at which the request was admitted.
+    pub admit_step: u64,
+    /// Engine step at which it retired.
+    pub done_step: u64,
+    /// True when the attempt budget expired before reaching `t1`.
+    pub deadline_miss: bool,
+}
+
+struct QueuedRequest {
+    id: u64,
+    class: ToleranceClass,
+    y0: Vec<f32>,
+}
+
+/// Request-id / class bookkeeping per trajectory id.
+struct ReqMeta {
+    id: u64,
+    class: ToleranceClass,
+    admit_step: u64,
+}
+
+/// One model's continuous-batching loop; see the module docs.
+pub struct ServingEngine<F: BatchDynamics> {
+    stepper: BatchStepper<F>,
+    queue: VecDeque<QueuedRequest>,
+    /// Indexed by trajectory id — ids are assigned densely at admission,
+    /// so a `Vec` is the map (and stays D1-friendly by construction).
+    meta: Vec<ReqMeta>,
+    capacity: usize,
+    policy: AdmissionPolicy,
+    t0: f32,
+    t1: f32,
+    step_no: u64,
+    busy_steps: u64,
+    active_row_steps: u64,
+}
+
+impl<F: BatchDynamics> ServingEngine<F> {
+    /// An empty engine integrating requests over `t0 → t1` with at most
+    /// `capacity` concurrently active rows.
+    pub fn new(f: F, tb: &Tableau, capacity: usize, t0: f32, t1: f32) -> ServingEngine<F> {
+        assert!(capacity > 0, "ServingEngine: capacity must be positive");
+        assert!(t0 != t1, "ServingEngine: empty integration segment");
+        ServingEngine {
+            stepper: BatchStepper::new(f, tb),
+            queue: VecDeque::new(),
+            meta: Vec::new(),
+            capacity,
+            policy: AdmissionPolicy::Continuous,
+            t0,
+            t1,
+            step_no: 0,
+            busy_steps: 0,
+            active_row_steps: 0,
+        }
+    }
+
+    pub fn set_policy(&mut self, policy: AdmissionPolicy) {
+        self.policy = policy;
+    }
+
+    /// Per-trajectory state dimension.
+    pub fn dim(&self) -> usize {
+        self.stepper.dim()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently in the active set.
+    pub fn in_flight(&self) -> usize {
+        self.stepper.active()
+    }
+
+    /// Requests waiting for a free row.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.stepper.active() == 0 && self.queue.is_empty()
+    }
+
+    /// Engine steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.step_no
+    }
+
+    /// Steps on which the active set was non-empty.
+    pub fn busy_steps(&self) -> u64 {
+        self.busy_steps
+    }
+
+    /// Sum over busy steps of the active-set size — the occupancy
+    /// numerator.
+    pub fn active_row_steps(&self) -> u64 {
+        self.active_row_steps
+    }
+
+    /// Mean fraction of capacity in use over busy steps (idle steps count
+    /// against nobody).  This is the number continuous batching raises
+    /// over the [`Drain`](AdmissionPolicy::Drain) baseline.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.busy_steps == 0 {
+            0.0
+        } else {
+            self.active_row_steps as f64 / (self.busy_steps as f64 * self.capacity as f64)
+        }
+    }
+
+    /// Enqueue a request.  It joins the active set at the next [`step`]
+    /// with a free row (subject to the [`AdmissionPolicy`]).
+    ///
+    /// [`step`]: ServingEngine::step
+    pub fn submit(&mut self, id: u64, class: ToleranceClass, y0: Vec<f32>) -> Result<()> {
+        if y0.len() != self.stepper.dim() {
+            bail!(
+                "request {id}: state length {} != model dimension {}",
+                y0.len(),
+                self.stepper.dim()
+            );
+        }
+        if y0.iter().any(|v| !v.is_finite()) {
+            bail!("request {id}: non-finite initial state");
+        }
+        self.queue.push_back(QueuedRequest { id, class, y0 });
+        Ok(())
+    }
+
+    /// One engine step: admit queued requests into free rows, then advance
+    /// every active trajectory by one attempt.  Returns the requests that
+    /// retired (reached `t1`, exhausted their deadline, or were dead on
+    /// arrival).
+    pub fn step(&mut self) -> Vec<ServeOutcome> {
+        let mut out = Vec::new();
+        let admit = match self.policy {
+            AdmissionPolicy::Continuous => true,
+            AdmissionPolicy::Drain => self.stepper.active() == 0,
+        };
+        if admit {
+            self.admit_waves(&mut out);
+        }
+        let act = self.stepper.active();
+        if act > 0 {
+            self.busy_steps += 1;
+            self.active_row_steps += act as u64;
+            let retired = self.stepper.step();
+            self.collect(retired, &mut out);
+        }
+        self.step_no += 1;
+        out
+    }
+
+    /// Admit maximal FIFO runs of same-class requests while rows are free.
+    /// Each run shares one batched stage-0 evaluation and one batched
+    /// Hairer probe — the same grouping `solve_adaptive_batch` gives a
+    /// whole batch, so per-request NFE accounting is unchanged.
+    fn admit_waves(&mut self, out: &mut Vec<ServeOutcome>) {
+        let n = self.stepper.dim();
+        while self.stepper.active() < self.capacity {
+            let class = match self.queue.front() {
+                Some(r) => r.class,
+                None => break,
+            };
+            let free = self.capacity - self.stepper.active();
+            let mut ids = Vec::new();
+            let mut y0 = Vec::with_capacity(free * n);
+            while ids.len() < free {
+                match self.queue.front() {
+                    Some(r) if r.class == class => {}
+                    _ => break,
+                }
+                if let Some(r) = self.queue.pop_front() {
+                    let tid = self.meta.len();
+                    self.meta.push(ReqMeta {
+                        id: r.id,
+                        class: r.class,
+                        admit_step: self.step_no,
+                    });
+                    ids.push(tid);
+                    y0.extend_from_slice(&r.y0);
+                }
+            }
+            let retired =
+                self.stepper.admit(&ids, &y0, self.t0, self.t1, &class.opts(), None);
+            self.collect(retired, out);
+        }
+    }
+
+    fn collect(&self, retired: Vec<Retired>, out: &mut Vec<ServeOutcome>) {
+        for r in retired {
+            let m = &self.meta[r.id];
+            let deadline_miss = (r.t - self.t1).abs() > 1e-9;
+            out.push(ServeOutcome {
+                id: m.id,
+                class: m.class,
+                y: r.y,
+                t: r.t,
+                stats: r.stats,
+                admit_step: m.admit_step,
+                done_step: self.step_no,
+                deadline_miss,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::arrivals::PoissonArrivals;
+    use crate::solvers::{solve_adaptive_batch, tableau};
+    use crate::util::ptest::{gen, Prop};
+    use crate::util::rng::Pcg;
+
+    /// Id-independent two-dimensional dynamics (ids must not condition the
+    /// field here: the solo reference below renumbers rows from zero).
+    #[derive(Clone)]
+    struct Spiral;
+
+    impl BatchDynamics for Spiral {
+        fn dim(&self) -> usize {
+            2
+        }
+
+        fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+            for r in 0..t.len() {
+                let (a, b) = (y[2 * r], y[2 * r + 1]);
+                dy[2 * r] = -b + 0.3 * (t[r] + a).sin();
+                dy[2 * r + 1] = a - 0.2 * b;
+            }
+        }
+    }
+
+    fn random_class(rng: &mut Pcg) -> ToleranceClass {
+        let rtol = 10f32.powf(rng.range(-7.0, -2.0));
+        ToleranceClass {
+            name: "custom",
+            rtol,
+            atol: rtol * 1e-2,
+            deadline_steps: [24usize, 200, 4000][rng.below(3)],
+        }
+    }
+
+    #[test]
+    fn served_requests_match_solo_solves_bit_for_bit() {
+        // The admission/retire equivalence property at the engine level:
+        // under a seeded Poisson arrival process, random capacities, and
+        // random tolerance classes, every outcome equals its solo solve —
+        // states, time, and stats — and the deadline flag agrees with it.
+        Prop::new(12).run("engine-admission-equiv", |rng: &mut Pcg, case| {
+            let tb = tableau::by_name(["bosh3", "dopri5", "cash_karp"][case % 3]).unwrap();
+            let capacity = 1 + rng.below(6);
+            let total = 5 + rng.below(10);
+            let classes: Vec<ToleranceClass> =
+                (0..total).map(|_| random_class(rng)).collect();
+            let y0s: Vec<Vec<f32>> = (0..total).map(|_| gen::vec_f32(rng, 2, 1.0)).collect();
+
+            let mut eng = ServingEngine::new(Spiral, &tb, capacity, 0.0, 1.0);
+            let mut arrivals = PoissonArrivals::new(rng.next_u64(), 1.5);
+            let mut outcomes = Vec::new();
+            let mut submitted = 0usize;
+            let mut guard = 0usize;
+            while submitted < total || !eng.is_idle() {
+                guard += 1;
+                assert!(guard < 200_000, "engine failed to drain");
+                if submitted < total {
+                    let k = arrivals.next_count().min(total - submitted);
+                    for _ in 0..k {
+                        eng.submit(
+                            submitted as u64,
+                            classes[submitted],
+                            y0s[submitted].clone(),
+                        )
+                        .unwrap();
+                        submitted += 1;
+                    }
+                }
+                outcomes.extend(eng.step());
+            }
+
+            assert_eq!(outcomes.len(), total);
+            assert!(eng.busy_steps() <= eng.steps());
+            assert!(eng.active_row_steps() <= eng.busy_steps() * capacity as u64);
+            for o in outcomes {
+                let r = o.id as usize;
+                let solo =
+                    solve_adaptive_batch(Spiral, 0.0, 1.0, &y0s[r], &tb, &classes[r].opts());
+                assert_eq!(o.y.len(), 2);
+                for i in 0..2 {
+                    assert_eq!(
+                        o.y[i].to_bits(),
+                        solo.y[i].to_bits(),
+                        "{} request {r} dim {i}",
+                        tb.name
+                    );
+                }
+                assert_eq!(o.t.to_bits(), solo.t[0].to_bits());
+                assert_eq!(o.stats.nfe, solo.stats[0].nfe, "request {r}");
+                assert_eq!(o.stats.accepted, solo.stats[0].accepted);
+                assert_eq!(o.stats.rejected, solo.stats[0].rejected);
+                assert_eq!(o.deadline_miss, (solo.t[0] - 1.0).abs() > 1e-9);
+                assert!(o.admit_step <= o.done_step);
+            }
+        });
+    }
+
+    #[test]
+    fn submit_rejects_malformed_requests() {
+        let tb = tableau::dopri5();
+        let mut eng = ServingEngine::new(Spiral, &tb, 4, 0.0, 1.0);
+        assert!(eng.submit(1, STANDARD, vec![0.1]).is_err(), "wrong dimension");
+        assert!(eng.submit(2, STANDARD, vec![0.1, f32::NAN]).is_err(), "non-finite");
+        assert!(eng.submit(3, STANDARD, vec![0.1, 0.2]).is_ok());
+        assert_eq!(eng.queued(), 1);
+    }
+
+    #[test]
+    fn zero_deadline_retires_immediately_as_a_miss() {
+        let tb = tableau::dopri5();
+        let mut eng = ServingEngine::new(Spiral, &tb, 2, 0.0, 1.0);
+        let dead = ToleranceClass { name: "dead", deadline_steps: 0, ..STANDARD };
+        eng.submit(7, dead, vec![0.3, -0.1]).unwrap();
+        let out = eng.step();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].deadline_miss);
+        assert_eq!(out[0].admit_step, out[0].done_step);
+        assert_eq!(out[0].t, 0.0);
+        assert!(eng.is_idle());
+    }
+
+    #[test]
+    fn drain_policy_holds_the_queue_until_the_set_empties() {
+        let tb = tableau::dopri5();
+        let mut eng = ServingEngine::new(Spiral, &tb, 2, 0.0, 1.0);
+        eng.set_policy(AdmissionPolicy::Drain);
+        for id in 0..5u64 {
+            eng.submit(id, REALTIME, vec![0.2 + 0.1 * id as f32, -0.4]).unwrap();
+        }
+        let mut done = 0usize;
+        let mut guard = 0;
+        let mut prev_queued = eng.queued();
+        while !eng.is_idle() {
+            guard += 1;
+            assert!(guard < 10_000);
+            let was_empty = eng.in_flight() == 0;
+            done += eng.step().len();
+            assert!(eng.in_flight() <= 2);
+            // Drain only admits from an empty set: the queue must be
+            // untouched by any step that started with live rows.
+            if !was_empty {
+                assert_eq!(eng.queued(), prev_queued, "admitted while rows were live");
+            }
+            prev_queued = eng.queued();
+        }
+        assert_eq!(done, 5);
+    }
+}

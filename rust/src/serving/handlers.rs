@@ -1,0 +1,521 @@
+//! Model-backed request handlers and the serving loop drivers.
+//!
+//! A [`ServeHost`] routes [`ServeRequest`]s onto per-model
+//! [`ServingEngine`]s — the demo set serves the repo's three workloads
+//! (`toy`: a 2-d MLP field, `mnist`: a synth-MNIST-shaped MLP, `density`:
+//! a CNF scored by NLL at retirement) — and turns retired trajectories
+//! into [`ServeResponse`]s.
+//!
+//! [`run_poisson`] / [`run_poisson_pooled`] / [`run_poisson_drain`] drive
+//! a demo host under seeded Poisson arrivals ([`PoissonArrivals`]) with a
+//! seeded request generator ([`RequestGen`]), producing a [`ServeTrace`]
+//! that is a pure function of the seed: the pooled drive is bit-identical
+//! to the serial one at any thread count (D5 test below), and two
+//! same-seed runs replay the identical trace ([`trace_hash`] witnesses
+//! this cheaply).
+
+use crate::autodiff::div::Divergence;
+use crate::coordinator::evaluator::latent_nll;
+use crate::data::synth_mnist;
+use crate::nn::{Cnf, Mlp};
+use crate::serving::arrivals::PoissonArrivals;
+use crate::serving::engine::{AdmissionPolicy, ServeOutcome, ServingEngine, ToleranceClass};
+use crate::serving::wire::{ServeRequest, ServeResponse};
+use crate::solvers::batch::{BatchDynamics, LogDetBatchDynamics, PooledEval};
+use crate::solvers::tableau;
+use crate::util::pool::Pool;
+use crate::util::rng::Pcg;
+
+/// The one dynamics type every demo engine runs, so hosts stay a single
+/// generic instantiation (and pooled hosts just wrap it in
+/// [`PooledEval`]).
+#[derive(Clone)]
+pub enum ServeDynamics {
+    /// Plain MLP vector field (`toy`, `mnist`).
+    Mlp(Mlp),
+    /// Log-det-augmented CNF (`density`): state `[z, ℓ]`, scored by NLL.
+    Density(LogDetBatchDynamics<Cnf>),
+}
+
+impl BatchDynamics for ServeDynamics {
+    fn dim(&self) -> usize {
+        match self {
+            ServeDynamics::Mlp(m) => BatchDynamics::dim(m),
+            ServeDynamics::Density(d) => BatchDynamics::dim(d),
+        }
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        match self {
+            ServeDynamics::Mlp(m) => BatchDynamics::eval(m, ids, t, y, dy),
+            ServeDynamics::Density(d) => BatchDynamics::eval(d, ids, t, y, dy),
+        }
+    }
+}
+
+struct HostedModel<F: BatchDynamics> {
+    name: String,
+    /// Request-visible input dimension (pre-augmentation).
+    data_dim: usize,
+    /// Density models carry a log-det column: requests are augmented with
+    /// `ℓ(0) = 0` at admission and scored by NLL at retirement.
+    density: bool,
+    engine: ServingEngine<F>,
+}
+
+/// A set of hosted models sharing one admission step clock; see the
+/// module docs.
+pub struct ServeHost<F: BatchDynamics> {
+    models: Vec<HostedModel<F>>,
+}
+
+/// The demo host: `toy`, `mnist`, and `density` engines with `capacity`
+/// rows each, deterministically initialized from `seed`.
+pub fn demo_host(seed: u64, capacity: usize) -> ServeHost<ServeDynamics> {
+    demo_host_with(seed, capacity, |d| d)
+}
+
+/// [`demo_host`] with each model's dynamics passed through `wrap` — how
+/// the pooled drive substitutes [`PooledEval`] without a second host type.
+pub fn demo_host_with<F: BatchDynamics>(
+    seed: u64,
+    capacity: usize,
+    wrap: impl Fn(ServeDynamics) -> F,
+) -> ServeHost<F> {
+    let tb = tableau::dopri5();
+    let models = vec![
+        HostedModel {
+            name: "toy".to_string(),
+            data_dim: 2,
+            density: false,
+            engine: ServingEngine::new(
+                wrap(ServeDynamics::Mlp(Mlp::new(2, &[16, 16], true, seed ^ 0x7071))),
+                &tb,
+                capacity,
+                0.0,
+                1.0,
+            ),
+        },
+        HostedModel {
+            name: "mnist".to_string(),
+            data_dim: synth_mnist::DIM,
+            density: false,
+            engine: ServingEngine::new(
+                wrap(ServeDynamics::Mlp(Mlp::new(
+                    synth_mnist::DIM,
+                    &[32],
+                    true,
+                    seed ^ 0x7072,
+                ))),
+                &tb,
+                capacity,
+                0.0,
+                1.0,
+            ),
+        },
+        HostedModel {
+            name: "density".to_string(),
+            data_dim: 2,
+            density: true,
+            engine: ServingEngine::new(
+                wrap(ServeDynamics::Density(LogDetBatchDynamics::new(
+                    Cnf::new(2, &[8], seed ^ 0x7073),
+                    Divergence::Exact,
+                ))),
+                &tb,
+                capacity,
+                0.0,
+                1.0,
+            ),
+        },
+    ];
+    ServeHost { models }
+}
+
+impl<F: BatchDynamics> ServeHost<F> {
+    pub fn set_policy(&mut self, policy: AdmissionPolicy) {
+        for m in &mut self.models {
+            m.engine.set_policy(policy);
+        }
+    }
+
+    /// `(name, data_dim)` per hosted model, for request generation.
+    pub fn model_specs(&self) -> Vec<(String, usize)> {
+        self.models.iter().map(|m| (m.name.clone(), m.data_dim)).collect()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.models.iter().map(|m| m.engine.in_flight()).sum()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.models.iter().map(|m| m.engine.queued()).sum()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.models.iter().all(|m| m.engine.is_idle())
+    }
+
+    /// Aggregate mean occupancy across engines, weighted by busy steps.
+    pub fn occupancy(&self) -> f64 {
+        let rows: u64 = self.models.iter().map(|m| m.engine.active_row_steps()).sum();
+        let cap: f64 = self
+            .models
+            .iter()
+            .map(|m| m.engine.busy_steps() as f64 * m.engine.capacity() as f64)
+            .sum();
+        if cap == 0.0 {
+            0.0
+        } else {
+            rows as f64 / cap
+        }
+    }
+
+    /// Route a request to its model's queue.  A malformed request gets an
+    /// immediate error response (`Some`); a routed one answers through a
+    /// later [`step`](ServeHost::step).
+    pub fn submit(&mut self, req: &ServeRequest) -> Option<ServeResponse> {
+        let m = match self.models.iter_mut().find(|m| m.name == req.model) {
+            Some(m) => m,
+            None => return Some(error_response(req, "unknown model")),
+        };
+        let class = match ToleranceClass::by_name(&req.class) {
+            Some(c) => c,
+            None => return Some(error_response(req, "unknown tolerance class")),
+        };
+        if req.x.len() != m.data_dim {
+            return Some(error_response(
+                req,
+                &format!("input length {} != model dimension {}", req.x.len(), m.data_dim),
+            ));
+        }
+        let mut y0 = req.x.clone();
+        if m.density {
+            y0.push(0.0); // ℓ(0) = 0 — the log-det column
+        }
+        match m.engine.submit(req.id, class, y0) {
+            Ok(()) => None,
+            Err(e) => Some(error_response(req, &format!("{e}"))),
+        }
+    }
+
+    /// One engine step across every hosted model, in declaration order.
+    pub fn step(&mut self) -> Vec<ServeResponse> {
+        let mut out = Vec::new();
+        for m in &mut self.models {
+            let outcomes = m.engine.step();
+            for o in outcomes {
+                out.push(response_of(&m.name, m.data_dim, m.density, o));
+            }
+        }
+        out
+    }
+}
+
+fn error_response(req: &ServeRequest, msg: &str) -> ServeResponse {
+    ServeResponse {
+        id: req.id,
+        model: req.model.clone(),
+        class: req.class.clone(),
+        ok: false,
+        error: msg.to_string(),
+        ..ServeResponse::default()
+    }
+}
+
+/// Score a retired trajectory: density models split `[z, ℓ]` and attach
+/// the latent NLL; non-finite states are sanitized into error responses
+/// (the wire rejects NaN/Inf by design).
+fn response_of(model: &str, data_dim: usize, density: bool, o: ServeOutcome) -> ServeResponse {
+    let (mut y, mut score) = if density {
+        let z = o.y[..data_dim].to_vec();
+        let nll = latent_nll(&z, o.y[data_dim]);
+        (z, vec![nll])
+    } else {
+        (o.y, Vec::new())
+    };
+    let finite =
+        y.iter().all(|v| v.is_finite()) && score.iter().all(|v| v.is_finite());
+    let error = if finite {
+        String::new()
+    } else {
+        y.clear();
+        score.clear();
+        "non-finite state at retirement".to_string()
+    };
+    ServeResponse {
+        id: o.id,
+        model: model.to_string(),
+        class: o.class.name.to_string(),
+        ok: finite,
+        error,
+        y,
+        score,
+        nfe: o.stats.nfe as u64,
+        accepted: o.stats.accepted as u64,
+        rejected: o.stats.rejected as u64,
+        admit_step: o.admit_step,
+        done_step: o.done_step,
+        deadline_miss: o.deadline_miss,
+    }
+}
+
+/// Seeded synthetic request stream: uniform model choice, a 50/40/10
+/// realtime/standard/precise class mix, rendered digits for `mnist` and
+/// standard-normal inputs elsewhere.  A pure function of `(seed, specs)`.
+pub struct RequestGen {
+    rng: Pcg,
+    specs: Vec<(String, usize)>,
+}
+
+impl RequestGen {
+    pub fn new(seed: u64, specs: Vec<(String, usize)>) -> RequestGen {
+        assert!(!specs.is_empty(), "RequestGen: no models to draw from");
+        RequestGen { rng: Pcg::with_stream(seed, 0x5E9F_D007), specs }
+    }
+
+    /// The `id`-th request of the stream.
+    pub fn next(&mut self, id: u64) -> ServeRequest {
+        let m = self.rng.below(self.specs.len());
+        let (name, dim) = (self.specs[m].0.clone(), self.specs[m].1);
+        let class = match self.rng.below(10) {
+            0..=4 => "realtime",
+            5..=8 => "standard",
+            _ => "precise",
+        };
+        let x = if name == "mnist" && dim == synth_mnist::DIM {
+            synth_mnist::render(id as usize % synth_mnist::N_CLASS, &mut self.rng)
+        } else {
+            (0..dim).map(|_| 0.5 * self.rng.normal()).collect()
+        };
+        ServeRequest { id, model: name, class: class.to_string(), x }
+    }
+}
+
+/// Everything one serving drive produced.  Fully deterministic given the
+/// seed (wall-clock latency lives in the bench, not here), so traces can
+/// be compared with `==` across runs and thread counts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeTrace {
+    /// Responses in completion order (error responses at submit time).
+    pub responses: Vec<ServeResponse>,
+    pub submitted: u64,
+    pub errors: u64,
+    /// Engine steps until the last request drained.
+    pub steps: u64,
+    /// Aggregate mean batch occupancy over busy steps.
+    pub mean_occupancy: f64,
+}
+
+/// Drive `host` under Poisson(`rate`) arrivals until `total` requests
+/// have been submitted and all have answered.
+pub fn drive_poisson<F: BatchDynamics>(
+    host: &mut ServeHost<F>,
+    seed: u64,
+    rate: f64,
+    total: u64,
+) -> ServeTrace {
+    let mut arrivals = PoissonArrivals::new(seed, rate);
+    let mut gen = RequestGen::new(seed, host.model_specs());
+    let mut trace = ServeTrace::default();
+    let guard = 20_000 + total.saturating_mul(8192);
+    while trace.submitted < total || !host.is_idle() {
+        assert!(trace.steps < guard, "serving loop failed to drain");
+        if trace.submitted < total {
+            let k = (arrivals.next_count() as u64).min(total - trace.submitted);
+            for _ in 0..k {
+                let req = gen.next(trace.submitted);
+                trace.submitted += 1;
+                if let Some(err) = host.submit(&req) {
+                    trace.errors += 1;
+                    trace.responses.push(err);
+                }
+            }
+        }
+        trace.responses.extend(host.step());
+        trace.steps += 1;
+    }
+    trace.mean_occupancy = host.occupancy();
+    trace
+}
+
+/// Serve `total` demo requests under Poisson arrivals, serially.
+pub fn run_poisson(seed: u64, capacity: usize, rate: f64, total: u64) -> ServeTrace {
+    let mut host = demo_host(seed, capacity);
+    drive_poisson(&mut host, seed, rate, total)
+}
+
+/// [`run_poisson`] with every model evaluation sharded across `pool` via
+/// [`PooledEval`] — bit-identical to the serial drive at any thread count
+/// (rows are independent and global ids pass through shards verbatim; the
+/// D5 proof is below).
+pub fn run_poisson_pooled(
+    pool: &Pool,
+    seed: u64,
+    capacity: usize,
+    rate: f64,
+    total: u64,
+) -> ServeTrace {
+    let mut host = demo_host_with(seed, capacity, |d| PooledEval::new(pool, d));
+    drive_poisson(&mut host, seed, rate, total)
+}
+
+/// The drain-to-stragglers baseline: identical load, but requests are
+/// only admitted into an empty active set.  The serving bench asserts the
+/// continuous drive's occupancy strictly beats this at equal load.
+pub fn run_poisson_drain(seed: u64, capacity: usize, rate: f64, total: u64) -> ServeTrace {
+    let mut host = demo_host(seed, capacity);
+    host.set_policy(AdmissionPolicy::Drain);
+    drive_poisson(&mut host, seed, rate, total)
+}
+
+/// FNV-1a over every deterministic response field (ids, step stamps,
+/// solver stats, state bits, names) — equal hashes across runs and thread
+/// counts witness replay equality without shipping whole traces around.
+pub fn trace_hash(responses: &[ServeResponse]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for r in responses {
+        mix(r.id);
+        mix(r.ok as u64);
+        mix(r.deadline_miss as u64);
+        mix(r.nfe);
+        mix(r.accepted);
+        mix(r.rejected);
+        mix(r.admit_step);
+        mix(r.done_step);
+        for v in r.y.iter().chain(&r.score) {
+            mix(v.to_bits() as u64);
+        }
+        for b in r.model.bytes().chain(r.class.bytes()).chain(r.error.bytes()) {
+            mix(b as u64);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::solve_adaptive_batch;
+
+    #[test]
+    fn run_poisson_pooled_bit_identical_to_serial_across_thread_counts() {
+        // The serving determinism acceptance (and the D5 proof for
+        // `run_poisson_pooled`): the full loop — arrivals, admission,
+        // solves, scoring, response order — replays bit-identically
+        // against `run_poisson` at TAYNODE_THREADS ∈ {1, 2, 4}.
+        let serial = run_poisson(41, 8, 3.0, 30);
+        assert_eq!(serial.submitted, 30);
+        assert_eq!(serial.errors, 0);
+        assert_eq!(serial.responses.len(), 30);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let pooled = run_poisson_pooled(&pool, 41, 8, 3.0, 30);
+            assert_eq!(serial, pooled, "threads={threads}");
+            assert_eq!(
+                trace_hash(&serial.responses),
+                trace_hash(&pooled.responses),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_trace() {
+        let a = run_poisson(90, 4, 2.0, 16);
+        let b = run_poisson(90, 4, 2.0, 16);
+        assert_eq!(a, b);
+        assert_eq!(trace_hash(&a.responses), trace_hash(&b.responses));
+        let c = run_poisson(91, 4, 2.0, 16);
+        assert_ne!(trace_hash(&a.responses), trace_hash(&c.responses));
+    }
+
+    #[test]
+    fn continuous_admission_beats_drain_occupancy_at_equal_load() {
+        let cont = run_poisson(5, 8, 6.0, 64);
+        let drain = run_poisson_drain(5, 8, 6.0, 64);
+        // Identical load (same seed → same requests), so the occupancy
+        // gap is purely the admission policy.
+        assert_eq!(cont.submitted, drain.submitted);
+        assert!(
+            cont.mean_occupancy > drain.mean_occupancy,
+            "continuous {} vs drain {}",
+            cont.mean_occupancy,
+            drain.mean_occupancy
+        );
+    }
+
+    #[test]
+    fn malformed_requests_answer_immediately_with_errors() {
+        let mut host = demo_host(1, 4);
+        let bad_model = ServeRequest {
+            id: 1,
+            model: "nope".into(),
+            class: "standard".into(),
+            x: vec![0.0, 0.0],
+        };
+        let r = host.submit(&bad_model).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.contains("unknown model"), "{}", r.error);
+
+        let bad_class = ServeRequest {
+            class: "warp9".into(),
+            model: "toy".into(),
+            ..bad_model.clone()
+        };
+        assert!(host.submit(&bad_class).unwrap().error.contains("class"));
+
+        let bad_dim = ServeRequest { model: "toy".into(), x: vec![1.0; 3], ..bad_model.clone() };
+        assert!(host.submit(&bad_dim).unwrap().error.contains("length"));
+
+        let bad_val = ServeRequest {
+            model: "toy".into(),
+            x: vec![f32::INFINITY, 0.0],
+            ..bad_model
+        };
+        assert!(host.submit(&bad_val).unwrap().error.contains("non-finite"));
+        assert!(host.is_idle(), "no malformed request may enter a queue");
+    }
+
+    #[test]
+    fn density_responses_score_the_solo_latent_nll_bitwise() {
+        // One density request through the host == the solo augmented
+        // solve + `latent_nll`, bit for bit.
+        let seed = 33u64;
+        let mut host = demo_host(seed, 4);
+        let x = vec![0.45f32, -0.8];
+        let req = ServeRequest {
+            id: 0,
+            model: "density".into(),
+            class: "standard".into(),
+            x: x.clone(),
+        };
+        assert!(host.submit(&req).is_none());
+        let mut responses = Vec::new();
+        while !host.is_idle() {
+            responses.extend(host.step());
+        }
+        assert_eq!(responses.len(), 1);
+        let r = &responses[0];
+        assert!(r.ok);
+
+        let f = LogDetBatchDynamics::new(Cnf::new(2, &[8], seed ^ 0x7073), Divergence::Exact);
+        let y0 = f.augment(&x);
+        let opts = crate::serving::engine::STANDARD.opts();
+        let solo = solve_adaptive_batch(f, 0.0, 1.0, &y0, &tableau::dopri5(), &opts);
+        assert_eq!(r.y.len(), 2);
+        for i in 0..2 {
+            assert_eq!(r.y[i].to_bits(), solo.y[i].to_bits());
+        }
+        assert_eq!(r.score.len(), 1);
+        assert_eq!(
+            r.score[0].to_bits(),
+            latent_nll(&solo.y[..2], solo.y[2]).to_bits()
+        );
+        assert_eq!(r.nfe, solo.stats[0].nfe as u64);
+    }
+}

@@ -1,0 +1,44 @@
+//! The continuous-batching serving layer — the paper's cheap-inference
+//! claim turned into a serving loop.
+//!
+//! Requests ([`wire::ServeRequest`]) carry a stable id, a model name, and
+//! a [`ToleranceClass`](engine::ToleranceClass) (per-request tolerances +
+//! a step-budget deadline).  A [`ServingEngine`](engine::ServingEngine)
+//! admits them into the batched adaptive driver's active set *between*
+//! solver attempts while finished trajectories retire
+//! ([`BatchStepper`](crate::solvers::batch::BatchStepper)), so the batch
+//! stays full under load instead of draining to stragglers — the
+//! occupancy win `benches/perf_serving.rs` measures against the drain
+//! baseline.
+//!
+//! Layering:
+//! * [`wire`] — `ServeRequest`/`ServeResponse`, nanoserde-shaped
+//!   derive-style JSON structs over `util::json` (strict: canonical
+//!   output, total parsing, no NaN/Inf).
+//! * [`arrivals`] — the seeded Poisson arrival process (load generation
+//!   through the sanctioned RNG door, taylint D3).
+//! * [`engine`] — tolerance classes, admission policies, and the
+//!   per-model continuous-batching loop.
+//! * [`handlers`] — model-backed hosts (toy / synth-MNIST / CNF-NLL),
+//!   request generation, and the seeded drivers
+//!   ([`run_poisson`](handlers::run_poisson) and friends).
+//!
+//! Everything here is deterministic by construction: a drive's trace is a
+//! pure function of its seed, bit-identical across thread counts (rule
+//! D5) and replays.
+
+pub mod arrivals;
+pub mod engine;
+pub mod handlers;
+pub mod wire;
+
+pub use arrivals::PoissonArrivals;
+pub use engine::{
+    AdmissionPolicy, ServeOutcome, ServingEngine, ToleranceClass, CLASSES, PRECISE, REALTIME,
+    STANDARD,
+};
+pub use handlers::{
+    demo_host, demo_host_with, drive_poisson, run_poisson, run_poisson_drain,
+    run_poisson_pooled, trace_hash, RequestGen, ServeDynamics, ServeHost, ServeTrace,
+};
+pub use wire::{DeWire, SerWire, ServeRequest, ServeResponse};

@@ -1,0 +1,345 @@
+//! The serving wire format: derive-style request/response structs over
+//! [`util::json`](crate::util::json).
+//!
+//! Shaped like `nanoserde`'s `SerJson`/`DeJson` pair (the manifest idiom —
+//! a struct declares its fields once and the [`wire_struct!`] macro derives
+//! both directions), since serde/nanoserde are unavailable offline.  The
+//! format is strict where it matters for serving:
+//!
+//! * **Canonical output** — object keys are sorted (the underlying
+//!   [`Json`] writer), so serialize → parse → re-serialize is the identity
+//!   on strings and replayed traces diff cleanly.
+//! * **Total parsing** — truncated or malformed payloads return errors,
+//!   never panic (taylint D4: this layer feeds on untrusted bytes).
+//! * **No non-finite numbers** — JSON cannot represent NaN/Inf; they are
+//!   rejected on decode, and response construction sanitizes states before
+//!   they reach the wire ([`super::handlers`]).
+//! * **Forward compatibility** — unknown keys are ignored; missing fields
+//!   are errors naming the struct and field.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Largest integer exactly representable in the wire's f64 numbers;
+/// request ids must stay below it (sequential ids always do).
+pub const MAX_SAFE_INT: u64 = 1 << 53;
+
+/// Serialize to the canonical wire JSON (nanoserde's `SerJson` shape).
+pub trait SerWire {
+    /// The wire `Json` value.
+    fn ser_wire(&self) -> Json;
+
+    /// The canonical wire string (sorted keys).
+    fn serialize_wire(&self) -> String {
+        self.ser_wire().to_string()
+    }
+}
+
+/// Parse from wire JSON (nanoserde's `DeJson` shape).  Decoding is total:
+/// any malformed input is an `Err`, never a panic.
+pub trait DeWire: Sized {
+    fn de_wire(j: &Json) -> Result<Self>;
+
+    fn deserialize_wire(s: &str) -> Result<Self> {
+        Self::de_wire(&Json::parse(s)?)
+    }
+}
+
+impl SerWire for u64 {
+    fn ser_wire(&self) -> Json {
+        Json::Num(*self as f64)
+    }
+}
+
+impl DeWire for u64 {
+    fn de_wire(j: &Json) -> Result<u64> {
+        let x = j.as_f64().ok_or_else(|| anyhow!("expected an integer"))?;
+        if !(x.is_finite() && x >= 0.0 && x == x.trunc()) {
+            bail!("expected a non-negative integer, got {x}");
+        }
+        if x >= MAX_SAFE_INT as f64 {
+            bail!("integer {x} exceeds the wire's exact range (2^53)");
+        }
+        Ok(x as u64)
+    }
+}
+
+impl SerWire for bool {
+    fn ser_wire(&self) -> Json {
+        Json::Bool(*self)
+    }
+}
+
+impl DeWire for bool {
+    fn de_wire(j: &Json) -> Result<bool> {
+        match j {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected a bool"),
+        }
+    }
+}
+
+impl SerWire for f32 {
+    fn ser_wire(&self) -> Json {
+        Json::Num(f64::from(*self))
+    }
+}
+
+impl DeWire for f32 {
+    fn de_wire(j: &Json) -> Result<f32> {
+        let x = j.as_f64().ok_or_else(|| anyhow!("expected a number"))?;
+        let v = x as f32;
+        if !v.is_finite() {
+            bail!("number {x} is not finite in f32");
+        }
+        Ok(v)
+    }
+}
+
+impl SerWire for String {
+    fn ser_wire(&self) -> Json {
+        Json::Str(self.clone())
+    }
+}
+
+impl DeWire for String {
+    fn de_wire(j: &Json) -> Result<String> {
+        match j {
+            Json::Str(s) => Ok(s.clone()),
+            _ => bail!("expected a string"),
+        }
+    }
+}
+
+impl<T: SerWire> SerWire for Vec<T> {
+    fn ser_wire(&self) -> Json {
+        Json::Arr(self.iter().map(SerWire::ser_wire).collect())
+    }
+}
+
+impl<T: DeWire> DeWire for Vec<T> {
+    fn de_wire(j: &Json) -> Result<Vec<T>> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("expected an array"))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            out.push(T::de_wire(v).map_err(|e| anyhow!("[{i}]: {e}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Declares a wire struct and derives its [`SerWire`]/[`DeWire`] impls
+/// from the field list — the `#[derive(SerJson, DeJson)]` idiom without
+/// the proc macro.  Unknown keys are ignored on decode; missing fields
+/// error with the struct and field name.
+macro_rules! wire_struct {
+    (
+        $(#[$meta:meta])*
+        pub struct $name:ident {
+            $( $(#[$fmeta:meta])* pub $field:ident : $ty:ty, )+
+        }
+    ) => {
+        $(#[$meta])*
+        #[derive(Clone, Debug, Default, PartialEq)]
+        pub struct $name {
+            $( $(#[$fmeta])* pub $field: $ty, )+
+        }
+
+        impl SerWire for $name {
+            fn ser_wire(&self) -> Json {
+                let mut m = std::collections::BTreeMap::new();
+                $( m.insert(
+                    stringify!($field).to_string(),
+                    <$ty as SerWire>::ser_wire(&self.$field),
+                ); )+
+                Json::Obj(m)
+            }
+        }
+
+        impl DeWire for $name {
+            fn de_wire(j: &Json) -> Result<$name> {
+                let obj = j.as_obj().ok_or_else(|| {
+                    anyhow!(concat!(stringify!($name), ": expected an object"))
+                })?;
+                Ok($name {
+                    $( $field: match obj.get(stringify!($field)) {
+                        Some(v) => <$ty as DeWire>::de_wire(v).map_err(|e| {
+                            anyhow!(
+                                "{}.{}: {e}",
+                                stringify!($name),
+                                stringify!($field)
+                            )
+                        })?,
+                        None => bail!(
+                            "{} missing field {:?}",
+                            stringify!($name),
+                            stringify!($field)
+                        ),
+                    }, )+
+                })
+            }
+        }
+    };
+}
+
+wire_struct! {
+    /// One inference request: integrate `x` through the named model's
+    /// dynamics under the named tolerance class.
+    pub struct ServeRequest {
+        /// Caller-chosen stable id, echoed on the response (< 2^53).
+        pub id: u64,
+        /// Hosted model name (`toy`, `mnist`, `density`, ...).
+        pub model: String,
+        /// Tolerance-class name (see [`super::engine::CLASSES`]).
+        pub class: String,
+        /// Initial state, the model's data dimension.
+        pub x: Vec<f32>,
+    }
+}
+
+wire_struct! {
+    /// The answer to one [`ServeRequest`].
+    pub struct ServeResponse {
+        /// The request's id.
+        pub id: u64,
+        /// The model that served it.
+        pub model: String,
+        /// The tolerance class it ran under.
+        pub class: String,
+        /// False when the request was malformed or the solve produced a
+        /// non-finite state; `error` then says why and `y` is empty.
+        pub ok: bool,
+        /// Human-readable failure reason (empty when `ok`).
+        pub error: String,
+        /// Final state at `t1` (for density models: the latent `z`).
+        pub y: Vec<f32>,
+        /// Model-specific score (density models: `[NLL]`), else empty.
+        pub score: Vec<f32>,
+        /// Solver function evaluations spent on this request.
+        pub nfe: u64,
+        /// Accepted solver steps.
+        pub accepted: u64,
+        /// Rejected solver steps.
+        pub rejected: u64,
+        /// Engine step at which the request joined the active set.
+        pub admit_step: u64,
+        /// Engine step at which it retired.
+        pub done_step: u64,
+        /// True when the step-budget deadline expired before reaching `t1`
+        /// (`y` is then the furthest state reached).
+        pub deadline_miss: bool,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::Prop;
+    use crate::util::rng::Pcg;
+
+    fn wire_string(rng: &mut Pcg) -> String {
+        // Adversarial-ish content: quotes, backslashes, control chars,
+        // multi-byte utf8.
+        const PIECES: &[&str] = &["a", "\"", "\\", "\n", "\t", "é", "λ", "\u{1}", "z9"];
+        let k = rng.below(8);
+        (0..k).map(|_| PIECES[rng.below(PIECES.len())]).collect()
+    }
+
+    fn wire_floats(rng: &mut Pcg, max_len: usize) -> Vec<f32> {
+        let k = rng.below(max_len + 1);
+        (0..k).map(|_| rng.range(-1e6, 1e6)).collect()
+    }
+
+    #[test]
+    fn request_and_response_round_trip_to_identical_json() {
+        Prop::new(50).run("wire-roundtrip", |rng: &mut Pcg, _case| {
+            let req = ServeRequest {
+                id: rng.next_u64() >> 11, // 53-bit: exactly representable
+                model: wire_string(rng),
+                class: wire_string(rng),
+                x: wire_floats(rng, 6),
+            };
+            let s = req.serialize_wire();
+            let back = ServeRequest::deserialize_wire(&s).unwrap();
+            assert_eq!(req, back);
+            assert_eq!(s, back.serialize_wire(), "canonical form must be a fixpoint");
+
+            let resp = ServeResponse {
+                id: rng.next_u64() >> 11,
+                model: wire_string(rng),
+                class: wire_string(rng),
+                ok: rng.below(2) == 0,
+                error: wire_string(rng),
+                y: wire_floats(rng, 6),
+                score: wire_floats(rng, 2),
+                nfe: rng.below(100_000) as u64,
+                accepted: rng.below(1000) as u64,
+                rejected: rng.below(1000) as u64,
+                admit_step: rng.below(1 << 20) as u64,
+                done_step: rng.below(1 << 20) as u64,
+                deadline_miss: rng.below(2) == 0,
+            };
+            let s = resp.serialize_wire();
+            let back = ServeResponse::deserialize_wire(&s).unwrap();
+            assert_eq!(resp, back);
+            assert_eq!(s, back.serialize_wire());
+        });
+    }
+
+    #[test]
+    fn truncated_payloads_error_not_panic() {
+        let req = ServeRequest {
+            id: 42,
+            model: "toy \"quoted\" \\ é".into(),
+            class: "standard".into(),
+            x: vec![0.5, -1.25, 3.0e-7],
+        };
+        let s = req.serialize_wire();
+        // Every proper byte prefix must be a clean error (cut points inside
+        // escapes, numbers, and multi-byte utf8 included).
+        for cut in 0..s.len() {
+            if !s.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(
+                ServeRequest::deserialize_wire(&s[..cut]).is_err(),
+                "prefix of {cut} bytes should fail to parse"
+            );
+        }
+        assert!(ServeRequest::deserialize_wire(&s).is_ok());
+    }
+
+    #[test]
+    fn non_finite_and_out_of_range_numbers_are_rejected() {
+        // Overflowing literal: rejected by the JSON layer.
+        let huge = r#"{"class":"c","id":1,"model":"m","x":[1e999]}"#;
+        assert!(ServeRequest::deserialize_wire(huge).is_err());
+        // Finite in f64, infinite in f32: rejected by the field decoder.
+        let wide = r#"{"class":"c","id":1,"model":"m","x":[1e300]}"#;
+        assert!(ServeRequest::deserialize_wire(wide).is_err());
+        // null is not a number (a writer-side NaN would serialize as null).
+        let nan = r#"{"class":"c","id":1,"model":"m","x":[null]}"#;
+        assert!(ServeRequest::deserialize_wire(nan).is_err());
+        // Fractional / oversized / negative ids.
+        for id in ["1.5", "9007199254740992", "-1"] {
+            let s = format!(r#"{{"class":"c","id":{id},"model":"m","x":[]}}"#);
+            assert!(ServeRequest::deserialize_wire(&s).is_err(), "id {id}");
+        }
+    }
+
+    #[test]
+    fn missing_fields_error_and_unknown_keys_are_ignored() {
+        let missing = r#"{"class":"c","id":1,"x":[]}"#;
+        let err = ServeRequest::deserialize_wire(missing).unwrap_err();
+        assert!(format!("{err}").contains("model"), "{err}");
+
+        let extra = r#"{"class":"c","id":1,"model":"m","x":[1],"future_knob":{"a":[1,2]}}"#;
+        let req = ServeRequest::deserialize_wire(extra).unwrap();
+        assert_eq!(req.model, "m");
+        assert_eq!(req.x, vec![1.0]);
+
+        assert!(ServeRequest::deserialize_wire("[]").is_err());
+        assert!(ServeRequest::deserialize_wire("7").is_err());
+    }
+}

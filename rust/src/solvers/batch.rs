@@ -90,6 +90,19 @@ pub trait BatchDynamics {
     fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]);
 }
 
+/// A `&mut` reference is itself a [`BatchDynamics`]: drivers that take
+/// ownership (the [`BatchStepper`], the serving engine) can be driven off a
+/// borrow without cloning the model.
+impl<F: BatchDynamics + ?Sized> BatchDynamics for &mut F {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        (**self).eval(ids, t, y, dy)
+    }
+}
+
 /// Adapter: drive a scalar [`Dynamics`] once per row.  This is how
 /// per-example XLA executables (batch-1 artifacts) and test closures plug
 /// into the batched engine; a native vectorized model should implement
@@ -469,6 +482,22 @@ impl BatchResult {
     }
 }
 
+/// A trajectory handed back by the stepping driver when it leaves the
+/// active set: it reached its `t1`, exhausted its step budget, or was dead
+/// on arrival (`t0 == t1`).  `id` is the stable trajectory id the row was
+/// admitted under — never a slot position.
+#[derive(Clone, Debug)]
+pub struct Retired {
+    /// Stable trajectory id (as passed to [`BatchStepper::admit`]).
+    pub id: usize,
+    /// Final state, `dim()` entries.
+    pub y: Vec<f32>,
+    /// Final integration time.
+    pub t: f32,
+    /// Per-trajectory solver statistics.
+    pub stats: SolveStats,
+}
+
 /// The embedded driver's per-trajectory state, bundled so compaction is
 /// exhaustive **by construction**: every parallel per-row array lives here,
 /// and [`WorkingSet::retire`] is the single place rows move.  A new per-row
@@ -476,58 +505,107 @@ impl BatchResult {
 /// this struct and compacted in `retire`, or it does not exist — it cannot
 /// be threaded past the compaction point as a forgotten loose argument.
 ///
-/// Slot `s < act` holds a live trajectory; `idx[s]` is its original index.
-/// Finished rows are copied to the `out_*` arrays (indexed by original
-/// trajectory) and the last active row swaps into the vacated slot.
+/// Slot `s < act` holds a live trajectory; `idx[s]` is its stable id.  Rows
+/// are *admitted* (appended to the active prefix) and *retired* (extracted
+/// and back-filled with the last active row), so the set can both drain and
+/// grow between attempts — this is what the serving engine's continuous
+/// batching rides on.  Each row carries its own solve target (`t1`,
+/// direction, step cap) and [`AdaptiveOpts`], so trajectories with
+/// different tolerance classes share one stage loop.
 struct WorkingSet {
     n: usize,
     /// Active prefix length: slots `0..act` are live.
     act: usize,
     idx: Vec<usize>,
     t: Vec<f32>,
+    /// Per-row integration target.
+    t1: Vec<f32>,
+    /// Per-row integration direction: `(t1 - t0).signum()`.
+    sg: Vec<f32>,
+    /// Per-row step-size cap: `opts.h_max` or the row's own span.
+    hcap: Vec<f32>,
     h: Vec<f32>,
     prev_err: Vec<f32>,
     stats: Vec<SolveStats>,
-    /// Row-major `[B, n]` working states.
+    /// Per-row solve options (tolerance class, controller constants).
+    opts: Vec<AdaptiveOpts>,
+    /// Row-major `[act, n]` working states.
     y: Vec<f32>,
-    /// One `[B, n]` matrix per RK stage.
+    /// One `[act, n]` matrix per RK stage.
     ks: Vec<Vec<f32>>,
-    out_y: Vec<f32>,
-    out_t: Vec<f32>,
-    out_stats: Vec<SolveStats>,
 }
 
 impl WorkingSet {
-    fn new(y0: &[f32], n: usize, stages: usize, t0: f32) -> WorkingSet {
-        let b = y0.len() / n;
+    fn new(n: usize, stages: usize) -> WorkingSet {
         WorkingSet {
             n,
-            act: b,
-            idx: (0..b).collect(),
-            t: vec![t0; b],
-            h: vec![0.0f32; b],
-            prev_err: vec![1.0f32; b], // neutral PI history
-            stats: vec![SolveStats::default(); b],
-            y: y0.to_vec(),
-            ks: (0..stages).map(|_| vec![0.0f32; b * n]).collect(),
-            out_y: y0.to_vec(),
-            out_t: vec![t0; b],
-            out_stats: vec![SolveStats::default(); b],
+            act: 0,
+            idx: Vec::new(),
+            t: Vec::new(),
+            t1: Vec::new(),
+            sg: Vec::new(),
+            hcap: Vec::new(),
+            h: Vec::new(),
+            prev_err: Vec::new(),
+            stats: Vec::new(),
+            opts: Vec::new(),
+            y: Vec::new(),
+            ks: (0..stages).map(|_| Vec::new()).collect(),
         }
     }
 
-    /// Write finished trajectories to the output arrays and compact the
+    /// Append `ids.len()` new live rows after the current active prefix.
+    /// Step sizes and stage-0 derivatives are left for the stepper to fill
+    /// (they cost model evaluations).
+    fn push_rows(&mut self, ids: &[usize], y0: &[f32], t0: f32, t1: f32, opts: &AdaptiveOpts) {
+        let n = self.n;
+        let k = ids.len();
+        let hcap = opts.h_max.unwrap_or((t1 - t0).abs());
+        let sg = (t1 - t0).signum();
+        // Vectors may still hold stale tails from earlier retirements; the
+        // live prefix is `act`, so truncate before appending.
+        self.idx.truncate(self.act);
+        self.t.truncate(self.act);
+        self.t1.truncate(self.act);
+        self.sg.truncate(self.act);
+        self.hcap.truncate(self.act);
+        self.h.truncate(self.act);
+        self.prev_err.truncate(self.act);
+        self.stats.truncate(self.act);
+        self.opts.truncate(self.act);
+        self.y.truncate(self.act * n);
+        self.idx.extend_from_slice(ids);
+        self.t.resize(self.act + k, t0);
+        self.t1.resize(self.act + k, t1);
+        self.sg.resize(self.act + k, sg);
+        self.hcap.resize(self.act + k, hcap);
+        self.h.resize(self.act + k, 0.0);
+        self.prev_err.resize(self.act + k, 1.0); // neutral PI history
+        self.stats.resize(self.act + k, SolveStats::default());
+        self.opts.resize(self.act + k, opts.clone());
+        self.y.extend_from_slice(y0);
+        for ks in &mut self.ks {
+            ks.truncate(self.act * n);
+            ks.resize((self.act + k) * n, 0.0);
+        }
+        self.act += k;
+    }
+
+    /// Extract finished trajectories (in `finished` order) and compact the
     /// active prefix by moving the last active row into each vacated slot.
     /// `finished` must be ascending slot indices from the current attempt.
-    fn retire(&mut self, finished: &[usize]) {
+    fn retire(&mut self, finished: &[usize]) -> Vec<Retired> {
         let n = self.n;
+        let mut out = Vec::with_capacity(finished.len());
         for &s in finished {
-            let orig = self.idx[s];
-            self.out_y[orig * n..(orig + 1) * n].copy_from_slice(&self.y[s * n..(s + 1) * n]);
-            self.out_t[orig] = self.t[s];
             let mut st = self.stats[s].clone();
             st.h_final = self.h[s];
-            self.out_stats[orig] = st;
+            out.push(Retired {
+                id: self.idx[s],
+                y: self.y[s * n..(s + 1) * n].to_vec(),
+                t: self.t[s],
+                stats: st,
+            });
         }
         // Descending order: every slot above the one being filled is already
         // retired, so the last active row is always a live trajectory.
@@ -548,16 +626,17 @@ impl WorkingSet {
                     kh[s * n..(s + 1) * n].copy_from_slice(&kt[..n]);
                 }
                 self.t[s] = self.t[last];
+                self.t1[s] = self.t1[last];
+                self.sg[s] = self.sg[last];
+                self.hcap[s] = self.hcap[last];
                 self.h[s] = self.h[last];
                 self.prev_err[s] = self.prev_err[last];
                 self.stats[s] = self.stats[last].clone();
+                self.opts[s] = self.opts[last].clone();
                 self.idx[s] = self.idx[last];
             }
         }
-    }
-
-    fn into_result(self) -> BatchResult {
-        BatchResult { n: self.n, y: self.out_y, t: self.out_t, stats: self.out_stats }
+        out
     }
 }
 
@@ -617,102 +696,232 @@ fn batch_segment<F: BatchDynamics>(
     }
 }
 
-/// The batched embedded-pair driver: per-trajectory adaptive step control
-/// with active-set compaction over a [`WorkingSet`].
-fn solve_embedded_batch<F: BatchDynamics>(
-    f: &mut F,
-    t0: f32,
-    t1: f32,
-    y0: &[f32],
-    tb: &Tableau,
-    opts: &AdaptiveOpts,
-    h_init_rows: Option<&[f32]>,
-) -> BatchResult {
-    let n = f.dim();
-    let b = y0.len() / n;
-    let tbf = TableauCoeffs::new(tb);
-    // Hard precondition, matching the scalar driver: a silently-empty `e`
-    // would zero every error estimate and accept every step.
-    assert!(tbf.has_embedded(), "solve_embedded_batch needs an embedded pair");
-    let span = t1 - t0;
-    let sg = span.signum();
-    let h_max = opts.h_max.unwrap_or(span.abs());
-    let inv_order = tbf.inv_order();
-
-    let mut ws = WorkingSet::new(y0, n, tbf.stages, t0);
-    if b == 0 {
-        return ws.into_result();
-    }
-
+/// The batched embedded-pair stepping driver, opened up for *incremental
+/// admission*: trajectories can join the active [`WorkingSet`] between
+/// attempts ([`BatchStepper::admit`]) while finished ones retire
+/// ([`BatchStepper::step`] returns them), so a serving loop can keep the
+/// batch full under load instead of draining to stragglers.
+///
+/// [`solve_adaptive_batch`] is exactly `admit`-everything-then-`step`-until-
+/// drained over this type, so there is **one** attempt loop in the crate
+/// and the bit-identity properties (batched == scalar, pooled == serial,
+/// incremental admission == solo solve) hold by construction: every row's
+/// arithmetic uses only its own state, target, and [`AdaptiveOpts`] — batch
+/// composition only changes how rows are grouped into model evaluations.
+///
+/// Rows admitted in one `admit` call share their stage-0 evaluation and (if
+/// no initial step is given) one batched Hairer probe evaluation, matching
+/// the scalar driver's NFE accounting per trajectory.
+pub struct BatchStepper<F: BatchDynamics> {
+    f: F,
+    tbf: TableauCoeffs,
+    inv_order: f32,
+    ws: WorkingSet,
     // Per-attempt scratch (no per-trajectory identity, so never compacted).
-    let mut ystage = vec![0.0f32; b * n];
-    let mut ynew = vec![0.0f32; b * n];
-    let mut errv = vec![0.0f32; n];
-    let mut tstage = vec![0.0f32; b];
-    let mut finished: Vec<usize> = Vec::with_capacity(b);
-    let mut refresh: Vec<usize> = Vec::with_capacity(b);
-    let mut ids_scratch: Vec<usize> = vec![0; b];
+    ystage: Vec<f32>,
+    ynew: Vec<f32>,
+    errv: Vec<f32>,
+    tstage: Vec<f32>,
+    finished: Vec<usize>,
+    refresh: Vec<usize>,
+    ids_scratch: Vec<usize>,
+}
 
-    // Stage-0 derivative for every trajectory: one batched evaluation
-    // (reused by FSAL across accepted steps, exactly like the scalar path).
-    f.eval(&ws.idx[..b], &ws.t[..b], &ws.y[..b * n], &mut ws.ks[0][..b * n]);
-    for s in ws.stats.iter_mut().take(b) {
-        s.nfe += 1;
+impl<F: BatchDynamics> BatchStepper<F> {
+    /// A stepper with an empty working set.  Panics if the tableau has no
+    /// embedded pair (a silently-empty `e` would zero every error estimate
+    /// and accept every step) or the dynamics' dimension is zero.
+    pub fn new(f: F, tb: &Tableau) -> BatchStepper<F> {
+        let n = f.dim();
+        assert!(n > 0, "BatchDynamics::dim() must be positive");
+        let tbf = TableauCoeffs::new(tb);
+        assert!(tbf.has_embedded(), "BatchStepper needs an embedded pair");
+        let inv_order = tbf.inv_order();
+        let stages = tbf.stages;
+        BatchStepper {
+            f,
+            tbf,
+            inv_order,
+            ws: WorkingSet::new(n, stages),
+            ystage: Vec::new(),
+            ynew: Vec::new(),
+            errv: vec![0.0f32; n],
+            tstage: Vec::new(),
+            finished: Vec::new(),
+            refresh: Vec::new(),
+            ids_scratch: Vec::new(),
+        }
     }
 
-    // Initial step per trajectory: warm-start rows > explicit opts.h_init >
-    // the batched Hairer heuristic (h0 per row, ONE probe evaluation for the
-    // whole batch, h1 per row — one extra NFE per trajectory, same as
-    // scalar).
-    if let Some(rows) = h_init_rows {
-        assert_eq!(rows.len(), b, "h_init_rows length");
-        for s in 0..b {
-            ws.h[s] = rows[s].abs().min(h_max).max(1e-10);
+    /// Per-trajectory state dimension.
+    pub fn dim(&self) -> usize {
+        self.ws.n
+    }
+
+    /// Number of live trajectories in the working set.
+    pub fn active(&self) -> usize {
+        self.ws.act
+    }
+
+    /// Stable ids of the live trajectories (slot order; unstable across
+    /// attempts because of compaction).
+    pub fn active_ids(&self) -> &[usize] {
+        &self.ws.idx[..self.ws.act]
+    }
+
+    /// Borrow the wrapped dynamics.
+    pub fn dynamics(&self) -> &F {
+        &self.f
+    }
+
+    /// Mutably borrow the wrapped dynamics.
+    pub fn dynamics_mut(&mut self) -> &mut F {
+        &mut self.f
+    }
+
+    /// Recover the wrapped dynamics.
+    pub fn into_dynamics(self) -> F {
+        self.f
+    }
+
+    fn grow_scratch(&mut self) {
+        let rows = self.ws.act;
+        let n = self.ws.n;
+        if self.tstage.len() < rows {
+            self.tstage.resize(rows, 0.0);
+            self.ids_scratch.resize(rows, 0);
+            self.ystage.resize(rows * n, 0.0);
+            self.ynew.resize(rows * n, 0.0);
         }
-    } else if let Some(h0) = opts.h_init {
-        for hs in ws.h.iter_mut().take(b) {
-            *hs = h0.abs().min(h_max).max(1e-10);
+    }
+
+    /// Admit `ids.len()` new trajectories (row-major states `y0`, shared
+    /// segment `t0 → t1`, shared options) into the active set.  Spends one
+    /// stage-0 evaluation for the admitted group, plus — when neither
+    /// `h_init_rows` nor `opts.h_init` supplies an initial step — one
+    /// batched Hairer probe evaluation (one extra NFE per trajectory,
+    /// exactly like the scalar driver).  Trajectories that are already done
+    /// on arrival (`t0 == t1`, or `max_steps == 0`) retire immediately and
+    /// are returned.
+    pub fn admit(
+        &mut self,
+        ids: &[usize],
+        y0: &[f32],
+        t0: f32,
+        t1: f32,
+        opts: &AdaptiveOpts,
+        h_init_rows: Option<&[f32]>,
+    ) -> Vec<Retired> {
+        let n = self.ws.n;
+        let k = ids.len();
+        assert_eq!(y0.len(), k * n, "admit: state length != ids.len() * dim");
+        if k == 0 {
+            return Vec::new();
         }
-    } else {
-        for s in 0..b {
-            let yr = &ws.y[s * n..(s + 1) * n];
-            let f0 = &ws.ks[0][s * n..(s + 1) * n];
-            let h0 = stage::h0_estimate(yr, f0, opts.atol, opts.rtol);
-            // Euler probe state, staged for one batched evaluation.
-            let pr = &mut ystage[s * n..(s + 1) * n];
-            for i in 0..n {
-                pr[i] = yr[i] + h0 * f0[i];
+        let base = self.ws.act;
+        self.ws.push_rows(ids, y0, t0, t1, opts);
+        self.grow_scratch();
+        let ws = &mut self.ws;
+        let f = &mut self.f;
+
+        // Stage-0 derivative for the admitted group: one batched evaluation
+        // (reused by FSAL across accepted steps, exactly like the scalar
+        // path).
+        f.eval(
+            &ws.idx[base..base + k],
+            &ws.t[base..base + k],
+            &ws.y[base * n..(base + k) * n],
+            &mut ws.ks[0][base * n..(base + k) * n],
+        );
+        for s in ws.stats[base..base + k].iter_mut() {
+            s.nfe += 1;
+        }
+
+        // Initial step per trajectory: warm-start rows > explicit
+        // opts.h_init > the batched Hairer heuristic (h0 per row, ONE probe
+        // evaluation for the admitted group, h1 per row).
+        if let Some(rows) = h_init_rows {
+            assert_eq!(rows.len(), k, "h_init_rows length");
+            for q in 0..k {
+                let s = base + q;
+                ws.h[s] = rows[q].abs().min(ws.hcap[s]).max(1e-10);
             }
-            tstage[s] = ws.t[s] + h0;
-            ws.h[s] = h0; // stash h0 until the probe comes back
+        } else if let Some(h0) = opts.h_init {
+            for s in base..base + k {
+                ws.h[s] = h0.abs().min(ws.hcap[s]).max(1e-10);
+            }
+        } else {
+            let ystage = &mut self.ystage;
+            let ynew = &mut self.ynew;
+            let tstage = &mut self.tstage;
+            for q in 0..k {
+                let s = base + q;
+                let yr = &ws.y[s * n..(s + 1) * n];
+                let f0 = &ws.ks[0][s * n..(s + 1) * n];
+                let h0 = stage::h0_estimate(yr, f0, opts.atol, opts.rtol);
+                // Euler probe state, staged for one batched evaluation.
+                let pr = &mut ystage[q * n..(q + 1) * n];
+                for i in 0..n {
+                    pr[i] = yr[i] + h0 * f0[i];
+                }
+                tstage[q] = ws.t[s] + h0;
+                ws.h[s] = h0; // stash h0 until the probe comes back
+            }
+            f.eval(
+                &ws.idx[base..base + k],
+                &tstage[..k],
+                &ystage[..k * n],
+                &mut ynew[..k * n],
+            );
+            for q in 0..k {
+                let s = base + q;
+                ws.stats[s].nfe += 1;
+                let yr = &ws.y[s * n..(s + 1) * n];
+                let f0 = &ws.ks[0][s * n..(s + 1) * n];
+                let f1 = &ynew[q * n..(q + 1) * n];
+                let h1 =
+                    stage::h1_estimate(yr, f0, f1, ws.h[s], self.tbf.order, opts.atol, opts.rtol);
+                ws.h[s] = h1.min(ws.hcap[s]).max(1e-10);
+            }
         }
-        f.eval(&ws.idx[..b], &tstage[..b], &ystage[..b * n], &mut ynew[..b * n]);
-        for s in 0..b {
-            ws.stats[s].nfe += 1;
-            let yr = &ws.y[s * n..(s + 1) * n];
-            let f0 = &ws.ks[0][s * n..(s + 1) * n];
-            let f1 = &ynew[s * n..(s + 1) * n];
-            let h1 = stage::h1_estimate(yr, f0, f1, ws.h[s], tbf.order, opts.atol, opts.rtol);
-            ws.h[s] = h1.min(h_max).max(1e-10);
+
+        // Trajectories that are already done (t0 == t1, or max_steps == 0).
+        // Slots below `base` were live after the last attempt and stay live.
+        self.finished.clear();
+        for s in base..base + k {
+            let live = (ws.t[s] - ws.t1[s]).abs() > 1e-9 && (ws.t1[s] - ws.t[s]) * ws.sg[s] > 0.0;
+            let exhausted = ws.stats[s].accepted + ws.stats[s].rejected >= ws.opts[s].max_steps;
+            if !live || exhausted {
+                self.finished.push(s);
+            }
         }
+        ws.retire(&self.finished)
     }
 
-    // Trajectories that are already done (t0 == t1, or max_steps == 0).
-    finished.clear();
-    for s in 0..b {
-        let live = (ws.t[s] - t1).abs() > 1e-9 && (t1 - ws.t[s]) * sg > 0.0;
-        let exhausted = ws.stats[s].accepted + ws.stats[s].rejected >= opts.max_steps;
-        if !live || exhausted {
-            finished.push(s);
+    /// One adaptive attempt (stage evaluations, per-row accept/reject,
+    /// controller update) for every live trajectory, returning the rows
+    /// that finished on this attempt.  No-op on an empty working set.
+    pub fn step(&mut self) -> Vec<Retired> {
+        if self.ws.act == 0 {
+            return Vec::new();
         }
-    }
-    ws.retire(&finished);
-
-    while ws.act > 0 {
+        let n = self.ws.n;
+        let tbf = &self.tbf;
+        let inv_order = self.inv_order;
+        let ws = &mut self.ws;
+        let f = &mut self.f;
+        let ystage = &mut self.ystage;
+        let ynew = &mut self.ynew;
+        let errv = &mut self.errv;
+        let tstage = &mut self.tstage;
+        let finished = &mut self.finished;
+        let refresh = &mut self.refresh;
+        let ids_scratch = &mut self.ids_scratch;
         let act = ws.act;
+
         // Clamp and sign each trajectory's attempted step.
         for s in 0..act {
-            ws.h[s] = ws.h[s].min((t1 - ws.t[s]).abs()).min(h_max) * sg;
+            ws.h[s] = ws.h[s].min((ws.t1[s] - ws.t[s]).abs()).min(ws.hcap[s]) * ws.sg[s];
         }
 
         // Stages 1..S: stage state for all rows, then ONE model evaluation
@@ -755,7 +964,8 @@ fn solve_embedded_batch<F: BatchDynamics>(
             }
         }
 
-        // Per-trajectory embedded error, accept/reject, controller update.
+        // Per-trajectory embedded error, accept/reject, controller update —
+        // each row against its own tolerance class.
         finished.clear();
         refresh.clear();
         for s in 0..act {
@@ -765,15 +975,15 @@ fn solve_embedded_batch<F: BatchDynamics>(
             for (j, ej) in tbf.e.iter().enumerate() {
                 let cj = *ej * ws.h[s];
                 if cj != 0.0 {
-                    axpy(cj, &ws.ks[j][s * n..(s + 1) * n], &mut errv);
+                    axpy(cj, &ws.ks[j][s * n..(s + 1) * n], errv);
                 }
             }
             let err = stage::error_norm(
-                &errv,
+                errv,
                 &ws.y[s * n..(s + 1) * n],
                 &ynew[s * n..(s + 1) * n],
-                opts.atol,
-                opts.rtol,
+                ws.opts[s].atol,
+                ws.opts[s].rtol,
             );
             let hs = ws.h[s];
             if err <= 1.0 || hs.abs() <= 1e-9 {
@@ -787,21 +997,21 @@ fn solve_embedded_batch<F: BatchDynamics>(
                     let (k0, tail) = ws.ks.split_at_mut(1);
                     k0[0][s * n..(s + 1) * n]
                         .swap_with_slice(&mut tail[last - 1][s * n..(s + 1) * n]);
-                } else if (ws.t[s] - t1).abs() > 1e-9 {
+                } else if (ws.t[s] - ws.t1[s]).abs() > 1e-9 {
                     refresh.push(s); // fresh f(t, y), batched below
                 }
                 let errc = err.max(1e-10);
-                let factor = stage::accept_factor(opts, inv_order, errc, ws.prev_err[s]);
-                ws.h[s] = hs.abs() * factor.clamp(opts.factor_min, opts.factor_max);
+                let factor = stage::accept_factor(&ws.opts[s], inv_order, errc, ws.prev_err[s]);
+                ws.h[s] = hs.abs() * factor.clamp(ws.opts[s].factor_min, ws.opts[s].factor_max);
                 ws.prev_err[s] = errc;
             } else {
                 // reject: shrink and retry (FSAL stage 0 is still valid)
                 ws.stats[s].rejected += 1;
-                let factor = stage::reject_factor(opts, inv_order, err);
-                ws.h[s] = hs.abs() * factor.clamp(opts.factor_min, 1.0);
+                let factor = stage::reject_factor(&ws.opts[s], inv_order, err);
+                ws.h[s] = hs.abs() * factor.clamp(ws.opts[s].factor_min, 1.0);
             }
-            let live = (ws.t[s] - t1).abs() > 1e-9 && (t1 - ws.t[s]) * sg > 0.0;
-            let exhausted = ws.stats[s].accepted + ws.stats[s].rejected >= opts.max_steps;
+            let live = (ws.t[s] - ws.t1[s]).abs() > 1e-9 && (ws.t1[s] - ws.t[s]) * ws.sg[s] > 0.0;
+            let exhausted = ws.stats[s].accepted + ws.stats[s].rejected >= ws.opts[s].max_steps;
             if !live || exhausted {
                 finished.push(s);
             }
@@ -824,10 +1034,42 @@ fn solve_embedded_batch<F: BatchDynamics>(
             }
         }
 
-        ws.retire(&finished);
+        ws.retire(finished)
     }
+}
 
-    ws.into_result()
+/// The batched embedded-pair driver: admit every trajectory at `t0`, then
+/// step the shared [`BatchStepper`] until the working set drains, and
+/// assemble the retired rows back into the caller's original order.
+fn solve_embedded_batch<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+    h_init_rows: Option<&[f32]>,
+) -> BatchResult {
+    let n = f.dim();
+    let b = y0.len() / n;
+    let mut y = y0.to_vec();
+    let mut t = vec![t0; b];
+    let mut stats = vec![SolveStats::default(); b];
+    if b == 0 {
+        return BatchResult { n, y, t, stats };
+    }
+    let mut stepper = BatchStepper::new(&mut *f, tb);
+    let ids: Vec<usize> = (0..b).collect();
+    let mut done = stepper.admit(&ids, y0, t0, t1, opts, h_init_rows);
+    while stepper.active() > 0 {
+        done.append(&mut stepper.step());
+    }
+    for r in done {
+        y[r.id * n..(r.id + 1) * n].copy_from_slice(&r.y);
+        t[r.id] = r.t;
+        stats[r.id] = r.stats;
+    }
+    BatchResult { n, y, t, stats }
 }
 
 /// Per-trajectory fallback for tableaux without an embedded pair: scalar
@@ -1112,6 +1354,61 @@ impl<F: BatchDynamics> BatchDynamics for OffsetIds<F> {
         self.ids.clear();
         self.ids.extend(ids.iter().map(|id| id + self.base));
         self.f.eval(&self.ids, t, y, dy);
+    }
+}
+
+/// A [`BatchDynamics`] whose every evaluation is sharded across a worker
+/// pool: the rows split into contiguous chunks ([`chunk_ranges`]), each
+/// chunk is evaluated by a clone of the wrapped dynamics on its slice of
+/// `ids`/`t`/`y`, and the derivatives copy back in fixed chunk order.  The
+/// wrapped model is row-independent and each shard sees the caller's
+/// stable ids verbatim, so the output is **bit-identical to the serial
+/// evaluation at every thread count**.  This is how a structurally-serial
+/// driver (the serving engine's single attempt loop) goes wide without
+/// forking its control flow; the whole-solve `_pooled` drivers below
+/// amortize dispatch better when the batch composition is fixed up front.
+pub struct PooledEval<'p, F> {
+    pool: &'p Pool,
+    f: F,
+}
+
+impl<'p, F: BatchDynamics + Clone + Send + Sync> PooledEval<'p, F> {
+    pub fn new(pool: &'p Pool, f: F) -> PooledEval<'p, F> {
+        PooledEval { pool, f }
+    }
+
+    /// Recover the wrapped dynamics.
+    pub fn into_inner(self) -> F {
+        self.f
+    }
+}
+
+impl<'p, F: BatchDynamics + Clone + Send + Sync> BatchDynamics for PooledEval<'p, F> {
+    fn dim(&self) -> usize {
+        self.f.dim()
+    }
+
+    fn eval(&mut self, ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        let n = self.f.dim();
+        let shards = chunk_ranges(t.len(), self.pool.threads());
+        if shards.len() <= 1 {
+            return self.f.eval(ids, t, y, dy);
+        }
+        let f = &self.f;
+        let parts = self.pool.run_range_shards(&shards, |_, r| {
+            let mut g = f.clone();
+            let mut out = vec![0.0f32; (r.end - r.start) * n];
+            g.eval(
+                &ids[r.start..r.end],
+                &t[r.start..r.end],
+                &y[r.start * n..r.end * n],
+                &mut out,
+            );
+            out
+        });
+        for (r, part) in shards.iter().zip(parts) {
+            dy[r.start * n..r.end * n].copy_from_slice(&part);
+        }
     }
 }
 
@@ -1611,6 +1908,26 @@ mod tests {
         }
     }
 
+    /// Presents every row of `inner` under one fixed global id, so a solo
+    /// (B=1) solve of an id-conditioned dynamics reproduces trajectory `id`
+    /// of the batch exactly.
+    #[derive(Clone)]
+    struct PinnedId {
+        inner: CondDyn,
+        id: usize,
+    }
+
+    impl BatchDynamics for PinnedId {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+
+        fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+            let ids = vec![self.id; t.len()];
+            self.inner.eval(&ids, t, y, dy);
+        }
+    }
+
     #[test]
     fn pooled_drivers_bit_identical_to_serial_across_thread_counts() {
         // The determinism acceptance: sharded adaptive and fixed solves
@@ -1989,5 +2306,202 @@ mod tests {
             q1[0],
             q2[0]
         );
+    }
+
+    // -- working-set negative paths and incremental admission ---------------
+
+    /// Build a working set of `b` one-dim rows with distinguishable states.
+    fn seeded_ws(b: usize) -> WorkingSet {
+        let mut ws = WorkingSet::new(1, 2);
+        let ids: Vec<usize> = (0..b).map(|r| 100 + r).collect();
+        let y0: Vec<f32> = (0..b).map(|r| r as f32 + 0.5).collect();
+        ws.push_rows(&ids, &y0, 0.0, 1.0, &AdaptiveOpts::default());
+        for s in 0..b {
+            ws.h[s] = 0.01 * (s + 1) as f32;
+            ws.stats[s].nfe = s + 1;
+        }
+        ws
+    }
+
+    #[test]
+    fn retire_none_is_a_noop() {
+        let mut ws = seeded_ws(4);
+        let before_y = ws.y.clone();
+        let out = ws.retire(&[]);
+        assert!(out.is_empty());
+        assert_eq!(ws.act, 4);
+        assert_eq!(ws.y, before_y);
+        assert_eq!(ws.idx, vec![100, 101, 102, 103]);
+    }
+
+    #[test]
+    fn retire_all_drains_in_finished_order() {
+        let mut ws = seeded_ws(3);
+        let out = ws.retire(&[0, 1, 2]);
+        assert_eq!(ws.act, 0);
+        assert_eq!(out.len(), 3);
+        for (k, r) in out.iter().enumerate() {
+            assert_eq!(r.id, 100 + k, "retired rows keep finished order");
+            assert_eq!(r.y, vec![k as f32 + 0.5]);
+            assert_eq!(r.stats.nfe, k + 1);
+            assert_eq!(r.stats.h_final, 0.01 * (k + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn retire_last_row_needs_no_backfill() {
+        let mut ws = seeded_ws(3);
+        let out = ws.retire(&[2]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 102);
+        assert_eq!(ws.act, 2);
+        // Surviving rows are untouched (no spurious swap from the tail).
+        assert_eq!(ws.idx[..2], [100, 101]);
+        assert_eq!(ws.y[..2], [0.5, 1.5]);
+    }
+
+    #[test]
+    fn retire_middle_backfills_with_last_live_row() {
+        let mut ws = seeded_ws(4);
+        let out = ws.retire(&[1]);
+        assert_eq!(out[0].id, 101);
+        assert_eq!(ws.act, 3);
+        // Slot 1 now holds what was the last active row; slot order is
+        // unstable but ids and states travel together.
+        assert_eq!(ws.idx[..3], [100, 103, 102]);
+        assert_eq!(ws.y[..3], [0.5, 3.5, 2.5]);
+        assert_eq!(ws.stats[1].nfe, 4);
+    }
+
+    #[test]
+    fn to_times_batch_single_point_grid_is_identity() {
+        // A one-entry grid has no segments: the snapshot is y0 itself and
+        // no model evaluation is spent.
+        let tb = tableau::dopri5();
+        let y0 = [1.25f32, -0.5, 0.75, 2.0];
+        let (traj, stats) = solve_to_times_batch(
+            Rowwise::new(test_dynamics(5.0, 1.0, -0.2), 2),
+            &[0.37],
+            &y0,
+            &tb,
+            &AdaptiveOpts::default(),
+        );
+        assert_eq!(traj.len(), 1);
+        for (a, w) in traj[0].iter().zip(&y0) {
+            assert_eq!(a.to_bits(), w.to_bits());
+        }
+        for s in &stats {
+            assert_eq!(s.nfe, 0);
+            assert_eq!(s.accepted, 0);
+            assert_eq!(s.rejected, 0);
+        }
+    }
+
+    #[test]
+    fn incremental_admission_matches_solo_solves_bit_for_bit() {
+        // The serving-path property at the stepper level: trajectories that
+        // join the active set at random attempts (a seeded arrival process)
+        // must produce exactly the states/stats of their own solo solves —
+        // batch composition only regroups model evaluations.  Where every
+        // request is admitted up front the stepper must also reproduce
+        // `solve_adaptive_batch` (which is itself built on it).
+        Prop::new(20).run("stepper-admission-equiv", |rng: &mut Pcg, case| {
+            let tb = tableau::by_name(EMBEDDED[case % EMBEDDED.len()]).unwrap();
+            let b = 3 + rng.below(6);
+            let f = CondDyn::new(rng, b);
+            let y0 = gen::vec_f32(rng, b, 1.0);
+            let opts = random_opts(rng);
+
+            // Arrival schedule: request r joins after `arrive[r]` attempts.
+            let arrive: Vec<usize> = (0..b).map(|_| rng.below(6)).collect();
+            let mut stepper = BatchStepper::new(f.clone(), &tb);
+            let mut done: Vec<Retired> = Vec::new();
+            let mut step_no = 0usize;
+            let mut next = 0usize; // requests admitted in id order
+            let mut order: Vec<usize> = (0..b).collect();
+            order.sort_by_key(|r| arrive[*r]);
+            while next < b || stepper.active() > 0 {
+                while next < b && arrive[order[next]] <= step_no {
+                    let r = order[next];
+                    done.extend(stepper.admit(
+                        &[r],
+                        &y0[r..r + 1],
+                        0.0,
+                        1.0,
+                        &opts,
+                        None,
+                    ));
+                    next += 1;
+                }
+                done.extend(stepper.step());
+                step_no += 1;
+            }
+            assert_eq!(done.len(), b);
+            for r in done {
+                // The solo reference sees the same conditioning: the batch
+                // driver numbers its single row 0, so pin the global id.
+                let solo = solve_adaptive_batch(
+                    PinnedId { inner: f.clone(), id: r.id },
+                    0.0,
+                    1.0,
+                    &y0[r.id..r.id + 1],
+                    &tb,
+                    &opts,
+                );
+                assert_eq!(
+                    r.y[0].to_bits(),
+                    solo.y[0].to_bits(),
+                    "{} id {}",
+                    tb.name,
+                    r.id
+                );
+                assert_eq!(r.t.to_bits(), solo.t[0].to_bits());
+                assert_stats_eq(&r.stats, &solo.stats[0], &format!("{} id {}", tb.name, r.id));
+            }
+
+            // All-admitted-at-t0 == the batch driver, bit for bit.
+            let mut all = BatchStepper::new(f.clone(), &tb);
+            let ids: Vec<usize> = (0..b).collect();
+            let mut got = all.admit(&ids, &y0, 0.0, 1.0, &opts, None);
+            while all.active() > 0 {
+                got.append(&mut all.step());
+            }
+            let batch = solve_adaptive_batch(f.clone(), 0.0, 1.0, &y0, &tb, &opts);
+            for r in got {
+                assert_eq!(r.y[0].to_bits(), batch.row(r.id)[0].to_bits());
+                assert_stats_eq(&r.stats, &batch.stats[r.id], "all-at-t0");
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_eval_bit_identical_to_serial_across_thread_counts() {
+        // PooledEval shards each model evaluation across workers; the solve
+        // it feeds must equal the serial one bit-for-bit at 1, 2, and 4
+        // threads (rows are independent and ids pass through verbatim).
+        let mut rng = Pcg::new(733);
+        let b = 13usize;
+        let f = CondDyn::new(&mut rng, b);
+        let y0 = gen::vec_f32(&mut rng, b, 1.0);
+        let tb = tableau::dopri5();
+        let opts = AdaptiveOpts::default();
+        let serial = solve_adaptive_batch(f.clone(), 0.0, 1.0, &y0, &tb, &opts);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let wrapped =
+                solve_adaptive_batch(PooledEval::new(&pool, f.clone()), 0.0, 1.0, &y0, &tb, &opts);
+            for r in 0..b {
+                assert_eq!(
+                    serial.row(r)[0].to_bits(),
+                    wrapped.row(r)[0].to_bits(),
+                    "threads={threads} row {r}"
+                );
+                assert_stats_eq(
+                    &serial.stats[r],
+                    &wrapped.stats[r],
+                    &format!("threads={threads} row {r}"),
+                );
+            }
+        }
     }
 }

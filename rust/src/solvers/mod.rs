@@ -21,7 +21,8 @@ pub use batch::{
     augment_quadrature, solve_adaptive_batch, solve_adaptive_batch_pooled, solve_fixed_batch,
     solve_fixed_batch_pooled, solve_fixed_batch_record, solve_fixed_batch_record_pooled,
     solve_to_times_batch, solve_to_times_batch_pooled, split_quadrature, BatchDynamics, BatchFn,
-    BatchResult, FixedGridRecord, RegularizedBatchDynamics, Rowwise,
+    BatchResult, BatchStepper, FixedGridRecord, PooledEval, RegularizedBatchDynamics, Retired,
+    Rowwise,
 };
 pub use fixed::{solve_fixed, solve_fixed_traj};
 pub use tableau::Tableau;

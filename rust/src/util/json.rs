@@ -283,6 +283,11 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
+                            // A truncated payload must be an error, not a
+                            // slice panic: check there are 4 hex digits left.
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape at byte {}", self.i);
+                            }
                             let hex = std::str::from_utf8(
                                 &self.b[self.i..self.i + 4],
                             )?;
@@ -320,7 +325,14 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(s.parse::<f64>()?))
+        let x = s.parse::<f64>()?;
+        // "1e999" parses to +inf, which the writer cannot represent (JSON
+        // has no non-finite numbers) — reject instead of round-tripping to
+        // null.
+        if !x.is_finite() {
+            bail!("number {s:?} overflows to a non-finite value");
+        }
+        Ok(Json::Num(x))
     }
 }
 
@@ -360,6 +372,25 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn truncated_payloads_error_instead_of_panicking() {
+        // Regression: a payload cut off inside a \uXXXX escape used to slice
+        // past the end of the buffer (the serving wire feeds untrusted
+        // bytes here).
+        for cut in ["\"\\u", "\"\\u1", "\"\\u12", "\"\\u123", "\"\\", "\"abc", "{\"k\": 1", "[1, 2"]
+        {
+            assert!(Json::parse(cut).is_err(), "{cut:?} should error");
+        }
+    }
+
+    #[test]
+    fn non_finite_numbers_are_rejected() {
+        // An overflowing literal must not round-trip to null via Num(inf).
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert_eq!(Json::parse("1e308").unwrap(), Json::Num(1e308));
     }
 
     #[test]
