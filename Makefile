@@ -30,14 +30,33 @@ bench-json:
 	rm -f BENCH_parallel.json.tmp BENCH_cnf.json.tmp BENCH_serving.json.tmp
 	cargo bench --bench perf_batch -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_train_native -- --json BENCH_parallel.json.tmp
+	cargo bench --bench perf_obs -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_cnf -- --json BENCH_cnf.json.tmp
 	cargo bench --bench perf_serving -- --json BENCH_serving.json.tmp
 	mv BENCH_parallel.json.tmp BENCH_parallel.json
 	mv BENCH_cnf.json.tmp BENCH_cnf.json
 	mv BENCH_serving.json.tmp BENCH_serving.json
 
+# Perf trajectory delta: re-run the bench suite into .new scratch files and
+# print per-metric percent deltas against the committed baselines with
+# `repro perfdiff`.  The committed BENCH_*.json start life as seeded-empty
+# `_meta` stubs (never hand-written numbers); run `make bench-json` once on
+# a quiet machine to seed them for real, then `make perf` on later changes
+# to see the trajectory.  The .new files are left behind for inspection.
+.PHONY: perf
+perf:
+	rm -f BENCH_parallel.json.new BENCH_cnf.json.new BENCH_serving.json.new
+	cargo bench --bench perf_batch -- --json BENCH_parallel.json.new
+	cargo bench --bench perf_train_native -- --json BENCH_parallel.json.new
+	cargo bench --bench perf_obs -- --json BENCH_parallel.json.new
+	cargo bench --bench perf_cnf -- --json BENCH_cnf.json.new
+	cargo bench --bench perf_serving -- --json BENCH_serving.json.new
+	cargo run --release --bin repro -- perfdiff BENCH_parallel.json BENCH_parallel.json.new
+	cargo run --release --bin repro -- perfdiff BENCH_cnf.json BENCH_cnf.json.new
+	cargo run --release --bin repro -- perfdiff BENCH_serving.json BENCH_serving.json.new
+
 # Determinism lint: taylint walks rust/src, rust/tests, benches/, and
-# examples/ and enforces the invariant catalog (D1-D5; `taylint --rules`
+# examples/ and enforces the invariant catalog (D1-D6; `taylint --rules`
 # prints it).  Exits nonzero on any diagnostic; CI runs this blocking.
 .PHONY: lint
 lint:

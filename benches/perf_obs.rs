@@ -1,0 +1,158 @@
+//! §Perf: the telemetry overhead gate.
+//!
+//! The observability layer's contract is "zero-cost off": every hot-path
+//! record call is an early return on a `None` check when the recorder is
+//! disabled.  This bench holds that to ≤ 5% — the traced pooled driver
+//! with recording OFF (the shipped default everywhere telemetry isn't
+//! explicitly enabled) against the untraced driver on the same
+//! compute-bound batch solve.
+//!
+//! Correctness is asserted before anything is timed: telemetry off OR on
+//! must not perturb the solve — per-trajectory states and NFE bit-identical
+//! to the untraced result.  The enabled-recording cost is reported too,
+//! ungated (turning tracing on is an explicit opt-in, not the default).
+//!
+//! The gate compares min-of-samples across up to five attempts so a noisy
+//! neighbor can't fail the build; a genuine hot-path regression shows up
+//! in every attempt.
+
+use taynode::obs::Recorder;
+use taynode::solvers::adaptive::AdaptiveOpts;
+use taynode::solvers::batch::{
+    solve_adaptive_batch_pooled, solve_adaptive_batch_traced_pooled, BatchDynamics,
+};
+use taynode::solvers::tableau;
+use taynode::util::bench::{json_path_arg, merge_bench_json, report, time_fn};
+use taynode::util::json::Json;
+use taynode::util::pool::Pool;
+use taynode::util::rng::Pcg;
+
+const B: usize = 64;
+const HIDDEN: usize = 64;
+
+/// Compute-bound native dynamics (the pooled path's target shape; same
+/// model as `perf_batch`'s sharded-engine section).
+#[derive(Clone)]
+struct ComputeDynamics {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+}
+
+impl ComputeDynamics {
+    fn new(seed: u64) -> ComputeDynamics {
+        let mut rng = Pcg::new(seed);
+        ComputeDynamics {
+            w1: (0..HIDDEN).map(|_| rng.range(-1.5, 1.5)).collect(),
+            b1: (0..HIDDEN).map(|_| rng.range(-0.5, 0.5)).collect(),
+            w2: (0..HIDDEN).map(|_| rng.range(-0.7, 0.7)).collect(),
+        }
+    }
+}
+
+impl BatchDynamics for ComputeDynamics {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn eval(&mut self, _ids: &[usize], t: &[f32], y: &[f32], dy: &mut [f32]) {
+        for (r, tr) in t.iter().enumerate() {
+            let mut acc = 0.0f32;
+            for j in 0..HIDDEN {
+                acc += self.w2[j] * (self.w1[j] * y[r] + self.b1[j] + 0.1 * tr).tanh();
+            }
+            dy[r] = acc;
+        }
+    }
+}
+
+fn main() {
+    let tb = tableau::dopri5();
+    let opts = AdaptiveOpts::default();
+    let pool = Pool::from_env();
+    let mut rng = Pcg::new(23);
+    let x: Vec<f32> = (0..B).map(|_| rng.range(-1.2, 1.2)).collect();
+    let f = ComputeDynamics::new(19);
+
+    // -- correctness first: telemetry must never perturb the solve ---------
+    let base = solve_adaptive_batch_pooled(&pool, &f, 0.0, 1.0, &x, &tb, &opts);
+    let mut off = Recorder::off();
+    let r_off = solve_adaptive_batch_traced_pooled(&pool, &f, 0.0, 1.0, &x, &tb, &opts, &mut off);
+    let mut on = Recorder::enabled();
+    let r_on = solve_adaptive_batch_traced_pooled(&pool, &f, 0.0, 1.0, &x, &tb, &opts, &mut on);
+    assert_eq!(base.nfes(), r_off.nfes(), "traced-off NFE");
+    assert_eq!(base.nfes(), r_on.nfes(), "traced-on NFE");
+    for r in 0..B {
+        assert_eq!(base.y[r].to_bits(), r_off.y[r].to_bits(), "traced-off row {r}");
+        assert_eq!(base.y[r].to_bits(), r_on.y[r].to_bits(), "traced-on row {r}");
+    }
+    assert!(!on.events().is_empty(), "enabled recorder must capture events");
+    println!(
+        "traced(off) == traced(on) == untraced bit-for-bit at B={B} \
+         ({} thread(s), {} events recorded)\n",
+        pool.threads(),
+        on.events().len()
+    );
+
+    // -- the gate: disabled telemetry <= 5% over the untraced driver -------
+    let mut best = f64::INFINITY;
+    let mut plain_min = f64::NAN;
+    let mut off_min = f64::NAN;
+    for attempt in 1..=5 {
+        let s_plain = time_fn(3, 20, || {
+            let res = solve_adaptive_batch_pooled(&pool, &f, 0.0, 1.0, &x, &tb, &opts);
+            std::hint::black_box(res.stats.len());
+        });
+        let s_off = time_fn(3, 20, || {
+            let mut rec = Recorder::off();
+            let res =
+                solve_adaptive_batch_traced_pooled(&pool, &f, 0.0, 1.0, &x, &tb, &opts, &mut rec);
+            std::hint::black_box(res.stats.len());
+        });
+        let ratio = s_off.min / s_plain.min;
+        if ratio < best {
+            best = ratio;
+            plain_min = s_plain.min;
+            off_min = s_off.min;
+        }
+        report(&format!("untraced pooled solve  (B={B}, attempt {attempt})"), &s_plain);
+        report(&format!("traced-off pooled solve (B={B}, attempt {attempt})"), &s_off);
+        println!("overhead ratio (min/min): {ratio:.4}\n");
+        if best <= 1.05 {
+            break;
+        }
+    }
+    assert!(
+        best <= 1.05,
+        "acceptance: disabled telemetry must cost <= 5% over the untraced \
+         driver (best ratio {best:.4})"
+    );
+    println!("acceptance (traced-off <= 1.05x untraced): PASS ({best:.4})");
+
+    // -- informational: what enabling recording actually costs -------------
+    let s_on = time_fn(3, 20, || {
+        let mut rec = Recorder::enabled();
+        let res =
+            solve_adaptive_batch_traced_pooled(&pool, &f, 0.0, 1.0, &x, &tb, &opts, &mut rec);
+        std::hint::black_box(rec.events().len() + res.stats.len());
+    });
+    report(&format!("traced-on pooled solve  (B={B}, ungated)"), &s_on);
+    let on_ratio = s_on.min / plain_min;
+    println!("enabled-recording cost: {on_ratio:.3}x the untraced driver");
+
+    if let Some(path) = json_path_arg() {
+        merge_bench_json(
+            &path,
+            "perf_obs",
+            Json::obj(vec![
+                ("b", Json::num(B as f64)),
+                ("threads", Json::num(pool.threads() as f64)),
+                ("untraced_min_secs", Json::num(plain_min)),
+                ("traced_off_min_secs", Json::num(off_min)),
+                ("off_overhead_ratio", Json::num(best)),
+                ("on_cost_ratio", Json::num(on_ratio)),
+            ]),
+        );
+        println!("\nwrote perf_obs section to {path}");
+    }
+}

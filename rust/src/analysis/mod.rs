@@ -13,9 +13,10 @@
 //! |----|-----------|
 //! | D1 | no `HashMap`/`HashSet`/`BTreeMap` in the numeric crates (`solvers`, `autodiff`, `taylor`, `nn`, `coordinator`) |
 //! | D2 | atomics / `std::sync` only on allowlisted lines of `util/pool.rs` |
-//! | D3 | no `std::env`, time, or RNG-seeding reads outside `util/{pool,cli,rng}.rs` |
+//! | D3 | no `std::env` or RNG-seeding reads outside `util/{pool,cli,rng}.rs` |
 //! | D4 | no `.unwrap()`/`.expect()` in library code outside `#[cfg(test)]` |
 //! | D5 | every public `*_pooled` fn is named by a test asserting bit-equality against its serial counterpart; every `benches/perf_*.rs` asserts equality before timing |
+//! | D6 | no `std::time` (`Instant`, `SystemTime`) outside `util/clock.rs` — everything else takes ticks through the `Clock` trait |
 //! | A0 | allowlist markers must be well-formed |
 //! | A1 | allowlist markers must suppress something |
 //!

@@ -1,4 +1,4 @@
-//! The determinism-invariant catalog (rules `D1`–`D5`) over the token
+//! The determinism-invariant catalog (rules `D1`–`D6`) over the token
 //! stream of [`super::lexer`].
 //!
 //! Every rule has a machine-readable id, a file scope, and a line-level
@@ -46,8 +46,8 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: "D3",
         title: "nondeterminism enters only through sanctioned doors",
-        detail: "std::env, time, and RNG seeding live in util/{pool,cli,rng}.rs; \
-                 library code reads neither clocks nor the environment",
+        detail: "std::env and RNG seeding live in util/{pool,cli,rng}.rs; \
+                 library code never reads the environment or seeds from the world",
     },
     Rule {
         id: "D4",
@@ -61,6 +61,13 @@ pub const RULES: &[Rule] = &[
         detail: "every public *_pooled fn is named by a test that asserts bit-equality \
                  against its serial counterpart, and every benches/perf_*.rs asserts \
                  equality before timing",
+    },
+    Rule {
+        id: "D6",
+        title: "wall clocks only behind util/clock.rs",
+        detail: "std::time (Instant, SystemTime) appears only in util/clock.rs; everything \
+                 else takes ticks through the Clock trait, so traces and benches cannot \
+                 leak wall-clock nondeterminism",
     },
     Rule {
         id: "A0",
@@ -87,6 +94,9 @@ const NUMERIC_CRATES: &[&str] = &[
 /// `util/{pool,cli,rng}.rs` — the sanctioned nondeterminism doors (D3).
 const D3_DOORS: &[&str] =
     &["rust/src/util/pool.rs", "rust/src/util/cli.rs", "rust/src/util/rng.rs"];
+
+/// `util/clock.rs` — the one sanctioned door to `std::time` (D6).
+const D6_DOOR: &str = "rust/src/util/clock.rs";
 
 /// Sync-primitive identifiers beyond the `Atomic*` family (D2).
 const SYNC_IDENTS: &[&str] = &[
@@ -244,16 +254,10 @@ pub fn lint_file(path: &str, toks: &[Tok], in_test: &[bool], diags: &mut Vec<Dia
                 diags,
             );
         }
-        // D3 — clocks, environment, world-seeded RNG
+        // D3 — environment, world-seeded RNG
         if is_library(path) && !D3_DOORS.contains(&path) {
             let hit = if tseq(toks, i, &["std", "::", "env"]) {
                 Some("std::env")
-            } else if tseq(toks, i, &["std", "::", "time"]) {
-                Some("std::time")
-            } else if tseq(toks, i, &["Instant", "::", "now"]) {
-                Some("Instant::now")
-            } else if t.kind == TokKind::Ident && t.text == "SystemTime" {
-                Some("SystemTime")
             } else if t.kind == TokKind::Ident && RNG_SEED_IDENTS.contains(&t.text.as_str()) {
                 Some(t.text.as_str())
             } else if t.kind == TokKind::Ident
@@ -271,6 +275,26 @@ pub fn lint_file(path: &str, toks: &[Tok], in_test: &[bool], diags: &mut Vec<Dia
                     t.line,
                     "D3",
                     format!("nondeterminism door `{h}` outside util/{{pool,cli,rng}}.rs"),
+                    diags,
+                );
+            }
+        }
+        // D6 — wall clocks outside the sanctioned clock module
+        if is_library(path) && path != D6_DOOR {
+            let hit = if tseq(toks, i, &["std", "::", "time"]) {
+                Some("std::time")
+            } else if tseq(toks, i, &["Instant", "::", "now"]) {
+                Some("Instant::now")
+            } else if t.kind == TokKind::Ident && t.text == "SystemTime" {
+                Some("SystemTime")
+            } else {
+                None
+            };
+            if let Some(h) = hit {
+                push(
+                    t.line,
+                    "D6",
+                    format!("wall-clock access `{h}` outside util/clock.rs"),
                     diags,
                 );
             }
@@ -463,11 +487,9 @@ mod tests {
     }
 
     #[test]
-    fn d3_trips_on_clocks_env_and_seeding() {
+    fn d3_trips_on_env_and_seeding() {
         for src in [
-            "fn f() -> u128 { std::time::Instant::now().elapsed().as_nanos() }\n",
             "fn f() -> Option<String> { std::env::var(\"HOME\").ok() }\n",
-            "fn f() { let _ = SystemTime::now(); }\n",
             "fn f() { let rng = thread_rng(); }\n",
         ] {
             let d = run(&[("rust/src/nn/bad.rs", src)]);
@@ -479,6 +501,32 @@ mod tests {
             "pub fn argv() -> Vec<String> { std::env::args().collect() }\n",
         )]);
         assert!(!rules_of(&d).contains(&"D3"), "{d:?}");
+    }
+
+    #[test]
+    fn d6_trips_on_wall_clocks_outside_the_clock_door() {
+        for src in [
+            "fn f() -> u128 { std::time::Instant::now().elapsed().as_nanos() }\n",
+            "use std::time::Instant;\nfn f() -> Instant { Instant::now() }\n",
+            "fn f() { let _ = SystemTime::now(); }\n",
+        ] {
+            let d = run(&[("rust/src/nn/bad.rs", src)]);
+            let r = rules_of(&d);
+            assert!(r.contains(&"D6"), "{src}: {d:?}");
+            assert!(!r.contains(&"D3"), "time is D6's beat, not D3's: {src}: {d:?}");
+        }
+        // the clock module is the door
+        let d = run(&[(
+            "rust/src/util/clock.rs",
+            "use std::time::Instant;\npub fn now() -> Instant { Instant::now() }\n",
+        )]);
+        assert!(!rules_of(&d).contains(&"D6"), "{d:?}");
+        // the allow escape hatch works for D6 like every other rule
+        let d = run(&[(
+            "rust/src/nn/allowed.rs",
+            "// taylint: allow(D6) -- fixture: justified wall-clock read\nuse std::time::Instant;\n",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
     }
 
     #[test]

@@ -125,6 +125,14 @@ impl Tape {
         self.inner.borrow().ops.is_empty()
     }
 
+    /// Bytes held by the value arena and node table (capacity, not
+    /// length — what the process actually pays for the recording).
+    pub fn arena_bytes(&self) -> usize {
+        let t = self.inner.borrow();
+        t.vals.capacity() * std::mem::size_of::<f64>()
+            + t.ops.capacity() * std::mem::size_of::<Op>()
+    }
+
     /// Drop every recorded node but keep the arena's allocations for the
     /// next recording — how a worker reuses one tape across the per-stage
     /// VJPs of the discrete adjoint.  `Var`s from before the clear belong

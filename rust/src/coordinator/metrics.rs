@@ -6,6 +6,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::obs::StepScalars;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -25,6 +26,19 @@ impl MetricsLog {
     pub fn push(&mut self, row: Vec<f64>) {
         assert_eq!(row.len(), self.columns.len(), "metrics row width");
         self.rows.push(row);
+    }
+
+    /// Append a training-step row in the canonical [`StepScalars`] order —
+    /// `step`, `loss`, `task`, `reg` — followed by `extra` columns.  Both
+    /// trainer paths (XLA [`StepMetrics`], native [`NativeMetrics`]) log
+    /// through this one taxonomy instead of positional field indexing.
+    ///
+    /// [`StepMetrics`]: crate::coordinator::StepMetrics
+    /// [`NativeMetrics`]: crate::coordinator::NativeMetrics
+    pub fn push_step(&mut self, step: usize, m: &impl StepScalars, extra: &[f64]) {
+        let mut row = vec![step as f64, m.loss() as f64, m.task() as f64, m.reg() as f64];
+        row.extend_from_slice(extra);
+        self.push(row);
     }
 
     pub fn col(&self, name: &str) -> Vec<f64> {
@@ -107,6 +121,29 @@ mod tests {
         let jl = std::fs::read_to_string(dir.join("m.jsonl")).unwrap();
         let j = Json::parse(jl.lines().next().unwrap()).unwrap();
         assert_eq!(j.req("b").unwrap().as_f64().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn push_step_uses_the_canonical_taxonomy() {
+        struct Fake;
+        impl StepScalars for Fake {
+            fn loss(&self) -> f32 {
+                3.5
+            }
+            fn task(&self) -> f32 {
+                3.0
+            }
+            fn reg(&self) -> f32 {
+                0.5
+            }
+        }
+        let mut m = MetricsLog::new(&["step", "loss", "task", "reg", "nfe"]);
+        m.push_step(7, &Fake, &[104.0]);
+        assert_eq!(m.last("step"), 7.0);
+        assert_eq!(m.last("loss"), 3.5);
+        assert_eq!(m.last("task"), 3.0);
+        assert_eq!(m.last("reg"), 0.5);
+        assert_eq!(m.last("nfe"), 104.0);
     }
 
     #[test]

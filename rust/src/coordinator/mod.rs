@@ -15,6 +15,7 @@ pub use evaluator::{
 pub use metrics::MetricsLog;
 pub use schedule::Schedule;
 pub use train_native::{
-    adjoint_grads, adjoint_grads_pooled, LinearHead, NativeMetrics, NativeTrainer,
+    adjoint_grads, adjoint_grads_pooled, adjoint_stage_grads_traced_pooled, LinearHead,
+    NativeMetrics, NativeTrainer,
 };
 pub use trainer::{BatchInputs, StepMetrics, Trainer};

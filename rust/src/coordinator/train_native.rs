@@ -47,6 +47,7 @@ use std::ops::Range;
 use crate::autodiff::div::{divergence_values, Divergence};
 use crate::autodiff::{Adam, Tape, Var};
 use crate::nn::{ode_jet_values, Cnf, Mlp, SeriesOf, Value};
+use crate::obs::{Counter, Hist, Recorder};
 use crate::solvers::adaptive::AdaptiveOpts;
 use crate::solvers::batch::{
     solve_fixed_batch_record_pooled, FixedGridRecord, LogDetBatchDynamics,
@@ -339,7 +340,23 @@ pub fn adjoint_stage_grads_pooled<V: StageVjp>(
     tb: &Tableau,
     ybar_final: &[f64],
 ) -> (Vec<f64>, Vec<f64>) {
-    adjoint_grads_sharded(pool, vjp, rec, tb, ybar_final, GRAD_SHARD_ROWS)
+    adjoint_stage_grads_traced_pooled(pool, vjp, rec, tb, ybar_final, &mut Recorder::off())
+}
+
+/// [`adjoint_stage_grads_pooled`] with telemetry: per-shard sub-recorders
+/// capture the stage-VJP count and the tape arena's node/byte high-water
+/// marks, merged into `tel` in fixed shard order
+/// ([`Recorder::absorb_in_order`]) so the trace is bit-identical at every
+/// thread count.  With `tel` off this is exactly the untraced call.
+pub fn adjoint_stage_grads_traced_pooled<V: StageVjp>(
+    pool: &Pool,
+    vjp: &V,
+    rec: &FixedGridRecord,
+    tb: &Tableau,
+    ybar_final: &[f64],
+    tel: &mut Recorder,
+) -> (Vec<f64>, Vec<f64>) {
+    adjoint_grads_sharded(pool, vjp, rec, tb, ybar_final, GRAD_SHARD_ROWS, tel)
 }
 
 /// Layout-parameterized core (tests pass `shard_rows >= B` to reproduce
@@ -351,6 +368,7 @@ fn adjoint_grads_sharded<V: StageVjp>(
     tb: &Tableau,
     ybar_final: &[f64],
     shard_rows: usize,
+    tel: &mut Recorder,
 ) -> (Vec<f64>, Vec<f64>) {
     let w = vjp.width();
     assert_eq!(rec.n, w, "record width vs the stage VJP's augmented system");
@@ -362,19 +380,30 @@ fn adjoint_grads_sharded<V: StageVjp>(
     if shards.is_empty() {
         return (vec![0.0f64; vjp.n_params()], vec![]);
     }
+    let tracing = tel.is_on();
     let parts = pool.run_range_shards(&shards, |_, r| {
-        adjoint_shard(vjp, rec, &tbf, ybar_final, r.clone())
+        // Each worker records into its own sub-recorder and *returns* it —
+        // no shared telemetry state — so the fixed-order merge below is
+        // independent of which worker ran which shard.
+        let mut sub = if tracing { Recorder::enabled() } else { Recorder::off() };
+        let out = adjoint_shard(vjp, rec, &tbf, ybar_final, r.clone(), &mut sub);
+        (out, sub)
     });
     let mut pbar = vec![0.0f64; vjp.n_params()];
     let mut ybar = Vec::with_capacity(m);
-    for (p, y) in parts {
+    let mut subs = Vec::new();
+    for ((p, y), sub) in parts {
         // Deterministic reduction: fixed shard order, independent of which
         // worker computed which shard.
         for (acc, v) in pbar.iter_mut().zip(&p) {
             *acc += *v;
         }
         ybar.extend(y);
+        if tracing {
+            subs.push(sub);
+        }
     }
+    tel.absorb_in_order(subs);
     (pbar, ybar)
 }
 
@@ -387,6 +416,7 @@ fn adjoint_shard<V: StageVjp>(
     tbf: &TableauCoeffs,
     ybar_final: &[f64],
     rows: Range<usize>,
+    tel: &mut Recorder,
 ) -> (Vec<f64>, Vec<f64>) {
     let w = vjp.width();
     let m = rows.len() * w;
@@ -396,6 +426,7 @@ fn adjoint_shard<V: StageVjp>(
     let mut ybar = ybar_final[rows.start * w..rows.end * w].to_vec();
     let mut kbar: Vec<Vec<f64>> = vec![vec![0.0f64; m]; tbf.stages];
     let mut ubar = vec![0.0f64; m];
+    let mut vjps = 0u64;
     for s in (0..rec.stage_y.len()).rev() {
         for (i, kb) in kbar.iter_mut().enumerate() {
             let c = h * tbf.b[i] as f64;
@@ -407,6 +438,7 @@ fn adjoint_shard<V: StageVjp>(
             if kbar[i].iter().all(|v| *v == 0.0) {
                 continue; // a dead stage contributes neither ū nor θ̄
             }
+            vjps += 1;
             vjp.stage_vjp(
                 &tape,
                 &rec.stage_y[s][i][rows.start * w..rows.end * w],
@@ -430,6 +462,24 @@ fn adjoint_shard<V: StageVjp>(
                 }
             }
         }
+    }
+    if tel.is_on() {
+        // `tape.len()` is the last stage recording's node count; the arena
+        // bytes are the reused buffers' high-water capacity.
+        let nodes = tape.len() as u64;
+        let bytes = tape.arena_bytes() as u64;
+        tel.inc(Counter::StageVjps, vjps);
+        tel.inc(Counter::TapeNodes, nodes);
+        tel.inc(Counter::TapeBytes, bytes);
+        tel.observe(Hist::TapeNodes, nodes as f32);
+        tel.observe(Hist::TapeBytes, bytes as f32);
+        tel.span(
+            "adjoint_shard",
+            rows.start as u64,
+            0,
+            rec.stage_y.len() as u64,
+            [("rows", rows.len() as f64), ("vjps", vjps as f64)],
+        );
     }
     (pbar, ybar)
 }
@@ -527,6 +577,20 @@ pub struct NativeMetrics {
     pub nfe: usize,
 }
 
+impl crate::obs::StepScalars for NativeMetrics {
+    fn loss(&self) -> f32 {
+        self.loss
+    }
+
+    fn task(&self) -> f32 {
+        self.task
+    }
+
+    fn reg(&self) -> f32 {
+        self.reg
+    }
+}
+
 /// The native fixed-grid trainer: MLP dynamics on `t ∈ [0, 1]`, optional
 /// linear classifier head, discrete-adjoint gradients, Adam updates.
 pub struct NativeTrainer {
@@ -543,6 +607,9 @@ pub struct NativeTrainer {
     opt: Adam,
     /// Worker pool behind the forward, the adjoint, and adaptive eval.
     pool: Pool,
+    /// Telemetry sink (off by default; see
+    /// [`enable_recording`](NativeTrainer::enable_recording)).
+    recorder: Recorder,
 }
 
 impl NativeTrainer {
@@ -570,7 +637,21 @@ impl NativeTrainer {
             tb,
             opt: Adam::new(nprm, lr),
             pool: Pool::from_env(),
+            recorder: Recorder::off(),
         }
+    }
+
+    /// Turn on telemetry: forward solves and adjoint shards record into
+    /// the trainer's [`Recorder`], with ticks set to the optimizer step
+    /// count — deterministic at every thread count, and recording never
+    /// touches the numerics.
+    pub fn enable_recording(&mut self) {
+        self.recorder = Recorder::enabled();
+    }
+
+    /// Take the recorder out, leaving telemetry off.
+    pub fn take_recorder(&mut self) -> Recorder {
+        std::mem::take(&mut self.recorder)
     }
 
     /// Override the worker-pool thread count (defaults to
@@ -594,7 +675,15 @@ impl NativeTrainer {
         assert_eq!(x0.len() % self.mlp.state_dim(), 0, "batch shape");
         let reg = RegularizedBatchDynamics::new(self.mlp.clone(), self.order);
         let aug = reg.augment(x0);
-        solve_fixed_batch_record_pooled(&self.pool, &reg, 0.0, 1.0, &aug, self.steps, &self.tb)
+        let rec =
+            solve_fixed_batch_record_pooled(&self.pool, &reg, 0.0, 1.0, &aug, self.steps, &self.tb);
+        if self.recorder.is_on() {
+            let ts = self.recorder.now_ticks();
+            let rows = (x0.len() / self.mlp.state_dim()) as f64;
+            self.recorder.inc(Counter::Nfe, rec.nfe as u64);
+            self.recorder.span("forward", 0, ts, 1, [("nfe", rec.nfe as f64), ("rows", rows)]);
+        }
+        rec
     }
 
     /// Loss, metrics, and adjoint gradients of the MSE objective
@@ -605,6 +694,7 @@ impl NativeTrainer {
         assert!(self.head.is_none(), "mse path is headless; use ce_grads");
         let bsz = x0.len() / n;
         assert!(bsz > 0, "mse_grads: empty batch");
+        self.recorder.set_ticks(self.opt.steps() as u64);
         let rec = self.forward_record(x0);
         let w = n + 1;
         let lam = self.lam as f64;
@@ -621,8 +711,15 @@ impl NativeTrainer {
             ybar[r * w + n] = lam / bsz as f64;
             reg += rec.y[r * w + n] as f64 / bsz as f64;
         }
-        let (grads, _) =
-            adjoint_grads_pooled(&self.pool, &self.mlp, self.order, &rec, &self.tb, &ybar);
+        let vjp = RkStageVjp { mlp: &self.mlp, order: self.order };
+        let (grads, _) = adjoint_stage_grads_traced_pooled(
+            &self.pool,
+            &vjp,
+            &rec,
+            &self.tb,
+            &ybar,
+            &mut self.recorder,
+        );
         let metrics = NativeMetrics {
             loss: (task + lam * reg) as f32,
             task: task as f32,
@@ -640,6 +737,7 @@ impl NativeTrainer {
         let bsz = labels.len();
         assert!(bsz > 0, "ce_grads: empty batch");
         assert_eq!(x0.len(), bsz * n, "ce_grads: batch shape");
+        self.recorder.set_ticks(self.opt.steps() as u64);
         let rec = self.forward_record(x0);
         let w = n + 1;
         let head = self.head.as_ref().expect("ce_grads needs a classifier head"); // taylint: allow(D4) -- documented precondition of the CE path
@@ -673,8 +771,15 @@ impl NativeTrainer {
             ybar[r * w + n] = lam / bsz as f64;
             reg += rec.y[r * w + n] as f64 / bsz as f64;
         }
-        let (pbar, _) =
-            adjoint_grads_pooled(&self.pool, &self.mlp, self.order, &rec, &self.tb, &ybar);
+        let vjp = RkStageVjp { mlp: &self.mlp, order: self.order };
+        let (pbar, _) = adjoint_stage_grads_traced_pooled(
+            &self.pool,
+            &vjp,
+            &rec,
+            &self.tb,
+            &ybar,
+            &mut self.recorder,
+        );
         let mut grads = pbar;
         grads.extend_from_slice(&gw);
         grads.extend_from_slice(&gb);
@@ -998,7 +1103,8 @@ mod tests {
         }
         // the unsharded reference: one shard spanning the whole batch
         let vjp = RkStageVjp { mlp: &mlp, order };
-        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &vjp, &rec, &tb, &ybar, b);
+        let (pu, yu) =
+            adjoint_grads_sharded(&Pool::new(1), &vjp, &rec, &tb, &ybar, b, &mut Recorder::off());
         for (a, w) in y1.iter().zip(&yu) {
             assert_eq!(a.to_bits(), w.to_bits(), "sharded ȳ vs unsharded");
         }
@@ -1050,6 +1156,53 @@ mod tests {
     }
 
     #[test]
+    fn adjoint_stage_grads_traced_pooled_matches_untraced_and_pool_of_one() {
+        // The telemetry-carrying entry point: recording (off or on) must
+        // not move a gradient bit, and the recorded stream itself must be
+        // identical at every thread count (Pool::new(1) is the serial
+        // reference the determinism contract, lint rule D5, pins).
+        let mlp = Mlp::new(1, &[4], true, 29);
+        let order = 2usize;
+        let b = 25usize; // spans two canonical GRAD_SHARD_ROWS shards
+        let mut rng = Pcg::new(31);
+        let x0: Vec<f32> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let reg = RegularizedBatchDynamics::new(mlp.clone(), order);
+        let aug = reg.augment(&x0);
+        let tb = tableau::rk4();
+        let rec = crate::solvers::batch::solve_fixed_batch_record_pooled(
+            &Pool::new(1),
+            &reg,
+            0.0,
+            1.0,
+            &aug,
+            2,
+            &tb,
+        );
+        let ybar: Vec<f64> = (0..b * 2).map(|_| rng.range(-1.0, 1.0) as f64).collect();
+        let vjp = RkStageVjp { mlp: &mlp, order };
+        let (p1, y1) = adjoint_stage_grads_pooled(&Pool::new(1), &vjp, &rec, &tb, &ybar);
+        let serial = Pool::new(1);
+        let mut base_tel = Recorder::enabled();
+        let (bp, by) =
+            adjoint_stage_grads_traced_pooled(&serial, &vjp, &rec, &tb, &ybar, &mut base_tel);
+        assert_eq!(bp, p1, "traced-on θ̄ vs untraced");
+        assert_eq!(by, y1, "traced-on ȳ vs untraced");
+        assert!(!base_tel.events().is_empty(), "adjoint shards must record spans");
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let mut off = Recorder::off();
+            let (po, yo) =
+                adjoint_stage_grads_traced_pooled(&pool, &vjp, &rec, &tb, &ybar, &mut off);
+            assert_eq!(po, p1, "traced-off θ̄ threads={threads}");
+            assert_eq!(yo, y1, "traced-off ȳ threads={threads}");
+            let mut tel = Recorder::enabled();
+            adjoint_stage_grads_traced_pooled(&pool, &vjp, &rec, &tb, &ybar, &mut tel);
+            assert_eq!(tel.events(), base_tel.events(), "trace threads={threads}");
+            assert_eq!(tel.registry(), base_tel.registry(), "registry threads={threads}");
+        }
+    }
+
+    #[test]
     fn small_batch_adjoint_is_the_unsharded_recursion_bit_for_bit() {
         // A batch that fits one canonical shard (B <= GRAD_SHARD_ROWS) IS
         // the pre-refactor full-batch recursion: the public entry point
@@ -1074,7 +1227,8 @@ mod tests {
         let ybar: Vec<f64> = (0..b * 3).map(|_| rng.range(-1.0, 1.0) as f64).collect();
         let (p, y) = adjoint_grads_pooled(&Pool::new(4), &mlp, order, &rec, &tb, &ybar);
         let vjp = RkStageVjp { mlp: &mlp, order };
-        let (pu, yu) = adjoint_grads_sharded(&Pool::new(1), &vjp, &rec, &tb, &ybar, b);
+        let (pu, yu) =
+            adjoint_grads_sharded(&Pool::new(1), &vjp, &rec, &tb, &ybar, b, &mut Recorder::off());
         for (a, w) in p.iter().zip(&pu) {
             assert_eq!(a.to_bits(), w.to_bits(), "θ̄");
         }

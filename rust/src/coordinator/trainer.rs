@@ -62,6 +62,20 @@ impl StepMetrics {
     }
 }
 
+impl crate::obs::StepScalars for StepMetrics {
+    fn loss(&self) -> f32 {
+        StepMetrics::loss(self)
+    }
+
+    fn task(&self) -> f32 {
+        self.primary()
+    }
+
+    fn reg(&self) -> f32 {
+        StepMetrics::reg(self)
+    }
+}
+
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
     exec: Rc<Executable>,

@@ -100,7 +100,7 @@ pub fn train_mnist<'rt>(
     let mut batcher = Batcher::new(&harness.train, harness.b, seed ^ 0xb17c);
     let lr = Schedule::mnist_lr(0.1, iters);
     let mut log = MetricsLog::new(&[
-        "step", "loss", "ce", "reg", "nfe", "train_err", "test_err",
+        "step", "loss", "task", "reg", "nfe", "train_err", "test_err",
     ]);
     let opts = eval_opts();
     for it in 0..iters {
@@ -113,15 +113,7 @@ pub fn train_mnist<'rt>(
             let ev = evaluator::mnist_eval(rt, &tr.store, &x, &l, tb, &opts)?;
             let (xt, lt) = harness.eval_batch(&harness.test, 0);
             let et = evaluator::mnist_eval(rt, &tr.store, &xt, &lt, tb, &opts)?;
-            log.push(vec![
-                it as f64,
-                m.values.first().copied().unwrap_or(f32::NAN) as f64,
-                m.values.get(1).copied().unwrap_or(f32::NAN) as f64,
-                m.values.get(2).copied().unwrap_or(f32::NAN) as f64,
-                ev.nfe as f64,
-                ev.err_rate as f64,
-                et.err_rate as f64,
-            ]);
+            log.push_step(it, &m, &[ev.nfe as f64, ev.err_rate as f64, et.err_rate as f64]);
         }
     }
     Ok((tr, log))
@@ -182,15 +174,14 @@ pub fn train_cnf<'rt>(
 ) -> Result<(Trainer<'rt>, f64, f32)> {
     let mut tr = Trainer::new(rt, artifact, seed)?;
     let mut rng = Pcg::new(seed ^ 0xc4f);
-    // taylint: allow(D3) -- wall-clock for the reported seconds column only
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::clock::Stopwatch::start();
     let mut last = f32::NAN;
     for _ in 0..iters {
         let x = harness.batch(&mut rng);
         let m = tr.step(&BatchInputs::default().f("x", x), lam, 1e-3)?;
         last = m.loss();
     }
-    Ok((tr, t0.elapsed().as_secs_f64(), last))
+    Ok((tr, t0.elapsed_secs(), last))
 }
 
 // ---------------------------------------------------------------------------

@@ -52,7 +52,7 @@ pub fn mnist_lambda_sweep(
             common::train_mnist(rt, h, artifact, iters, lam, 100 + i as u64, iters, &tb)?;
         out.push((
             lam,
-            log.last("ce"),
+            log.last("task"),
             log.last("nfe"),
             log.last("test_err"),
             log.last("train_err"),

@@ -35,10 +35,9 @@ pub fn table3(scale: Scale) -> Result<Table> {
     let mut table = Table::new(&["method", "steps", "secs", "loss", "NFE", "R_2", "B", "K"]);
     for (label, artifact, lam) in rows {
         let steps = artifact.rsplit("_s").next().unwrap_or("").to_string();
-        // taylint: allow(D3) -- wall-clock column shown in the table; never feeds the numerics
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::Stopwatch::start();
         let (tr, _) = common::train_mnist(&rt, &h, artifact, scale.iters, lam, 1, 0, &tb)?;
-        let secs = t0.elapsed().as_secs_f64();
+        let secs = t0.elapsed_secs();
         let (x, l) = h.eval_batch(&h.train, 0);
         let ev = evaluator::mnist_eval(&rt, &tr.store, &x, &l, &tb, &opts)?;
         let mut rng = Pcg::new(51);

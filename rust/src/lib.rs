@@ -37,8 +37,12 @@
 //! * [`tensor`], [`util`] — substrates (vec math, PRNG, JSON, CLI, bench,
 //!   and the scoped worker pool `util::pool` behind the parallel
 //!   execution layer).
+//! * [`obs`] — deterministic telemetry: the zero-cost-off `Recorder`,
+//!   fixed log₂ histogram / counter registry, and Chrome-Trace NDJSON
+//!   export (`repro trace`), with per-shard buffers merged in fixed order
+//!   so same-seed traces are bit-identical at any thread count.
 //! * [`analysis`] — `taylint`, the in-repo determinism lint: a
-//!   dependency-free tokenizer + rule catalog (D1–D5) that machine-checks
+//!   dependency-free tokenizer + rule catalog (D1–D6) that machine-checks
 //!   the bit-identity invariants the pool guarantees (run via `make lint`
 //!   or the `taylint` binary).
 
@@ -54,6 +58,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod serving;
 pub mod solvers;

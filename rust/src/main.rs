@@ -7,16 +7,23 @@
 //!   experiment <id|all> [--quick]— regenerate a paper table/figure
 //!   solvers                      — list the RK tableau suite
 //!   serve [--quick]              — continuous-batching serving demo
+//!   trace <serve|experiment>     — telemetry-enabled drive → Chrome Trace NDJSON
+//!   perfdiff <base> <new>        — numeric-leaf delta between two bench JSONs
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use taynode::coordinator::{evaluator, BatchInputs, Trainer};
+use taynode::coordinator::{evaluator, BatchInputs, NativeTrainer, Trainer};
 use taynode::data::{synth_mnist, Batcher, Dataset};
 use taynode::experiments::{self, Scale};
+use taynode::nn::Mlp;
+use taynode::obs::{Counter, Recorder, TraceDoc};
 use taynode::serving;
-use taynode::solvers::tableau;
+use taynode::solvers::{solve_adaptive_batch_traced_pooled, tableau, AdaptiveOpts};
 use taynode::util::bench::Table;
 use taynode::util::cli::Args;
+use taynode::util::json::Json;
 use taynode::util::pool::Pool;
 use taynode::util::rng::Pcg;
 
@@ -39,6 +46,8 @@ fn dispatch(args: &Args) -> Result<()> {
             experiments::run(&id, scale)
         }
         "serve" => serve(args),
+        "trace" => trace_cmd(args),
+        "perfdiff" => perfdiff(args),
         "solvers" => {
             println!(
                 "{:<12} {:>6} {:>7} {:>9} {:>6}",
@@ -64,7 +73,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  repro train --artifact mnist_train_k2_s8 [--iters N] [--lam F] [--lr F]\n  \
                  repro eval --model toy|mnist [--solver dopri5] [--rtol F]\n  \
                  repro experiment <fig1..fig12|native|cnf|table2|table3|table4|all> [--quick]\n  \
-                 repro serve [--quick] [--seed N] [--requests N] [--batch N] [--rate F]"
+                 repro serve [--quick] [--seed N] [--requests N] [--batch N] [--rate F]\n  \
+                 repro trace <serve|experiment> [--quick] [--seed N] [--out PATH]\n  \
+                 repro perfdiff <base.json> <new.json>"
             );
             Ok(())
         }
@@ -136,6 +147,173 @@ fn serve(args: &Args) -> Result<()> {
     }
     table.print();
     Ok(())
+}
+
+/// `repro trace <serve|experiment>` — run a telemetry-enabled drive and
+/// export Chrome Trace Event Format NDJSON (Perfetto loads it directly;
+/// for `chrome://tracing` wrap the lines in a JSON array).  The trace is
+/// deterministic: same seed ⇒ byte-identical file at any `TAYNODE_THREADS`.
+fn trace_cmd(args: &Args) -> Result<()> {
+    let which = args.pos(1).unwrap_or("serve");
+    let out = args.str_or("out", "trace.ndjson").to_string();
+    let doc = match which {
+        "serve" => trace_serve(args)?,
+        "experiment" => trace_experiment(args)?,
+        other => bail!("trace supports serve|experiment, got {other:?}"),
+    };
+    std::fs::write(&out, doc.to_ndjson())?;
+    println!("wrote {} trace records to {out}  (hash {:016x})", doc.line_count(), doc.hash());
+    Ok(())
+}
+
+fn trace_serve(args: &Args) -> Result<TraceDoc> {
+    let quick = args.bool("quick");
+    let seed = args.u64_or("seed", 7)?;
+    let total = args.usize_or("requests", if quick { 40 } else { 200 })? as u64;
+    let capacity = args.usize_or("batch", if quick { 8 } else { 32 })?;
+    let rate = args.f64_or("rate", capacity as f64 / 8.0)?;
+    let pool = Pool::from_env();
+    let (trace, recs) = if pool.threads() > 1 {
+        serving::run_poisson_traced_pooled(&pool, seed, capacity, rate, total)
+    } else {
+        serving::run_poisson_traced(seed, capacity, rate, total)
+    };
+    println!(
+        "served {} requests in {} steps  (threads {}, capacity {capacity}, rate {rate})",
+        trace.submitted,
+        trace.steps,
+        pool.threads()
+    );
+    let mut doc = TraceDoc::new();
+    for (pid, (name, rec)) in recs.iter().enumerate() {
+        let label = format!("serve/{name}");
+        doc.add_process(pid as u64, &label, rec);
+        print_registry(&label, rec);
+    }
+    Ok(doc)
+}
+
+fn trace_experiment(args: &Args) -> Result<TraceDoc> {
+    let quick = args.bool("quick");
+    let seed = args.u64_or("seed", 3)?;
+    let iters = args.usize_or("iters", if quick { 2 } else { 8 })?;
+    let b = args.usize_or("batch", if quick { 32 } else { 128 })?;
+    let pool = Pool::from_env();
+    let mut rng = Pcg::new(seed ^ 0x7e57);
+
+    // Process 0: a native train drive — forward + adjoint-shard spans per
+    // optimizer step, tape-arena counters.
+    let mlp = Mlp::new(2, &[16, 16], true, seed);
+    let mut tr = NativeTrainer::new(mlp, None, 2, 0.01, 8, tableau::dopri5(), 0.05)
+        .with_threads(pool.threads());
+    tr.enable_recording();
+    let x0: Vec<f32> = (0..b * 2).map(|_| rng.range(-1.0, 1.0)).collect();
+    let targets: Vec<f32> = x0.iter().map(|v| -v).collect();
+    let mut last = f32::NAN;
+    for _ in 0..iters {
+        last = tr.step_mse(&x0, &targets).loss;
+    }
+    let train_rec = tr.take_recorder();
+    println!("trained {iters} steps (threads {}, loss {last:.5})", pool.threads());
+
+    // Process 1: a pooled adaptive solve — per-trajectory spans plus
+    // step-size / error-norm histograms.
+    let f = Mlp::new(2, &[16, 16], true, seed ^ 1);
+    let y0: Vec<f32> = (0..b * 2).map(|_| rng.range(-1.0, 1.0)).collect();
+    let opts = AdaptiveOpts { rtol: 1e-5, atol: 1e-7, ..Default::default() };
+    let mut solve_rec = Recorder::enabled();
+    let res = solve_adaptive_batch_traced_pooled(
+        &pool,
+        &f,
+        0.0,
+        1.0,
+        &y0,
+        &tableau::dopri5(),
+        &opts,
+        &mut solve_rec,
+    );
+    let nfe: usize = res.stats.iter().map(|s| s.nfe).sum();
+    println!("solved {b} trajectories adaptively (total NFE {nfe})");
+
+    let mut doc = TraceDoc::new();
+    doc.add_process(0, "train/native", &train_rec);
+    doc.add_process(1, "solve/pooled", &solve_rec);
+    print_registry("train/native", &train_rec);
+    print_registry("solve/pooled", &solve_rec);
+    Ok(doc)
+}
+
+/// Print a recorder's non-zero counters as a table.
+fn print_registry(label: &str, rec: &Recorder) {
+    let Some(reg) = rec.registry() else { return };
+    let mut table = Table::new(&["counter", "value"]);
+    for c in Counter::ALL {
+        let v = reg.get(c);
+        if v > 0 {
+            table.row(vec![format!("{label}/{}", c.name()), v.to_string()]);
+        }
+    }
+    if table.row_count() > 0 {
+        table.print();
+    }
+}
+
+/// `repro perfdiff <base.json> <new.json>` — flatten every numeric leaf of
+/// both files to a dotted path and print per-path deltas (the `make perf`
+/// target runs this against the committed BENCH_*.json baselines).
+fn perfdiff(args: &Args) -> Result<()> {
+    let base_path = args.pos(1).ok_or_else(|| anyhow::anyhow!("perfdiff needs <base> <new>"))?;
+    let new_path = args.pos(2).ok_or_else(|| anyhow::anyhow!("perfdiff needs <base> <new>"))?;
+    let base = flatten_json(&std::fs::read_to_string(base_path)?)?;
+    let new = flatten_json(&std::fs::read_to_string(new_path)?)?;
+    if base.is_empty() {
+        println!("note: {base_path} has no numeric leaves (unseeded baseline?)");
+    }
+    let mut table = Table::new(&["metric", "base", "new", "delta%"]);
+    for (k, nv) in &new {
+        let (b, d) = match base.get(k) {
+            Some(bv) if *bv != 0.0 => {
+                (format!("{bv:.6}"), format!("{:+.1}%", (nv - bv) / bv * 100.0))
+            }
+            Some(bv) => (format!("{bv:.6}"), "-".to_string()),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        table.row(vec![k.clone(), b, format!("{nv:.6}"), d]);
+    }
+    for k in base.keys() {
+        if !new.contains_key(k) {
+            table.row(vec![k.clone(), "(dropped)".to_string(), "-".to_string(), "-".to_string()]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn flatten_json(s: &str) -> Result<BTreeMap<String, f64>> {
+    let j = Json::parse(s)?;
+    let mut out = BTreeMap::new();
+    flatten_into(&j, String::new(), &mut out);
+    Ok(out)
+}
+
+fn flatten_into(j: &Json, path: String, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Num(v) => {
+            out.insert(path, *v);
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                flatten_into(v, p, out);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                flatten_into(v, format!("{path}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
 }
 
 /// Nearest-rank percentile of an ascending-sorted sample (0 when empty).

@@ -1,0 +1,303 @@
+//! Deterministic telemetry: structured tracing + a metrics registry for
+//! the solver, adjoint, and serving hot paths.
+//!
+//! Design constraints (the D-catalog, by construction):
+//!
+//! * **Zero-cost off.** [`Recorder::off`] holds no buffer; every record
+//!   method is an `#[inline]` early return on a `None` check, so disabled
+//!   telemetry adds a handful of predicted branches to the hot path
+//!   (gated ≤ 5% in `benches/perf_obs.rs`).
+//! * **Bit-identical at any thread count.** Timestamps come from the
+//!   deterministic [`util::clock::StepClock`] (solver attempts, engine
+//!   steps — never wall time).  Parallel regions record into per-shard
+//!   sub-recorders that workers *return* (no shared state, no sync — D2
+//!   stays clean) and the caller merges: in fixed shard order when the
+//!   shard layout is thread-count independent ([`Recorder::absorb_in_order`],
+//!   adjoint shards), or canonicalized by trajectory track when it is not
+//!   ([`Recorder::absorb_by_track`], pooled solves whose chunk layout
+//!   depends on the worker count).  Either way the merged trace is a pure
+//!   function of the seed.
+//! * **Allocation-light.** Events are plain-old-data with `&'static str`
+//!   names and at most two inline f64 args; histograms are fixed arrays
+//!   ([`registry::Log2Hist`]); nothing keyed, nothing hashed.
+//!
+//! Export is Chrome Trace Event Format NDJSON via [`trace::TraceDoc`]
+//! (`repro trace <experiment|serve>`), loadable in Perfetto or
+//! `chrome://tracing`.
+//!
+//! [`util::clock::StepClock`]: crate::util::clock::StepClock
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Hist, Log2Hist, Registry};
+pub use trace::TraceDoc;
+
+use crate::solvers::SolveStats;
+use crate::util::clock::{Clock, StepClock};
+
+/// Event kind, mapping onto Chrome Trace phases: `Span` → complete event
+/// `"X"`, `Instant` → `"i"`, `Counter` → `"C"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+    Counter,
+}
+
+/// Unused argument slots carry an empty name and are skipped on export.
+pub const NO_ARGS: [(&str, f64); 2] = [("", 0.0), ("", 0.0)];
+
+/// One telemetry event: plain old data, no allocation.  `track` maps to
+/// the Chrome trace `tid` (a trajectory id, request id, or shard index —
+/// whatever is stable across thread counts for the emitting layer); `ts`
+/// and `dur` are deterministic ticks, not wall time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub name: &'static str,
+    pub kind: EventKind,
+    pub track: u64,
+    pub ts: u64,
+    pub dur: u64,
+    pub args: [(&'static str, f64); 2],
+}
+
+struct RecBuf {
+    events: Vec<Event>,
+    reg: Registry,
+    clock: StepClock,
+}
+
+/// The event/metrics recorder.  Off by default ([`Recorder::off`]); every
+/// instrumented structure owns one and exposes it via accessors, so
+/// enabling telemetry is a per-run decision with no type changes.
+#[derive(Default)]
+pub struct Recorder {
+    buf: Option<Box<RecBuf>>,
+}
+
+impl Recorder {
+    /// The no-op recorder: no buffer, every record call an early return.
+    pub fn off() -> Recorder {
+        Recorder { buf: None }
+    }
+
+    pub fn enabled() -> Recorder {
+        Recorder {
+            buf: Some(Box::new(RecBuf {
+                events: Vec::new(),
+                reg: Registry::new(),
+                clock: StepClock::new(),
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Set the deterministic clock to an externally-maintained tick count
+    /// (e.g. the serving engine's step number).  No-op when off.
+    #[inline]
+    pub fn set_ticks(&mut self, ticks: u64) {
+        if let Some(b) = &mut self.buf {
+            b.clock.set_ticks(ticks);
+        }
+    }
+
+    /// Current deterministic ticks (0 when off).
+    #[inline]
+    pub fn now_ticks(&self) -> u64 {
+        self.buf.as_ref().map_or(0, |b| b.clock.now_ticks())
+    }
+
+    #[inline]
+    pub fn span(
+        &mut self,
+        name: &'static str,
+        track: u64,
+        ts: u64,
+        dur: u64,
+        args: [(&'static str, f64); 2],
+    ) {
+        if let Some(b) = &mut self.buf {
+            b.events.push(Event { name, kind: EventKind::Span, track, ts, dur, args });
+        }
+    }
+
+    #[inline]
+    pub fn instant(
+        &mut self,
+        name: &'static str,
+        track: u64,
+        ts: u64,
+        args: [(&'static str, f64); 2],
+    ) {
+        if let Some(b) = &mut self.buf {
+            b.events.push(Event { name, kind: EventKind::Instant, track, ts, dur: 0, args });
+        }
+    }
+
+    /// A Chrome counter-track sample (`ph:"C"`): `value` at tick `ts`.
+    #[inline]
+    pub fn counter(&mut self, name: &'static str, ts: u64, value: f64) {
+        if let Some(b) = &mut self.buf {
+            b.events.push(Event {
+                name,
+                kind: EventKind::Counter,
+                track: 0,
+                ts,
+                dur: 0,
+                args: [("value", value), ("", 0.0)],
+            });
+        }
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: Counter, by: u64) {
+        if let Some(b) = &mut self.buf {
+            b.reg.inc(c, by);
+        }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: Hist, v: f32) {
+        if let Some(b) = &mut self.buf {
+            b.reg.observe(h, v);
+        }
+    }
+
+    /// Fold a retired trajectory's [`SolveStats`] into the counters — the
+    /// single stats→counters conversion (see [`Registry::absorb_solve_stats`]).
+    #[inline]
+    pub fn absorb_stats(&mut self, s: &SolveStats) {
+        if let Some(b) = &mut self.buf {
+            b.reg.absorb_solve_stats(s);
+        }
+    }
+
+    /// Recorded events, in buffer order (empty when off).
+    pub fn events(&self) -> &[Event] {
+        self.buf.as_ref().map_or(&[], |b| &b.events)
+    }
+
+    /// The metrics registry, if recording.
+    pub fn registry(&self) -> Option<&Registry> {
+        self.buf.as_ref().map(|b| &b.reg)
+    }
+
+    /// Merge per-shard sub-recorders whose shard layout is fixed (does not
+    /// depend on the worker count, e.g. adjoint shards of `ceil(B/16)`
+    /// rows): events concatenate in the given order, registries sum.
+    /// Deterministic because the caller supplies shards in index order.
+    pub fn absorb_in_order(&mut self, parts: Vec<Recorder>) {
+        let Some(b) = &mut self.buf else { return };
+        for p in parts {
+            if let Some(pb) = p.buf {
+                b.events.extend(pb.events);
+                b.reg.absorb(&pb.reg);
+            }
+        }
+    }
+
+    /// Merge per-chunk sub-recorders whose chunk layout *does* depend on
+    /// the worker count (pooled solves over `chunk_ranges(b, threads)`).
+    /// Only per-track (per-trajectory) events may be recorded in such
+    /// regions; concatenating in chunk order and stable-sorting by track
+    /// then canonicalizes the stream — each track lives in exactly one
+    /// chunk and its internal order is preserved, so the result is
+    /// identical for every chunking of the same rows.
+    pub fn absorb_by_track(&mut self, parts: Vec<Recorder>) {
+        let Some(b) = &mut self.buf else { return };
+        let start = b.events.len();
+        for p in parts {
+            if let Some(pb) = p.buf {
+                b.events.extend(pb.events);
+                b.reg.absorb(&pb.reg);
+            }
+        }
+        b.events[start..].sort_by_key(|e| e.track);
+    }
+}
+
+/// The canonical per-step scalar accessors shared by the XLA-path
+/// [`StepMetrics`] and the native-path [`NativeMetrics`], so loggers and
+/// the CLI consume one taxonomy instead of per-trainer field names.
+///
+/// [`StepMetrics`]: crate::coordinator::StepMetrics
+/// [`NativeMetrics`]: crate::coordinator::NativeMetrics
+pub trait StepScalars {
+    /// Total objective (task + regularization).
+    fn loss(&self) -> f32;
+    /// Task term (MSE / NLL / cross-entropy).
+    fn task(&self) -> f32;
+    /// Regularization term (λ·R_K or zero).
+    fn reg(&self) -> f32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_recorder_records_nothing() {
+        let mut r = Recorder::off();
+        r.span("s", 0, 0, 1, NO_ARGS);
+        r.inc(Counter::Nfe, 5);
+        r.observe(Hist::StepSize, 0.1);
+        r.counter("q", 0, 1.0);
+        r.set_ticks(9);
+        assert!(!r.is_on());
+        assert_eq!(r.now_ticks(), 0);
+        assert!(r.events().is_empty());
+        assert!(r.registry().is_none());
+    }
+
+    #[test]
+    fn track_merge_is_chunking_independent() {
+        // Six per-track events split two different ways must merge to the
+        // same stream (the pooled-solve determinism argument in miniature).
+        let mk = |tracks: &[u64]| {
+            let mut r = Recorder::enabled();
+            for (i, t) in tracks.iter().enumerate() {
+                r.span("traj", *t, 0, i as u64, NO_ARGS);
+                r.inc(Counter::Retired, 1);
+            }
+            r
+        };
+        let mut a = Recorder::enabled();
+        a.absorb_by_track(vec![mk(&[0, 1, 1]), mk(&[2, 3, 3])]);
+        let mut b = Recorder::enabled();
+        b.absorb_by_track(vec![mk(&[0]), mk(&[1, 1, 2]), mk(&[3, 3])]);
+        let key = |r: &Recorder| -> Vec<(u64, u64)> {
+            r.events().iter().map(|e| (e.track, e.dur)).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+        assert_eq!(
+            a.registry().unwrap().get(Counter::Retired),
+            b.registry().unwrap().get(Counter::Retired)
+        );
+    }
+
+    #[test]
+    fn in_order_merge_concatenates() {
+        let mut part1 = Recorder::enabled();
+        part1.span("shard", 0, 0, 3, NO_ARGS);
+        let mut part2 = Recorder::enabled();
+        part2.span("shard", 1, 0, 3, NO_ARGS);
+        let mut root = Recorder::enabled();
+        root.absorb_in_order(vec![part1, part2]);
+        let tracks: Vec<u64> = root.events().iter().map(|e| e.track).collect();
+        assert_eq!(tracks, vec![0, 1]);
+    }
+
+    #[test]
+    fn clock_ticks_stamp_events() {
+        let mut r = Recorder::enabled();
+        r.set_ticks(7);
+        let ts = r.now_ticks();
+        r.instant("admit_wave", 0, ts, [("rows", 4.0), ("", 0.0)]);
+        assert_eq!(r.events()[0].ts, 7);
+    }
+}

@@ -1,0 +1,303 @@
+//! The metrics registry: one fixed counter/histogram taxonomy for every
+//! layer (solver, adjoint, tape, serving), so NFE/accept accounting lives
+//! in exactly one place and cannot double-count across paths.
+//!
+//! Counters are monotonic `u64` adds and histograms are fixed-bucket
+//! log₂ tallies, so merging per-shard registries is an elementwise sum —
+//! associative and commutative — and the merged registry is bit-identical
+//! at any thread count by construction.
+
+use crate::solvers::SolveStats;
+use crate::util::json::Json;
+
+/// The monotonic counters.  [`Registry::absorb_solve_stats`] is the one
+/// sanctioned fold from per-trajectory [`SolveStats`] into `Nfe` /
+/// `Accepted` / `Rejected`: the solver layer counts at retirement and no
+/// other layer re-counts (the "one counter taxonomy" invariant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Model evaluations, folded from retired trajectories' stats.
+    Nfe,
+    /// Accepted solver steps (same fold).
+    Accepted,
+    /// Rejected solver steps (same fold).
+    Rejected,
+    /// Rows admitted into a stepper's working set.
+    Admitted,
+    /// Rows retired from a stepper's working set.
+    Retired,
+    /// Requests that exhausted their deadline budget (serving layer).
+    DeadlineMiss,
+    /// Reverse-mode stage VJP invocations (adjoint layer).
+    StageVjps,
+    /// Tape nodes allocated across stage VJPs (adjoint layer).
+    TapeNodes,
+    /// Tape arena bytes touched across stage VJPs (adjoint layer).
+    TapeBytes,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 9] = [
+        Counter::Nfe,
+        Counter::Accepted,
+        Counter::Rejected,
+        Counter::Admitted,
+        Counter::Retired,
+        Counter::DeadlineMiss,
+        Counter::StageVjps,
+        Counter::TapeNodes,
+        Counter::TapeBytes,
+    ];
+
+    /// Canonical wire name (JSON exports, tables, MetricsLog columns).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Nfe => "nfe",
+            Counter::Accepted => "accepted",
+            Counter::Rejected => "rejected",
+            Counter::Admitted => "admitted",
+            Counter::Retired => "retired",
+            Counter::DeadlineMiss => "deadline_miss",
+            Counter::StageVjps => "stage_vjps",
+            Counter::TapeNodes => "tape_nodes",
+            Counter::TapeBytes => "tape_bytes",
+        }
+    }
+}
+
+/// The fixed log₂ histograms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Accepted step magnitudes `|h|`.
+    StepSize,
+    /// Per-attempt embedded error norms.
+    ErrNorm,
+    /// Admission-wave sizes (serving layer).
+    AdmitWave,
+    /// Queue depth per engine step (serving layer).
+    QueueDepth,
+    /// Admit→retire latency in engine steps per request (serving layer).
+    LatencySteps,
+    /// Tape node count per stage VJP (adjoint layer).
+    TapeNodes,
+    /// Tape arena bytes per stage VJP (adjoint layer).
+    TapeBytes,
+}
+
+impl Hist {
+    pub const ALL: [Hist; 7] = [
+        Hist::StepSize,
+        Hist::ErrNorm,
+        Hist::AdmitWave,
+        Hist::QueueDepth,
+        Hist::LatencySteps,
+        Hist::TapeNodes,
+        Hist::TapeBytes,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::StepSize => "step_size",
+            Hist::ErrNorm => "err_norm",
+            Hist::AdmitWave => "admit_wave",
+            Hist::QueueDepth => "queue_depth",
+            Hist::LatencySteps => "latency_steps",
+            Hist::TapeNodes => "tape_nodes",
+            Hist::TapeBytes => "tape_bytes",
+        }
+    }
+}
+
+/// A fixed-bucket log₂ histogram: bucket index is the IEEE-754 biased
+/// exponent of `|v|` as an `f32`, so bucket `i` tallies values with
+/// `floor(log₂|v|) == i − 127` (bucket 0 holds zero/subnormals, bucket
+/// 255 non-finite values).  Bucketing is pure bit arithmetic — no float
+/// comparisons, no allocation — so observation order never matters and
+/// merged histograms are exact sums.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Log2Hist {
+    buckets: [u64; 256],
+}
+
+impl Default for Log2Hist {
+    fn default() -> Log2Hist {
+        Log2Hist { buckets: [0u64; 256] }
+    }
+}
+
+impl Log2Hist {
+    pub fn new() -> Log2Hist {
+        Log2Hist::default()
+    }
+
+    #[inline]
+    pub fn observe(&mut self, v: f32) {
+        let idx = ((v.abs().to_bits() >> 23) & 0xff) as usize;
+        self.buckets[idx] += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Observations in the bucket for `floor(log₂|v|) == e`.
+    pub fn bucket(&self, e: i32) -> u64 {
+        let idx = e + 127;
+        if (0..=255).contains(&idx) {
+            self.buckets[idx as usize]
+        } else {
+            0
+        }
+    }
+
+    pub fn absorb(&mut self, other: &Log2Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+    }
+
+    /// Non-empty buckets as `[log2, count]` pairs, ascending.
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for (i, c) in self.buckets.iter().enumerate() {
+            if *c > 0 {
+                arr.push(Json::Arr(vec![
+                    Json::Num(i as f64 - 127.0),
+                    Json::Num(*c as f64),
+                ]));
+            }
+        }
+        Json::Arr(arr)
+    }
+}
+
+/// A fixed-size counter + histogram set; see the module docs.
+#[derive(Clone, Default, PartialEq, Eq)]
+pub struct Registry {
+    counters: [u64; Counter::ALL.len()],
+    hists: [Log2Hist; Hist::ALL.len()],
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: Counter, by: u64) {
+        self.counters[c as usize] += by;
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: Hist, v: f32) {
+        self.hists[h as usize].observe(v);
+    }
+
+    pub fn hist(&self, h: Hist) -> &Log2Hist {
+        &self.hists[h as usize]
+    }
+
+    /// The one fold from solver stats into the counter taxonomy: called at
+    /// trajectory retirement (and nowhere else, so nothing double-counts).
+    pub fn absorb_solve_stats(&mut self, s: &SolveStats) {
+        self.inc(Counter::Nfe, s.nfe as u64);
+        self.inc(Counter::Accepted, s.accepted as u64);
+        self.inc(Counter::Rejected, s.rejected as u64);
+    }
+
+    /// Elementwise merge (used when per-shard registries join in fixed
+    /// shard order; sums are order-independent anyway).
+    pub fn absorb(&mut self, other: &Registry) {
+        for (a, b) in self.counters.iter_mut().zip(&other.counters) {
+            *a += *b;
+        }
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.absorb(b);
+        }
+    }
+
+    /// `{"counters": {...}, "hists": {name: [[log2, count], ...]}}` with
+    /// zero entries omitted — the registry's canonical JSON form.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Vec::new();
+        for c in Counter::ALL {
+            if self.get(c) > 0 {
+                counters.push((c.name(), Json::Num(self.get(c) as f64)));
+            }
+        }
+        let mut hists = Vec::new();
+        for h in Hist::ALL {
+            if self.hist(h).count() > 0 {
+                hists.push((h.name(), self.hist(h).to_json()));
+            }
+        }
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("hists", Json::obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_buckets_land_on_the_exponent() {
+        let mut h = Log2Hist::new();
+        h.observe(1.0); // 2^0
+        h.observe(1.5); // still 2^0
+        h.observe(0.25); // 2^-2
+        h.observe(-0.25); // magnitude bucketing
+        h.observe(1024.0); // 2^10
+        h.observe(0.0); // zero bucket
+        assert_eq!(h.bucket(0), 2);
+        assert_eq!(h.bucket(-2), 2);
+        assert_eq!(h.bucket(10), 1);
+        assert_eq!(h.bucket(-127), 1);
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn registry_merge_is_an_elementwise_sum() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.inc(Counter::Nfe, 3);
+        b.inc(Counter::Nfe, 4);
+        b.inc(Counter::Retired, 1);
+        a.observe(Hist::StepSize, 0.5);
+        b.observe(Hist::StepSize, 0.5);
+        a.absorb(&b);
+        assert_eq!(a.get(Counter::Nfe), 7);
+        assert_eq!(a.get(Counter::Retired), 1);
+        assert_eq!(a.hist(Hist::StepSize).bucket(-1), 2);
+    }
+
+    #[test]
+    fn solve_stats_fold_hits_the_three_counters() {
+        let mut r = Registry::new();
+        let s = SolveStats { nfe: 10, accepted: 3, rejected: 1, h_final: 0.1 };
+        r.absorb_solve_stats(&s);
+        assert_eq!(r.get(Counter::Nfe), 10);
+        assert_eq!(r.get(Counter::Accepted), 3);
+        assert_eq!(r.get(Counter::Rejected), 1);
+    }
+
+    #[test]
+    fn json_form_omits_zero_entries() {
+        let mut r = Registry::new();
+        r.inc(Counter::Admitted, 2);
+        r.observe(Hist::AdmitWave, 2.0);
+        let j = r.to_json();
+        let c = j.req("counters").unwrap();
+        assert_eq!(c.req("admitted").unwrap().as_f64(), Some(2.0));
+        assert!(c.get("nfe").is_none());
+        let hist = j.req("hists").unwrap().req("admit_wave").unwrap();
+        assert_eq!(hist.to_string(), "[[1,1]]");
+    }
+}

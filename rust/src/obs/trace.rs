@@ -1,0 +1,225 @@
+//! Chrome Trace Event Format export as NDJSON.
+//!
+//! One JSON object per line (the JSON Lines flavor of the trace format —
+//! Perfetto and `chrome://tracing` both accept a plain JSON array, so the
+//! README documents wrapping the lines for viewers that want one; Perfetto
+//! ingests the newline-delimited form directly).  Serialization goes
+//! through [`util::json::Json`], whose `BTreeMap`-backed writer is
+//! canonical — key order, number formatting — so byte-equality of two
+//! trace files is a meaningful determinism check (`cmp` in CI, FNV hash in
+//! the CLI).
+//!
+//! [`util::json::Json`]: crate::util::json::Json
+
+use anyhow::{Context, Result};
+
+use super::{Event, EventKind, Recorder};
+use crate::util::json::Json;
+
+/// Builder for a multi-process trace document: each instrumented unit
+/// (a served model, a trainer, a pooled solve) becomes one Chrome `pid`
+/// with a `process_name` metadata record, its events on `tid` = event
+/// track, and its metrics registry attached as a `registry` metadata
+/// record (viewers ignore unknown metadata; `repro trace` reads it back
+/// for the counters table).
+#[derive(Default)]
+pub struct TraceDoc {
+    lines: Vec<Json>,
+}
+
+fn arg_json(v: f64) -> Json {
+    // The canonical writer degrades non-finite numbers to null; a diverged
+    // solve can legitimately surface one (e.g. a final |h|), so encode
+    // those as strings and keep the value visible in the viewer.
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
+fn args_obj(args: &[(&str, f64)]) -> Json {
+    Json::obj(
+        args.iter()
+            .filter(|(k, _)| !k.is_empty())
+            .map(|(k, v)| (*k, arg_json(*v)))
+            .collect(),
+    )
+}
+
+fn event_json(pid: u64, e: &Event) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(e.name)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(e.track as f64)),
+        ("ts", Json::Num(e.ts as f64)),
+        ("args", args_obj(&e.args)),
+    ];
+    match e.kind {
+        EventKind::Span => {
+            fields.push(("ph", Json::str("X")));
+            fields.push(("dur", Json::Num(e.dur as f64)));
+        }
+        EventKind::Instant => {
+            fields.push(("ph", Json::str("i")));
+            fields.push(("s", Json::str("t")));
+        }
+        EventKind::Counter => {
+            fields.push(("ph", Json::str("C")));
+        }
+    }
+    Json::obj(fields)
+}
+
+impl TraceDoc {
+    pub fn new() -> TraceDoc {
+        TraceDoc::default()
+    }
+
+    /// Add one recorder's stream as Chrome process `pid` named `name`.
+    /// A recorder that is off contributes only the name record.
+    pub fn add_process(&mut self, pid: u64, name: &str, rec: &Recorder) {
+        self.lines.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+        for e in rec.events() {
+            self.lines.push(event_json(pid, e));
+        }
+        if let Some(reg) = rec.registry() {
+            self.lines.push(Json::obj(vec![
+                ("name", Json::str("registry")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", reg.to_json()),
+            ]));
+        }
+    }
+
+    pub fn line_count(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// The NDJSON document: one canonical JSON object per line, trailing
+    /// newline included.
+    pub fn to_ndjson(&self) -> String {
+        let mut out = String::new();
+        for l in &self.lines {
+            out.push_str(&l.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// FNV-1a over the NDJSON bytes — the trace identity used by the CLI
+    /// and the cross-thread-count CI check.
+    pub fn hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_ndjson().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+}
+
+/// Parse an NDJSON trace back into per-line values (round-trip tests, the
+/// `perfdiff`-style tooling).  Blank lines are permitted; anything else
+/// must be a complete JSON value or the whole parse fails with the
+/// offending line number.
+pub fn parse_ndjson(s: &str) -> Result<Vec<Json>> {
+    let mut out = Vec::new();
+    for (i, line) in s.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(Json::parse(line).with_context(|| format!("ndjson line {}", i + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Counter, NO_ARGS};
+
+    fn sample_doc() -> TraceDoc {
+        let mut rec = Recorder::enabled();
+        rec.span("traj", 3, 0, 17, [("nfe", 104.0), ("rejected", 2.0)]);
+        rec.instant("admit_wave", 0, 5, [("rows", 4.0), ("", 0.0)]);
+        rec.counter("queue_depth", 5, 2.0);
+        rec.inc(Counter::Admitted, 4);
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "serve/toy", &rec);
+        doc
+    }
+
+    #[test]
+    fn ndjson_round_trips_through_the_parser() {
+        let doc = sample_doc();
+        let lines = parse_ndjson(&doc.to_ndjson()).unwrap();
+        assert_eq!(lines.len(), doc.line_count());
+        // Line 0: process_name metadata.
+        assert_eq!(lines[0].str_of("name").unwrap(), "process_name");
+        assert_eq!(lines[0].str_of("ph").unwrap(), "M");
+        // Line 1: the span, with Chrome's complete-event phase.
+        assert_eq!(lines[1].str_of("ph").unwrap(), "X");
+        assert_eq!(lines[1].req("dur").unwrap().as_f64(), Some(17.0));
+        assert_eq!(lines[1].req("tid").unwrap().as_f64(), Some(3.0));
+        let args = lines[1].req("args").unwrap();
+        assert_eq!(args.req("nfe").unwrap().as_f64(), Some(104.0));
+        // Line 2: instant with scope, line 3: counter with value arg.
+        assert_eq!(lines[2].str_of("s").unwrap(), "t");
+        assert_eq!(
+            lines[3].req("args").unwrap().req("value").unwrap().as_f64(),
+            Some(2.0)
+        );
+        // Final line: the registry metadata record.
+        let last = lines.last().unwrap();
+        assert_eq!(last.str_of("name").unwrap(), "registry");
+        let counters = last.req("args").unwrap().req("counters").unwrap();
+        assert_eq!(counters.req("admitted").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        assert_eq!(sample_doc().to_ndjson(), sample_doc().to_ndjson());
+        assert_eq!(sample_doc().hash(), sample_doc().hash());
+    }
+
+    #[test]
+    fn non_finite_args_become_strings_not_panics() {
+        let mut rec = Recorder::enabled();
+        rec.span("traj", 0, 0, 1, [("h", f64::INFINITY), ("", 0.0)]);
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "p", &rec);
+        let lines = parse_ndjson(&doc.to_ndjson()).unwrap();
+        assert_eq!(lines[1].req("args").unwrap().str_of("h").unwrap(), "inf");
+    }
+
+    #[test]
+    fn adversarial_ndjson_is_rejected_with_line_numbers() {
+        for bad in [
+            "{\"ph\":\"X\"}\n{truncated",
+            "{\"a\":1}\n[1,2,\n",
+            "{\"a\": NaN}\n",
+            "{\"a\":1} trailing\n",
+        ] {
+            let err = parse_ndjson(bad).unwrap_err();
+            assert!(format!("{err:#}").contains("ndjson line"), "{bad:?}");
+        }
+        // Blank interior lines are tolerated.
+        assert_eq!(parse_ndjson("{\"a\":1}\n\n{\"b\":2}\n").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn off_recorder_exports_name_record_only() {
+        let mut doc = TraceDoc::new();
+        doc.add_process(1, "idle", &Recorder::off());
+        assert_eq!(doc.line_count(), 1);
+    }
+}

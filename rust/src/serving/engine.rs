@@ -26,6 +26,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
+use crate::obs::{Counter, Hist, Recorder};
 use crate::solvers::batch::{BatchDynamics, BatchStepper, Retired};
 use crate::solvers::{AdaptiveOpts, SolveStats, Tableau};
 
@@ -157,6 +158,21 @@ impl<F: BatchDynamics> ServingEngine<F> {
         self.policy = policy;
     }
 
+    /// Turn on telemetry: the stepper records per-row solver data and the
+    /// engine adds its serial timeline — queue depth, admission waves,
+    /// per-request admit→retire spans — stamped with engine-step ticks.
+    /// The engine's step loop is structurally serial (pooling happens
+    /// inside the dynamics), so the stream is deterministic for a given
+    /// drive at any thread count.
+    pub fn enable_recording(&mut self) {
+        self.stepper.set_recorder(Recorder::enabled());
+    }
+
+    /// Take the recorder out, leaving telemetry off.
+    pub fn take_recorder(&mut self) -> Recorder {
+        self.stepper.take_recorder()
+    }
+
     /// Per-trajectory state dimension.
     pub fn dim(&self) -> usize {
         self.stepper.dim()
@@ -232,6 +248,14 @@ impl<F: BatchDynamics> ServingEngine<F> {
     /// arrival).
     pub fn step(&mut self) -> Vec<ServeOutcome> {
         let mut out = Vec::new();
+        let queued = self.queue.len();
+        let step_no = self.step_no;
+        let rec = self.stepper.recorder_mut();
+        if rec.is_on() {
+            rec.set_ticks(step_no);
+            rec.counter("queue_depth", step_no, queued as f64);
+            rec.observe(Hist::QueueDepth, queued as f32);
+        }
         let admit = match self.policy {
             AdmissionPolicy::Continuous => true,
             AdmissionPolicy::Drain => self.stepper.active() == 0,
@@ -243,6 +267,10 @@ impl<F: BatchDynamics> ServingEngine<F> {
         if act > 0 {
             self.busy_steps += 1;
             self.active_row_steps += act as u64;
+            let rec = self.stepper.recorder_mut();
+            if rec.is_on() {
+                rec.counter("active_rows", step_no, act as f64);
+            }
             let retired = self.stepper.step();
             self.collect(retired, &mut out);
         }
@@ -280,17 +308,28 @@ impl<F: BatchDynamics> ServingEngine<F> {
                     y0.extend_from_slice(&r.y0);
                 }
             }
+            let rec = self.stepper.recorder_mut();
+            if rec.is_on() {
+                let cls = CLASSES.iter().position(|c| c.name == class.name);
+                rec.observe(Hist::AdmitWave, ids.len() as f32);
+                rec.instant(
+                    "admit_wave",
+                    0,
+                    self.step_no,
+                    [("rows", ids.len() as f64), ("class", cls.map_or(-1.0, |i| i as f64))],
+                );
+            }
             let retired =
                 self.stepper.admit(&ids, &y0, self.t0, self.t1, &class.opts(), None);
             self.collect(retired, out);
         }
     }
 
-    fn collect(&self, retired: Vec<Retired>, out: &mut Vec<ServeOutcome>) {
+    fn collect(&mut self, retired: Vec<Retired>, out: &mut Vec<ServeOutcome>) {
         for r in retired {
             let m = &self.meta[r.id];
             let deadline_miss = (r.t - self.t1).abs() > 1e-9;
-            out.push(ServeOutcome {
+            let o = ServeOutcome {
                 id: m.id,
                 class: m.class,
                 y: r.y,
@@ -299,7 +338,23 @@ impl<F: BatchDynamics> ServingEngine<F> {
                 admit_step: m.admit_step,
                 done_step: self.step_no,
                 deadline_miss,
-            });
+            };
+            let rec = self.stepper.recorder_mut();
+            if rec.is_on() {
+                let latency = o.done_step - o.admit_step;
+                rec.observe(Hist::LatencySteps, latency as f32);
+                if deadline_miss {
+                    rec.inc(Counter::DeadlineMiss, 1);
+                }
+                rec.span(
+                    "request",
+                    o.id,
+                    o.admit_step,
+                    latency.max(1),
+                    [("nfe", o.stats.nfe as f64), ("miss", if deadline_miss { 1.0 } else { 0.0 })],
+                );
+            }
+            out.push(o);
         }
     }
 }

@@ -18,6 +18,7 @@ use crate::autodiff::div::Divergence;
 use crate::coordinator::evaluator::latent_nll;
 use crate::data::synth_mnist;
 use crate::nn::{Cnf, Mlp};
+use crate::obs::Recorder;
 use crate::serving::arrivals::PoissonArrivals;
 use crate::serving::engine::{AdmissionPolicy, ServeOutcome, ServingEngine, ToleranceClass};
 use crate::serving::wire::{ServeRequest, ServeResponse};
@@ -142,6 +143,23 @@ impl<F: BatchDynamics> ServeHost<F> {
     /// `(name, data_dim)` per hosted model, for request generation.
     pub fn model_specs(&self) -> Vec<(String, usize)> {
         self.models.iter().map(|m| (m.name.clone(), m.data_dim)).collect()
+    }
+
+    /// Turn on telemetry on every hosted engine (see
+    /// [`ServingEngine::enable_recording`]).
+    pub fn enable_recording(&mut self) {
+        for m in &mut self.models {
+            m.engine.enable_recording();
+        }
+    }
+
+    /// Take every engine's recorder as `(model name, recorder)` in
+    /// declaration order — the fixed order the trace export relies on.
+    pub fn take_recorders(&mut self) -> Vec<(String, Recorder)> {
+        self.models
+            .iter_mut()
+            .map(|m| (m.name.clone(), m.engine.take_recorder()))
+            .collect()
     }
 
     pub fn in_flight(&self) -> usize {
@@ -360,6 +378,40 @@ pub fn run_poisson_pooled(
     drive_poisson(&mut host, seed, rate, total)
 }
 
+/// [`run_poisson`] with telemetry on: returns the trace plus each model's
+/// recorder in declaration order.  Recording never touches the numerics,
+/// so the returned trace is bit-identical to the untraced run's.
+pub fn run_poisson_traced(
+    seed: u64,
+    capacity: usize,
+    rate: f64,
+    total: u64,
+) -> (ServeTrace, Vec<(String, Recorder)>) {
+    let mut host = demo_host(seed, capacity);
+    host.enable_recording();
+    let trace = drive_poisson(&mut host, seed, rate, total);
+    let recs = host.take_recorders();
+    (trace, recs)
+}
+
+/// [`run_poisson_traced`] with pooled model evaluation.  The engine loop
+/// stays serial (pooling lives inside [`PooledEval`]), so the recorded
+/// streams are bit-identical to the serial traced drive at any thread
+/// count (D5 proof below).
+pub fn run_poisson_traced_pooled(
+    pool: &Pool,
+    seed: u64,
+    capacity: usize,
+    rate: f64,
+    total: u64,
+) -> (ServeTrace, Vec<(String, Recorder)>) {
+    let mut host = demo_host_with(seed, capacity, |d| PooledEval::new(pool, d));
+    host.enable_recording();
+    let trace = drive_poisson(&mut host, seed, rate, total);
+    let recs = host.take_recorders();
+    (trace, recs)
+}
+
 /// The drain-to-stragglers baseline: identical load, but requests are
 /// only admitted into an empty active set.  The serving bench asserts the
 /// continuous drive's occupancy strictly beats this at equal load.
@@ -421,6 +473,29 @@ mod tests {
                 trace_hash(&pooled.responses),
                 "threads={threads}"
             );
+        }
+    }
+
+    #[test]
+    fn run_poisson_traced_pooled_matches_run_poisson_traced_bitwise() {
+        // The D5 proof for `run_poisson_traced_pooled`, and the recording
+        // no-perturbation guarantee: telemetry on, the drive still equals
+        // the untraced `run_poisson`, and the recorded event streams and
+        // registries are identical across TAYNODE_THREADS ∈ {1, 2, 4}.
+        let untraced = run_poisson(41, 8, 3.0, 30);
+        let (serial, srecs) = run_poisson_traced(41, 8, 3.0, 30);
+        assert_eq!(untraced, serial, "recording must not perturb the drive");
+        assert_eq!(srecs.len(), 3);
+        assert!(srecs.iter().any(|(_, r)| !r.events().is_empty()));
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let (pooled, precs) = run_poisson_traced_pooled(&pool, 41, 8, 3.0, 30);
+            assert_eq!(serial, pooled, "threads={threads}");
+            for ((sn, sr), (pn, pr)) in srecs.iter().zip(&precs) {
+                assert_eq!(sn, pn);
+                assert_eq!(sr.events(), pr.events(), "model={sn} threads={threads}");
+                assert_eq!(sr.registry(), pr.registry(), "model={sn} threads={threads}");
+            }
         }
     }
 

@@ -70,6 +70,7 @@ use super::tableau::Tableau;
 use super::Dynamics;
 use crate::autodiff::div::{batch_divergence, Divergence};
 use crate::nn::ValueDynamics;
+use crate::obs::{Counter, Hist, Recorder};
 use crate::taylor::{ode_jet_batch, BatchSeriesDynamics};
 use crate::tensor::axpy;
 use crate::util::pool::{chunk_ranges, Pool};
@@ -725,6 +726,13 @@ pub struct BatchStepper<F: BatchDynamics> {
     finished: Vec<usize>,
     refresh: Vec<usize>,
     ids_scratch: Vec<usize>,
+    /// Telemetry ([`Recorder::off`] by default: a no-op branch per record
+    /// site).  Only per-row data is ever recorded here — histograms of each
+    /// row's own steps/errors, counters and one span per retired trajectory
+    /// — because the pooled drivers chunk rows by worker count and anything
+    /// batch-shaped would make traces depend on the chunking (the merge
+    /// contract of [`Recorder::absorb_by_track`]).
+    rec: Recorder,
 }
 
 impl<F: BatchDynamics> BatchStepper<F> {
@@ -750,6 +758,7 @@ impl<F: BatchDynamics> BatchStepper<F> {
             finished: Vec::new(),
             refresh: Vec::new(),
             ids_scratch: Vec::new(),
+            rec: Recorder::off(),
         }
     }
 
@@ -782,6 +791,23 @@ impl<F: BatchDynamics> BatchStepper<F> {
     /// Recover the wrapped dynamics.
     pub fn into_dynamics(self) -> F {
         self.f
+    }
+
+    /// Replace the telemetry recorder (off by default).
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.rec = rec;
+    }
+
+    /// Borrow the telemetry recorder — e.g. so a serving loop can stamp
+    /// engine-step ticks and emit its own timeline events alongside the
+    /// stepper's per-row stream.
+    pub fn recorder_mut(&mut self) -> &mut Recorder {
+        &mut self.rec
+    }
+
+    /// Take the recorder out, leaving telemetry off.
+    pub fn take_recorder(&mut self) -> Recorder {
+        std::mem::replace(&mut self.rec, Recorder::off())
     }
 
     fn grow_scratch(&mut self) {
@@ -821,6 +847,7 @@ impl<F: BatchDynamics> BatchStepper<F> {
         let base = self.ws.act;
         self.ws.push_rows(ids, y0, t0, t1, opts);
         self.grow_scratch();
+        self.rec.inc(Counter::Admitted, k as u64);
         let ws = &mut self.ws;
         let f = &mut self.f;
 
@@ -895,7 +922,9 @@ impl<F: BatchDynamics> BatchStepper<F> {
                 self.finished.push(s);
             }
         }
-        ws.retire(&self.finished)
+        let out = ws.retire(&self.finished);
+        record_retired(&mut self.rec, &out);
+        out
     }
 
     /// One adaptive attempt (stage evaluations, per-row accept/reject,
@@ -917,6 +946,8 @@ impl<F: BatchDynamics> BatchStepper<F> {
         let finished = &mut self.finished;
         let refresh = &mut self.refresh;
         let ids_scratch = &mut self.ids_scratch;
+        let rec = &mut self.rec;
+        let recording = rec.is_on();
         let act = ws.act;
 
         // Clamp and sign each trajectory's attempted step.
@@ -991,6 +1022,10 @@ impl<F: BatchDynamics> BatchStepper<F> {
                 ws.t[s] += hs;
                 ws.y[s * n..(s + 1) * n].copy_from_slice(&ynew[s * n..(s + 1) * n]);
                 ws.stats[s].accepted += 1;
+                if recording {
+                    rec.observe(Hist::StepSize, hs.abs());
+                    rec.observe(Hist::ErrNorm, err);
+                }
                 if tbf.fsal {
                     // per-row FSAL: k_last at the accepted point becomes k0
                     let last = tbf.stages - 1;
@@ -1007,6 +1042,9 @@ impl<F: BatchDynamics> BatchStepper<F> {
             } else {
                 // reject: shrink and retry (FSAL stage 0 is still valid)
                 ws.stats[s].rejected += 1;
+                if recording {
+                    rec.observe(Hist::ErrNorm, err);
+                }
                 let factor = stage::reject_factor(&ws.opts[s], inv_order, err);
                 ws.h[s] = hs.abs() * factor.clamp(ws.opts[s].factor_min, 1.0);
             }
@@ -1034,7 +1072,34 @@ impl<F: BatchDynamics> BatchStepper<F> {
             }
         }
 
-        ws.retire(finished)
+        let out = ws.retire(finished);
+        record_retired(rec, &out);
+        out
+    }
+}
+
+/// Fold retired trajectories into the telemetry recorder: `Retired` +
+/// stats counters (the single stats→counters conversion, see
+/// [`crate::obs::Registry::absorb_solve_stats`]) plus one span per
+/// trajectory on `track = id` whose duration is the row's **own** attempt
+/// count.  Attempt counts are chunking-independent — every attempt
+/// advances each active row exactly once — so the recorded stream is
+/// identical however the pooled drivers group rows into chunks.
+fn record_retired(rec: &mut Recorder, out: &[Retired]) {
+    if !rec.is_on() {
+        return;
+    }
+    for r in out {
+        rec.inc(Counter::Retired, 1);
+        rec.absorb_stats(&r.stats);
+        let steps = (r.stats.accepted + r.stats.rejected) as u64;
+        rec.span(
+            "traj",
+            r.id as u64,
+            0,
+            steps,
+            [("nfe", r.stats.nfe as f64), ("rejected", r.stats.rejected as f64)],
+        );
     }
 }
 
@@ -1465,6 +1530,98 @@ where
         t.extend_from_slice(&p.t);
         stats.extend(p.stats);
     }
+    BatchResult { n, y, t, stats }
+}
+
+/// [`solve_embedded_batch`] with *global* trajectory ids and an optional
+/// per-chunk recorder — the traced pooled driver's worker body.  Admitting
+/// under global ids (instead of wrapping in [`OffsetIds`]) makes every
+/// recorded track a stable global id, so chunk streams can merge
+/// canonically.
+fn solve_embedded_traced<F: BatchDynamics>(
+    f: &mut F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+    id_base: usize,
+    tracing: bool,
+) -> (BatchResult, Recorder) {
+    let n = f.dim();
+    let b = y0.len() / n;
+    let mut y = y0.to_vec();
+    let mut t = vec![t0; b];
+    let mut stats = vec![SolveStats::default(); b];
+    if b == 0 {
+        return (BatchResult { n, y, t, stats }, Recorder::off());
+    }
+    let mut stepper = BatchStepper::new(&mut *f, tb);
+    if tracing {
+        stepper.set_recorder(Recorder::enabled());
+    }
+    let ids: Vec<usize> = (id_base..id_base + b).collect();
+    let mut done = stepper.admit(&ids, y0, t0, t1, opts, None);
+    while stepper.active() > 0 {
+        done.append(&mut stepper.step());
+    }
+    let rec = stepper.take_recorder();
+    for r in done {
+        let s = r.id - id_base;
+        y[s * n..(s + 1) * n].copy_from_slice(&r.y);
+        t[s] = r.t;
+        stats[s] = r.stats;
+    }
+    (BatchResult { n, y, t, stats }, rec)
+}
+
+/// [`solve_adaptive_batch_pooled`] with telemetry: each chunk records into
+/// its own sub-recorder (no shared state between workers), and the chunk
+/// streams merge into `rec` via [`Recorder::absorb_by_track`] — the
+/// per-trajectory canonicalization that makes the merged trace
+/// bit-identical at every thread count even though the chunk layout is
+/// not.  Results are bit-identical to [`solve_adaptive_batch_pooled`]
+/// whether or not `rec` is on.  Requires a tableau with an embedded pair
+/// (the recorder lives on the [`BatchStepper`]).
+pub fn solve_adaptive_batch_traced_pooled<F>(
+    pool: &Pool,
+    f: &F,
+    t0: f32,
+    t1: f32,
+    y0: &[f32],
+    tb: &Tableau,
+    opts: &AdaptiveOpts,
+    rec: &mut Recorder,
+) -> BatchResult
+where
+    F: BatchDynamics + Clone + Send + Sync,
+{
+    assert!(tb.e.is_some(), "traced solves need an embedded pair");
+    let (n, b, shards) = solver_shards(pool, f, y0);
+    let tracing = rec.is_on();
+    if shards.len() <= 1 {
+        let mut own = f.clone();
+        let (res, sub) = solve_embedded_traced(&mut own, t0, t1, y0, tb, opts, 0, tracing);
+        rec.absorb_by_track(vec![sub]);
+        return res;
+    }
+    let parts = pool.run_range_shards(&shards, |_, r| {
+        let mut g = f.clone();
+        let rows = &y0[r.start * n..r.end * n];
+        solve_embedded_traced(&mut g, t0, t1, rows, tb, opts, r.start, tracing)
+    });
+    let mut y = Vec::with_capacity(b * n);
+    let mut t = Vec::with_capacity(b);
+    let mut stats = Vec::with_capacity(b);
+    let mut subs = Vec::with_capacity(parts.len());
+    for (p, sub) in parts {
+        // chunk order == ascending original trajectory id
+        y.extend_from_slice(&p.y);
+        t.extend_from_slice(&p.t);
+        stats.extend(p.stats);
+        subs.push(sub);
+    }
+    rec.absorb_by_track(subs);
     BatchResult { n, y, t, stats }
 }
 

@@ -18,11 +18,11 @@ pub mod tableau;
 
 pub use adaptive::{solve_adaptive, solve_to_times, AdaptiveOpts, SolveStats};
 pub use batch::{
-    augment_quadrature, solve_adaptive_batch, solve_adaptive_batch_pooled, solve_fixed_batch,
-    solve_fixed_batch_pooled, solve_fixed_batch_record, solve_fixed_batch_record_pooled,
-    solve_to_times_batch, solve_to_times_batch_pooled, split_quadrature, BatchDynamics, BatchFn,
-    BatchResult, BatchStepper, FixedGridRecord, PooledEval, RegularizedBatchDynamics, Retired,
-    Rowwise,
+    augment_quadrature, solve_adaptive_batch, solve_adaptive_batch_pooled,
+    solve_adaptive_batch_traced_pooled, solve_fixed_batch, solve_fixed_batch_pooled,
+    solve_fixed_batch_record, solve_fixed_batch_record_pooled, solve_to_times_batch,
+    solve_to_times_batch_pooled, split_quadrature, BatchDynamics, BatchFn, BatchResult,
+    BatchStepper, FixedGridRecord, PooledEval, RegularizedBatchDynamics, Retired, Rowwise,
 };
 pub use fixed::{solve_fixed, solve_fixed_traj};
 pub use tableau::Tableau;

@@ -6,21 +6,22 @@
 //! emission (`--json <path>` merges a section per bench into one file, so
 //! `make bench-json` accumulates `BENCH_parallel.json` across targets).
 
-use std::time::Instant; // taylint: allow(D3) -- the bench harness IS the sanctioned timer
-
+use super::clock::Stopwatch;
 use super::json::Json;
 use super::stats::{summarize, Summary};
 
 /// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+/// Wall time flows through [`Stopwatch`] so `std::time` stays confined
+/// to `util::clock` (lint rule D6).
 pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
     for _ in 0..warmup {
         f();
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t0 = Instant::now(); // taylint: allow(D3) -- timing is this function's purpose
+        let t0 = Stopwatch::start();
         f();
-        samples.push(t0.elapsed().as_secs_f64());
+        samples.push(t0.elapsed_secs());
     }
     summarize(&samples)
 }

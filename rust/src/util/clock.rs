@@ -1,0 +1,113 @@
+//! Clocks: the one sanctioned door to `std::time` (lint rule D6).
+//!
+//! Everything that *records* time in this crate goes through the
+//! [`Clock`] trait.  Deterministic paths (the telemetry recorder, tests,
+//! trace replay) use [`StepClock`], which only advances when the driver
+//! says so — a solver attempt, an engine step — so same-seed runs produce
+//! bit-identical timestamps at any thread count.  Wall time exists only
+//! here: [`WallClock`] for tick-shaped readings and [`Stopwatch`] for the
+//! bench harness' elapsed-seconds measurements.  No other module may
+//! touch `std::time` (taylint D6 fails the build otherwise), which keeps
+//! wall-clock nondeterminism quarantined the way D3 quarantines env/RNG.
+
+use std::time::Instant;
+
+/// A monotonic tick source.  Ticks are dimensionless; each driver defines
+/// its own unit (solver attempts, engine steps, microseconds).
+pub trait Clock {
+    /// The current tick count.
+    fn now_ticks(&self) -> u64;
+}
+
+/// The deterministic clock: a counter advanced explicitly by the driver
+/// that owns it.  This is what the telemetry recorder stamps events with,
+/// and why same-seed traces are bit-identical across thread counts.
+#[derive(Clone, Debug, Default)]
+pub struct StepClock {
+    ticks: u64,
+}
+
+impl StepClock {
+    pub fn new() -> StepClock {
+        StepClock { ticks: 0 }
+    }
+
+    /// Advance by one tick (e.g. one solver attempt).
+    pub fn advance(&mut self) {
+        self.ticks += 1;
+    }
+
+    /// Jump to an externally-maintained tick count (e.g. the serving
+    /// engine's step number).  Monotonicity is the caller's contract.
+    pub fn set_ticks(&mut self, ticks: u64) {
+        self.ticks = ticks;
+    }
+}
+
+impl Clock for StepClock {
+    fn now_ticks(&self) -> u64 {
+        self.ticks
+    }
+}
+
+/// Wall clock in whole microseconds since construction.  For operator
+/// reporting only — never for anything a deterministic trace contains.
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ticks(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+}
+
+/// Elapsed-seconds stopwatch for the bench harness (`util::bench` times
+/// through this, so `std::time` stays confined to this module).
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_clock_advances_only_on_command() {
+        let mut c = StepClock::new();
+        assert_eq!(c.now_ticks(), 0);
+        c.advance();
+        c.advance();
+        assert_eq!(c.now_ticks(), 2);
+        c.set_ticks(100);
+        assert_eq!(c.now_ticks(), 100);
+    }
+
+    #[test]
+    fn wall_clock_and_stopwatch_are_monotonic() {
+        let w = WallClock::start();
+        let s = Stopwatch::start();
+        let a = w.now_ticks();
+        std::hint::black_box((0..20_000).sum::<u64>());
+        assert!(w.now_ticks() >= a);
+        assert!(s.elapsed_secs() >= 0.0);
+    }
+}

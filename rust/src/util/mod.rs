@@ -1,9 +1,11 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! PRNG, JSON, CLI parsing, statistics, bench harness, property testing,
-//! and the scoped worker pool behind the parallel execution layer.
+//! PRNG, JSON, CLI parsing, statistics, bench harness, clocks (the one
+//! door to `std::time`), property testing, and the scoped worker pool
+//! behind the parallel execution layer.
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod pool;
 pub mod ptest;

@@ -1,0 +1,117 @@
+//! Acceptance tests for the deterministic telemetry layer: same-seed
+//! traces must serialize to byte-identical Chrome-Trace NDJSON at
+//! `TAYNODE_THREADS` ∈ {1, 2, 4} for the pooled adaptive solve, the native
+//! train step, and the serving drive — and the exported NDJSON must
+//! round-trip through the strict JSON parser.
+
+use taynode::coordinator::NativeTrainer;
+use taynode::nn::Mlp;
+use taynode::obs::trace::parse_ndjson;
+use taynode::obs::{Recorder, TraceDoc};
+use taynode::serving::{run_poisson_traced, run_poisson_traced_pooled};
+use taynode::solvers::adaptive::AdaptiveOpts;
+use taynode::solvers::batch::solve_adaptive_batch_traced_pooled;
+use taynode::solvers::{solve_adaptive_batch, tableau};
+use taynode::util::pool::Pool;
+use taynode::util::rng::Pcg;
+
+const B: usize = 48;
+
+fn solve_inputs() -> (Mlp, Vec<f32>) {
+    let mlp = Mlp::new(2, &[8], true, 5);
+    let mut rng = Pcg::new(9);
+    let y0: Vec<f32> = (0..B * 2).map(|_| rng.range(-1.0, 1.0)).collect();
+    (mlp, y0)
+}
+
+#[test]
+fn solve_adaptive_batch_traced_pooled_ndjson_bit_identical_across_threads() {
+    let (f, y0) = solve_inputs();
+    let tb = tableau::dopri5();
+    let opts = AdaptiveOpts::default();
+
+    // The untraced serial driver is the numerical reference: tracing and
+    // pooling together must not move a single bit.
+    let sres = solve_adaptive_batch(f.clone(), 0.0, 1.0, &y0, &tb, &opts);
+
+    let export = |threads: usize| {
+        let pool = if threads == 1 { Pool::new(1) } else { Pool::new(threads) };
+        let mut rec = Recorder::enabled();
+        let res =
+            solve_adaptive_batch_traced_pooled(&pool, &f, 0.0, 1.0, &y0, &tb, &opts, &mut rec);
+        for r in 0..B * 2 {
+            assert_eq!(res.y[r].to_bits(), sres.y[r].to_bits(), "state {r} threads={threads}");
+        }
+        for r in 0..B {
+            assert_eq!(res.stats[r].nfe, sres.stats[r].nfe, "NFE {r} threads={threads}");
+        }
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "solve/pooled", &rec);
+        (doc.to_ndjson(), doc.hash())
+    };
+
+    let (base, base_hash) = export(1);
+    assert!(base.lines().count() > B, "expected per-trajectory records");
+    for threads in [2usize, 4] {
+        let (ndjson, hash) = export(threads);
+        assert_eq!(ndjson, base, "threads={threads}");
+        assert_eq!(hash, base_hash, "threads={threads}");
+    }
+}
+
+#[test]
+fn native_train_step_trace_bit_identical_across_threads() {
+    let export = |threads: usize| {
+        let mlp = Mlp::new(2, &[8, 8], true, 11);
+        let mut tr = NativeTrainer::new(mlp, None, 2, 0.05, 6, tableau::bosh3(), 0.05)
+            .with_threads(threads);
+        tr.enable_recording();
+        let mut rng = Pcg::new(3);
+        let x0: Vec<f32> = (0..40 * 2).map(|_| rng.range(-1.0, 1.0)).collect();
+        let targets: Vec<f32> = x0.iter().map(|v| 0.5 * v).collect();
+        for _ in 0..2 {
+            tr.step_mse(&x0, &targets);
+        }
+        let rec = tr.take_recorder();
+        assert!(!rec.events().is_empty(), "train trace must record events");
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "train/native", &rec);
+        (doc.to_ndjson(), doc.hash())
+    };
+    let (base, base_hash) = export(1);
+    for threads in [2usize, 4] {
+        let (ndjson, hash) = export(threads);
+        assert_eq!(ndjson, base, "threads={threads}");
+        assert_eq!(hash, base_hash, "threads={threads}");
+    }
+}
+
+#[test]
+fn serve_trace_ndjson_bit_identical_across_threads_and_round_trips() {
+    let export = |recs: &[(String, Recorder)]| {
+        let mut doc = TraceDoc::new();
+        for (pid, (name, rec)) in recs.iter().enumerate() {
+            doc.add_process(pid as u64, name, rec);
+        }
+        (doc.to_ndjson(), doc.hash())
+    };
+    let (_, srecs) = run_poisson_traced(17, 6, 2.5, 24);
+    let (base, base_hash) = export(&srecs);
+    for threads in [1usize, 2, 4] {
+        let pool = Pool::new(threads);
+        let (_, precs) = run_poisson_traced_pooled(&pool, 17, 6, 2.5, 24);
+        let (ndjson, hash) = export(&precs);
+        assert_eq!(ndjson, base, "threads={threads}");
+        assert_eq!(hash, base_hash, "threads={threads}");
+    }
+    // Every exported line is strict, canonical JSON.
+    let parsed = parse_ndjson(&base).expect("trace must round-trip");
+    assert_eq!(parsed.len(), base.lines().count());
+}
+
+#[test]
+fn ndjson_parser_rejects_corrupt_traces_with_line_numbers() {
+    assert!(parse_ndjson("{\"name\":\"x\"}\n{truncated").is_err());
+    let err = parse_ndjson("{}\nnot json\n").unwrap_err();
+    assert!(format!("{err:#}").contains("ndjson line 2"), "{err:#}");
+}
