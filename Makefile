@@ -19,7 +19,9 @@ train-demo:
 # solves, NLL training) into BENCH_cnf.json, and the continuous-batching
 # serving engine (p50/p99 latency + occupancy vs the drain baseline at
 # B in {64, 256, 1024}) into BENCH_serving.json (each bench merge-writes
-# its own section).  Honor TAYNODE_THREADS if set; equality with the
+# its own section).  The blocked-kernel layer (Cauchy / fused MLP / stage
+# axpy vs the retained naive references) lands in BENCH_parallel.json
+# under "perf_kernels".  Honor TAYNODE_THREADS if set; equality with the
 # serial path is asserted inside the benches before anything is timed.
 #
 # Each file accumulates in a .tmp scratch path and moves into place only
@@ -31,6 +33,7 @@ bench-json:
 	cargo bench --bench perf_batch -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_train_native -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_obs -- --json BENCH_parallel.json.tmp
+	cargo bench --bench perf_kernels -- --json BENCH_parallel.json.tmp
 	cargo bench --bench perf_cnf -- --json BENCH_cnf.json.tmp
 	cargo bench --bench perf_serving -- --json BENCH_serving.json.tmp
 	mv BENCH_parallel.json.tmp BENCH_parallel.json
@@ -43,20 +46,30 @@ bench-json:
 # `_meta` stubs (never hand-written numbers); run `make bench-json` once on
 # a quiet machine to seed them for real, then `make perf` on later changes
 # to see the trajectory.  The .new files are left behind for inspection.
+#
+# Set PERF_FAIL=<pct> to turn the diff into a gate: any direction-known
+# metric (throughput-like suffixes are higher-better, latency-like are
+# lower-better; `repro perfdiff` documents the heuristic) that moves the
+# wrong way by more than <pct> percent fails the target.  CI runs this
+# advisory (no PERF_FAIL, continue-on-error) so shared-runner noise never
+# blocks a merge.
+PERF_FAIL ?=
+PERF_FLAGS = $(if $(PERF_FAIL),--fail-on-regression $(PERF_FAIL),)
 .PHONY: perf
 perf:
 	rm -f BENCH_parallel.json.new BENCH_cnf.json.new BENCH_serving.json.new
 	cargo bench --bench perf_batch -- --json BENCH_parallel.json.new
 	cargo bench --bench perf_train_native -- --json BENCH_parallel.json.new
 	cargo bench --bench perf_obs -- --json BENCH_parallel.json.new
+	cargo bench --bench perf_kernels -- --json BENCH_parallel.json.new
 	cargo bench --bench perf_cnf -- --json BENCH_cnf.json.new
 	cargo bench --bench perf_serving -- --json BENCH_serving.json.new
-	cargo run --release --bin repro -- perfdiff BENCH_parallel.json BENCH_parallel.json.new
-	cargo run --release --bin repro -- perfdiff BENCH_cnf.json BENCH_cnf.json.new
-	cargo run --release --bin repro -- perfdiff BENCH_serving.json BENCH_serving.json.new
+	cargo run --release --bin repro -- perfdiff BENCH_parallel.json BENCH_parallel.json.new $(PERF_FLAGS)
+	cargo run --release --bin repro -- perfdiff BENCH_cnf.json BENCH_cnf.json.new $(PERF_FLAGS)
+	cargo run --release --bin repro -- perfdiff BENCH_serving.json BENCH_serving.json.new $(PERF_FLAGS)
 
 # Determinism lint: taylint walks rust/src, rust/tests, benches/, and
-# examples/ and enforces the invariant catalog (D1-D6; `taylint --rules`
+# examples/ and enforces the invariant catalog (D1-D7; `taylint --rules`
 # prints it).  Exits nonzero on any diagnostic; CI runs this blocking.
 .PHONY: lint
 lint:

@@ -1,0 +1,251 @@
+//! §Perf: the cache-blocked kernel layer (`taynode::kern`) against its
+//! retained naive references (`kern::naive` — the exact pre-kernel loops,
+//! not strawmen).
+//!
+//! Three sections, each following the same discipline: assert the blocked
+//! kernel bit-identical to the naive reference on the benchmark inputs
+//! FIRST (lint rule D5 — a speedup over a result you didn't verify is a
+//! bug report, not a benchmark), then time both sides on identical data.
+//!
+//!   K1  flat-slab Cauchy product at jet orders K = 4 and K = 6 over a
+//!       [2048, 8] batch — the `ode_jet_batch` inner op (gated ≥ 1.5x)
+//!   K2  fused f32 MLP layer chain (9→128→128→8) at B = 256 — the
+//!       `BatchDynamics` NFE hot path (gated ≥ 2x)
+//!   K3  fused RK stage combination, 7 stages at n = 65536 — the dopri5
+//!       per-step axpy (reported, no gate: purely memory-bound)
+//!
+//! `--json <path>` appends the machine-readable numbers under
+//! "perf_kernels" (see `make bench-json`); `repro perfdiff` diffs them.
+
+use taynode::kern::{axpy, cauchy, mlp, naive};
+use taynode::util::bench::{fmt_secs, json_path_arg, merge_bench_json, report, time_fn};
+use taynode::util::json::Json;
+use taynode::util::ptest::gen;
+use taynode::util::rng::Pcg;
+
+/// Batch shape of the Cauchy section: a [2048, 8] state, m = 16384 lanes.
+const ROWS: usize = 2048;
+const COLS: usize = 8;
+const M: usize = ROWS * COLS;
+
+/// State length of the stage-axpy section (the synth-MNIST batch shape:
+/// 256 rows x 256 augmented features).
+const AXPY_N: usize = 65_536;
+
+/// Random `[k1, m]` coefficient rows for the naive side; the blocked side
+/// flattens the same values, so both consume identical inputs.
+fn random_rows(rng: &mut Pcg, k1: usize, m: usize) -> Vec<Vec<f64>> {
+    (0..k1).map(|_| gen::vec_f64(rng, m, -1.0, 1.0)).collect()
+}
+
+fn flatten(rows: &[Vec<f64>]) -> Vec<f64> {
+    rows.iter().flat_map(|r| r.iter().copied()).collect()
+}
+
+fn assert_slab_eq(rows: &[Vec<f64>], slab: &[f64], m: usize, ctx: &str) {
+    for (k, row) in rows.iter().enumerate() {
+        for (e, v) in row.iter().enumerate() {
+            assert_eq!(
+                v.to_bits(),
+                slab[k * m + e].to_bits(),
+                "{ctx}: coeff {k} elem {e}: {v} vs {}",
+                slab[k * m + e]
+            );
+        }
+    }
+}
+
+/// One Cauchy-section pass at jet order K: verify bit-identity on the
+/// benchmark inputs, time naive vs blocked mul, return the speedup.
+fn cauchy_section(order: usize) -> f64 {
+    let k1 = order + 1;
+    let mut rng = Pcg::new(0xCA0C + order as u64);
+    let z_rows = random_rows(&mut rng, k1, M);
+    let w_rows = random_rows(&mut rng, k1, M);
+    let z = flatten(&z_rows);
+    let w = flatten(&w_rows);
+
+    // D5: equality before timing, on the exact arrays about to be timed.
+    let want = naive::mul(&z_rows, &w_rows);
+    let mut got = vec![0.0f64; k1 * M];
+    cauchy::mul_into(k1, M, &z, &w, &mut got);
+    assert_slab_eq(&want, &got, M, &format!("cauchy mul K={order}"));
+    let want_t = naive::tanh(&z_rows);
+    cauchy::tanh_into(k1, M, &z, &mut got);
+    assert_slab_eq(&want_t, &got, M, &format!("cauchy tanh K={order}"));
+    println!("K1 Cauchy K={order}: blocked == naive bit-for-bit at [{ROWS}, {COLS}]");
+
+    let s_naive = time_fn(3, 20, || {
+        std::hint::black_box(naive::mul(&z_rows, &w_rows));
+    });
+    report(&format!("naive Cauchy mul   (K={order}, m={M})"), &s_naive);
+    let mut out = vec![0.0f64; k1 * M];
+    let s_blocked = time_fn(3, 20, || {
+        cauchy::mul_into(k1, M, &z, &w, &mut out);
+        std::hint::black_box(&out);
+    });
+    report(&format!("blocked Cauchy mul (K={order}, m={M})"), &s_blocked);
+    let speedup = s_naive.mean / s_blocked.mean;
+    println!(
+        "Cauchy K={order} speedup: {speedup:.2}x ({} -> {})\n",
+        fmt_secs(s_naive.mean),
+        fmt_secs(s_blocked.mean)
+    );
+    speedup
+}
+
+/// MLP layer widths of the fused-layer section: the synth-MNIST dynamics
+/// shape (n = 8 state dims + time through two 128-wide tanh layers).
+const MLP_SIZES: [usize; 4] = [9, 128, 128, 8];
+const MLP_B: usize = 256;
+
+/// The naive chain: per-access-cast row-serial layers (the old
+/// `BatchDynamics for Mlp` inner loop).
+fn mlp_chain_naive(acts0: &[f64], ws: &[Vec<f32>], bs: &[Vec<f32>]) -> Vec<f64> {
+    let mut acts = acts0.to_vec();
+    for l in 0..MLP_SIZES.len() - 1 {
+        let (win, wout) = (MLP_SIZES[l], MLP_SIZES[l + 1]);
+        let hidden = l + 1 < MLP_SIZES.len() - 1;
+        acts = naive::mlp_layer(MLP_B, win, wout, &acts, &ws[l], &bs[l], hidden);
+    }
+    acts
+}
+
+/// The fused chain: widen once per layer, tile over rows x output columns
+/// (exactly what `BatchDynamics for Mlp` now runs per NFE).
+fn mlp_chain_fused(
+    acts0: &[f64],
+    ws: &[Vec<f32>],
+    bs: &[Vec<f32>],
+    w64: &mut Vec<f64>,
+    b64: &mut Vec<f64>,
+    stage_in: &mut Vec<f64>,
+    stage_out: &mut Vec<f64>,
+) {
+    stage_in.clear();
+    stage_in.extend_from_slice(acts0);
+    for l in 0..MLP_SIZES.len() - 1 {
+        let (win, wout) = (MLP_SIZES[l], MLP_SIZES[l + 1]);
+        let hidden = l + 1 < MLP_SIZES.len() - 1;
+        mlp::widen(&ws[l], w64);
+        mlp::widen(&bs[l], b64);
+        mlp::layer_into(MLP_B, win, wout, stage_in, w64, b64, hidden, stage_out);
+        std::mem::swap(stage_in, stage_out);
+    }
+}
+
+fn mlp_section() -> f64 {
+    let mut rng = Pcg::new(0x3147);
+    let ws: Vec<Vec<f32>> = (0..MLP_SIZES.len() - 1)
+        .map(|l| gen::vec_f32(&mut rng, MLP_SIZES[l] * MLP_SIZES[l + 1], 0.5))
+        .collect();
+    let bs: Vec<Vec<f32>> = (0..MLP_SIZES.len() - 1)
+        .map(|l| gen::vec_f32(&mut rng, MLP_SIZES[l + 1], 0.2))
+        .collect();
+    let acts0 = gen::vec_f64(&mut rng, MLP_B * MLP_SIZES[0], -1.2, 1.2);
+
+    // D5: equality before timing.
+    let want = mlp_chain_naive(&acts0, &ws, &bs);
+    let (mut w64, mut b64) = (vec![], vec![]);
+    let (mut si, mut so) = (vec![], vec![]);
+    mlp_chain_fused(&acts0, &ws, &bs, &mut w64, &mut b64, &mut si, &mut so);
+    assert_eq!(si.len(), want.len());
+    for (e, (g, v)) in si.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), v.to_bits(), "mlp elem {e}: {g} vs {v}");
+    }
+    println!(
+        "K2 MLP {MLP_SIZES:?} B={MLP_B}: fused == naive bit-for-bit over the full chain"
+    );
+
+    let s_naive = time_fn(3, 30, || {
+        std::hint::black_box(mlp_chain_naive(&acts0, &ws, &bs));
+    });
+    report(&format!("naive MLP chain (B={MLP_B})"), &s_naive);
+    let s_fused = time_fn(3, 30, || {
+        mlp_chain_fused(&acts0, &ws, &bs, &mut w64, &mut b64, &mut si, &mut so);
+        std::hint::black_box(&si);
+    });
+    report(&format!("fused MLP chain (B={MLP_B})"), &s_fused);
+    let speedup = s_naive.mean / s_fused.mean;
+    println!(
+        "fused MLP speedup: {speedup:.2}x ({} -> {})\n",
+        fmt_secs(s_naive.mean),
+        fmt_secs(s_fused.mean)
+    );
+    speedup
+}
+
+fn axpy_section() -> f64 {
+    let mut rng = Pcg::new(0xA09D);
+    let ks: Vec<Vec<f32>> = (0..7).map(|_| gen::vec_f32(&mut rng, AXPY_N, 1.0)).collect();
+    let y = gen::vec_f32(&mut rng, AXPY_N, 1.0);
+    // dopri5's b row: one zero coefficient, skipped by both sides.
+    let coeffs = [0.091f32, 0.0, 0.449, 0.651, -0.322, 0.131, 0.0];
+    let h = 0.05f32;
+
+    // D5: equality before timing.
+    let mut want = vec![0.0f32; AXPY_N];
+    naive::multi_axpy(&coeffs, h, &ks, &y, &mut want);
+    let mut got = vec![0.0f32; AXPY_N];
+    axpy::fused_axpy_into(&coeffs, h, &ks, &y, &mut got);
+    for (e, (g, v)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), v.to_bits(), "axpy elem {e}");
+    }
+    println!("K3 stage axpy n={AXPY_N}: fused == per-stage sweeps bit-for-bit");
+
+    let s_naive = time_fn(5, 50, || {
+        naive::multi_axpy(&coeffs, h, &ks, &y, &mut want);
+        std::hint::black_box(&want);
+    });
+    report(&format!("per-stage sweeps (7 stages, n={AXPY_N})"), &s_naive);
+    let s_fused = time_fn(5, 50, || {
+        axpy::fused_axpy_into(&coeffs, h, &ks, &y, &mut got);
+        std::hint::black_box(&got);
+    });
+    report(&format!("fused one-pass   (7 stages, n={AXPY_N})"), &s_fused);
+    let speedup = s_naive.mean / s_fused.mean;
+    println!(
+        "fused axpy speedup: {speedup:.2}x ({} -> {}) [memory-bound; no gate]\n",
+        fmt_secs(s_naive.mean),
+        fmt_secs(s_fused.mean)
+    );
+    speedup
+}
+
+fn main() {
+    println!("== kern: blocked kernels vs retained naive references ==\n");
+    let cauchy_k4 = cauchy_section(4);
+    let cauchy_k6 = cauchy_section(6);
+    let mlp_speedup = mlp_section();
+    let axpy_speedup = axpy_section();
+
+    assert!(
+        cauchy_k4 >= 1.5 && cauchy_k6 >= 1.5,
+        "acceptance: blocked Cauchy product must be >= 1.5x at K >= 4 \
+         (got {cauchy_k4:.2}x at K=4, {cauchy_k6:.2}x at K=6)"
+    );
+    println!("Cauchy acceptance (>= 1.5x at K=4 and K=6): PASS");
+    assert!(
+        mlp_speedup >= 2.0,
+        "acceptance: fused MLP layer must be >= 2x at B={MLP_B} \
+         (got {mlp_speedup:.2}x)"
+    );
+    println!("MLP acceptance (>= 2x at B={MLP_B}): PASS");
+
+    if let Some(path) = json_path_arg() {
+        merge_bench_json(
+            &path,
+            "perf_kernels",
+            Json::obj(vec![
+                ("cauchy_m", Json::num(M as f64)),
+                ("cauchy_k4_speedup", Json::num(cauchy_k4)),
+                ("cauchy_k6_speedup", Json::num(cauchy_k6)),
+                ("mlp_b", Json::num(MLP_B as f64)),
+                ("mlp_fused_speedup", Json::num(mlp_speedup)),
+                ("axpy_n", Json::num(AXPY_N as f64)),
+                ("axpy_fused_speedup", Json::num(axpy_speedup)),
+            ]),
+        );
+        println!("wrote perf_kernels section to {path}");
+    }
+}

@@ -1,4 +1,4 @@
-//! The determinism-invariant catalog (rules `D1`–`D6`) over the token
+//! The determinism-invariant catalog (rules `D1`–`D7`) over the token
 //! stream of [`super::lexer`].
 //!
 //! Every rule has a machine-readable id, a file scope, and a line-level
@@ -7,7 +7,8 @@
 //! README table can't drift from the implementation silently.
 //!
 //! Scope conventions, applied by path prefix:
-//! * *numeric crates* — `rust/src/{solvers,autodiff,taylor,nn,coordinator}`:
+//! * *numeric crates* —
+//!   `rust/src/{solvers,autodiff,taylor,nn,coordinator,kern}`:
 //!   the modules whose float reductions carry the bit-identity guarantee.
 //! * *library code* — everything under `rust/src/` except the `repro`
 //!   binary (`main.rs`) and `rust/src/bin/`: entry points may read the
@@ -70,6 +71,14 @@ pub const RULES: &[Rule] = &[
                  leak wall-clock nondeterminism",
     },
     Rule {
+        id: "D7",
+        title: "no order-sensitive reductions in numeric crates",
+        detail: "`.sum()`/`.fold()` downstream of rev/rchunks/chunks/keys/values adapters \
+                 in solvers, autodiff, taylor, nn, coordinator, kern: a float reduction \
+                 must not bake a position- or key-dependent traversal order into its \
+                 result",
+    },
+    Rule {
         id: "A0",
         title: "well-formed allowlist markers",
         detail: "a comment starting `taylint:` must parse as `allow(<rule>) -- <reason>`; \
@@ -89,6 +98,7 @@ const NUMERIC_CRATES: &[&str] = &[
     "rust/src/taylor/",
     "rust/src/nn/",
     "rust/src/coordinator/",
+    "rust/src/kern/",
 ];
 
 /// `util/{pool,cli,rng}.rs` — the sanctioned nondeterminism doors (D3).
@@ -121,6 +131,25 @@ const RNG_SEED_IDENTS: &[&str] = &["from_entropy", "thread_rng", "getrandom", "R
 
 /// Environment readers reached through a bare `env::` path (D3).
 const ENV_READS: &[&str] = &["var", "vars", "var_os", "args", "args_os", "temp_dir"];
+
+/// Iterator adapters whose traversal order is position- or key-dependent
+/// (D7): a float reduction downstream of one bakes that order into the
+/// result, so pooled re-sharding (or a refactor of the chunking) moves
+/// bits.
+const D7_ORDERED_ADAPTERS: &[&str] = &[
+    "rev",
+    "rchunks",
+    "chunks",
+    "chunks_exact",
+    "keys",
+    "values",
+    "into_keys",
+    "into_values",
+];
+
+/// How far a D7 backward scan walks before giving up (it also stops at any
+/// `;`/`{`/`}` — statement or block bounds, including closure bodies).
+const D7_SCAN_LIMIT: usize = 64;
 
 fn is_numeric_crate(path: &str) -> bool {
     NUMERIC_CRATES.iter().any(|p| path.starts_with(p))
@@ -210,7 +239,7 @@ fn item_end(toks: &[Tok], from: usize) -> usize {
     toks.len().saturating_sub(1)
 }
 
-/// Apply the line-level rules D1–D4 to one file's tokens.
+/// Apply the line-level rules (D1–D4, D6, D7) to one file's tokens.
 pub fn lint_file(path: &str, toks: &[Tok], in_test: &[bool], diags: &mut Vec<Diag>) {
     let mut push = |line: u32, rule: &'static str, msg: String, out: &mut Vec<Diag>| {
         out.push(Diag { path: path.to_string(), line, rule, msg });
@@ -234,6 +263,51 @@ pub fn lint_file(path: &str, toks: &[Tok], in_test: &[bool], diags: &mut Vec<Dia
                 ),
                 diags,
             );
+        }
+        // D7 — order-sensitive reductions in the numeric crates: a
+        // `.sum()`/`.fold()` whose same-expression upstream (scanning back
+        // to the statement/block bound) contains an order-dependent adapter
+        // call.  Token-level like every rule here: a chain broken by a
+        // block closure scans clean — the catalog trades recall for zero
+        // false positives, same as D5's bench check.
+        if is_numeric_crate(path)
+            && t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "sum" | "fold")
+            && i >= 1
+            && is_punct(&toks[i - 1], ".")
+            && i + 1 < toks.len()
+            && (is_punct(&toks[i + 1], "(") || toks[i + 1].text == "::")
+        {
+            let mut j = i - 1;
+            let mut steps = 0usize;
+            while j > 0 && steps < D7_SCAN_LIMIT {
+                j -= 1;
+                steps += 1;
+                let tj = &toks[j];
+                if is_punct(tj, ";") || is_punct(tj, "{") || is_punct(tj, "}") {
+                    break;
+                }
+                if tj.kind == TokKind::Ident
+                    && D7_ORDERED_ADAPTERS.contains(&tj.text.as_str())
+                    && j >= 1
+                    && is_punct(&toks[j - 1], ".")
+                    && j + 1 < toks.len()
+                    && is_punct(&toks[j + 1], "(")
+                {
+                    push(
+                        t.line,
+                        "D7",
+                        format!(
+                            "`.{}()` downstream of `.{}()` in a numeric crate: the \
+                             reduction bakes a position/key-dependent order into a \
+                             float result",
+                            t.text, tj.text
+                        ),
+                        diags,
+                    );
+                    break;
+                }
+            }
         }
         // D2 — sync primitives anywhere (the pool's own queue is allowlisted)
         if t.kind == TokKind::Ident
@@ -525,6 +599,62 @@ mod tests {
         let d = run(&[(
             "rust/src/nn/allowed.rs",
             "// taylint: allow(D6) -- fixture: justified wall-clock read\nuse std::time::Instant;\n",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn d7_trips_on_order_sensitive_reductions() {
+        // rev().map().sum() in a numeric crate bakes reversal into a float
+        let d = run(&[(
+            "rust/src/taylor/bad.rs",
+            "pub fn f(x: &[f64]) -> f64 { x.iter().rev().map(|v| v * 2.0).sum() }\n",
+        )]);
+        assert!(rules_of(&d).contains(&"D7"), "{d:?}");
+        // kern is a numeric crate; chunked fold trips there too
+        let d = run(&[(
+            "rust/src/kern/bad.rs",
+            "pub fn g(x: &[f64]) -> f64 { x.chunks(4).fold(0.0, |a, c| a + c[0]) }\n",
+        )]);
+        assert!(rules_of(&d).contains(&"D7"), "{d:?}");
+        // the turbofish form is the same reduction
+        let d = run(&[(
+            "rust/src/solvers/bad.rs",
+            "pub fn h(x: &[f64]) -> f64 { x.iter().rev().sum::<f64>() }\n",
+        )]);
+        assert!(rules_of(&d).contains(&"D7"), "{d:?}");
+    }
+
+    #[test]
+    fn d7_negative_controls_stay_clean() {
+        // a zip/map dot product reduces in slice order — order-honest
+        let d = run(&[(
+            "rust/src/solvers/ok.rs",
+            "pub fn dot(x: &[f64], y: &[f64]) -> f64 { x.iter().zip(y).map(|(a, b)| a * b).sum() }\n",
+        )]);
+        assert!(!rules_of(&d).contains(&"D7"), "{d:?}");
+        // the same rev().sum() outside the numeric crates is out of scope
+        let d = run(&[(
+            "rust/src/util/ok.rs",
+            "pub fn f(x: &[f64]) -> f64 { x.iter().rev().sum() }\n",
+        )]);
+        assert!(!rules_of(&d).contains(&"D7"), "{d:?}");
+        // an ordered adapter with no reduction downstream is fine
+        let d = run(&[(
+            "rust/src/kern/ok.rs",
+            "pub fn f(x: &[f64]) { for c in x.chunks(4) { let _ = c.len(); } }\n",
+        )]);
+        assert!(!rules_of(&d).contains(&"D7"), "{d:?}");
+        // a prior rev in a *different statement* does not taint a later sum
+        let d = run(&[(
+            "rust/src/taylor/ok.rs",
+            "pub fn f(x: &[f64]) -> f64 { let n = x.iter().rev().count(); let s: f64 = x.iter().sum(); s + n as f64 }\n",
+        )]);
+        assert!(!rules_of(&d).contains(&"D7"), "{d:?}");
+        // the allow escape hatch works for D7 like every other rule
+        let d = run(&[(
+            "rust/src/taylor/allowed.rs",
+            "pub fn f(x: &[f64]) -> f64 { x.iter().rev().sum() } // taylint: allow(D7) -- fixture: reversal is the spec\n",
         )]);
         assert!(d.is_empty(), "{d:?}");
     }

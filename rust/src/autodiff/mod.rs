@@ -47,6 +47,7 @@ pub use optim::Adam;
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::kern::axpy::{add_assign, axpy_f64, mul_acc, sub_assign};
 use crate::nn::Value;
 
 /// One recorded elementwise operation (operands are node ids).
@@ -185,9 +186,7 @@ impl Tape {
             assert!(Rc::ptr_eq(&self.inner, &v.inner), "seed from a different tape");
             v.check(&t);
             assert_eq!(g.len(), rows, "seed column length vs rows");
-            for (a, gi) in adj[v.id * rows..(v.id + 1) * rows].iter_mut().zip(*g) {
-                *a += *gi;
-            }
+            add_assign(g, &mut adj[v.id * rows..(v.id + 1) * rows]);
         }
         let mut params: Vec<f64> = Vec::new();
         for id in (0..n).rev() {
@@ -208,34 +207,22 @@ impl Tape {
                     params[pi] += g.iter().sum::<f64>();
                 }
                 Op::Add(a, b) => {
-                    for r in 0..rows {
-                        lo[a * rows + r] += g[r];
-                    }
-                    for r in 0..rows {
-                        lo[b * rows + r] += g[r];
-                    }
+                    add_assign(g, &mut lo[a * rows..(a + 1) * rows]);
+                    add_assign(g, &mut lo[b * rows..(b + 1) * rows]);
                 }
                 Op::Sub(a, b) => {
-                    for r in 0..rows {
-                        lo[a * rows + r] += g[r];
-                    }
-                    for r in 0..rows {
-                        lo[b * rows + r] -= g[r];
-                    }
+                    add_assign(g, &mut lo[a * rows..(a + 1) * rows]);
+                    sub_assign(g, &mut lo[b * rows..(b + 1) * rows]);
                 }
                 Op::Mul(a, b) => {
                     let (va, vb) = (t.col(a), t.col(b));
-                    for r in 0..rows {
-                        lo[a * rows + r] += g[r] * vb[r];
-                    }
-                    for r in 0..rows {
-                        lo[b * rows + r] += g[r] * va[r];
-                    }
+                    mul_acc(g, vb, &mut lo[a * rows..(a + 1) * rows]);
+                    mul_acc(g, va, &mut lo[b * rows..(b + 1) * rows]);
                 }
                 Op::Scale(a, sc) => {
-                    for r in 0..rows {
-                        lo[a * rows + r] += g[r] * sc;
-                    }
+                    // ā += sc·ḡ — bit-identical to the recorded ḡ·sc since
+                    // IEEE multiplication commutes bitwise on numeric values.
+                    axpy_f64(sc, g, &mut lo[a * rows..(a + 1) * rows]);
                 }
                 Op::Tanh(a) => {
                     let y = t.col(id);

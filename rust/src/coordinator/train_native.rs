@@ -46,6 +46,7 @@ use std::ops::Range;
 
 use crate::autodiff::div::{divergence_values, Divergence};
 use crate::autodiff::{Adam, Tape, Var};
+use crate::kern;
 use crate::nn::{ode_jet_values, Cnf, Mlp, SeriesOf, Value};
 use crate::obs::{Counter, Hist, Recorder};
 use crate::solvers::adaptive::AdaptiveOpts;
@@ -120,9 +121,7 @@ fn augmented_stage_vjp<F>(
     let mut colbuf = vec![0.0f64; b];
     let zvars: Vec<Var> = (0..n)
         .map(|j| {
-            for (r, cv) in colbuf.iter_mut().enumerate() {
-                *cv = u[r * w + j] as f64;
-            }
+            kern::axpy::gather_col_f32(u, w, j, &mut colbuf);
             tape.input(&colbuf)
         })
         .collect();
@@ -156,7 +155,9 @@ fn augmented_stage_vjp<F>(
     };
     let mut seed_cols: Vec<Vec<f64>> = Vec::with_capacity(w);
     for j in 0..w {
-        seed_cols.push((0..b).map(|r| kbar[r * w + j]).collect());
+        let mut col = vec![0.0f64; b];
+        kern::axpy::gather_col(kbar, w, j, &mut col);
+        seed_cols.push(col);
     }
     let mut seeds: Vec<(&Var, &[f64])> = Vec::with_capacity(w);
     for (j, xj) in x1.iter().enumerate() {
@@ -172,9 +173,7 @@ fn augmented_stage_vjp<F>(
     }
     for (j, zv) in zvars.iter().enumerate() {
         let gz = grads.wrt(zv);
-        for (r, gr) in gz.iter().enumerate() {
-            ubar[r * w + j] = *gr;
-        }
+        kern::axpy::scatter_col(&gz, w, j, ubar);
     }
     // The integrands read none of the augmented columns (ℓ, q).
     for r in 0..b {
@@ -430,9 +429,7 @@ fn adjoint_shard<V: StageVjp>(
     for s in (0..rec.stage_y.len()).rev() {
         for (i, kb) in kbar.iter_mut().enumerate() {
             let c = h * tbf.b[i] as f64;
-            for (kv, yv) in kb.iter_mut().zip(&ybar) {
-                *kv = c * *yv;
-            }
+            kern::axpy::scale_into(c, &ybar, kb);
         }
         for i in (0..tbf.stages).rev() {
             if kbar[i].iter().all(|v| *v == 0.0) {
@@ -447,17 +444,13 @@ fn adjoint_shard<V: StageVjp>(
                 &mut pbar,
                 &mut ubar,
             );
-            for (yv, uv) in ybar.iter_mut().zip(&ubar) {
-                *yv += *uv;
-            }
+            kern::axpy::add_assign(&ubar, &mut ybar);
             if i >= 1 {
                 let arow = &tbf.a[i - 1];
                 for j in 0..i {
                     let c = h * arow[j] as f64;
                     if c != 0.0 {
-                        for (kv, uv) in kbar[j].iter_mut().zip(&ubar) {
-                            *kv += c * *uv;
-                        }
+                        kern::axpy::axpy_f64(c, &ubar, &mut kbar[j]);
                     }
                 }
             }

@@ -1,0 +1,232 @@
+//! Blocked stage-combination and adjoint column kernels.
+//!
+//! The RK drivers combine stage derivatives as `y + h Σⱼ cⱼ·kⱼ`; the old
+//! code made one full-length memory sweep per stage (S passes over an
+//! n-vector that may not fit in L1).  [`fused_axpy_into`] makes ONE pass:
+//! per [`BLOCK`](super::BLOCK)-wide chunk it seeds from `y` and folds every
+//! stage in before moving on, so the destination chunk stays cache-hot
+//! across all stages.  Per element the operation sequence is unchanged —
+//! seed with `y[e]`, then `+= cⱼ·kⱼ[e]` in ascending stage order with
+//! exactly the old `cⱼ = coeffs[j]·h ≠ 0` skip — so results are
+//! bit-identical to the sequential sweeps (retained as
+//! [`naive::multi_axpy`](super::naive::multi_axpy) and asserted in the
+//! tests below and in `benches/perf_kernels.rs`).
+//!
+//! The f64 helpers below are the column primitives of the discrete
+//! adjoint (`Tape::backward` arms, the stage-cotangent recursion in
+//! `coordinator::train_native`): single-pass unit-stride maps whose loop
+//! shapes the autovectorizer handles outright, centralized here so every
+//! consumer shares one audited op order.
+
+use super::BLOCK;
+
+/// `out = y + h Σⱼ coeffs[j]·kⱼ` in one blocked pass; stages with
+/// `coeffs[j]·h == 0` are skipped (the RK tableaus are sparse).
+///
+/// ```
+/// use taynode::kern::axpy::fused_axpy_into;
+/// let (k0, k1) = ([1.0f32, 2.0], [3.0f32, -1.0]);
+/// let mut out = [0.0f32; 2];
+/// fused_axpy_into(&[0.5, 1.0], 2.0, &[&k0[..], &k1[..]], &[10.0, 10.0], &mut out);
+/// assert_eq!(out, [17.0, 10.0]);
+/// ```
+#[inline]
+pub fn fused_axpy_into<K: AsRef<[f32]>>(
+    coeffs: &[f32],
+    h: f32,
+    ks: &[K],
+    y: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(coeffs.len(), ks.len());
+    debug_assert_eq!(y.len(), out.len());
+    let n = out.len();
+    let mut e0 = 0;
+    while e0 < n {
+        let bl = BLOCK.min(n - e0);
+        let dst = &mut out[e0..e0 + bl];
+        dst.copy_from_slice(&y[e0..e0 + bl]);
+        for (j, aj) in coeffs.iter().enumerate() {
+            let cj = *aj * h;
+            if cj != 0.0 {
+                let kr = &ks[j].as_ref()[e0..e0 + bl];
+                for (o, kv) in dst.iter_mut().zip(kr) {
+                    *o += cj * *kv;
+                }
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// `out = h Σⱼ coeffs[j]·kⱼ` (zero base) in one blocked pass — the error
+/// estimate's combination.
+#[inline]
+pub fn fused_axpy_zero<K: AsRef<[f32]>>(coeffs: &[f32], h: f32, ks: &[K], out: &mut [f32]) {
+    debug_assert_eq!(coeffs.len(), ks.len());
+    let n = out.len();
+    let mut e0 = 0;
+    while e0 < n {
+        let bl = BLOCK.min(n - e0);
+        let dst = &mut out[e0..e0 + bl];
+        for v in dst.iter_mut() {
+            *v = 0.0;
+        }
+        for (j, aj) in coeffs.iter().enumerate() {
+            let cj = *aj * h;
+            if cj != 0.0 {
+                let kr = &ks[j].as_ref()[e0..e0 + bl];
+                for (o, kv) in dst.iter_mut().zip(kr) {
+                    *o += cj * *kv;
+                }
+            }
+        }
+        e0 += bl;
+    }
+}
+
+// -- f64 adjoint column primitives -------------------------------------------
+
+/// `out[e] = c · x[e]` — the stage-cotangent seed `k̄ᵢ = h·bᵢ·ȳ`.
+#[inline]
+pub fn scale_into(c: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, xv) in out.iter_mut().zip(x) {
+        *o = c * *xv;
+    }
+}
+
+/// `y[e] += c · x[e]` — the coupling fold `k̄ⱼ += h·aᵢⱼ·ūᵢ` (and, since
+/// IEEE multiplication commutes bitwise on numeric values, the tape's
+/// `Scale` arm `ā += ḡ·s`).
+#[inline]
+pub fn axpy_f64(c: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += c * *xv;
+    }
+}
+
+/// `y[e] += x[e]` — cotangent accumulation (`ȳ += ū`, the tape's `Add`
+/// arm and seed injection).
+#[inline]
+pub fn add_assign(x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += *xv;
+    }
+}
+
+/// `y[e] -= x[e]` — the tape's `Sub` right-operand arm.
+#[inline]
+pub fn sub_assign(x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv -= *xv;
+    }
+}
+
+/// `dst[e] += a[e] · b[e]` — the tape's `Mul` arm (`ā += ḡ ⊙ v_b`).
+#[inline]
+pub fn mul_acc(a: &[f64], b: &[f64], dst: &mut [f64]) {
+    debug_assert_eq!(a.len(), dst.len());
+    debug_assert_eq!(b.len(), dst.len());
+    for ((d, av), bv) in dst.iter_mut().zip(a).zip(b) {
+        *d += *av * *bv;
+    }
+}
+
+/// Widen column j of a row-major f32 `[rows, w]` matrix into `out`
+/// (`out[r] = src[r·w + j]`) — how the stage VJP lifts engine state into
+/// tape inputs.
+#[inline]
+pub fn gather_col_f32(src: &[f32], w: usize, j: usize, out: &mut [f64]) {
+    debug_assert!(j < w);
+    debug_assert!(src.len() >= out.len() * w);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = src[r * w + j] as f64;
+    }
+}
+
+/// Extract column j of a row-major f64 `[rows, w]` matrix into `out` —
+/// the cotangent seed columns.
+#[inline]
+pub fn gather_col(src: &[f64], w: usize, j: usize, out: &mut [f64]) {
+    debug_assert!(j < w);
+    debug_assert!(src.len() >= out.len() * w);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = src[r * w + j];
+    }
+}
+
+/// Scatter `vals` into column j of a row-major `[rows, w]` matrix —
+/// writing per-column VJP results back into the interleaved cotangent.
+#[inline]
+pub fn scatter_col(vals: &[f64], w: usize, j: usize, dst: &mut [f64]) {
+    debug_assert!(j < w);
+    debug_assert!(dst.len() >= vals.len() * w);
+    for (r, v) in vals.iter().enumerate() {
+        dst[r * w + j] = *v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive;
+    use super::*;
+    use crate::util::ptest::gen;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn fused_pass_matches_sequential_sweeps_bit_for_bit() {
+        // Lengths off the block width, sparse coefficient rows (zeros and
+        // a -0.0, both skipped identically), h folded in: the one-pass
+        // kernel must reproduce the old per-stage sweeps exactly.
+        let mut rng = Pcg::new(0xA11);
+        for &n in &[1usize, 3, 63, 64, 65, 257, 1000] {
+            let ks: Vec<Vec<f32>> = (0..5).map(|_| gen::vec_f32(&mut rng, n, 2.0)).collect();
+            let y = gen::vec_f32(&mut rng, n, 1.0);
+            let coeffs = [0.25f32, 0.0, -0.75, -0.0, 1.5];
+            for &h in &[0.1f32, 1.0, 0.0] {
+                let mut want = vec![0.0f32; n];
+                naive::multi_axpy(&coeffs, h, &ks, &y, &mut want);
+                let mut got = vec![0.0f32; n];
+                fused_axpy_into(&coeffs, h, &ks, &y, &mut got);
+                for (e, (g, v)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), v.to_bits(), "n={n} h={h} elem {e}");
+                }
+                naive::multi_axpy_zero(&coeffs, h, &ks, &mut want);
+                fused_axpy_zero(&coeffs, h, &ks, &mut got);
+                for (e, (g, v)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), v.to_bits(), "zero n={n} h={h} elem {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn column_primitives_shapes() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+        let mut col = [0.0f64; 3];
+        gather_col_f32(&src, 2, 1, &mut col);
+        assert_eq!(col, [2.0, 4.0, 6.0]);
+        let srcd = [1.0f64, 2.0, 3.0, 4.0];
+        gather_col(&srcd, 2, 0, &mut col[..2]);
+        assert_eq!(&col[..2], &[1.0, 3.0]);
+        let mut mat = [0.0f64; 4];
+        scatter_col(&[7.0, 8.0], 2, 1, &mut mat);
+        assert_eq!(mat, [0.0, 7.0, 0.0, 8.0]);
+        let mut y = [1.0f64, 1.0];
+        scale_into(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, [6.0, 8.0]);
+        axpy_f64(0.5, &[2.0, 2.0], &mut y);
+        assert_eq!(y, [7.0, 9.0]);
+        add_assign(&[1.0, -1.0], &mut y);
+        assert_eq!(y, [8.0, 8.0]);
+        sub_assign(&[8.0, 0.0], &mut y);
+        assert_eq!(y, [0.0, 8.0]);
+        let mut d = [1.0f64, 1.0];
+        mul_acc(&[2.0, 3.0], &[4.0, 5.0], &mut d);
+        assert_eq!(d, [9.0, 16.0]);
+    }
+}

@@ -1,0 +1,502 @@
+//! Blocked truncated-series kernels over flat `[K+1, m]` coefficient
+//! slabs — the Rust mapping of `python/compile/kernels/cauchy_prod.py`.
+//!
+//! Layout: an order-K series batch over m elements is ONE contiguous slab
+//! of length `(K+1)·m`; coefficient row k is `slab[k·m..(k+1)·m]`.  Every
+//! kernel walks the elements in [`BLOCK`]-wide lane blocks with the
+//! k-recurrence innermost, so a block's coefficient column stays in L1
+//! across all K+1 orders and the element loops are unit-stride maps the
+//! autovectorizer lowers to SIMD.  The jet hot paths (mul, div, exp,
+//! tanh, sigmoid) additionally dispatch through [`unroll_k1!`] for
+//! k1 ≤ 8 — a monomorphized body with a literal order count, so the
+//! triangular k/j loops fully unroll: the "trace-time unrolling" of the
+//! Pallas spec, done by constant propagation instead of tracing.
+//!
+//! Per element, each kernel applies the EXACT operation sequence of the
+//! scalar `Series` recurrence (see the naive references in
+//! [`super::naive`], kept verbatim from the pre-kernel code): same 0.0
+//! accumulator starts, same ascending-j order, same multiply association.
+//! The tests below pin blocked == naive bit-for-bit at awkward shapes.
+
+use super::BLOCK;
+
+/// Bind `$kk` to a compile-time-constant order count for k1 ≤ 8: each
+/// match arm inlines `$body` with a literal trip count, so LLVM fully
+/// unrolls the triangular recurrence loops in the paper's operating range
+/// (K ≤ 7) while the `_` arm keeps arbitrary orders correct.
+macro_rules! unroll_k1 {
+    ($k1:expr, $kk:ident, $body:expr) => {
+        match $k1 {
+            1 => {
+                let $kk: usize = 1;
+                $body
+            }
+            2 => {
+                let $kk: usize = 2;
+                $body
+            }
+            3 => {
+                let $kk: usize = 3;
+                $body
+            }
+            4 => {
+                let $kk: usize = 4;
+                $body
+            }
+            5 => {
+                let $kk: usize = 5;
+                $body
+            }
+            6 => {
+                let $kk: usize = 6;
+                $body
+            }
+            7 => {
+                let $kk: usize = 7;
+                $body
+            }
+            8 => {
+                let $kk: usize = 8;
+                $body
+            }
+            _ => {
+                let $kk: usize = $k1;
+                $body
+            }
+        }
+    };
+}
+
+/// Truncated Cauchy product `out[k] = Σ_{j=0..=k} z[j] ⊙ w[k-j]` (paper
+/// Table 1 row 2) on `[k1, m]` slabs.  `out` is overwritten.
+///
+/// ```
+/// use taynode::kern::cauchy::mul_into;
+/// // (1 + 2t)·(3 + 4t) = 3 + 10t + 8t², one element (k1 = 3, m = 1).
+/// let mut out = vec![0.0; 3];
+/// mul_into(3, 1, &[1.0, 2.0, 0.0], &[3.0, 4.0, 0.0], &mut out);
+/// assert_eq!(out, [3.0, 10.0, 8.0]);
+/// ```
+pub fn mul_into(k1: usize, m: usize, z: &[f64], w: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(w.len(), k1 * m);
+    debug_assert_eq!(out.len(), k1 * m);
+    unroll_k1!(k1, kk, mul_slab(kk, m, z, w, out));
+}
+
+#[inline(always)]
+fn mul_slab(k1: usize, m: usize, z: &[f64], w: &[f64], out: &mut [f64]) {
+    let mut acc = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for k in 0..k1 {
+            for a in acc[..bl].iter_mut() {
+                *a = 0.0;
+            }
+            for j in 0..=k {
+                let zr = &z[j * m + e0..j * m + e0 + bl];
+                let wr = &w[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                for ((a, zv), wv) in acc[..bl].iter_mut().zip(zr).zip(wr) {
+                    *a += *zv * *wv;
+                }
+            }
+            out[k * m + e0..k * m + e0 + bl].copy_from_slice(&acc[..bl]);
+        }
+        e0 += bl;
+    }
+}
+
+/// Series division (Table 1 row 3): `out[k] = (z[k] - Σ_{j<k} out[j] ⊙
+/// w[k-j]) / w[0]`.  `out` is overwritten; earlier rows feed later ones.
+pub fn div_into(k1: usize, m: usize, z: &[f64], w: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(w.len(), k1 * m);
+    debug_assert_eq!(out.len(), k1 * m);
+    unroll_k1!(k1, kk, div_slab(kk, m, z, w, out));
+}
+
+#[inline(always)]
+fn div_slab(k1: usize, m: usize, z: &[f64], w: &[f64], out: &mut [f64]) {
+    let mut acc = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for k in 0..k1 {
+            acc[..bl].copy_from_slice(&z[k * m + e0..k * m + e0 + bl]);
+            for j in 0..k {
+                let or = &out[j * m + e0..j * m + e0 + bl];
+                let wr = &w[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                for ((a, ov), wv) in acc[..bl].iter_mut().zip(or).zip(wr) {
+                    *a -= *ov * *wv;
+                }
+            }
+            let w0 = &w[e0..e0 + bl];
+            let dst = &mut out[k * m + e0..k * m + e0 + bl];
+            for ((d, a), wv) in dst.iter_mut().zip(&acc[..bl]).zip(w0) {
+                *d = *a / *wv;
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// Series exponential via y' = y z': `y[0] = exp(z[0])`, then
+/// `y[k] = (Σ_{j=1..=k} j·z[j] ⊙ y[k-j]) / k`.
+pub fn exp_into(k1: usize, m: usize, z: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(y.len(), k1 * m);
+    unroll_k1!(k1, kk, exp_slab(kk, m, z, y));
+}
+
+#[inline(always)]
+fn exp_slab(k1: usize, m: usize, z: &[f64], y: &mut [f64]) {
+    let mut acc = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for (yv, zv) in y[e0..e0 + bl].iter_mut().zip(&z[e0..e0 + bl]) {
+            *yv = zv.exp();
+        }
+        for k in 1..k1 {
+            for a in acc[..bl].iter_mut() {
+                *a = 0.0;
+            }
+            for j in 1..=k {
+                let jf = j as f64;
+                let zr = &z[j * m + e0..j * m + e0 + bl];
+                let yr = &y[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                for ((a, zv), yv) in acc[..bl].iter_mut().zip(zr).zip(yr) {
+                    *a += jf * *zv * *yv;
+                }
+            }
+            let kf = k as f64;
+            let dst = &mut y[k * m + e0..k * m + e0 + bl];
+            for (d, a) in dst.iter_mut().zip(&acc[..bl]) {
+                *d = *a / kf;
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// Series logarithm via y' = z'/z: `y[0] = ln(z[0])`, then
+/// `y[k] = (k·z[k] - Σ_{j=1..k} (k-j)·y[k-j] ⊙ z[j]) / (k·z[0])`.
+pub fn ln_into(k1: usize, m: usize, z: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(y.len(), k1 * m);
+    let mut acc = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for (yv, zv) in y[e0..e0 + bl].iter_mut().zip(&z[e0..e0 + bl]) {
+            *yv = zv.ln();
+        }
+        for k in 1..k1 {
+            let kf = k as f64;
+            let zk = &z[k * m + e0..k * m + e0 + bl];
+            for (a, zv) in acc[..bl].iter_mut().zip(zk) {
+                *a = kf * *zv;
+            }
+            for j in 1..k {
+                let cf = (k - j) as f64;
+                let yr = &y[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                let zr = &z[j * m + e0..j * m + e0 + bl];
+                for ((a, yv), zv) in acc[..bl].iter_mut().zip(yr).zip(zr) {
+                    *a -= cf * *yv * *zv;
+                }
+            }
+            let z0 = &z[e0..e0 + bl];
+            let dst = &mut y[k * m + e0..k * m + e0 + bl];
+            for ((d, a), zv) in dst.iter_mut().zip(&acc[..bl]).zip(z0) {
+                *d = *a / (kf * *zv);
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// Series square root via y² = z: `y[0] = sqrt(z[0])`, then
+/// `y[k] = (z[k] - Σ_{j=1..k} y[j] ⊙ y[k-j]) / (2·y[0])`.
+pub fn sqrt_into(k1: usize, m: usize, z: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(y.len(), k1 * m);
+    let mut acc = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for (yv, zv) in y[e0..e0 + bl].iter_mut().zip(&z[e0..e0 + bl]) {
+            *yv = zv.sqrt();
+        }
+        for k in 1..k1 {
+            acc[..bl].copy_from_slice(&z[k * m + e0..k * m + e0 + bl]);
+            for j in 1..k {
+                let yj = &y[j * m + e0..j * m + e0 + bl];
+                let ymj = &y[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                for ((a, u), v) in acc[..bl].iter_mut().zip(yj).zip(ymj) {
+                    *a -= *u * *v;
+                }
+            }
+            let (head, tail) = y.split_at_mut(k * m);
+            let y0 = &head[e0..e0 + bl];
+            let dst = &mut tail[e0..e0 + bl];
+            for ((d, a), yv) in dst.iter_mut().zip(&acc[..bl]).zip(y0) {
+                *d = *a / (2.0 * *yv);
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// Coupled sine/cosine recurrence: `s[k] = (Σ j·z[j] ⊙ c[k-j]) / k`,
+/// `c[k] = -(Σ j·z[j] ⊙ s[k-j]) / k`, both sums over j = 1..=k with the
+/// per-j term `j·z[j]` shared — the scalar interleaving preserved.
+pub fn sin_cos_into(k1: usize, m: usize, z: &[f64], s: &mut [f64], c: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(s.len(), k1 * m);
+    debug_assert_eq!(c.len(), k1 * m);
+    let mut sacc = [0.0f64; BLOCK];
+    let mut cacc = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for ((sv, cv), zv) in s[e0..e0 + bl]
+            .iter_mut()
+            .zip(c[e0..e0 + bl].iter_mut())
+            .zip(&z[e0..e0 + bl])
+        {
+            *sv = zv.sin();
+            *cv = zv.cos();
+        }
+        for k in 1..k1 {
+            for (sa, ca) in sacc[..bl].iter_mut().zip(cacc[..bl].iter_mut()) {
+                *sa = 0.0;
+                *ca = 0.0;
+            }
+            for j in 1..=k {
+                let jf = j as f64;
+                let zr = &z[j * m + e0..j * m + e0 + bl];
+                let cr = &c[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                let sr = &s[(k - j) * m + e0..(k - j) * m + e0 + bl];
+                for e in 0..bl {
+                    let zj = jf * zr[e];
+                    sacc[e] += zj * cr[e];
+                    cacc[e] += zj * sr[e];
+                }
+            }
+            let kf = k as f64;
+            let sdst = &mut s[k * m + e0..k * m + e0 + bl];
+            for (d, a) in sdst.iter_mut().zip(&sacc[..bl]) {
+                *d = *a / kf;
+            }
+            let cdst = &mut c[k * m + e0..k * m + e0 + bl];
+            for (d, a) in cdst.iter_mut().zip(&cacc[..bl]) {
+                *d = -*a / kf;
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// Series tanh via s' = (1 - s²) z': per j the inner sum
+/// `ssm = (s ⊙ s)[k-j]` runs ascending, then
+/// `acc += j·z[j] ⊙ (δ_{k-j,0} - ssm)` — the scalar op sequence exactly.
+pub fn tanh_into(k1: usize, m: usize, z: &[f64], s: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(s.len(), k1 * m);
+    unroll_k1!(k1, kk, tanh_slab(kk, m, z, s));
+}
+
+#[inline(always)]
+fn tanh_slab(k1: usize, m: usize, z: &[f64], s: &mut [f64]) {
+    let mut acc = [0.0f64; BLOCK];
+    let mut ssm = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for (sv, zv) in s[e0..e0 + bl].iter_mut().zip(&z[e0..e0 + bl]) {
+            *sv = zv.tanh();
+        }
+        for k in 1..k1 {
+            for a in acc[..bl].iter_mut() {
+                *a = 0.0;
+            }
+            for j in 1..=k {
+                let mj = k - j;
+                for v in ssm[..bl].iter_mut() {
+                    *v = 0.0;
+                }
+                for i in 0..=mj {
+                    let si = &s[i * m + e0..i * m + e0 + bl];
+                    let sr = &s[(mj - i) * m + e0..(mj - i) * m + e0 + bl];
+                    for ((v, a), b) in ssm[..bl].iter_mut().zip(si).zip(sr) {
+                        *v += *a * *b;
+                    }
+                }
+                let jf = j as f64;
+                let zr = &z[j * m + e0..j * m + e0 + bl];
+                for e in 0..bl {
+                    let u = if mj == 0 { 1.0 - ssm[e] } else { -ssm[e] };
+                    acc[e] += jf * zr[e] * u;
+                }
+            }
+            let kf = k as f64;
+            let dst = &mut s[k * m + e0..k * m + e0 + bl];
+            for (d, a) in dst.iter_mut().zip(&acc[..bl]) {
+                *d = *a / kf;
+            }
+        }
+        e0 += bl;
+    }
+}
+
+/// Logistic sigmoid via s' = s (1 - s) z': per j the inner sum
+/// `ssm = (s ⊙ s)[k-j]` runs ascending, then
+/// `acc += j·z[j] ⊙ (s[k-j] - ssm)` — the scalar op sequence exactly.
+pub fn sigmoid_into(k1: usize, m: usize, z: &[f64], s: &mut [f64]) {
+    debug_assert_eq!(z.len(), k1 * m);
+    debug_assert_eq!(s.len(), k1 * m);
+    unroll_k1!(k1, kk, sigmoid_slab(kk, m, z, s));
+}
+
+#[inline(always)]
+fn sigmoid_slab(k1: usize, m: usize, z: &[f64], s: &mut [f64]) {
+    let mut acc = [0.0f64; BLOCK];
+    let mut ssm = [0.0f64; BLOCK];
+    let mut e0 = 0;
+    while e0 < m {
+        let bl = BLOCK.min(m - e0);
+        for (sv, zv) in s[e0..e0 + bl].iter_mut().zip(&z[e0..e0 + bl]) {
+            *sv = 1.0 / (1.0 + (-*zv).exp());
+        }
+        for k in 1..k1 {
+            for a in acc[..bl].iter_mut() {
+                *a = 0.0;
+            }
+            for j in 1..=k {
+                let mj = k - j;
+                for v in ssm[..bl].iter_mut() {
+                    *v = 0.0;
+                }
+                for i in 0..=mj {
+                    let si = &s[i * m + e0..i * m + e0 + bl];
+                    let sr = &s[(mj - i) * m + e0..(mj - i) * m + e0 + bl];
+                    for ((v, a), b) in ssm[..bl].iter_mut().zip(si).zip(sr) {
+                        *v += *a * *b;
+                    }
+                }
+                let jf = j as f64;
+                let zr = &z[j * m + e0..j * m + e0 + bl];
+                let smj = &s[mj * m + e0..mj * m + e0 + bl];
+                for e in 0..bl {
+                    acc[e] += jf * zr[e] * (smj[e] - ssm[e]);
+                }
+            }
+            let kf = k as f64;
+            let dst = &mut s[k * m + e0..k * m + e0 + bl];
+            for (d, a) in dst.iter_mut().zip(&acc[..bl]) {
+                *d = *a / kf;
+            }
+        }
+        e0 += bl;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive;
+    use super::*;
+    use crate::util::ptest::gen;
+    use crate::util::rng::Pcg;
+
+    /// The awkward-shape sweep the kernels must survive bit-for-bit:
+    /// element counts off the lane width (m % BLOCK ≠ 0, including the
+    /// remainder-only m = 1/3 and the one-past m = BLOCK + 1 / 257) and
+    /// every order the paper operates at (K ∈ 0..=7, i.e. k1 ∈ 1..=8)
+    /// plus one past the unroll dispatch (k1 = 9).
+    const SHAPES_M: [usize; 7] = [1, 3, BLOCK - 1, BLOCK, BLOCK + 1, 257, 2 * BLOCK + 17];
+
+    fn rows_of(slab: &[f64], k1: usize, m: usize) -> Vec<Vec<f64>> {
+        (0..k1).map(|k| slab[k * m..(k + 1) * m].to_vec()).collect()
+    }
+
+    fn assert_slab_eq(got: &[f64], want: &[Vec<f64>], m: usize, ctx: &str) {
+        for (k, wk) in want.iter().enumerate() {
+            for (e, wv) in wk.iter().enumerate() {
+                let gv = got[k * m + e];
+                assert_eq!(
+                    gv.to_bits(),
+                    wv.to_bits(),
+                    "{ctx}: k={k} e={e}: {gv} vs {wv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_match_naive_bit_for_bit_at_awkward_shapes() {
+        let mut rng = Pcg::new(0xC0FFEE);
+        for &m in &SHAPES_M {
+            for k1 in 1..=9usize {
+                let z = gen::vec_f64(&mut rng, k1 * m, -1.5, 1.5);
+                let w = gen::vec_f64(&mut rng, k1 * m, -1.5, 1.5);
+                // keep divisors / ln / sqrt arguments away from 0
+                let mut wpos = w.clone();
+                for v in wpos[..m].iter_mut() {
+                    *v = v.abs() + 0.5;
+                }
+                let zr = rows_of(&z, k1, m);
+                let wr = rows_of(&w, k1, m);
+                let wposr = rows_of(&wpos, k1, m);
+                let ctx = format!("m={m} k1={k1}");
+
+                let mut out = vec![0.0; k1 * m];
+                mul_into(k1, m, &z, &w, &mut out);
+                assert_slab_eq(&out, &naive::mul(&zr, &wr), m, &format!("mul {ctx}"));
+
+                div_into(k1, m, &z, &wpos, &mut out);
+                assert_slab_eq(&out, &naive::div(&zr, &wposr), m, &format!("div {ctx}"));
+
+                exp_into(k1, m, &z, &mut out);
+                assert_slab_eq(&out, &naive::exp(&zr), m, &format!("exp {ctx}"));
+
+                ln_into(k1, m, &wpos, &mut out);
+                assert_slab_eq(&out, &naive::ln(&wposr), m, &format!("ln {ctx}"));
+
+                sqrt_into(k1, m, &wpos, &mut out);
+                assert_slab_eq(&out, &naive::sqrt(&wposr), m, &format!("sqrt {ctx}"));
+
+                tanh_into(k1, m, &z, &mut out);
+                assert_slab_eq(&out, &naive::tanh(&zr), m, &format!("tanh {ctx}"));
+
+                sigmoid_into(k1, m, &z, &mut out);
+                assert_slab_eq(&out, &naive::sigmoid(&zr), m, &format!("sigmoid {ctx}"));
+
+                let mut cout = vec![0.0; k1 * m];
+                sin_cos_into(k1, m, &z, &mut out, &mut cout);
+                let (sn, cn) = naive::sin_cos(&zr);
+                assert_slab_eq(&out, &sn, m, &format!("sin {ctx}"));
+                assert_slab_eq(&cout, &cn, m, &format!("cos {ctx}"));
+            }
+        }
+    }
+
+    #[test]
+    fn unrolled_dispatch_agrees_with_generic_arm() {
+        // k1 = 4 goes through the unrolled arm, k1 = 12 through the `_`
+        // arm; slicing the k1 = 12 slab down to its first 4 rows must
+        // reproduce the k1 = 4 product (the triangular sum only ever reads
+        // rows ≤ k), so both arms share one oracle.
+        let mut rng = Pcg::new(7);
+        let m = 129;
+        let z = gen::vec_f64(&mut rng, 12 * m, -1.0, 1.0);
+        let w = gen::vec_f64(&mut rng, 12 * m, -1.0, 1.0);
+        let mut big = vec![0.0; 12 * m];
+        mul_into(12, m, &z, &w, &mut big);
+        let mut small = vec![0.0; 4 * m];
+        mul_into(4, m, &z[..4 * m], &w[..4 * m], &mut small);
+        for e in 0..4 * m {
+            assert_eq!(big[e].to_bits(), small[e].to_bits(), "elem {e}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! The fused MLP layer kernel — the Rust mapping of
+//! `python/compile/kernels/fused_mlp.py`: bias load → GEMV accumulate →
+//! optional tanh, staged once per layer over register tiles of
+//! [`RB`] batch rows × [`JB`] output columns.
+//!
+//! The tile spans *independent outputs only* (batch rows and output
+//! columns); the reduction axis i — the dot product over the layer's
+//! inputs — is never split or reordered, so every output element runs the
+//! exact scalar sequence `acc = b[j]; acc += acts[r,i]·w[i,j]` in
+//! ascending i, then tanh.  With the weights widened to f64 once per
+//! layer ([`widen`]; the f32→f64 cast is exact, so precomputing it is
+//! bit-invisible), the inner loop is a pure fused multiply-add sweep over
+//! `JB` contiguous weight lanes — the autovectorizer's best case — while
+//! the old loop re-cast every weight scalar inside the dependent
+//! accumulator chain.
+
+/// Output-column tile width: one cache line of f64 weights per load.
+pub const JB: usize = 8;
+
+/// Batch-row tile height: `RB · JB` accumulators fit comfortably in
+/// registers (32 f64 = 8 AVX2 / 4 AVX-512 vectors).
+pub const RB: usize = 4;
+
+/// Widen an f32 parameter slice to a reusable f64 scratch buffer.  The
+/// cast is exact (every f32 is representable as f64), so kernels that
+/// consume the widened copy are bit-identical to per-access casting.
+#[inline]
+pub fn widen(src: &[f32], dst: &mut Vec<f64>) {
+    dst.clear();
+    dst.extend(src.iter().map(|v| *v as f64));
+}
+
+/// One fused layer: `out[r, j] = b[j] + Σ_i acts[r, i] · w[i, j]` (tanh
+/// applied when `tanh` is set), over `rows` examples; `w` is row-major
+/// `[win, wout]`, already widened.  `out` is cleared and refilled (a
+/// reusable staging buffer).
+///
+/// ```
+/// use taynode::kern::mlp::{layer_into, widen};
+/// // One example through a 2→2 identity layer with bias (0.5, -0.5).
+/// let (mut w64, mut b64) = (vec![], vec![]);
+/// widen(&[1.0, 0.0, 0.0, 1.0], &mut w64);
+/// widen(&[0.5, -0.5], &mut b64);
+/// let mut out = vec![];
+/// layer_into(1, 2, 2, &[2.0, 3.0], &w64, &b64, false, &mut out);
+/// assert_eq!(out, [2.5, 2.5]);
+/// ```
+pub fn layer_into(
+    rows: usize,
+    win: usize,
+    wout: usize,
+    acts: &[f64],
+    w: &[f64],
+    b: &[f64],
+    tanh: bool,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(acts.len(), rows * win);
+    debug_assert_eq!(w.len(), win * wout);
+    debug_assert_eq!(b.len(), wout);
+    out.clear();
+    out.resize(rows * wout, 0.0);
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = RB.min(rows - r0);
+        let mut j0 = 0;
+        while j0 < wout {
+            let jb = JB.min(wout - j0);
+            // acc[rr][u] accumulates output (r0 + rr, j0 + u): bias first,
+            // exactly the scalar start.
+            let mut acc = [[0.0f64; JB]; RB];
+            let brow = &b[j0..j0 + jb];
+            for arr in acc[..rb].iter_mut() {
+                arr[..jb].copy_from_slice(brow);
+            }
+            for i in 0..win {
+                let wrow = &w[i * wout + j0..i * wout + j0 + jb];
+                for (rr, arr) in acc[..rb].iter_mut().enumerate() {
+                    let ai = acts[(r0 + rr) * win + i];
+                    for (av, wv) in arr[..jb].iter_mut().zip(wrow) {
+                        *av += ai * *wv;
+                    }
+                }
+            }
+            for (rr, arr) in acc[..rb].iter().enumerate() {
+                let o0 = (r0 + rr) * wout + j0;
+                let dst = &mut out[o0..o0 + jb];
+                if tanh {
+                    for (d, av) in dst.iter_mut().zip(&arr[..jb]) {
+                        *d = av.tanh();
+                    }
+                } else {
+                    dst.copy_from_slice(&arr[..jb]);
+                }
+            }
+            j0 += jb;
+        }
+        r0 += rb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive;
+    use super::*;
+    use crate::util::ptest::gen;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn fused_layer_matches_naive_bit_for_bit_at_awkward_shapes() {
+        // Batch sizes off the RB tile (1, 3, 257), widths off the JB tile
+        // (1, 3, 7, 9, 130), hidden and linear heads — every output must
+        // be bitwise the serial per-access-cast loop.
+        let mut rng = Pcg::new(0xB10C);
+        for &rows in &[1usize, 3, 4, 5, 257] {
+            for &(win, wout) in &[(1usize, 1usize), (3, 7), (9, 130), (16, 16), (7, 3)] {
+                for &tanh in &[false, true] {
+                    let acts = gen::vec_f64(&mut rng, rows * win, -1.2, 1.2);
+                    let w = gen::vec_f32(&mut rng, win * wout, 1.0);
+                    let b = gen::vec_f32(&mut rng, wout, 0.5);
+                    let want = naive::mlp_layer(rows, win, wout, &acts, &w, &b, tanh);
+                    let (mut w64, mut b64) = (vec![], vec![]);
+                    widen(&w, &mut w64);
+                    widen(&b, &mut b64);
+                    let mut got = vec![];
+                    layer_into(rows, win, wout, &acts, &w64, &b64, tanh, &mut got);
+                    assert_eq!(got.len(), want.len());
+                    for (e, (g, v)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            v.to_bits(),
+                            "rows={rows} {win}x{wout} tanh={tanh} elem {e}: {g} vs {v}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

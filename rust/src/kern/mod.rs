@@ -1,0 +1,61 @@
+//! Cache-blocked, autovectorization-friendly compute kernels for the
+//! repo's three hot paths — the Rust port of the Pallas kernel specs in
+//! `python/compile/kernels/{cauchy_prod,fused_mlp}.py`.
+//!
+//! * [`cauchy`] — truncated-series arithmetic over flat `[K+1, m]`
+//!   coefficient slabs: the triangular Cauchy product and the ODE
+//!   recurrences (`div`/`exp`/`ln`/`sqrt`/`sin_cos`/`tanh`/`sigmoid`),
+//!   walked in [`BLOCK`]-wide lane blocks with the k-loop unrolled at
+//!   compile time for K ≤ 7 (the paper's operating range).  Backs
+//!   [`SeriesVec`](crate::taylor::SeriesVec).
+//! * [`mlp`] — the fused MLP layer (bias → GEMV → optional tanh) over
+//!   register tiles of independent (row, output) pairs.  Backs the f32
+//!   [`BatchDynamics`](crate::solvers::batch::BatchDynamics) hot path of
+//!   [`Mlp`](crate::nn::Mlp).
+//! * [`axpy`] — the fused RK stage combination `y + h Σ cⱼ·kⱼ` in one
+//!   blocked pass (backs `solvers::stage` and `tensor::multi_axpy_into`)
+//!   plus the f64 column primitives of the discrete adjoint
+//!   (`autodiff::Tape::backward`, `coordinator::train_native`).
+//! * [`naive`] — the pre-kernel reference loops, retained verbatim: the
+//!   test oracle for bit-equality and the honest baseline
+//!   `benches/perf_kernels.rs` times the blocked kernels against.
+//!
+//! **Bit-identity discipline.**  Blocking regroups *independent elements*
+//! only; it never reorders any single element's floating-point operation
+//! sequence.  Concretely: accumulators start at the same value as the
+//! scalar recurrence (0.0 where the scalar starts at 0.0 — never a hoisted
+//! first term, because `0.0 + (-0.0)` is `+0.0` while `-0.0` alone is
+//! not), j-sums run in the same ascending order, multiplies keep the same
+//! association, and the MLP/axpy kernels tile over independent outputs and
+//! never split a reduction axis.  Every consumer's existing bit-equality
+//! property suite therefore passes unchanged, and `kern`'s own tests pin
+//! blocked == naive bit-for-bit at awkward shapes (m not a multiple of
+//! [`BLOCK`], K ∈ 0..=7, B ∈ {1, 3, 257}).
+//!
+//! ```
+//! use taynode::kern::{cauchy, naive};
+//!
+//! // (1 + t)² = 1 + 2t + t² on a 3-element batch: k1 = 3 rows, m = 3.
+//! let z = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0];
+//! let mut out = vec![0.0; 9];
+//! cauchy::mul_into(3, 3, &z, &z, &mut out);
+//! assert_eq!(&out[3..6], &[2.0, 2.0, 2.0]);
+//!
+//! // Bit-identical to the naive triangular loop on the same data.
+//! let rows: Vec<Vec<f64>> = z.chunks(3).map(|r| r.to_vec()).collect();
+//! let want = naive::mul(&rows, &rows);
+//! for (k, wk) in want.iter().enumerate() {
+//!     assert_eq!(&out[k * 3..(k + 1) * 3], &wk[..]);
+//! }
+//! ```
+
+pub mod axpy;
+pub mod cauchy;
+pub mod mlp;
+pub mod naive;
+
+/// Lane-block width (elements per tile).  64 f64 lanes = 512 bytes = 8
+/// AVX-512 / 16 AVX2 vectors per coefficient row — small enough that a
+/// full K ≤ 7 recurrence's block working set stays in L1, large enough to
+/// amortize the per-block bookkeeping.
+pub const BLOCK: usize = 64;

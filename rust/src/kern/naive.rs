@@ -1,0 +1,246 @@
+//! Naive reference loops, retained verbatim from the pre-kernel code —
+//! the oracles the blocked kernels are bit-compared against (here and in
+//! `benches/perf_kernels.rs`, before anything is timed) and the honest
+//! baselines those benches report speedups over.
+//!
+//! Series references keep the old `Vec<Vec<f64>>` row-per-order storage
+//! (including its per-row allocations); the MLP reference keeps the
+//! per-access f32→f64 casts and the serial dependent accumulator chain;
+//! the multi-axpy reference keeps the one-pass-per-stage sweeps.  None of
+//! this is dead weight: a speedup claimed against a strawman would be
+//! meaningless, so the baselines are exactly the loops the kernels
+//! replaced.
+
+/// Truncated Cauchy product on row-per-order storage (the old
+/// `SeriesVec::mul` body).
+pub fn mul(z: &[Vec<f64>], w: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut out = vec![vec![0.0; m]; k1];
+    for k in 0..k1 {
+        for j in 0..=k {
+            for e in 0..m {
+                out[k][e] += z[j][e] * w[k - j][e];
+            }
+        }
+    }
+    out
+}
+
+/// Series division (the old `SeriesVec::div` body).
+pub fn div(z: &[Vec<f64>], w: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut out = vec![vec![0.0; m]; k1];
+    for k in 0..k1 {
+        for e in 0..m {
+            let mut acc = z[k][e];
+            for j in 0..k {
+                acc -= out[j][e] * w[k - j][e];
+            }
+            out[k][e] = acc / w[0][e];
+        }
+    }
+    out
+}
+
+/// Series exponential (the old `SeriesVec::exp` body).
+pub fn exp(z: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    y.push(z[0].iter().map(|v| v.exp()).collect());
+    for k in 1..k1 {
+        let mut out = vec![0.0; m];
+        for e in 0..m {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                acc += j as f64 * z[j][e] * y[k - j][e];
+            }
+            out[e] = acc / k as f64;
+        }
+        y.push(out);
+    }
+    y
+}
+
+/// Series logarithm (the old `SeriesVec::ln` body).
+pub fn ln(z: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    y.push(z[0].iter().map(|v| v.ln()).collect());
+    for k in 1..k1 {
+        let mut out = vec![0.0; m];
+        for e in 0..m {
+            let mut acc = k as f64 * z[k][e];
+            for j in 1..k {
+                acc -= (k - j) as f64 * y[k - j][e] * z[j][e];
+            }
+            out[e] = acc / (k as f64 * z[0][e]);
+        }
+        y.push(out);
+    }
+    y
+}
+
+/// Series square root (the old `SeriesVec::sqrt` body).
+pub fn sqrt(z: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    y.push(z[0].iter().map(|v| v.sqrt()).collect());
+    for k in 1..k1 {
+        let mut out = vec![0.0; m];
+        for e in 0..m {
+            let mut acc = z[k][e];
+            for j in 1..k {
+                acc -= y[j][e] * y[k - j][e];
+            }
+            out[e] = acc / (2.0 * y[0][e]);
+        }
+        y.push(out);
+    }
+    y
+}
+
+/// Coupled sine/cosine (the old `SeriesVec::sin_cos` body).
+pub fn sin_cos(z: &[Vec<f64>]) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    let mut c: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    s.push(z[0].iter().map(|v| v.sin()).collect());
+    c.push(z[0].iter().map(|v| v.cos()).collect());
+    for k in 1..k1 {
+        let mut sk = vec![0.0; m];
+        let mut ck = vec![0.0; m];
+        for e in 0..m {
+            let mut sa = 0.0;
+            let mut ca = 0.0;
+            for j in 1..=k {
+                let zj = j as f64 * z[j][e];
+                sa += zj * c[k - j][e];
+                ca += zj * s[k - j][e];
+            }
+            sk[e] = sa / k as f64;
+            ck[e] = -ca / k as f64;
+        }
+        s.push(sk);
+        c.push(ck);
+    }
+    (s, c)
+}
+
+/// Series tanh (the old `SeriesVec::tanh` body).
+pub fn tanh(z: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    s.push(z[0].iter().map(|v| v.tanh()).collect());
+    for k in 1..k1 {
+        let mut out = vec![0.0; m];
+        for e in 0..m {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                let mj = k - j;
+                // u[mj] = delta_{mj,0} - (s*s)[mj], s[0..=mj] known
+                let mut ssm = 0.0;
+                for i in 0..=mj {
+                    ssm += s[i][e] * s[mj - i][e];
+                }
+                let u = if mj == 0 { 1.0 - ssm } else { -ssm };
+                acc += j as f64 * z[j][e] * u;
+            }
+            out[e] = acc / k as f64;
+        }
+        s.push(out);
+    }
+    s
+}
+
+/// Logistic sigmoid (the old `SeriesVec::sigmoid` body).
+pub fn sigmoid(z: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let k1 = z.len();
+    let m = z[0].len();
+    let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
+    s.push(z[0].iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect());
+    for k in 1..k1 {
+        let mut out = vec![0.0; m];
+        for e in 0..m {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                let mj = k - j;
+                // u[mj] = s[mj] - (s*s)[mj], s[0..=mj] known
+                let mut ssm = 0.0;
+                for i in 0..=mj {
+                    ssm += s[i][e] * s[mj - i][e];
+                }
+                acc += j as f64 * z[j][e] * (s[mj][e] - ssm);
+            }
+            out[e] = acc / k as f64;
+        }
+        s.push(out);
+    }
+    s
+}
+
+/// One MLP layer, row-serial with per-access f32→f64 widening (the old
+/// `Mlp` f32 hot-path inner loop): `out[r, j] = b[j] + Σ_i acts[r, i] ·
+/// w[i, j]`, tanh on hidden layers.
+pub fn mlp_layer(
+    rows: usize,
+    win: usize,
+    wout: usize,
+    acts: &[f64],
+    w: &[f32],
+    b: &[f32],
+    tanh: bool,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(rows * wout);
+    for r in 0..rows {
+        let arow = &acts[r * win..(r + 1) * win];
+        for j in 0..wout {
+            // acc = b_j + sum_i act_i * W_ij, ascending i
+            let mut acc = b[j] as f64;
+            for (i, ai) in arow.iter().enumerate() {
+                acc += ai * w[i * wout + j] as f64;
+            }
+            out.push(if tanh { acc.tanh() } else { acc });
+        }
+    }
+    out
+}
+
+/// Stage combination as one full-length pass per stage (the old
+/// `solvers::stage::accumulate` / `tensor::multi_axpy_into` sweep order):
+/// `out = y`, then per stage j with `cⱼ = coeffs[j]·h ≠ 0`,
+/// `out += cⱼ·kⱼ` over the whole vector.
+pub fn multi_axpy<K: AsRef<[f32]>>(coeffs: &[f32], h: f32, ks: &[K], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(coeffs.len(), ks.len());
+    out.copy_from_slice(y);
+    for (j, aj) in coeffs.iter().enumerate() {
+        let cj = *aj * h;
+        if cj != 0.0 {
+            for (o, xv) in out.iter_mut().zip(ks[j].as_ref()) {
+                *o += cj * *xv;
+            }
+        }
+    }
+}
+
+/// Zero-base variant (the old `accumulate_err` sweep order).
+pub fn multi_axpy_zero<K: AsRef<[f32]>>(coeffs: &[f32], h: f32, ks: &[K], out: &mut [f32]) {
+    debug_assert_eq!(coeffs.len(), ks.len());
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for (j, aj) in coeffs.iter().enumerate() {
+        let cj = *aj * h;
+        if cj != 0.0 {
+            for (o, xv) in out.iter_mut().zip(ks[j].as_ref()) {
+                *o += cj * *xv;
+            }
+        }
+    }
+}

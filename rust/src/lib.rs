@@ -23,6 +23,11 @@
 //! * [`autodiff`] — tape-based reverse-mode VJP over batch columns, the
 //!   divergence engine (`autodiff::div`: exact trace + fixed-seed
 //!   Hutchinson), plus the flat-vector `Adam` optimizer.
+//! * [`kern`] — cache-blocked SIMD-friendly kernels (the Rust port of the
+//!   Pallas specs in `python/compile/kernels/`): flat-slab Cauchy/series
+//!   recurrences, the fused MLP layer, and the fused RK stage axpy, each
+//!   with its retained naive reference and a bit-identity contract
+//!   (`benches/perf_kernels.rs` gates speedups on pre-timing equality).
 //! * [`runtime`] — PJRT client (behind the `pjrt` feature; a thin stub
 //!   substitutes by default), artifact registry, parameter store.
 //! * [`serving`] — the continuous-batching inference engine: an admission
@@ -42,7 +47,7 @@
 //!   export (`repro trace`), with per-shard buffers merged in fixed order
 //!   so same-seed traces are bit-identical at any thread count.
 //! * [`analysis`] — `taylint`, the in-repo determinism lint: a
-//!   dependency-free tokenizer + rule catalog (D1–D6) that machine-checks
+//!   dependency-free tokenizer + rule catalog (D1–D7) that machine-checks
 //!   the bit-identity invariants the pool guarantees (run via `make lint`
 //!   or the `taylint` binary).
 
@@ -57,6 +62,7 @@ pub mod autodiff;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod kern;
 pub mod nn;
 pub mod obs;
 pub mod runtime;

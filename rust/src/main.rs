@@ -9,6 +9,7 @@
 //!   serve [--quick]              — continuous-batching serving demo
 //!   trace <serve|experiment>     — telemetry-enabled drive → Chrome Trace NDJSON
 //!   perfdiff <base> <new>        — numeric-leaf delta between two bench JSONs
+//!                                  (`--fail-on-regression <pct>` turns it into a gate)
 
 use std::collections::BTreeMap;
 
@@ -75,7 +76,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  repro experiment <fig1..fig12|native|cnf|table2|table3|table4|all> [--quick]\n  \
                  repro serve [--quick] [--seed N] [--requests N] [--batch N] [--rate F]\n  \
                  repro trace <serve|experiment> [--quick] [--seed N] [--out PATH]\n  \
-                 repro perfdiff <base.json> <new.json>"
+                 repro perfdiff <base.json> <new.json> [--fail-on-regression PCT]"
             );
             Ok(())
         }
@@ -261,19 +262,42 @@ fn print_registry(label: &str, rec: &Recorder) {
 /// `repro perfdiff <base.json> <new.json>` — flatten every numeric leaf of
 /// both files to a dotted path and print per-path deltas (the `make perf`
 /// target runs this against the committed BENCH_*.json baselines).
+///
+/// With `--fail-on-regression <pct>` the diff becomes a gate: every metric
+/// whose name declares a direction (see [`higher_is_better`]) and which
+/// moved the wrong way by more than `<pct>` percent is listed and the
+/// command exits nonzero.  Direction-unknown metrics are reported but
+/// never gated.
 fn perfdiff(args: &Args) -> Result<()> {
     let base_path = args.pos(1).ok_or_else(|| anyhow::anyhow!("perfdiff needs <base> <new>"))?;
     let new_path = args.pos(2).ok_or_else(|| anyhow::anyhow!("perfdiff needs <base> <new>"))?;
+    let fail_pct: Option<f64> = match args.str_opt("fail-on-regression") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| anyhow::anyhow!("--fail-on-regression={v}: {e}"))?,
+        ),
+    };
     let base = flatten_json(&std::fs::read_to_string(base_path)?)?;
     let new = flatten_json(&std::fs::read_to_string(new_path)?)?;
     if base.is_empty() {
         println!("note: {base_path} has no numeric leaves (unseeded baseline?)");
     }
     let mut table = Table::new(&["metric", "base", "new", "delta%"]);
+    let mut offenders: Vec<String> = Vec::new();
     for (k, nv) in &new {
         let (b, d) = match base.get(k) {
             Some(bv) if *bv != 0.0 => {
-                (format!("{bv:.6}"), format!("{:+.1}%", (nv - bv) / bv * 100.0))
+                let pct = (nv - bv) / bv * 100.0;
+                if let (Some(th), Some(hb)) = (fail_pct, higher_is_better(k)) {
+                    if if hb { pct < -th } else { pct > th } {
+                        offenders.push(format!(
+                            "{k}: {pct:+.1}% ({} is worse for this metric)",
+                            if hb { "lower" } else { "higher" }
+                        ));
+                    }
+                }
+                (format!("{bv:.6}"), format!("{pct:+.1}%"))
             }
             Some(bv) => (format!("{bv:.6}"), "-".to_string()),
             None => ("-".to_string(), "-".to_string()),
@@ -286,7 +310,35 @@ fn perfdiff(args: &Args) -> Result<()> {
         }
     }
     table.print();
+    if let Some(th) = fail_pct {
+        if offenders.is_empty() {
+            println!("fail-on-regression: no direction-known metric moved past {th}%");
+        } else {
+            for o in &offenders {
+                eprintln!("regression: {o}");
+            }
+            bail!("{} metric(s) regressed past {th}%", offenders.len());
+        }
+    }
     Ok(())
+}
+
+/// Direction of a metric, inferred from the leaf of its dotted path:
+/// `Some(true)` when higher is better (throughput-like names), `Some(false)`
+/// when lower is better (latency/cost-like names), `None` when the name
+/// doesn't commit to either — such metrics are informational (shape
+/// constants like `batch` or `threads`) and are never gated.
+fn higher_is_better(path: &str) -> Option<bool> {
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    const HIGHER: [&str; 3] = ["per_sec", "speedup", "occupancy"];
+    const LOWER: [&str; 6] = ["secs", "_ms", "p50", "p99", "ratio", "misses"];
+    if HIGHER.iter().any(|s| leaf.contains(s)) {
+        Some(true)
+    } else if LOWER.iter().any(|s| leaf.contains(s)) {
+        Some(false)
+    } else {
+        None
+    }
 }
 
 fn flatten_json(s: &str) -> Result<BTreeMap<String, f64>> {

@@ -42,6 +42,12 @@ pub struct Mlp {
     /// path (ping-pong pair) — scratch only, never observable.
     stage_in: Vec<f64>,
     stage_out: Vec<f64>,
+    /// Per-layer widened parameter scratch for the fused kernel (the
+    /// f32→f64 cast is exact, so pre-widening is bit-invisible; see
+    /// [`crate::kern::mlp::widen`]).  Re-widened every eval because
+    /// `params` is public and may have been updated by the optimizer.
+    w64: Vec<f64>,
+    b64: Vec<f64>,
 }
 
 impl Mlp {
@@ -63,7 +69,16 @@ impl Mlp {
                 params.push(0.0);
             }
         }
-        Mlp { sizes, n, with_time, params, stage_in: vec![], stage_out: vec![] }
+        Mlp {
+            sizes,
+            n,
+            with_time,
+            params,
+            stage_in: vec![],
+            stage_out: vec![],
+            w64: vec![],
+            b64: vec![],
+        }
     }
 
     /// The per-trajectory state dimension n.
@@ -141,11 +156,13 @@ impl BatchSeriesDynamics for Mlp {
     }
 }
 
-/// The solver hot path: a direct staged evaluation over reusable `[rows,
-/// width]` activation buffers — zero allocation per NFE once the buffers
-/// are warm.  Per element it applies the **identical f64 operation
-/// sequence** as the generic forward on order-0 series columns (bias, then
-/// `+= act·w` in ascending input order, tanh on hidden layers), so it is
+/// The solver hot path: the fused layer kernel
+/// ([`crate::kern::mlp::layer_into`]) over reusable `[rows, width]`
+/// activation buffers — zero allocation per NFE once the buffers are warm.
+/// Per element the kernel applies the **identical f64 operation sequence**
+/// as the generic forward on order-0 series columns (bias, then `+= act·w`
+/// in ascending input order, tanh on hidden layers; its register tile
+/// spans independent outputs only, never the reduction axis), so it is
 /// bit-for-bit the order-0 specialization of the series lift
 /// (property-tested below) — the f32 engine, the jets, and the tape still
 /// cannot disagree about what the model computes.
@@ -175,20 +192,18 @@ impl BatchDynamics for Mlp {
             let (win, wout) = (self.sizes[l], self.sizes[l + 1]);
             let boff = off + win * wout;
             let hidden = l + 1 < self.sizes.len() - 1;
-            self.stage_out.clear();
-            self.stage_out.reserve(rows * wout);
-            for r in 0..rows {
-                let arow = &self.stage_in[r * win..(r + 1) * win];
-                for j in 0..wout {
-                    // acc = b_j + sum_i act_i * W_ij, ascending i — the
-                    // exact op order of the generic `forward`
-                    let mut acc = self.params[boff + j] as f64;
-                    for (i, ai) in arow.iter().enumerate() {
-                        acc += ai * self.params[off + i * wout + j] as f64;
-                    }
-                    self.stage_out.push(if hidden { acc.tanh() } else { acc });
-                }
-            }
+            crate::kern::mlp::widen(&self.params[off..boff], &mut self.w64);
+            crate::kern::mlp::widen(&self.params[boff..boff + wout], &mut self.b64);
+            crate::kern::mlp::layer_into(
+                rows,
+                win,
+                wout,
+                &self.stage_in,
+                &self.w64,
+                &self.b64,
+                hidden,
+                &mut self.stage_out,
+            );
             std::mem::swap(&mut self.stage_in, &mut self.stage_out);
             off = boff + wout;
         }
@@ -338,6 +353,35 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn kernel_backed_solves_are_thread_count_invariant_bit_for_bit() {
+        // Full adaptive solves over the fused-kernel Mlp at TAYNODE_THREADS
+        // ∈ {1, 3, 4}: the kernels only regroup independent elements, so
+        // sharding the batch differently must not move a single bit.
+        use crate::solvers::adaptive::AdaptiveOpts;
+        use crate::solvers::batch::solve_adaptive_batch_pooled;
+        use crate::solvers::tableau;
+        use crate::util::pool::Pool;
+        let mut rng = Pcg::new(0x7EAD);
+        let (n, b) = (3usize, 7usize);
+        let mlp = Mlp::new(n, &[8, 8], true, 42);
+        let y0 = gen::vec_f32(&mut rng, b * n, 1.0);
+        let tb = tableau::by_name("dopri5").unwrap();
+        let opts = AdaptiveOpts::default();
+        let base = solve_adaptive_batch_pooled(&Pool::new(1), &mlp, 0.0, 0.5, &y0, &tb, &opts);
+        for threads in [3usize, 4] {
+            let pool = Pool::new(threads);
+            let res = solve_adaptive_batch_pooled(&pool, &mlp, 0.0, 0.5, &y0, &tb, &opts);
+            assert_eq!(res.batch(), base.batch());
+            for (e, (a, c)) in base.y.iter().zip(&res.y).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "threads={threads} elem {e}");
+            }
+            for (r, (a, c)) in base.t.iter().zip(&res.t).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "threads={threads} t row {r}");
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use super::adaptive::AdaptiveOpts;
 use super::tableau::Tableau;
-use crate::tensor::axpy;
+use crate::kern::axpy::{fused_axpy_into, fused_axpy_zero};
 
 /// Tableau coefficients cast to f32 once per solve, so the per-step hot loop
 /// performs no `as` casts and allocates nothing (the seed code built a fresh
@@ -61,35 +61,24 @@ impl TableauCoeffs {
     }
 }
 
-/// ystage = y + h * Σ_j a_row[j] · k_j over per-stage slices, zero
-/// coefficients skipped, applied in stage order (the exact op sequence of
-/// the seed's `multi_axpy_into`, minus its two per-call Vec allocations).
-/// The batched engine applies this same per-row op sequence to row slices
-/// of its per-stage matrices (`batch::solve_embedded_batch`); the bit-level
-/// equivalence property tests keep the two in lockstep.
+/// ystage = y + h * Σ_j a_row[j] · k_j, zero coefficients skipped, stages
+/// applied in order — one blocked pass over the state via
+/// [`crate::kern::axpy::fused_axpy_into`], bit-identical per element to
+/// the old one-sweep-per-stage order (the kernel's retained naive
+/// reference).  The batched engine applies this same per-row op sequence
+/// to row slices of its per-stage matrices
+/// (`batch::solve_embedded_batch`); the bit-level equivalence property
+/// tests keep the two in lockstep.
 #[inline]
 pub fn accumulate<K: AsRef<[f32]>>(a_row: &[f32], h: f32, ks: &[K], y: &[f32], out: &mut [f32]) {
-    out.copy_from_slice(y);
-    for (j, aj) in a_row.iter().enumerate() {
-        let cj = *aj * h;
-        if cj != 0.0 {
-            axpy(cj, ks[j].as_ref(), out);
-        }
-    }
+    fused_axpy_into(a_row, h, ks, y, out);
 }
 
-/// errv = h * Σ_j e[j] · k_j (zero base, zero coefficients skipped).
+/// errv = h * Σ_j e[j] · k_j (zero base, zero coefficients skipped), one
+/// blocked pass.
 #[inline]
 pub fn accumulate_err<K: AsRef<[f32]>>(e: &[f32], h: f32, ks: &[K], errv: &mut [f32]) {
-    for v in errv.iter_mut() {
-        *v = 0.0;
-    }
-    for (j, ej) in e.iter().enumerate() {
-        let cj = *ej * h;
-        if cj != 0.0 {
-            axpy(cj, ks[j].as_ref(), errv);
-        }
-    }
+    fused_axpy_zero(e, h, ks, errv);
 }
 
 /// Scaled RMS error norm (Hairer eq. II.4.11).

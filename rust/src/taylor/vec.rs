@@ -1,16 +1,18 @@
-//! Batched truncated Taylor series over an SoA coefficient matrix — the
+//! Batched truncated Taylor series over an SoA coefficient slab — the
 //! `[B, n]` counterpart of the scalar [`Series`](super::Series), and the
 //! substrate for native batched `R_K` regularization (paper §3–4).
 //!
-//! A [`SeriesVec`] holds one `[rows, cols]` matrix per Taylor coefficient
-//! and applies **exactly the scalar propagation rules elementwise, in the
-//! scalar operation order**, so every element of a batched series is
-//! bit-identical to the scalar `Series` computation on that element
-//! (property-tested below).  [`ode_jet_batch`] then lifts a
-//! [`BatchSeriesDynamics`] vector field recursively (Algorithm 1) to
-//! produce the solution jets x₁..x_K for a whole active set in one sweep —
-//! one series evaluation per jet order for the entire batch, instead of
-//! one per trajectory per order.
+//! A [`SeriesVec`] holds its coefficients in ONE contiguous `[K+1, m]`
+//! slab (`m = rows · cols`; coefficient row k at `c[k·m..(k+1)·m]`) and
+//! routes the Cauchy product and the ODE recurrences through the blocked
+//! kernels in [`crate::kern::cauchy`], which apply **exactly the scalar
+//! propagation rules elementwise, in the scalar operation order**, so
+//! every element of a batched series is bit-identical to the scalar
+//! `Series` computation on that element (property-tested below).
+//! [`ode_jet_batch`] then lifts a [`BatchSeriesDynamics`] vector field
+//! recursively (Algorithm 1) to produce the solution jets x₁..x_K for a
+//! whole active set in one sweep — one series evaluation per jet order
+//! for the entire batch, instead of one per trajectory per order.
 //!
 //! ```
 //! use taynode::taylor::{ode_jet_batch, SeriesFn, SeriesVec};
@@ -26,45 +28,57 @@
 //! ```
 
 use super::factorial;
+use crate::kern::cauchy;
 
-/// A batch of truncated Taylor polynomials, stored structure-of-arrays:
-/// `c[k]` is the k-th normalized coefficient for every element of a
-/// row-major `[rows, cols]` matrix.  Rows are trajectories, columns are
-/// state dimensions; elementwise ops share one coefficient allocation per
-/// order for the whole batch.
+/// A batch of truncated Taylor polynomials, stored structure-of-arrays on
+/// one flat slab: coefficient row k holds the k-th normalized coefficient
+/// for every element of a row-major `[rows, cols]` matrix.  Rows are
+/// trajectories, columns are state dimensions; elementwise ops share one
+/// contiguous allocation for the whole batch across all orders — the
+/// layout the blocked kernels ([`crate::kern::cauchy`]) stream over.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SeriesVec {
     rows: usize,
     cols: usize,
-    /// `c[k]` is row-major `[rows, cols]`; `c.len()` is order + 1.
-    c: Vec<Vec<f64>>,
+    /// Order + 1 — the number of `[rows, cols]` coefficient rows in `c`.
+    k1: usize,
+    /// Flat `[k1, rows * cols]` slab; row k is `c[k * m..(k + 1) * m]`.
+    c: Vec<f64>,
 }
 
 impl SeriesVec {
     /// Build from explicit coefficient matrices (each `rows * cols` long).
     pub fn new(c: Vec<Vec<f64>>, rows: usize, cols: usize) -> SeriesVec {
         assert!(!c.is_empty(), "SeriesVec needs at least the order-0 coefficient");
+        let m = rows * cols;
         for (k, ck) in c.iter().enumerate() {
-            assert_eq!(ck.len(), rows * cols, "coefficient {k} length vs {rows}x{cols}");
+            assert_eq!(ck.len(), m, "coefficient {k} length vs {rows}x{cols}");
         }
-        SeriesVec { rows, cols, c }
+        let k1 = c.len();
+        let mut slab = Vec::with_capacity(k1 * m);
+        for ck in &c {
+            slab.extend_from_slice(ck);
+        }
+        SeriesVec { rows, cols, k1, c: slab }
     }
 
     /// A constant batch: order-0 coefficients from `vals`, the rest zero.
     pub fn constant(vals: &[f64], rows: usize, cols: usize, order: usize) -> SeriesVec {
-        assert_eq!(vals.len(), rows * cols, "constant values vs {rows}x{cols}");
-        let mut c = vec![vec![0.0; rows * cols]; order + 1];
-        c[0].copy_from_slice(vals);
-        SeriesVec { rows, cols, c }
+        let m = rows * cols;
+        assert_eq!(vals.len(), m, "constant values vs {rows}x{cols}");
+        let mut c = vec![0.0; (order + 1) * m];
+        c[..m].copy_from_slice(vals);
+        SeriesVec { rows, cols, k1: order + 1, c }
     }
 
     /// A uniform constant batch (every element `x`).
     pub fn fill(x: f64, rows: usize, cols: usize, order: usize) -> SeriesVec {
-        let mut c = vec![vec![0.0; rows * cols]; order + 1];
-        for v in c[0].iter_mut() {
+        let m = rows * cols;
+        let mut c = vec![0.0; (order + 1) * m];
+        for v in c[..m].iter_mut() {
             *v = x;
         }
-        SeriesVec { rows, cols, c }
+        SeriesVec { rows, cols, k1: order + 1, c }
     }
 
     /// The independent variable per row: `t0[r] + 1·t`, as a single-column
@@ -72,14 +86,14 @@ impl SeriesVec {
     /// [`broadcast_cols`](SeriesVec::broadcast_cols)).
     pub fn time(t0: &[f64], order: usize) -> SeriesVec {
         let rows = t0.len();
-        let mut c = vec![vec![0.0; rows]; order + 1];
-        c[0].copy_from_slice(t0);
+        let mut c = vec![0.0; (order + 1) * rows];
+        c[..rows].copy_from_slice(t0);
         if order >= 1 {
-            for v in c[1].iter_mut() {
+            for v in c[rows..2 * rows].iter_mut() {
                 *v = 1.0;
             }
         }
-        SeriesVec { rows, cols: 1, c }
+        SeriesVec { rows, cols: 1, k1: order + 1, c }
     }
 
     pub fn rows(&self) -> usize {
@@ -91,28 +105,44 @@ impl SeriesVec {
     }
 
     pub fn order(&self) -> usize {
-        self.c.len() - 1
+        self.k1 - 1
     }
 
-    /// The k-th normalized coefficient matrix, row-major `[rows, cols]`.
+    /// The k-th normalized coefficient matrix, row-major `[rows, cols]` —
+    /// a view into the flat slab.
     pub fn coeff(&self, k: usize) -> &[f64] {
-        &self.c[k]
+        let m = self.elems();
+        &self.c[k * m..(k + 1) * m]
+    }
+
+    /// Mutable view of the k-th coefficient row (test scaffolding only —
+    /// production construction goes through the public constructors).
+    #[cfg(test)]
+    fn coeff_mut(&mut self, k: usize) -> &mut [f64] {
+        let m = self.rows * self.cols;
+        &mut self.c[k * m..(k + 1) * m]
     }
 
     /// Unnormalized derivative matrix d^k x/dt^k = k! c[k].
     pub fn derivative(&self, k: usize) -> Vec<f64> {
         let f = factorial(k);
-        self.c[k].iter().map(|v| v * f).collect()
+        self.coeff(k).iter().map(|v| v * f).collect()
     }
 
     fn assert_same_shape(&self, o: &SeriesVec, op: &str) {
         assert_eq!(self.rows, o.rows, "{op}: row mismatch");
         assert_eq!(self.cols, o.cols, "{op}: column mismatch");
-        assert_eq!(self.c.len(), o.c.len(), "{op}: order mismatch");
+        assert_eq!(self.k1, o.k1, "{op}: order mismatch");
     }
 
     fn elems(&self) -> usize {
         self.rows * self.cols
+    }
+
+    /// Same-shape result from a freshly computed slab.
+    fn with_slab(&self, c: Vec<f64>) -> SeriesVec {
+        debug_assert_eq!(c.len(), self.c.len());
+        SeriesVec { rows: self.rows, cols: self.cols, k1: self.k1, c }
     }
 
     /// Extract one state dimension as a `[rows, 1]` column series — how the
@@ -120,12 +150,14 @@ impl SeriesVec {
     /// activations are columns, elementwise ops cover the whole batch.
     pub fn col(&self, j: usize) -> SeriesVec {
         assert!(j < self.cols, "col {j} out of {} columns", self.cols);
-        let c = self
-            .c
-            .iter()
-            .map(|ck| (0..self.rows).map(|r| ck[r * self.cols + j]).collect())
-            .collect();
-        SeriesVec { rows: self.rows, cols: 1, c }
+        let mut c = Vec::with_capacity(self.k1 * self.rows);
+        for k in 0..self.k1 {
+            let ck = self.coeff(k);
+            for r in 0..self.rows {
+                c.push(ck[r * self.cols + j]);
+            }
+        }
+        SeriesVec { rows: self.rows, cols: 1, k1: self.k1, c }
     }
 
     /// Reassemble `[rows, 1]` column series into one `[rows, n]` batch —
@@ -140,17 +172,15 @@ impl SeriesVec {
             assert_eq!(cj.rows, rows, "from_cols: column {j} row mismatch");
             assert_eq!(cj.order(), ord, "from_cols: column {j} order mismatch");
         }
-        let mut c = Vec::with_capacity(ord + 1);
+        let mut c = Vec::with_capacity((ord + 1) * rows * n);
         for k in 0..=ord {
-            let mut out = Vec::with_capacity(rows * n);
             for r in 0..rows {
                 for cj in cols {
-                    out.push(cj.c[k][r]);
+                    c.push(cj.coeff(k)[r]);
                 }
             }
-            c.push(out);
         }
-        SeriesVec { rows, cols: n, c }
+        SeriesVec { rows, cols: n, k1: ord + 1, c }
     }
 
     /// Replicate a single-column batch across `cols` columns — how per-row
@@ -158,48 +188,30 @@ impl SeriesVec {
     pub fn broadcast_cols(&self, cols: usize) -> SeriesVec {
         assert_eq!(self.cols, 1, "broadcast_cols needs a single-column series");
         assert!(cols > 0);
-        let mut c = Vec::with_capacity(self.c.len());
-        for ck in &self.c {
-            let mut out = Vec::with_capacity(self.rows * cols);
+        let mut c = Vec::with_capacity(self.k1 * self.rows * cols);
+        for k in 0..self.k1 {
+            let ck = self.coeff(k);
             for r in 0..self.rows {
                 for _ in 0..cols {
-                    out.push(ck[r]);
+                    c.push(ck[r]);
                 }
             }
-            c.push(out);
         }
-        SeriesVec { rows: self.rows, cols, c }
+        SeriesVec { rows: self.rows, cols, k1: self.k1, c }
     }
 
     pub fn add(&self, o: &SeriesVec) -> SeriesVec {
         self.assert_same_shape(o, "add");
-        let c = self
-            .c
-            .iter()
-            .zip(&o.c)
-            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x + y).collect())
-            .collect();
-        SeriesVec { rows: self.rows, cols: self.cols, c }
+        self.with_slab(self.c.iter().zip(&o.c).map(|(x, y)| x + y).collect())
     }
 
     pub fn sub(&self, o: &SeriesVec) -> SeriesVec {
         self.assert_same_shape(o, "sub");
-        let c = self
-            .c
-            .iter()
-            .zip(&o.c)
-            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x - y).collect())
-            .collect();
-        SeriesVec { rows: self.rows, cols: self.cols, c }
+        self.with_slab(self.c.iter().zip(&o.c).map(|(x, y)| x - y).collect())
     }
 
     pub fn scale(&self, a: f64) -> SeriesVec {
-        let c = self
-            .c
-            .iter()
-            .map(|ck| ck.iter().map(|x| a * x).collect())
-            .collect();
-        SeriesVec { rows: self.rows, cols: self.cols, c }
+        self.with_slab(self.c.iter().map(|x| a * x).collect())
     }
 
     /// Per-row scaling: every element of row r (all columns, all orders) is
@@ -208,200 +220,83 @@ impl SeriesVec {
     pub fn scale_rows(&self, a: &[f64]) -> SeriesVec {
         assert_eq!(a.len(), self.rows, "scale_rows length vs rows");
         let mut c = Vec::with_capacity(self.c.len());
-        for ck in &self.c {
-            let mut out = Vec::with_capacity(self.elems());
+        for k in 0..self.k1 {
+            let ck = self.coeff(k);
             for r in 0..self.rows {
                 for j in 0..self.cols {
-                    out.push(a[r] * ck[r * self.cols + j]);
+                    c.push(a[r] * ck[r * self.cols + j]);
                 }
             }
-            c.push(out);
         }
-        SeriesVec { rows: self.rows, cols: self.cols, c }
+        self.with_slab(c)
     }
 
-    /// Add a scalar to every element's constant coefficient.
+    /// Add a scalar to every element's constant coefficient.  Writes the
+    /// result into one fresh slab directly — no clone-then-mutate of the
+    /// whole coefficient storage just to touch row 0.
     pub fn add_scalar(&self, a: f64) -> SeriesVec {
-        let mut c = self.c.clone();
-        for v in c[0].iter_mut() {
-            *v += a;
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c }
+        let m = self.elems();
+        let mut c = Vec::with_capacity(self.c.len());
+        c.extend(self.c[..m].iter().map(|v| v + a));
+        c.extend_from_slice(&self.c[m..]);
+        self.with_slab(c)
     }
 
-    /// Truncated Cauchy product, elementwise (Table 1 row 2); per-element
-    /// accumulation order matches scalar `Series::mul` exactly.
+    /// Truncated Cauchy product, elementwise (Table 1 row 2), via the
+    /// blocked kernel; per-element accumulation order matches scalar
+    /// `Series::mul` exactly.
     pub fn mul(&self, o: &SeriesVec) -> SeriesVec {
         self.assert_same_shape(o, "mul");
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut out = vec![vec![0.0; m]; k1];
-        for k in 0..k1 {
-            for j in 0..=k {
-                for e in 0..m {
-                    out[k][e] += self.c[j][e] * o.c[k - j][e];
-                }
-            }
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: out }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::mul_into(self.k1, self.elems(), &self.c, &o.c, &mut out);
+        self.with_slab(out)
     }
 
     /// Division, elementwise (Table 1 row 3).
     pub fn div(&self, o: &SeriesVec) -> SeriesVec {
         self.assert_same_shape(o, "div");
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut out = vec![vec![0.0; m]; k1];
-        for k in 0..k1 {
-            for e in 0..m {
-                let mut acc = self.c[k][e];
-                for j in 0..k {
-                    acc -= out[j][e] * o.c[k - j][e];
-                }
-                out[k][e] = acc / o.c[0][e];
-            }
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: out }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::div_into(self.k1, self.elems(), &self.c, &o.c, &mut out);
+        self.with_slab(out)
     }
 
     pub fn exp(&self) -> SeriesVec {
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        y.push(self.c[0].iter().map(|v| v.exp()).collect());
-        for k in 1..k1 {
-            let mut out = vec![0.0; m];
-            for e in 0..m {
-                let mut acc = 0.0;
-                for j in 1..=k {
-                    acc += j as f64 * self.c[j][e] * y[k - j][e];
-                }
-                out[e] = acc / k as f64;
-            }
-            y.push(out);
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: y }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::exp_into(self.k1, self.elems(), &self.c, &mut out);
+        self.with_slab(out)
     }
 
     pub fn ln(&self) -> SeriesVec {
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        y.push(self.c[0].iter().map(|v| v.ln()).collect());
-        for k in 1..k1 {
-            let mut out = vec![0.0; m];
-            for e in 0..m {
-                let mut acc = k as f64 * self.c[k][e];
-                for j in 1..k {
-                    acc -= (k - j) as f64 * y[k - j][e] * self.c[j][e];
-                }
-                out[e] = acc / (k as f64 * self.c[0][e]);
-            }
-            y.push(out);
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: y }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::ln_into(self.k1, self.elems(), &self.c, &mut out);
+        self.with_slab(out)
     }
 
     pub fn sqrt(&self) -> SeriesVec {
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut y: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        y.push(self.c[0].iter().map(|v| v.sqrt()).collect());
-        for k in 1..k1 {
-            let mut out = vec![0.0; m];
-            for e in 0..m {
-                let mut acc = self.c[k][e];
-                for j in 1..k {
-                    acc -= y[j][e] * y[k - j][e];
-                }
-                out[e] = acc / (2.0 * y[0][e]);
-            }
-            y.push(out);
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: y }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::sqrt_into(self.k1, self.elems(), &self.c, &mut out);
+        self.with_slab(out)
     }
 
     pub fn sin_cos(&self) -> (SeriesVec, SeriesVec) {
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        let mut c: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        s.push(self.c[0].iter().map(|v| v.sin()).collect());
-        c.push(self.c[0].iter().map(|v| v.cos()).collect());
-        for k in 1..k1 {
-            let mut sk = vec![0.0; m];
-            let mut ck = vec![0.0; m];
-            for e in 0..m {
-                let mut sa = 0.0;
-                let mut ca = 0.0;
-                for j in 1..=k {
-                    let zj = j as f64 * self.c[j][e];
-                    sa += zj * c[k - j][e];
-                    ca += zj * s[k - j][e];
-                }
-                sk[e] = sa / k as f64;
-                ck[e] = -ca / k as f64;
-            }
-            s.push(sk);
-            c.push(ck);
-        }
-        (
-            SeriesVec { rows: self.rows, cols: self.cols, c: s },
-            SeriesVec { rows: self.rows, cols: self.cols, c },
-        )
+        let mut s = vec![0.0; self.c.len()];
+        let mut c = vec![0.0; self.c.len()];
+        cauchy::sin_cos_into(self.k1, self.elems(), &self.c, &mut s, &mut c);
+        (self.with_slab(s), self.with_slab(c))
     }
 
     /// tanh via the ODE s' = (1 - s²) z', elementwise.
     pub fn tanh(&self) -> SeriesVec {
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        s.push(self.c[0].iter().map(|v| v.tanh()).collect());
-        for k in 1..k1 {
-            let mut out = vec![0.0; m];
-            for e in 0..m {
-                let mut acc = 0.0;
-                for j in 1..=k {
-                    let mj = k - j;
-                    // u[mj] = delta_{mj,0} - (s*s)[mj], s[0..=mj] known
-                    let mut ssm = 0.0;
-                    for i in 0..=mj {
-                        ssm += s[i][e] * s[mj - i][e];
-                    }
-                    let u = if mj == 0 { 1.0 - ssm } else { -ssm };
-                    acc += j as f64 * self.c[j][e] * u;
-                }
-                out[e] = acc / k as f64;
-            }
-            s.push(out);
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: s }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::tanh_into(self.k1, self.elems(), &self.c, &mut out);
+        self.with_slab(out)
     }
 
     /// Logistic sigmoid via the ODE s' = s (1 - s) z', elementwise.
     pub fn sigmoid(&self) -> SeriesVec {
-        let k1 = self.c.len();
-        let m = self.elems();
-        let mut s: Vec<Vec<f64>> = Vec::with_capacity(k1);
-        s.push(self.c[0].iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect());
-        for k in 1..k1 {
-            let mut out = vec![0.0; m];
-            for e in 0..m {
-                let mut acc = 0.0;
-                for j in 1..=k {
-                    let mj = k - j;
-                    // u[mj] = s[mj] - (s*s)[mj], s[0..=mj] known
-                    let mut ssm = 0.0;
-                    for i in 0..=mj {
-                        ssm += s[i][e] * s[mj - i][e];
-                    }
-                    acc += j as f64 * self.c[j][e] * (s[mj][e] - ssm);
-                }
-                out[e] = acc / k as f64;
-            }
-            s.push(out);
-        }
-        SeriesVec { rows: self.rows, cols: self.cols, c: s }
+        let mut out = vec![0.0; self.c.len()];
+        cauchy::sigmoid_into(self.k1, self.elems(), &self.c, &mut out);
+        self.with_slab(out)
     }
 
     pub fn powi(&self, n: usize) -> SeriesVec {
@@ -416,9 +311,10 @@ impl SeriesVec {
     pub fn eval(&self, t: f64) -> Vec<f64> {
         let m = self.elems();
         let mut acc = vec![0.0; m];
-        for ck in self.c.iter().rev() {
-            for e in 0..m {
-                acc[e] = acc[e] * t + ck[e];
+        for k in (0..self.k1).rev() {
+            let ck = self.coeff(k);
+            for (a, cv) in acc.iter_mut().zip(ck) {
+                *a = *a * t + *cv;
             }
         }
         acc
@@ -530,7 +426,7 @@ mod tests {
 
     /// Extract one element of a batched series as a scalar Series.
     fn elem(v: &SeriesVec, e: usize) -> Series {
-        Series::new(v.c.iter().map(|ck| ck[e]).collect())
+        Series::new((0..=v.order()).map(|k| v.coeff(k)[e]).collect())
     }
 
     fn random_vec(
@@ -570,12 +466,12 @@ mod tests {
             let a = random_vec(rng, rows, cols, ord, -1.5, 1.5);
             let mut b = random_vec(rng, rows, cols, ord, -1.5, 1.5);
             // keep divisors/sqrt/ln arguments away from 0
-            for v in b.c[0].iter_mut() {
+            for v in b.coeff_mut(0) {
                 *v = v.signum() * (v.abs() + 0.5);
             }
             let bpos = {
                 let mut p = b.clone();
-                for v in p.c[0].iter_mut() {
+                for v in p.coeff_mut(0) {
                     *v = v.abs();
                 }
                 p

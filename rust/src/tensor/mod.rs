@@ -86,15 +86,12 @@ pub fn axpy_into(a: f32, x: &[f32], y: &[f32], out: &mut [f32]) {
     }
 }
 
-/// out = y + sum_j coeffs[j] * xs[j]   (fused multi-axpy, one pass)
+/// out = y + sum_j coeffs[j] * xs[j], blocked so each destination chunk
+/// stays cache-hot across all stages ([`crate::kern::axpy`]; `h = 1` is
+/// bit-invisible since `c · 1.0 == c` for every f32).
 pub fn multi_axpy_into(coeffs: &[f32], xs: &[&[f32]], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(coeffs.len(), xs.len());
-    out.copy_from_slice(y);
-    for (c, x) in coeffs.iter().zip(xs) {
-        if *c != 0.0 {
-            axpy(*c, x, out);
-        }
-    }
+    crate::kern::axpy::fused_axpy_into(coeffs, 1.0, xs, y, out);
 }
 
 pub fn scale(a: f32, x: &mut [f32]) {
