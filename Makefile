@@ -1,3 +1,11 @@
+# Provenance for the perf trajectory: benches stamp the producing commit
+# into every BENCH_*.json section they merge-write (see
+# `util::bench::merge_bench_json`), reading it through the sanctioned
+# env door `util::cli::git_commit`.  Resolved here once so a dirty PATH
+# or a non-git checkout degrades to "unknown" instead of failing.
+GIT_COMMIT ?= $(shell git rev-parse --short HEAD 2>/dev/null || echo unknown)
+export GIT_COMMIT
+
 # Build-time artifact export: lower the JAX models to HLO text + params for
 # the Rust PJRT runtime (see python/compile/aot.py and rust/src/runtime/).
 # Run once before any artifact-backed example/experiment; the Rust side

@@ -31,8 +31,30 @@ use taynode::util::stats::summarize;
 struct TimedDrive {
     responses: Vec<ServeResponse>,
     latencies_ms: Vec<f64>,
+    /// Per-retirement `(tolerance class, latency ms, deadline missed)`,
+    /// in retirement order — the raw material for the per-class SLO view.
+    by_class: Vec<(String, f64, bool)>,
     steps: u64,
     occupancy: f64,
+}
+
+/// Group the per-retirement stamps by tolerance class, sorted by class
+/// name: `(class, latencies_ms, deadline_misses)`.
+fn class_groups(by_class: &[(String, f64, bool)]) -> Vec<(String, Vec<f64>, u64)> {
+    let mut groups: Vec<(String, Vec<f64>, u64)> = Vec::new();
+    for (class, lat, miss) in by_class {
+        let at = match groups.iter().position(|(c, _, _)| c == class) {
+            Some(i) => i,
+            None => {
+                groups.push((class.clone(), Vec::new(), 0));
+                groups.len() - 1
+            }
+        };
+        groups[at].1.push(*lat);
+        groups[at].2 += u64::from(*miss);
+    }
+    groups.sort_by(|a, b| a.0.cmp(&b.0));
+    groups
 }
 
 fn drive_timed(seed: u64, capacity: usize, rate: f64, total: u64) -> TimedDrive {
@@ -44,6 +66,7 @@ fn drive_timed(seed: u64, capacity: usize, rate: f64, total: u64) -> TimedDrive 
     let mut submit_at: Vec<Instant> = Vec::with_capacity(total as usize);
     let mut responses = Vec::new();
     let mut latencies_ms = Vec::new();
+    let mut by_class = Vec::new();
     let mut submitted = 0u64;
     let mut steps = 0u64;
     while submitted < total || !host.is_idle() {
@@ -62,12 +85,14 @@ fn drive_timed(seed: u64, capacity: usize, rate: f64, total: u64) -> TimedDrive 
         let now = Instant::now();
         for r in done {
             let dt = now.duration_since(submit_at[r.id as usize]);
-            latencies_ms.push(dt.as_secs_f64() * 1e3);
+            let ms = dt.as_secs_f64() * 1e3;
+            latencies_ms.push(ms);
+            by_class.push((r.class.clone(), ms, r.deadline_miss));
             responses.push(r);
         }
         steps += 1;
     }
-    TimedDrive { responses, latencies_ms, steps, occupancy: host.occupancy() }
+    TimedDrive { responses, latencies_ms, by_class, steps, occupancy: host.occupancy() }
 }
 
 fn main() {
@@ -90,6 +115,7 @@ fn main() {
     let mut table = Table::new(&[
         "B", "rate", "requests", "steps", "p50 ms", "p99 ms", "occupancy", "drain occ", "miss",
     ]);
+    let mut class_table = Table::new(&["B", "class", "requests", "p50 ms", "p99 ms", "miss"]);
     let mut sections: Vec<(String, Json)> = Vec::new();
     for capacity in [64usize, 256, 1024] {
         let rate = capacity as f64 / 4.0;
@@ -120,6 +146,32 @@ fn main() {
             format!("{:.3}", drain.mean_occupancy),
             misses.to_string(),
         ]);
+        // Per-tolerance-class SLO view: misses concentrate in the class
+        // with the tightest step budget, not uniformly across the batch.
+        let groups = class_groups(&timed.by_class);
+        let mut class_json: Vec<(String, Json)> = Vec::new();
+        for (class, lats, class_misses) in &groups {
+            let cs = summarize(lats);
+            class_table.row(vec![
+                capacity.to_string(),
+                class.clone(),
+                lats.len().to_string(),
+                format!("{:.3}", cs.p50),
+                format!("{:.3}", cs.p99),
+                class_misses.to_string(),
+            ]);
+            class_json.push((
+                class.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(lats.len() as f64)),
+                    ("p50_ms", Json::num(cs.p50)),
+                    ("p99_ms", Json::num(cs.p99)),
+                    ("deadline_misses", Json::num(*class_misses as f64)),
+                ]),
+            ));
+        }
+        let class_pairs: Vec<(&str, Json)> =
+            class_json.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
         sections.push((
             format!("b{capacity}"),
             Json::obj(vec![
@@ -132,11 +184,14 @@ fn main() {
                 ("mean_occupancy", Json::num(timed.occupancy)),
                 ("drain_occupancy", Json::num(drain.mean_occupancy)),
                 ("deadline_misses", Json::num(misses as f64)),
+                ("classes", Json::obj(class_pairs)),
                 ("trace_hash", Json::str(format!("{hash:016x}"))),
             ]),
         ));
     }
     table.print();
+    println!("\n-- per tolerance class --");
+    class_table.print();
 
     if let Some(path) = json_path_arg() {
         let pairs: Vec<(&str, Json)> =

@@ -99,6 +99,10 @@ const NUMERIC_CRATES: &[&str] = &[
     "rust/src/nn/",
     "rust/src/coordinator/",
     "rust/src/kern/",
+    // Observability aggregates (cost ledgers, rollups, SLO windows) feed
+    // reports that must be byte-identical across thread counts, so keyed
+    // iteration order is banned there too.
+    "rust/src/obs/",
 ];
 
 /// `util/{pool,cli,rng}.rs` — the sanctioned nondeterminism doors (D3).
@@ -546,6 +550,13 @@ mod tests {
         // the same text outside a numeric crate is D1-clean
         let d = run(&[("rust/src/util/ok.rs", "use std::collections::HashMap;\n")]);
         assert!(!rules_of(&d).contains(&"D1"), "{d:?}");
+        // obs/ is a numeric crate too: its aggregates feed byte-identical
+        // reports, so keyed iteration is banned the same way
+        let d = run(&[(
+            "rust/src/obs/bad.rs",
+            "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, f32> = BTreeMap::new(); }\n",
+        )]);
+        assert!(rules_of(&d).contains(&"D1"), "{d:?}");
     }
 
     #[test]

@@ -57,8 +57,11 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "fig8" | "fig10" => mnist_figs::fig8_fig10(scale)?.print(),
         "fig9" => toy_figs::fig9(scale)?.print(),
         "native" => {
+            let (sweep, corr) = native_train::lambda_sweep_tables(scale)?;
             println!("-- native λ-sweep: toy regression, discrete adjoint --");
-            native_train::lambda_sweep(scale)?.print();
+            sweep.print();
+            println!("-- R_K vs NFE correlation (per-trajectory, per λ) --");
+            corr.print();
             println!("-- native synth-MNIST (projected) + classifier head --");
             native_train::mnist_native(scale)?.print();
         }

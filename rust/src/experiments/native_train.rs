@@ -18,6 +18,7 @@ use super::common::{eval_opts, toy_data, Scale};
 use crate::coordinator::train_native::{LinearHead, NativeTrainer};
 use crate::data::{synth_mnist, Batcher, Dataset};
 use crate::nn::Mlp;
+use crate::obs::RkNfeTable;
 use crate::solvers::tableau;
 use crate::util::bench::Table;
 use crate::util::rng::Pcg;
@@ -38,7 +39,17 @@ fn mean_f64(xs: impl Iterator<Item = f64>) -> f64 {
 /// final train loss, held-out MSE under the adaptive solver, `R_K`, and
 /// the adaptive NFE — the accuracy-vs-cost tradeoff per λ.
 pub fn lambda_sweep(scale: Scale) -> Result<Table> {
+    Ok(lambda_sweep_tables(scale)?.0)
+}
+
+/// [`lambda_sweep`] plus the per-trajectory R_K-vs-NFE correlation table
+/// ([`RkNfeTable`]): per λ, does a trajectory's regularizer quadrature
+/// actually predict its adaptive solve cost?  A strong positive
+/// correlation is the mechanism behind the paper's tradeoff — training
+/// pushes `R_K` down and the solver's NFE follows.
+pub fn lambda_sweep_tables(scale: Scale) -> Result<(Table, Table)> {
     let mut table = Table::new(&["lambda", "train_loss", "eval_mse", "R_K", "mean NFE"]);
+    let mut corr = RkNfeTable::new();
     let b = scale.data.clamp(8, 64);
     let x0 = toy_data(b, 11);
     let targets: Vec<f32> = x0.iter().map(|x| x + x * x * x).collect();
@@ -54,6 +65,7 @@ pub fn lambda_sweep(scale: Scale) -> Result<Table> {
             last_loss = tr.step_mse(&x0, &targets).loss;
         }
         let ev = tr.eval_rk(&x_eval, &dopri, &opts);
+        corr.push(lam as f64, &ev.r_k, &ev.stats);
         let mse = mean_f64(
             ev.y
                 .iter()
@@ -69,7 +81,7 @@ pub fn lambda_sweep(scale: Scale) -> Result<Table> {
             format!("{nfe:.1}"),
         ]);
     }
-    Ok(table)
+    Ok((table, corr.table()))
 }
 
 /// Synth-MNIST through a fixed seeded random projection to `d` features,
@@ -136,5 +148,14 @@ mod tests {
         // eval all run without artifacts; one row per λ.
         let t = lambda_sweep(Scale { iters: 2, sweep: 1, data: 8 }).unwrap();
         assert_eq!(t.row_count(), LAMBDAS.len());
+    }
+
+    #[test]
+    fn lambda_sweep_correlation_table_has_a_row_per_lambda() {
+        // The R_K-vs-NFE attribution table rides the same sweep: one
+        // correlation row per λ, built from the per-trajectory eval stats.
+        let (sweep, corr) = lambda_sweep_tables(Scale { iters: 2, sweep: 1, data: 8 }).unwrap();
+        assert_eq!(sweep.row_count(), LAMBDAS.len());
+        assert_eq!(corr.row_count(), LAMBDAS.len());
     }
 }

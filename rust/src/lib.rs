@@ -45,7 +45,11 @@
 //! * [`obs`] — deterministic telemetry: the zero-cost-off `Recorder`,
 //!   fixed log₂ histogram / counter registry, and Chrome-Trace NDJSON
 //!   export (`repro trace`), with per-shard buffers merged in fixed order
-//!   so same-seed traces are bit-identical at any thread count.
+//!   so same-seed traces are bit-identical at any thread count; plus the
+//!   offline analytics over those traces — span rollups and critical
+//!   paths (`obs::analyze`), per-trajectory solve-cost attribution
+//!   (`obs::cost`), deadline-miss SLO budgets (`obs::slo`), and the
+//!   `repro report` / `repro slo` renderers (`obs::report`).
 //! * [`analysis`] — `taylint`, the in-repo determinism lint: a
 //!   dependency-free tokenizer + rule catalog (D1–D7) that machine-checks
 //!   the bit-identity invariants the pool guarantees (run via `make lint`

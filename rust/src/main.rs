@@ -8,8 +8,17 @@
 //!   solvers                      — list the RK tableau suite
 //!   serve [--quick]              — continuous-batching serving demo
 //!   trace <serve|experiment>     — telemetry-enabled drive → Chrome Trace NDJSON
+//!   report <trace.ndjson>        — offline trace analytics: span rollup, critical
+//!                                  path, cost ledger, registry quantiles
+//!                                  (`--diff other.ndjson` compares two traces)
+//!   slo [--quick]                — serving drive with per-class deadline-miss
+//!                                  budgets and burn-rate windows over step ticks
 //!   perfdiff <base> <new>        — numeric-leaf delta between two bench JSONs
 //!                                  (`--fail-on-regression <pct>` turns it into a gate)
+//!
+//! `report` and `slo` write byte-identical output at any `TAYNODE_THREADS`
+//! (run context goes to stderr), so CI can `cmp` their files across
+//! worker counts.
 
 use std::collections::BTreeMap;
 
@@ -19,7 +28,9 @@ use taynode::coordinator::{evaluator, BatchInputs, NativeTrainer, Trainer};
 use taynode::data::{synth_mnist, Batcher, Dataset};
 use taynode::experiments::{self, Scale};
 use taynode::nn::Mlp;
-use taynode::obs::{Counter, Recorder, TraceDoc};
+use taynode::obs::analyze::TraceView;
+use taynode::obs::report::{slo_report, trace_diff_report, trace_report};
+use taynode::obs::{Counter, Hist, Recorder, TraceDoc};
 use taynode::serving;
 use taynode::solvers::{solve_adaptive_batch_traced_pooled, tableau, AdaptiveOpts};
 use taynode::util::bench::Table;
@@ -48,6 +59,8 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "serve" => serve(args),
         "trace" => trace_cmd(args),
+        "report" => report_cmd(args),
+        "slo" => slo_cmd(args),
         "perfdiff" => perfdiff(args),
         "solvers" => {
             println!(
@@ -76,6 +89,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  repro experiment <fig1..fig12|native|cnf|table2|table3|table4|all> [--quick]\n  \
                  repro serve [--quick] [--seed N] [--requests N] [--batch N] [--rate F]\n  \
                  repro trace <serve|experiment> [--quick] [--seed N] [--out PATH]\n  \
+                 repro report <trace.ndjson> [--diff OTHER.ndjson] [--out PATH] [--json PATH]\n  \
+                 repro slo [--quick] [--seed N] [--requests N] [--batch N] [--rate F] \
+                 [--out PATH] [--json PATH]\n  \
                  repro perfdiff <base.json> <new.json> [--fail-on-regression PCT]"
             );
             Ok(())
@@ -244,7 +260,8 @@ fn trace_experiment(args: &Args) -> Result<TraceDoc> {
     Ok(doc)
 }
 
-/// Print a recorder's non-zero counters as a table.
+/// Print a recorder's non-zero counters and histogram quantiles as
+/// tables.
 fn print_registry(label: &str, rec: &Recorder) {
     let Some(reg) = rec.registry() else { return };
     let mut table = Table::new(&["counter", "value"]);
@@ -257,6 +274,93 @@ fn print_registry(label: &str, rec: &Recorder) {
     if table.row_count() > 0 {
         table.print();
     }
+    let mut hists = Table::new(&["hist", "count", "p50", "p90", "p99"]);
+    for h in Hist::ALL {
+        let hist = reg.hist(h);
+        if hist.count() > 0 {
+            hists.row(vec![
+                format!("{label}/{}", h.name()),
+                hist.count().to_string(),
+                format!("{:.3e}", hist.quantile(0.5)),
+                format!("{:.3e}", hist.quantile(0.9)),
+                format!("{:.3e}", hist.quantile(0.99)),
+            ]);
+        }
+    }
+    if hists.row_count() > 0 {
+        hists.print();
+    }
+}
+
+/// `repro report <trace.ndjson>` — offline analytics over an exported
+/// trace: span rollup with self-vs-child attribution, critical path, the
+/// per-trajectory cost ledger, and registry quantiles.  With `--diff
+/// OTHER` the two traces' rollups are compared instead.  Output is a
+/// pure function of the input files — byte-identical at any thread
+/// count — so CI `cmp`s it across `TAYNODE_THREADS`.
+fn report_cmd(args: &Args) -> Result<()> {
+    let path = args
+        .pos(1)
+        .ok_or_else(|| anyhow::anyhow!("report needs a <trace.ndjson> argument"))?;
+    let view = TraceView::parse(&std::fs::read_to_string(path)?)?;
+    let doc = match args.str_opt("diff") {
+        Some(other) => {
+            let view_b = TraceView::parse(&std::fs::read_to_string(other)?)?;
+            trace_diff_report(&view, path, &view_b, other)
+        }
+        None => trace_report(&view)?,
+    };
+    emit_report(args, &doc.text, &doc.json)
+}
+
+/// `repro slo` — run the demo serving drive with per-class deadline-miss
+/// budgets on and print the burn-rate report.  Run context (threads) goes
+/// to stderr so stdout/`--out` stay byte-identical across worker counts.
+fn slo_cmd(args: &Args) -> Result<()> {
+    let quick = args.bool("quick");
+    let seed = args.u64_or("seed", 7)?;
+    let total = args.usize_or("requests", if quick { 120 } else { 600 })? as u64;
+    let capacity = args.usize_or("batch", if quick { 16 } else { 64 })?;
+    let rate = args.f64_or("rate", capacity as f64 / 8.0)?;
+    let pool = Pool::from_env();
+    eprintln!(
+        "slo drive: threads {}, capacity {capacity}, rate {rate}, {total} requests",
+        pool.threads()
+    );
+    let (trace, slos) = if pool.threads() > 1 {
+        serving::run_poisson_slo_pooled(&pool, seed, capacity, rate, total)
+    } else {
+        serving::run_poisson_slo(seed, capacity, rate, total)
+    };
+    let mut text = format!(
+        "served {} requests in {} steps  (capacity {capacity}, rate {rate})\n",
+        trace.submitted, trace.steps
+    );
+    let mut sections = Vec::new();
+    for (name, slo) in &slos {
+        let doc = slo_report(slo);
+        text.push_str(&format!("\n== model {name} ==\n"));
+        text.push_str(&doc.text);
+        sections.push((name.as_str(), doc.json));
+    }
+    emit_report(args, &text, &Json::obj(sections))
+}
+
+/// Shared output plumbing for the deterministic reports: text to stdout
+/// or `--out`, canonical JSON to `--json`.
+fn emit_report(args: &Args, text: &str, json: &Json) -> Result<()> {
+    match args.str_opt("out") {
+        Some(path) => {
+            std::fs::write(path, text)?;
+            eprintln!("wrote report text to {path}");
+        }
+        None => print!("{text}"),
+    }
+    if let Some(path) = args.str_opt("json") {
+        std::fs::write(path, json.to_string())?;
+        eprintln!("wrote report JSON to {path}");
+    }
+    Ok(())
 }
 
 /// `repro perfdiff <base.json> <new.json>` — flatten every numeric leaf of
@@ -278,8 +382,18 @@ fn perfdiff(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow::anyhow!("--fail-on-regression={v}: {e}"))?,
         ),
     };
-    let base = flatten_json(&std::fs::read_to_string(base_path)?)?;
-    let new = flatten_json(&std::fs::read_to_string(new_path)?)?;
+    let base_doc = Json::parse(&std::fs::read_to_string(base_path)?)?;
+    let new_doc = Json::parse(&std::fs::read_to_string(new_path)?)?;
+    // Name what is being compared before diffing it: each section's
+    // provenance stamp (from `make bench-json`) identifies the commit and
+    // worker count behind the numbers.
+    for (label, path, doc) in [("base", base_path, &base_doc), ("new", new_path, &new_doc)] {
+        for line in provenance_lines(doc) {
+            println!("{label} {path} {line}");
+        }
+    }
+    let base = flatten_doc(&base_doc);
+    let new = flatten_doc(&new_doc);
     if base.is_empty() {
         println!("note: {base_path} has no numeric leaves (unseeded baseline?)");
     }
@@ -341,11 +455,26 @@ fn higher_is_better(path: &str) -> Option<bool> {
     }
 }
 
-fn flatten_json(s: &str) -> Result<BTreeMap<String, f64>> {
-    let j = Json::parse(s)?;
+/// One line per bench section carrying a provenance stamp:
+/// `section=<s> commit=<c> threads=<t>`.
+fn provenance_lines(j: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Json::Obj(m) = j {
+        for (section, v) in m {
+            if let Some(p) = v.get("provenance") {
+                let commit = p.get("git_commit").and_then(Json::as_str).unwrap_or("?");
+                let threads = p.get("threads").and_then(Json::as_f64).unwrap_or(0.0);
+                out.push(format!("section={section} commit={commit} threads={threads}"));
+            }
+        }
+    }
+    out
+}
+
+fn flatten_doc(j: &Json) -> BTreeMap<String, f64> {
     let mut out = BTreeMap::new();
-    flatten_into(&j, String::new(), &mut out);
-    Ok(out)
+    flatten_into(j, String::new(), &mut out);
+    out
 }
 
 fn flatten_into(j: &Json, path: String, out: &mut BTreeMap<String, f64>) {
@@ -355,6 +484,11 @@ fn flatten_into(j: &Json, path: String, out: &mut BTreeMap<String, f64>) {
         }
         Json::Obj(m) => {
             for (k, v) in m {
+                // Provenance stamps identify a report; they are not
+                // metrics and must not show up as diffable leaves.
+                if k == "provenance" {
+                    continue;
+                }
                 let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
                 flatten_into(v, p, out);
             }

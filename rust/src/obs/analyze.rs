@@ -1,0 +1,634 @@
+//! Offline trace analytics: load an exported NDJSON trace back into a
+//! queryable view, attribute time per phase, extract the critical path,
+//! and diff two traces.
+//!
+//! The trace file is the interchange point: `repro trace …` writes it,
+//! Perfetto renders it, and this module gives the CLI (`repro report`)
+//! the same visibility without a browser.  Everything here is pure
+//! deterministic computation over parsed lines — byte-identical inputs
+//! (which the recorder guarantees across thread counts) produce
+//! byte-identical reports.
+//!
+//! Time attribution is **self-vs-child** over logical ticks: a span's
+//! self time is its duration minus the durations of spans properly
+//! nested inside it on the same `(pid, tid)` lane, so a phase that
+//! merely contains expensive children stops looking expensive itself.
+//!
+//! ```
+//! use taynode::obs::analyze::TraceView;
+//! let ndjson = concat!(
+//!     r#"{"args":{"name":"solve"},"name":"process_name","ph":"M","pid":0,"tid":0}"#, "\n",
+//!     r#"{"args":{},"dur":8,"name":"traj","ph":"X","pid":0,"tid":1,"ts":0}"#, "\n",
+//!     r#"{"args":{},"dur":3,"name":"step","ph":"X","pid":0,"tid":1,"ts":2}"#, "\n",
+//! );
+//! let view = TraceView::parse(ndjson)?;
+//! assert_eq!(view.processes, vec![(0, "solve".to_string())]);
+//! let rollup = view.span_rollup();
+//! let traj = rollup.rows.iter().find(|r| r.name == "traj").unwrap();
+//! assert_eq!((traj.total, traj.self_ticks), (8, 5)); // 3 ticks belong to "step"
+//! # anyhow::Ok(())
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::cost::CostEvent;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// A completed span (`ph:"X"`, or a matched `"B"`/`"E"` pair).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TSpan {
+    pub pid: u64,
+    pub tid: u64,
+    pub name: String,
+    pub ts: u64,
+    pub dur: u64,
+    /// Numeric `args`, in canonical (key-sorted) order.
+    pub args: Vec<(String, f64)>,
+}
+
+impl TSpan {
+    pub fn end(&self) -> u64 {
+        self.ts + self.dur
+    }
+
+    pub fn arg(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+/// An instant event (`ph:"i"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TInstant {
+    pub pid: u64,
+    pub tid: u64,
+    pub name: String,
+    pub ts: u64,
+    pub args: Vec<(String, f64)>,
+}
+
+impl TInstant {
+    pub fn arg(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+/// A counter sample (`ph:"C"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TCounter {
+    pub pid: u64,
+    pub name: String,
+    pub ts: u64,
+    pub value: f64,
+}
+
+/// A parsed trace: processes, events, and per-process registry metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TraceView {
+    /// `(pid, name)` from `process_name` metadata, ascending pid.
+    pub processes: Vec<(u64, String)>,
+    pub spans: Vec<TSpan>,
+    pub instants: Vec<TInstant>,
+    pub counters: Vec<TCounter>,
+    /// `(pid, registry args)` from `registry` metadata records.
+    pub registries: Vec<(u64, Json)>,
+}
+
+fn num_field(j: &Json, key: &str) -> Result<u64> {
+    let v = j.req(key)?.as_f64().with_context(|| format!("field {key:?} is not a number"))?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("field {key:?} out of range: {v}");
+    }
+    Ok(v as u64)
+}
+
+fn numeric_args(j: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(m) = j.get("args").and_then(Json::as_obj) {
+        for (k, v) in m {
+            if let Some(x) = v.as_f64() {
+                out.push((k.clone(), x));
+            }
+        }
+    }
+    out
+}
+
+impl TraceView {
+    /// Parse an NDJSON trace.  Tolerates blank lines and unknown metadata;
+    /// rejects — naming the offending line — malformed JSON, missing or
+    /// non-numeric required fields, unknown phases, an `E` with no open
+    /// `B` on its `(pid, tid)` lane, a `B` left unclosed at end of input,
+    /// and a duplicate `process_name` for the same pid.
+    pub fn parse(s: &str) -> Result<TraceView> {
+        let mut view = TraceView::default();
+        // Open `ph:"B"` begins per (pid, tid) lane: (pid, tid, name, ts, line).
+        let mut open: Vec<(u64, u64, String, u64, usize)> = Vec::new();
+        for (i, line) in s.lines().enumerate() {
+            let lineno = i + 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).with_context(|| format!("ndjson line {lineno}"))?;
+            (|| -> Result<()> {
+                let ph = j.str_of("ph")?;
+                match ph {
+                    "M" => match j.str_of("name")? {
+                        "process_name" => {
+                            let pid = num_field(&j, "pid")?;
+                            if view.processes.iter().any(|(p, _)| *p == pid) {
+                                bail!("duplicate process_name for pid {pid}");
+                            }
+                            let name = j.req("args")?.str_of("name")?.to_string();
+                            view.processes.push((pid, name));
+                        }
+                        "registry" => {
+                            let pid = num_field(&j, "pid")?;
+                            view.registries.push((pid, j.req("args")?.clone()));
+                        }
+                        _ => {} // other metadata is viewer-specific; skip
+                    },
+                    "X" => view.spans.push(TSpan {
+                        pid: num_field(&j, "pid")?,
+                        tid: num_field(&j, "tid")?,
+                        name: j.str_of("name")?.to_string(),
+                        ts: num_field(&j, "ts")?,
+                        dur: num_field(&j, "dur")?,
+                        args: numeric_args(&j),
+                    }),
+                    "B" => open.push((
+                        num_field(&j, "pid")?,
+                        num_field(&j, "tid")?,
+                        j.str_of("name")?.to_string(),
+                        num_field(&j, "ts")?,
+                        lineno,
+                    )),
+                    "E" => {
+                        let (pid, tid) = (num_field(&j, "pid")?, num_field(&j, "tid")?);
+                        let ts = num_field(&j, "ts")?;
+                        // LIFO per lane: close the most recent open B.
+                        let Some(pos) = open.iter().rposition(|(p, t, ..)| (*p, *t) == (pid, tid))
+                        else {
+                            bail!("span end (ph:\"E\") with no open begin on pid {pid} tid {tid}");
+                        };
+                        let (_, _, name, b_ts, _) = open.remove(pos);
+                        if ts < b_ts {
+                            bail!("span end at ts {ts} precedes its begin at ts {b_ts}");
+                        }
+                        view.spans.push(TSpan {
+                            pid,
+                            tid,
+                            name,
+                            ts: b_ts,
+                            dur: ts - b_ts,
+                            args: numeric_args(&j),
+                        });
+                    }
+                    "i" => view.instants.push(TInstant {
+                        pid: num_field(&j, "pid")?,
+                        tid: num_field(&j, "tid")?,
+                        name: j.str_of("name")?.to_string(),
+                        ts: num_field(&j, "ts")?,
+                        args: numeric_args(&j),
+                    }),
+                    "C" => view.counters.push(TCounter {
+                        pid: num_field(&j, "pid")?,
+                        name: j.str_of("name")?.to_string(),
+                        ts: num_field(&j, "ts")?,
+                        value: j
+                            .req("args")?
+                            .get("value")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                    }),
+                    other => bail!("unknown trace phase {other:?}"),
+                }
+                Ok(())
+            })()
+            .with_context(|| format!("ndjson line {lineno}"))?;
+        }
+        if let Some((pid, tid, name, _, lineno)) = open.first() {
+            bail!(
+                "span begin {name:?} on pid {pid} tid {tid} (ndjson line {lineno}) never closed"
+            );
+        }
+        view.processes.sort();
+        Ok(view)
+    }
+
+    pub fn process_name(&self, pid: u64) -> &str {
+        self.processes
+            .iter()
+            .find(|(p, _)| *p == pid)
+            .map_or("?", |(_, n)| n.as_str())
+    }
+
+    /// Registry metadata for `pid`, if the trace carried one.
+    pub fn registry(&self, pid: u64) -> Option<&Json> {
+        self.registries.iter().find(|(p, _)| *p == pid).map(|(_, j)| j)
+    }
+
+    /// Per-name span aggregation with self-vs-child time attribution.
+    pub fn span_rollup(&self) -> SpanRollup {
+        // Sort within each (pid, tid) lane: ts ascending, then longer
+        // spans first so a parent precedes children starting at the same
+        // tick; name breaks exact-interval ties (deterministic, and it
+        // makes "request" the parent of a coincident "traj").
+        let mut order: Vec<usize> = (0..self.spans.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (sa, sb) = (&self.spans[a], &self.spans[b]);
+            (sa.pid, sa.tid, sa.ts, u64::MAX - sa.dur, &sa.name, a).cmp(&(
+                sb.pid,
+                sb.tid,
+                sb.ts,
+                u64::MAX - sb.dur,
+                &sb.name,
+                b,
+            ))
+        });
+        let mut child_ticks = vec![0u64; self.spans.len()];
+        let mut stack: Vec<usize> = Vec::new(); // indices of enclosing spans
+        let mut prev_lane = None;
+        for &i in &order {
+            let s = &self.spans[i];
+            if prev_lane != Some((s.pid, s.tid)) {
+                stack.clear();
+                prev_lane = Some((s.pid, s.tid));
+            }
+            // Pop lanes' spans we've left (or that merely overlap: only
+            // proper containment counts as parentage).
+            while let Some(&top) = stack.last() {
+                let t = &self.spans[top];
+                if s.ts >= t.end() || s.end() > t.end() {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&top) = stack.last() {
+                child_ticks[top] += s.dur; // direct child only
+            }
+            stack.push(i);
+        }
+        let mut rows: Vec<RollupRow> = Vec::new();
+        for (i, s) in self.spans.iter().enumerate() {
+            let self_ticks = s.dur.saturating_sub(child_ticks[i]);
+            match rows.iter().position(|r| r.name == s.name) {
+                Some(p) => {
+                    let r = &mut rows[p];
+                    r.count += 1;
+                    r.total += s.dur;
+                    r.self_ticks += self_ticks;
+                    r.max_dur = r.max_dur.max(s.dur);
+                }
+                None => rows.push(RollupRow {
+                    name: s.name.clone(),
+                    count: 1,
+                    total: s.dur,
+                    self_ticks,
+                    max_dur: s.dur,
+                }),
+            }
+        }
+        rows.sort_by(|a, b| (u64::MAX - a.total, &a.name).cmp(&(u64::MAX - b.total, &b.name)));
+        SpanRollup { rows }
+    }
+
+    /// The critical path through one process: a greedy furthest-end walk
+    /// over its spans.  From the current span, the successor is the
+    /// overlapping span that extends furthest past the current end; when
+    /// nothing overlaps, the walk jumps over the idle gap to the next
+    /// span to start.  Ties break by (earlier start, name, tid), so the
+    /// path is deterministic.
+    pub fn critical_path(&self, pid: u64) -> Vec<CritStep> {
+        let mut spans: Vec<&TSpan> = self.spans.iter().filter(|s| s.pid == pid).collect();
+        spans.sort_by(|a, b| {
+            (a.ts, u64::MAX - a.end(), &a.name, a.tid)
+                .cmp(&(b.ts, u64::MAX - b.end(), &b.name, b.tid))
+        });
+        let mut path = Vec::new();
+        let Some(first) = spans.first() else { return path };
+        let mut cur = *first;
+        loop {
+            path.push(CritStep {
+                name: cur.name.clone(),
+                tid: cur.tid,
+                ts: cur.ts,
+                dur: cur.dur,
+            });
+            let cur_end = cur.end();
+            // Overlapping successor extending furthest past the frontier…
+            let next = spans
+                .iter()
+                .filter(|s| s.ts <= cur_end && s.end() > cur_end)
+                .min_by_key(|s| (u64::MAX - s.end(), s.ts, s.name.clone(), s.tid))
+                // …or jump the gap to the next span to start.
+                .or_else(|| {
+                    spans
+                        .iter()
+                        .filter(|s| s.ts > cur_end)
+                        .min_by_key(|s| (s.ts, u64::MAX - s.end(), s.name.clone(), s.tid))
+                });
+            match next {
+                Some(s) => cur = *s,
+                None => return path,
+            }
+        }
+    }
+
+    /// Bridge into the cost ledger: `accept`/`reject` instants and `traj`
+    /// spans of process `pid`, in file order (per-track chronological).
+    pub fn cost_events(&self, pid: u64) -> Vec<CostEvent> {
+        let mut out = Vec::new();
+        for i in &self.instants {
+            if i.pid != pid {
+                continue;
+            }
+            let (err, h) = (i.arg("err").unwrap_or(0.0), i.arg("h").unwrap_or(0.0));
+            match i.name.as_str() {
+                "accept" => out.push(CostEvent::Accept { track: i.tid, err, h }),
+                "reject" => out.push(CostEvent::Reject { track: i.tid, err, h }),
+                _ => {}
+            }
+        }
+        for s in &self.spans {
+            if s.pid == pid && s.name == "traj" {
+                out.push(CostEvent::Traj {
+                    track: s.tid,
+                    attempts: s.dur,
+                    nfe: s.arg("nfe").unwrap_or(0.0) as u64,
+                    rejected: s.arg("rejected").unwrap_or(0.0) as u64,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// One aggregated span name in a [`SpanRollup`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RollupRow {
+    pub name: String,
+    pub count: u64,
+    /// Σ durations (ticks).
+    pub total: u64,
+    /// Σ durations minus time spent in directly nested spans.
+    pub self_ticks: u64,
+    pub max_dur: u64,
+}
+
+/// Span aggregation by name, descending total ticks.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanRollup {
+    pub rows: Vec<RollupRow>,
+}
+
+impl SpanRollup {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["span", "count", "total", "self", "max"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                r.count.to_string(),
+                r.total.to_string(),
+                r.self_ticks.to_string(),
+                r.max_dur.to_string(),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(&r.name)),
+                        ("count", Json::num(r.count as f64)),
+                        ("total", Json::num(r.total as f64)),
+                        ("self", Json::num(r.self_ticks as f64)),
+                        ("max", Json::num(r.max_dur as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// One step of a critical path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CritStep {
+    pub name: String,
+    pub tid: u64,
+    pub ts: u64,
+    pub dur: u64,
+}
+
+/// One span name's change between two traces (a − b).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffRow {
+    pub name: String,
+    pub count_a: u64,
+    pub count_b: u64,
+    pub total_a: u64,
+    pub total_b: u64,
+}
+
+impl DiffRow {
+    pub fn delta(&self) -> i64 {
+        self.total_a as i64 - self.total_b as i64
+    }
+}
+
+/// Diff two traces' span rollups: every name present in either, sorted by
+/// |Δ total ticks| descending (name ascending on ties).
+pub fn diff(a: &TraceView, b: &TraceView) -> Vec<DiffRow> {
+    let (ra, rb) = (a.span_rollup(), b.span_rollup());
+    let mut rows: Vec<DiffRow> = Vec::new();
+    for r in &ra.rows {
+        rows.push(DiffRow {
+            name: r.name.clone(),
+            count_a: r.count,
+            count_b: 0,
+            total_a: r.total,
+            total_b: 0,
+        });
+    }
+    for r in &rb.rows {
+        match rows.iter().position(|d| d.name == r.name) {
+            Some(p) => {
+                rows[p].count_b = r.count;
+                rows[p].total_b = r.total;
+            }
+            None => rows.push(DiffRow {
+                name: r.name.clone(),
+                count_a: 0,
+                count_b: r.count,
+                total_a: 0,
+                total_b: r.total,
+            }),
+        }
+    }
+    rows.sort_by(|x, y| {
+        (i64::MAX - x.delta().abs(), &x.name).cmp(&(i64::MAX - y.delta().abs(), &y.name))
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Recorder, TraceDoc, NO_ARGS};
+
+    fn sample_trace() -> String {
+        let mut rec = Recorder::enabled();
+        rec.span("request", 7, 2, 6, [("nfe", 30.0), ("miss", 0.0)]);
+        rec.span("traj", 7, 3, 5, [("nfe", 30.0), ("rejected", 1.0)]);
+        rec.instant("reject", 7, 0, [("err", 2.0), ("h", 0.5)]);
+        rec.instant("accept", 7, 1, [("err", 0.5), ("h", 0.25)]);
+        rec.counter("queue_depth", 2, 3.0);
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "serve/toy", &rec);
+        doc.to_ndjson()
+    }
+
+    #[test]
+    fn parses_every_emitted_phase() {
+        let v = TraceView::parse(&sample_trace()).unwrap();
+        assert_eq!(v.processes, vec![(0, "serve/toy".to_string())]);
+        assert_eq!(v.spans.len(), 2);
+        assert_eq!(v.instants.len(), 2);
+        assert_eq!(v.counters.len(), 1);
+        assert_eq!(v.registries.len(), 1);
+        assert_eq!(v.process_name(0), "serve/toy");
+        assert_eq!(v.process_name(9), "?");
+        assert_eq!(v.spans[0].arg("nfe"), Some(30.0));
+    }
+
+    #[test]
+    fn rollup_attributes_self_vs_child_time() {
+        let v = TraceView::parse(&sample_trace()).unwrap();
+        let roll = v.span_rollup();
+        let req = roll.rows.iter().find(|r| r.name == "request").unwrap();
+        let traj = roll.rows.iter().find(|r| r.name == "traj").unwrap();
+        // request [2,8) contains traj [3,8): 5 of its 6 ticks are child time.
+        assert_eq!((req.total, req.self_ticks), (6, 1));
+        assert_eq!((traj.total, traj.self_ticks), (5, 5));
+        assert_eq!(roll.rows[0].name, "request"); // sorted by total desc
+        assert_eq!(roll.table().row_count(), 2);
+    }
+
+    #[test]
+    fn coincident_request_and_traj_nest_by_name() {
+        // Identical intervals: the name tie-break makes "request" the
+        // parent, so its self time is zero — not double-counted.
+        let mut rec = Recorder::enabled();
+        rec.span("request", 1, 0, 4, NO_ARGS);
+        rec.span("traj", 1, 0, 4, NO_ARGS);
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "p", &rec);
+        let v = TraceView::parse(&doc.to_ndjson()).unwrap();
+        let roll = v.span_rollup();
+        let req = roll.rows.iter().find(|r| r.name == "request").unwrap();
+        assert_eq!(req.self_ticks, 0);
+    }
+
+    #[test]
+    fn begin_end_pairs_parse_and_mismatches_name_lines() {
+        let ok = concat!(
+            r#"{"name":"load","ph":"B","pid":0,"tid":2,"ts":1}"#,
+            "\n",
+            r#"{"name":"load","ph":"E","pid":0,"tid":2,"ts":6}"#,
+            "\n"
+        );
+        let v = TraceView::parse(ok).unwrap();
+        assert_eq!(v.spans, vec![TSpan {
+            pid: 0,
+            tid: 2,
+            name: "load".to_string(),
+            ts: 1,
+            dur: 5,
+            args: vec![],
+        }]);
+
+        // Orphan E: rejected, naming its line.
+        let orphan = concat!(
+            r#"{"name":"x","ph":"i","pid":0,"tid":0,"ts":0,"args":{}}"#,
+            "\n",
+            r#"{"name":"load","ph":"E","pid":0,"tid":2,"ts":6}"#,
+            "\n"
+        );
+        let err = format!("{:#}", TraceView::parse(orphan).unwrap_err());
+        assert!(err.contains("ndjson line 2") && err.contains("no open begin"), "{err}");
+
+        // Unclosed B: rejected, naming the begin's line.
+        let unclosed = r#"{"name":"load","ph":"B","pid":0,"tid":2,"ts":1}"#;
+        let err = format!("{:#}", TraceView::parse(unclosed).unwrap_err());
+        assert!(err.contains("line 1") && err.contains("never closed"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_process_ids_and_unknown_phases_are_rejected() {
+        let dup = concat!(
+            r#"{"args":{"name":"a"},"name":"process_name","ph":"M","pid":3,"tid":0}"#,
+            "\n",
+            r#"{"args":{"name":"b"},"name":"process_name","ph":"M","pid":3,"tid":0}"#,
+            "\n"
+        );
+        let err = format!("{:#}", TraceView::parse(dup).unwrap_err());
+        assert!(err.contains("ndjson line 2") && err.contains("duplicate"), "{err}");
+
+        let unknown = r#"{"name":"x","ph":"Q","pid":0,"tid":0,"ts":0}"#;
+        let err = format!("{:#}", TraceView::parse(unknown).unwrap_err());
+        assert!(err.contains("ndjson line 1") && err.contains("unknown trace phase"), "{err}");
+    }
+
+    #[test]
+    fn critical_path_walks_overlaps_and_gaps() {
+        let mut rec = Recorder::enabled();
+        rec.span("a", 0, 0, 4, NO_ARGS); // [0,4)
+        rec.span("b", 1, 2, 5, NO_ARGS); // [2,7) extends past a
+        rec.span("c", 0, 9, 2, NO_ARGS); // gap, then [9,11)
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "p", &rec);
+        let v = TraceView::parse(&doc.to_ndjson()).unwrap();
+        let names: Vec<String> = v.critical_path(0).into_iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        assert!(v.critical_path(5).is_empty());
+    }
+
+    #[test]
+    fn diff_ranks_by_absolute_delta() {
+        let mk = |durs: &[(&'static str, u64)]| {
+            let mut rec = Recorder::enabled();
+            for (name, d) in durs {
+                rec.span(name, 0, 0, *d, NO_ARGS);
+            }
+            let mut doc = TraceDoc::new();
+            doc.add_process(0, "p", &rec);
+            TraceView::parse(&doc.to_ndjson()).unwrap()
+        };
+        let a = mk(&[("traj", 10), ("forward", 3)]);
+        let b = mk(&[("traj", 4), ("adjoint_shard", 2)]);
+        let rows = diff(&a, &b);
+        assert_eq!(rows[0].name, "traj");
+        assert_eq!(rows[0].delta(), 6);
+        let fwd = rows.iter().find(|r| r.name == "forward").unwrap();
+        assert_eq!((fwd.total_a, fwd.total_b), (3, 0));
+        let adj = rows.iter().find(|r| r.name == "adjoint_shard").unwrap();
+        assert_eq!((adj.count_a, adj.count_b, adj.total_b), (0, 1, 2));
+    }
+
+    #[test]
+    fn cost_events_bridge_to_the_ledger() {
+        let v = TraceView::parse(&sample_trace()).unwrap();
+        let evs = v.cost_events(0);
+        assert_eq!(evs.len(), 3);
+        let ledger = crate::obs::cost::CostLedger::from_cost_events(evs);
+        assert_eq!(ledger.trajs.len(), 1);
+        assert_eq!(ledger.trajs[0].nfe, 30);
+        assert_eq!(ledger.trajs[0].longest_streak, 1);
+        assert!(v.cost_events(4).is_empty());
+    }
+}

@@ -1,0 +1,488 @@
+//! Per-trajectory solve-cost attribution: who pays the NFE, and why.
+//!
+//! The batched adaptive driver already records everything a cost analysis
+//! needs — per-attempt `accept`/`reject` instants (embedded error ratio
+//! and realized `|h|` per attempt, on the trajectory's own track) and one
+//! `traj` span per retirement carrying the [`SolveStats`] totals.  A
+//! [`CostLedger`] folds that stream into one [`TrajCost`] row per
+//! trajectory:
+//!
+//! * **NFE / accept / reject attribution** — which trajectories consume
+//!   the evaluation budget;
+//! * **rejection-streak clustering** — maximal runs of consecutive
+//!   rejects, the controller's thrash signature (a stiff region shows up
+//!   as long streaks, a marginal tolerance as many short ones);
+//! * **a deterministic stiffness proxy** — `Σ err / Σ |h|` over accepted
+//!   attempts, i.e. the mean embedded-error ratio × the realized step
+//!   density (steps per unit integration time).  Stiff trajectories run
+//!   their controller pinned near the accept boundary at tiny steps, so
+//!   the proxy grows with stiffness while using no wall clock and no
+//!   solver internals beyond what the PI controller already computed.
+//!
+//! [`RkNfeTable`] is the paper-facing summary: per λ, the correlation
+//! between the regularizer the training minimized (`R_K`) and the solve
+//! cost it was supposed to buy down (NFE) — the tradeoff of Kelly et al.
+//! 2020 made directly measurable (`repro experiment native`).
+//!
+//! ```
+//! use taynode::obs::cost::{CostEvent, CostLedger};
+//! let events = vec![
+//!     CostEvent::Reject { track: 7, err: 2.5, h: 0.2 },
+//!     CostEvent::Accept { track: 7, err: 0.8, h: 0.1 },
+//!     CostEvent::Traj { track: 7, attempts: 2, nfe: 14, rejected: 1 },
+//! ];
+//! let ledger = CostLedger::from_cost_events(events);
+//! assert_eq!(ledger.trajs.len(), 1);
+//! assert_eq!(ledger.trajs[0].nfe, 14);
+//! assert_eq!(ledger.trajs[0].longest_streak, 1);
+//! assert!((ledger.trajs[0].stiffness() - 8.0).abs() < 1e-12); // 0.8 / 0.1
+//! ```
+
+use crate::obs::{Event, EventKind, Recorder};
+use crate::solvers::SolveStats;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::stats::{pearson, spearman};
+
+/// One attributable solver event, decoupled from where it came from: the
+/// in-process [`Recorder`] stream ([`CostLedger::from_recorder`]) or a
+/// parsed NDJSON trace (`obs::analyze::TraceView::cost_events`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostEvent {
+    /// An accepted attempt: embedded error ratio and realized `|h|`.
+    Accept { track: u64, err: f64, h: f64 },
+    /// A rejected attempt (the step `|h|` that failed).
+    Reject { track: u64, err: f64, h: f64 },
+    /// Trajectory retirement totals (the `traj` span).
+    Traj { track: u64, attempts: u64, nfe: u64, rejected: u64 },
+}
+
+impl CostEvent {
+    fn track(&self) -> u64 {
+        match self {
+            CostEvent::Accept { track, .. }
+            | CostEvent::Reject { track, .. }
+            | CostEvent::Traj { track, .. } => *track,
+        }
+    }
+}
+
+/// One trajectory's attributed solve cost; see the module docs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrajCost {
+    /// Trajectory id (the event track).
+    pub id: u64,
+    pub nfe: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Maximal runs of consecutive rejects (count of streaks).
+    pub reject_streaks: u64,
+    /// Longest such run.
+    pub longest_streak: u64,
+    /// Σ embedded-error ratios over accepted attempts.
+    pub sum_err: f64,
+    /// Σ realized `|h|` over accepted attempts.
+    pub sum_h: f64,
+}
+
+impl TrajCost {
+    pub fn attempts(&self) -> u64 {
+        self.accepted + self.rejected
+    }
+
+    /// The deterministic stiffness proxy `Σ err / Σ |h|` (0 when the
+    /// trajectory accepted no progress); see the module docs.
+    pub fn stiffness(&self) -> f64 {
+        if self.sum_h > 0.0 {
+            self.sum_err / self.sum_h
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The per-trajectory cost ledger; rows are sorted by trajectory id, so
+/// two ledgers built from differently-chunked recordings of the same
+/// solve compare equal.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostLedger {
+    pub trajs: Vec<TrajCost>,
+    /// Every maximal reject-streak length across all trajectories, in
+    /// (trajectory id, chronological) order — the clustering input.
+    pub streaks: Vec<u64>,
+}
+
+impl CostLedger {
+    /// Build from an in-process recorder's event stream.
+    pub fn from_recorder(rec: &Recorder) -> CostLedger {
+        CostLedger::from_events(rec.events())
+    }
+
+    /// Build from raw [`Event`]s (`accept`/`reject` instants and `traj`
+    /// spans; everything else is ignored).
+    pub fn from_events(events: &[Event]) -> CostLedger {
+        let cost = events.iter().filter_map(|e| match (e.name, e.kind) {
+            ("accept", EventKind::Instant) => Some(CostEvent::Accept {
+                track: e.track,
+                err: e.args[0].1,
+                h: e.args[1].1,
+            }),
+            ("reject", EventKind::Instant) => Some(CostEvent::Reject {
+                track: e.track,
+                err: e.args[0].1,
+                h: e.args[1].1,
+            }),
+            ("traj", EventKind::Span) => Some(CostEvent::Traj {
+                track: e.track,
+                attempts: e.dur,
+                nfe: e.args[0].1 as u64,
+                rejected: e.args[1].1 as u64,
+            }),
+            _ => None,
+        });
+        CostLedger::from_cost_events(cost)
+    }
+
+    /// Build from any [`CostEvent`] stream.  Events are stable-sorted by
+    /// track first — each trajectory's events keep their chronological
+    /// order (per-attempt instants are stamped by the row's own attempt
+    /// counter), so the ledger is identical however the recording was
+    /// chunked or interleaved across trajectories.
+    pub fn from_cost_events(events: impl IntoIterator<Item = CostEvent>) -> CostLedger {
+        let mut evs: Vec<CostEvent> = events.into_iter().collect();
+        evs.sort_by_key(CostEvent::track);
+        let mut ledger = CostLedger::default();
+        let mut cur: Option<TrajCost> = None;
+        let mut run = 0u64; // open reject run of the current trajectory
+        let flush = |cur: &mut Option<TrajCost>, run: &mut u64, out: &mut CostLedger| {
+            if let Some(mut t) = cur.take() {
+                if *run > 0 {
+                    t.reject_streaks += 1;
+                    t.longest_streak = t.longest_streak.max(*run);
+                    out.streaks.push(*run);
+                    *run = 0;
+                }
+                out.trajs.push(t);
+            }
+        };
+        for e in evs {
+            let track = e.track();
+            if cur.as_ref().map(|t| t.id) != Some(track) {
+                flush(&mut cur, &mut run, &mut ledger);
+                cur = Some(TrajCost { id: track, ..TrajCost::default() });
+            }
+            let t = match cur.as_mut() {
+                Some(t) => t,
+                None => continue, // unreachable: cur was just set
+            };
+            match e {
+                CostEvent::Accept { err, h, .. } => {
+                    t.accepted += 1;
+                    t.sum_err += err;
+                    t.sum_h += h;
+                    if run > 0 {
+                        t.reject_streaks += 1;
+                        t.longest_streak = t.longest_streak.max(run);
+                        ledger.streaks.push(run);
+                        run = 0;
+                    }
+                }
+                CostEvent::Reject { .. } => {
+                    t.rejected += 1;
+                    run += 1;
+                }
+                CostEvent::Traj { attempts, nfe, rejected, .. } => {
+                    // Retirement totals are authoritative: they cover
+                    // attempts made before recording was enabled and the
+                    // dead-on-arrival case with no attempt instants.
+                    t.nfe = t.nfe.max(nfe);
+                    t.rejected = t.rejected.max(rejected);
+                    t.accepted = t.accepted.max(attempts.saturating_sub(rejected));
+                }
+            }
+        }
+        flush(&mut cur, &mut run, &mut ledger);
+        ledger
+    }
+
+    /// Ledger-wide totals as a synthetic [`TrajCost`] (id = `u64::MAX`).
+    pub fn total(&self) -> TrajCost {
+        let mut tot = TrajCost { id: u64::MAX, ..TrajCost::default() };
+        for t in &self.trajs {
+            tot.nfe += t.nfe;
+            tot.accepted += t.accepted;
+            tot.rejected += t.rejected;
+            tot.reject_streaks += t.reject_streaks;
+            tot.longest_streak = tot.longest_streak.max(t.longest_streak);
+            tot.sum_err += t.sum_err;
+            tot.sum_h += t.sum_h;
+        }
+        tot
+    }
+
+    /// Streak-length clustering: `(length, occurrences)` ascending.
+    pub fn streak_hist(&self) -> Vec<(u64, u64)> {
+        let mut lens = self.streaks.clone();
+        lens.sort_unstable();
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        for l in lens {
+            if matches!(out.last(), Some((len, _)) if *len == l) {
+                if let Some((_, n)) = out.last_mut() {
+                    *n += 1;
+                }
+            } else {
+                out.push((l, 1));
+            }
+        }
+        out
+    }
+
+    /// The `top` most expensive trajectories by NFE (ties broken by id)
+    /// plus a `TOTAL` row, as a printable table.
+    pub fn table(&self, top: usize) -> Table {
+        let mut table = Table::new(&[
+            "traj", "nfe", "accepted", "rejected", "streaks", "longest", "stiffness",
+        ]);
+        let mut order: Vec<usize> = (0..self.trajs.len()).collect();
+        order.sort_by_key(|&i| (u64::MAX - self.trajs[i].nfe, self.trajs[i].id));
+        for &i in order.iter().take(top) {
+            let t = &self.trajs[i];
+            table.row(vec![
+                t.id.to_string(),
+                t.nfe.to_string(),
+                t.accepted.to_string(),
+                t.rejected.to_string(),
+                t.reject_streaks.to_string(),
+                t.longest_streak.to_string(),
+                format!("{:.4}", t.stiffness()),
+            ]);
+        }
+        let tot = self.total();
+        table.row(vec![
+            "TOTAL".to_string(),
+            tot.nfe.to_string(),
+            tot.accepted.to_string(),
+            tot.rejected.to_string(),
+            tot.reject_streaks.to_string(),
+            tot.longest_streak.to_string(),
+            format!("{:.4}", tot.stiffness()),
+        ]);
+        table
+    }
+
+    /// Canonical JSON: totals, streak clustering, and the per-trajectory
+    /// rows (ascending id).
+    pub fn to_json(&self) -> Json {
+        let traj_json = |t: &TrajCost| {
+            Json::obj(vec![
+                ("id", Json::num(t.id as f64)),
+                ("nfe", Json::num(t.nfe as f64)),
+                ("accepted", Json::num(t.accepted as f64)),
+                ("rejected", Json::num(t.rejected as f64)),
+                ("reject_streaks", Json::num(t.reject_streaks as f64)),
+                ("longest_streak", Json::num(t.longest_streak as f64)),
+                ("stiffness", Json::num(t.stiffness())),
+            ])
+        };
+        let tot = self.total();
+        Json::obj(vec![
+            ("trajectories", Json::num(self.trajs.len() as f64)),
+            ("nfe", Json::num(tot.nfe as f64)),
+            ("accepted", Json::num(tot.accepted as f64)),
+            ("rejected", Json::num(tot.rejected as f64)),
+            (
+                "streak_hist",
+                Json::Arr(
+                    self.streak_hist()
+                        .iter()
+                        .map(|(l, n)| Json::arr_f64(&[*l as f64, *n as f64]))
+                        .collect(),
+                ),
+            ),
+            ("trajs", Json::Arr(self.trajs.iter().map(traj_json).collect())),
+        ])
+    }
+}
+
+/// The R_K-vs-NFE correlation table: one row per λ, correlating each
+/// trajectory's regularizer quadrature `R_K` against its adaptive-solve
+/// NFE (Pearson for the linear link, Spearman for the monotone one).
+/// This is the paper's regularizer tradeoff as a measurement: training
+/// minimizes `R_K`, serving pays NFE — the correlation says whether one
+/// actually predicts the other at each λ.
+#[derive(Clone, Debug, Default)]
+pub struct RkNfeTable {
+    rows: Vec<(f64, Vec<f64>, Vec<f64>)>, // (λ, per-traj R_K, per-traj NFE)
+}
+
+impl RkNfeTable {
+    pub fn new() -> RkNfeTable {
+        RkNfeTable::default()
+    }
+
+    /// Add one λ's evaluation: per-trajectory `R_K` and [`SolveStats`]
+    /// slices (as produced by the adaptive R_K evaluator).
+    pub fn push(&mut self, lambda: f64, r_k: &[f32], stats: &[SolveStats]) {
+        let rk: Vec<f64> = r_k.iter().map(|v| *v as f64).collect();
+        let nfe: Vec<f64> = stats.iter().map(|s| s.nfe as f64).collect();
+        self.rows.push((lambda, rk, nfe));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The printable correlation table.
+    pub fn table(&self) -> Table {
+        let mut table = Table::new(&[
+            "lambda", "trajs", "mean R_K", "mean NFE", "pearson", "spearman",
+        ]);
+        for (lambda, rk, nfe) in &self.rows {
+            let n = rk.len().max(1) as f64;
+            let mean_rk: f64 = rk.iter().sum::<f64>() / n;
+            let mean_nfe: f64 = nfe.iter().sum::<f64>() / n;
+            table.row(vec![
+                format!("{lambda}"),
+                rk.len().to_string(),
+                format!("{mean_rk:.3e}"),
+                format!("{mean_nfe:.1}"),
+                format!("{:.3}", pearson(rk, nfe)),
+                format!("{:.3}", spearman(rk, nfe)),
+            ]);
+        }
+        table
+    }
+
+    /// Canonical JSON (one object per λ).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|(lambda, rk, nfe)| {
+                    let n = rk.len().max(1) as f64;
+                    Json::obj(vec![
+                        ("lambda", Json::num(*lambda)),
+                        ("trajs", Json::num(rk.len() as f64)),
+                        ("mean_r_k", Json::num(rk.iter().sum::<f64>() / n)),
+                        ("mean_nfe", Json::num(nfe.iter().sum::<f64>() / n)),
+                        ("pearson", Json::num(pearson(rk, nfe))),
+                        ("spearman", Json::num(spearman(rk, nfe))),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::NO_ARGS;
+
+    #[test]
+    fn ledger_attributes_streaks_and_stiffness_per_trajectory() {
+        // Trajectory 3: R R A R A — two streaks (2, 1), longest 2.
+        // Trajectory 1: A A — no streaks.
+        let evs = vec![
+            CostEvent::Reject { track: 3, err: 4.0, h: 0.4 },
+            CostEvent::Reject { track: 3, err: 2.0, h: 0.2 },
+            CostEvent::Accept { track: 3, err: 0.5, h: 0.1 },
+            CostEvent::Reject { track: 3, err: 1.5, h: 0.2 },
+            CostEvent::Accept { track: 3, err: 0.7, h: 0.1 },
+            CostEvent::Traj { track: 3, attempts: 5, nfe: 35, rejected: 3 },
+            CostEvent::Accept { track: 1, err: 0.2, h: 0.5 },
+            CostEvent::Accept { track: 1, err: 0.4, h: 0.5 },
+            CostEvent::Traj { track: 1, attempts: 2, nfe: 14, rejected: 0 },
+        ];
+        let ledger = CostLedger::from_cost_events(evs);
+        assert_eq!(ledger.trajs.len(), 2);
+        let (t1, t3) = (&ledger.trajs[0], &ledger.trajs[1]);
+        assert_eq!(t1.id, 1);
+        assert_eq!((t1.accepted, t1.rejected, t1.nfe), (2, 0, 14));
+        assert_eq!(t1.reject_streaks, 0);
+        assert!((t1.stiffness() - 0.6).abs() < 1e-12); // (0.2+0.4)/(0.5+0.5)
+        assert_eq!(t3.id, 3);
+        assert_eq!((t3.accepted, t3.rejected, t3.nfe), (2, 3, 35));
+        assert_eq!((t3.reject_streaks, t3.longest_streak), (2, 2));
+        assert!((t3.stiffness() - 6.0).abs() < 1e-12); // (0.5+0.7)/0.2
+        assert_eq!(ledger.streak_hist(), vec![(1, 1), (2, 1)]);
+        assert_eq!(ledger.total().nfe, 49);
+    }
+
+    #[test]
+    fn ledger_is_chunking_independent() {
+        // The same per-trajectory events interleaved two ways (two chunk
+        // layouts of a pooled solve) must produce equal ledgers.
+        let a = vec![
+            CostEvent::Accept { track: 0, err: 0.1, h: 0.2 },
+            CostEvent::Reject { track: 2, err: 3.0, h: 0.4 },
+            CostEvent::Accept { track: 0, err: 0.3, h: 0.2 },
+            CostEvent::Accept { track: 2, err: 0.5, h: 0.2 },
+        ];
+        let b = vec![a[1], a[3], a[0], a[2]]; // other chunk first
+        assert_eq!(
+            CostLedger::from_cost_events(a),
+            CostLedger::from_cost_events(b)
+        );
+    }
+
+    #[test]
+    fn ledger_reads_recorder_events() {
+        let mut rec = Recorder::enabled();
+        rec.instant("reject", 5, 0, [("err", 2.0), ("h", 0.3)]);
+        rec.instant("accept", 5, 1, [("err", 0.5), ("h", 0.2)]);
+        rec.span("traj", 5, 0, 2, [("nfe", 13.0), ("rejected", 1.0)]);
+        rec.instant("admit_wave", 0, 0, NO_ARGS); // ignored
+        let ledger = CostLedger::from_recorder(&rec);
+        assert_eq!(ledger.trajs.len(), 1);
+        let t = &ledger.trajs[0];
+        assert_eq!((t.id, t.nfe, t.accepted, t.rejected), (5, 13, 1, 1));
+        assert_eq!(t.longest_streak, 1);
+    }
+
+    #[test]
+    fn traj_only_events_still_account() {
+        // A trace recorded without per-attempt instants (or a trajectory
+        // dead on arrival) still gets its totals from the traj span.
+        let ledger = CostLedger::from_cost_events(vec![CostEvent::Traj {
+            track: 9,
+            attempts: 6,
+            nfe: 40,
+            rejected: 2,
+        }]);
+        let t = &ledger.trajs[0];
+        assert_eq!((t.nfe, t.accepted, t.rejected), (40, 4, 2));
+        assert_eq!(t.stiffness(), 0.0);
+    }
+
+    #[test]
+    fn table_ranks_by_nfe_with_total_row() {
+        let ledger = CostLedger::from_cost_events(vec![
+            CostEvent::Traj { track: 0, attempts: 2, nfe: 10, rejected: 0 },
+            CostEvent::Traj { track: 1, attempts: 9, nfe: 70, rejected: 2 },
+            CostEvent::Traj { track: 2, attempts: 4, nfe: 30, rejected: 1 },
+        ]);
+        let t = ledger.table(2);
+        assert_eq!(t.row_count(), 3); // top 2 + TOTAL
+        let text = t.render();
+        let first_data_line = text.lines().nth(2).unwrap_or("");
+        assert!(first_data_line.trim_start().starts_with('1'), "{text}");
+        assert!(text.lines().last().unwrap_or("").contains("TOTAL"), "{text}");
+    }
+
+    #[test]
+    fn rk_nfe_table_reports_correlations() {
+        let stats: Vec<SolveStats> = [20, 40, 60, 80]
+            .iter()
+            .map(|n| SolveStats { nfe: *n, accepted: 4, rejected: 0, h_final: 0.1 })
+            .collect();
+        let mut t = RkNfeTable::new();
+        t.push(0.0, &[1.0, 2.0, 3.0, 4.0], &stats); // perfectly correlated
+        let j = t.to_json();
+        let row = &j.as_arr().unwrap()[0];
+        assert!((row.req("pearson").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((row.req("spearman").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert_eq!(row.req("mean_nfe").unwrap().as_f64(), Some(50.0));
+        assert_eq!(t.table().row_count(), 1);
+    }
+}

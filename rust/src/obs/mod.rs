@@ -23,14 +23,25 @@
 //!
 //! Export is Chrome Trace Event Format NDJSON via [`trace::TraceDoc`]
 //! (`repro trace <experiment|serve>`), loadable in Perfetto or
-//! `chrome://tracing`.
+//! `chrome://tracing`.  The analytics side reads that format back:
+//! [`analyze::TraceView`] parses a trace into a queryable view,
+//! [`cost::CostLedger`] attributes solve cost per trajectory,
+//! [`slo::SloTracker`] budgets deadline misses per tolerance class over
+//! step ticks, and [`report`] renders it all (`repro report`, `repro
+//! slo`) as byte-stable text + canonical JSON.
 //!
 //! [`util::clock::StepClock`]: crate::util::clock::StepClock
 
+pub mod analyze;
+pub mod cost;
 pub mod registry;
+pub mod report;
+pub mod slo;
 pub mod trace;
 
+pub use cost::{CostLedger, RkNfeTable};
 pub use registry::{Counter, Hist, Log2Hist, Registry};
+pub use slo::SloTracker;
 pub use trace::TraceDoc;
 
 use crate::solvers::SolveStats;

@@ -7,6 +7,8 @@
 //! associative and commutative — and the merged registry is bit-identical
 //! at any thread count by construction.
 
+use anyhow::{bail, Result};
+
 use crate::solvers::SolveStats;
 use crate::util::json::Json;
 
@@ -157,6 +159,75 @@ impl Log2Hist {
         }
     }
 
+    /// Estimated `q`-quantile (`0 ≤ q ≤ 1`) by linear interpolation inside
+    /// the covering log₂ bucket: a bucket at biased exponent `i` spans
+    /// `[2^(i−127), 2^(i−126))`, so the estimate is exact to within a
+    /// factor of two of the true sample percentile — enough for registry
+    /// tables to print `p50`/`p99` magnitudes instead of raw bucket
+    /// counts.  Zero/subnormal observations report as `0.0`, non-finite
+    /// ones as `+∞`; an empty histogram reports `0.0`.
+    ///
+    /// ```
+    /// use taynode::obs::Log2Hist;
+    /// let mut h = Log2Hist::new();
+    /// for v in [1.0f32, 1.2, 1.5, 1.9] {
+    ///     h.observe(v); // all in the [1, 2) bucket
+    /// }
+    /// let p50 = h.quantile(0.5);
+    /// assert!((1.0..2.0).contains(&p50));
+    /// ```
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            if *c == 0 {
+                continue;
+            }
+            let below = seen as f64;
+            seen += c;
+            if seen as f64 >= target {
+                if i == 0 {
+                    return 0.0; // zero/subnormal bucket
+                }
+                if i == 255 {
+                    return f64::INFINITY; // non-finite bucket
+                }
+                let lo = 2f64.powi(i as i32 - 127);
+                let frac = ((target - below) / *c as f64).clamp(0.0, 1.0);
+                return lo + lo * frac; // linear within [lo, 2·lo)
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Rebuild a histogram from its [`Log2Hist::to_json`] form (`[[log2,
+    /// count], ...]`) — how `repro report` recovers quantiles from the
+    /// registry metadata record of an NDJSON trace.
+    pub fn from_json(j: &Json) -> Result<Log2Hist> {
+        let Some(pairs) = j.as_arr() else {
+            bail!("log2 histogram JSON must be an array of [log2, count] pairs");
+        };
+        let mut h = Log2Hist::new();
+        for p in pairs {
+            let pair = p.as_arr().unwrap_or(&[]);
+            let (Some(e), Some(c)) =
+                (pair.first().and_then(Json::as_f64), pair.get(1).and_then(Json::as_f64))
+            else {
+                bail!("malformed [log2, count] pair: {}", p.to_string());
+            };
+            let idx = e as i64 + 127;
+            if !(0..=255).contains(&idx) || c < 0.0 || c.fract() != 0.0 {
+                bail!("[log2, count] pair out of range: {}", p.to_string());
+            }
+            h.buckets[idx as usize] += c as u64;
+        }
+        Ok(h)
+    }
+
     /// Non-empty buckets as `[log2, count]` pairs, ascending.
     pub fn to_json(&self) -> Json {
         let mut arr = Vec::new();
@@ -261,6 +332,56 @@ mod tests {
         assert_eq!(h.bucket(10), 1);
         assert_eq!(h.bucket(-127), 1);
         assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn quantiles_bracket_exact_percentiles_on_seeded_data() {
+        use crate::util::rng::Pcg;
+        use crate::util::stats::percentile;
+        // Log-uniform seeded samples across ~8 decades: the bucketed
+        // estimate must land within one bucket (a factor of two) of the
+        // exact linear-interpolated percentile, at both tails.
+        let mut rng = Pcg::new(1234);
+        let mut h = Log2Hist::new();
+        let mut xs: Vec<f64> = Vec::new();
+        for _ in 0..5000 {
+            let v = 10f64.powf(rng.range(-6.0, 2.0) as f64);
+            xs.push(v);
+            h.observe(v as f32);
+        }
+        xs.sort_by(f64::total_cmp);
+        for q in [0.05, 0.5, 0.9, 0.99] {
+            let exact = percentile(&xs, q);
+            let est = h.quantile(q);
+            assert!(
+                est >= exact / 2.0 && est <= exact * 2.0,
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let mut h = Log2Hist::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        h.observe(0.0);
+        assert_eq!(h.quantile(0.99), 0.0, "zero bucket reports 0");
+        let mut inf = Log2Hist::new();
+        inf.observe(f32::INFINITY);
+        assert_eq!(inf.quantile(0.5), f64::INFINITY);
+    }
+
+    #[test]
+    fn hist_json_round_trips() {
+        let mut h = Log2Hist::new();
+        for v in [0.25f32, 0.3, 1.5, 1024.0, 0.0] {
+            h.observe(v);
+        }
+        let back = Log2Hist::from_json(&h.to_json()).unwrap();
+        assert!(back == h, "to_json → from_json must be lossless");
+        assert!(Log2Hist::from_json(&Json::num(3.0)).is_err());
+        assert!(Log2Hist::from_json(&Json::parse("[[300,1]]").unwrap()).is_err());
+        assert!(Log2Hist::from_json(&Json::parse("[[0,1.5]]").unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Deterministic report rendering for `repro report` and `repro slo`:
+//! ANSI-free fixed-width text plus a canonical JSON twin, byte-identical
+//! at any `TAYNODE_THREADS`.
+//!
+//! Rendering is a pure function of parsed trace/SLO state — tables come
+//! from [`Table::render`], JSON from the canonical key-sorted writer —
+//! so CI can `cmp` two reports produced at different worker counts, and
+//! the FNV-1a witness ([`ReportDoc::hash`]) gives scripts a one-line
+//! identity check without shipping the whole file.
+//!
+//! ```
+//! use taynode::obs::analyze::TraceView;
+//! use taynode::obs::report::trace_report;
+//! let ndjson = concat!(
+//!     r#"{"args":{"name":"solve"},"name":"process_name","ph":"M","pid":0,"tid":0}"#, "\n",
+//!     r#"{"args":{"nfe":12,"rejected":1},"dur":4,"name":"traj","ph":"X","pid":0,"tid":0,"ts":0}"#, "\n",
+//! );
+//! let doc = trace_report(&TraceView::parse(ndjson)?)?;
+//! assert!(doc.text.contains("traj"));
+//! assert_eq!(doc.hash(), trace_report(&TraceView::parse(ndjson)?)?.hash());
+//! # anyhow::Ok(())
+//! ```
+
+use anyhow::Result;
+
+use crate::obs::analyze::{diff, TraceView};
+use crate::obs::cost::CostLedger;
+use crate::obs::slo::SloTracker;
+use crate::obs::Log2Hist;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// A rendered report: display text and its canonical JSON twin.
+pub struct ReportDoc {
+    pub text: String,
+    pub json: Json,
+}
+
+impl ReportDoc {
+    /// FNV-1a over the text bytes — the same witness the trace exporter
+    /// uses, so "same hash" means "same report".
+    pub fn hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.text.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+}
+
+fn section(out: &mut String, title: &str) {
+    if !out.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("== ");
+    out.push_str(title);
+    out.push_str(" ==\n");
+}
+
+/// How many critical-path steps the text report prints (the JSON twin
+/// carries the path length, not the steps, to stay compact).
+const CRIT_STEPS: usize = 12;
+/// How many top-NFE trajectories the cost-ledger table prints.
+const LEDGER_TOP: usize = 8;
+
+fn registry_tables(reg: &Json) -> Result<(Table, Table)> {
+    let mut counters = Table::new(&["counter", "value"]);
+    if let Some(m) = reg.get("counters").and_then(Json::as_obj) {
+        for (k, v) in m {
+            counters.row(vec![
+                k.clone(),
+                format!("{}", v.as_f64().unwrap_or(0.0)),
+            ]);
+        }
+    }
+    let mut hists = Table::new(&["hist", "count", "p50", "p90", "p99"]);
+    if let Some(m) = reg.get("hists").and_then(Json::as_obj) {
+        for (k, v) in m {
+            let h = Log2Hist::from_json(v)?;
+            hists.row(vec![
+                k.clone(),
+                h.count().to_string(),
+                format!("{:.3e}", h.quantile(0.5)),
+                format!("{:.3e}", h.quantile(0.9)),
+                format!("{:.3e}", h.quantile(0.99)),
+            ]);
+        }
+    }
+    Ok((counters, hists))
+}
+
+/// Render the full analytics report for one parsed trace: the process
+/// roster, then per process its span rollup (self-vs-child attribution),
+/// critical path, cost ledger (when the trace carries solver attribution
+/// events), and registry counters with histogram quantiles.
+pub fn trace_report(view: &TraceView) -> Result<ReportDoc> {
+    let mut text = String::new();
+    let mut json_sections: Vec<(&str, Json)> = Vec::new();
+
+    section(&mut text, "processes");
+    let mut proc_table = Table::new(&["pid", "process", "spans", "instants", "counters"]);
+    for (pid, name) in &view.processes {
+        proc_table.row(vec![
+            pid.to_string(),
+            name.clone(),
+            view.spans.iter().filter(|s| s.pid == *pid).count().to_string(),
+            view.instants.iter().filter(|i| i.pid == *pid).count().to_string(),
+            view.counters.iter().filter(|c| c.pid == *pid).count().to_string(),
+        ]);
+    }
+    text.push_str(&proc_table.render());
+    json_sections.push((
+        "processes",
+        Json::Arr(
+            view.processes
+                .iter()
+                .map(|(pid, name)| {
+                    Json::obj(vec![
+                        ("pid", Json::num(*pid as f64)),
+                        ("name", Json::str(name)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+
+    let mut proc_json = Vec::new();
+    for (pid, name) in &view.processes {
+        // Per-process sub-view: rollups and paths must not mix lanes of
+        // unrelated processes.
+        let sub = TraceView {
+            processes: vec![(*pid, name.clone())],
+            spans: view.spans.iter().filter(|s| s.pid == *pid).cloned().collect(),
+            instants: view.instants.iter().filter(|i| i.pid == *pid).cloned().collect(),
+            counters: view.counters.iter().filter(|c| c.pid == *pid).cloned().collect(),
+            registries: Vec::new(),
+        };
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("pid", Json::num(*pid as f64)),
+            ("name", Json::str(name)),
+        ];
+
+        let rollup = sub.span_rollup();
+        if !rollup.rows.is_empty() {
+            section(&mut text, &format!("{name}: span rollup (ticks)"));
+            text.push_str(&rollup.table().render());
+            fields.push(("span_rollup", rollup.to_json()));
+        }
+
+        let path = sub.critical_path(*pid);
+        if !path.is_empty() {
+            section(
+                &mut text,
+                &format!("{name}: critical path ({} steps)", path.len()),
+            );
+            let mut t = Table::new(&["#", "span", "tid", "ts", "dur"]);
+            for (i, s) in path.iter().take(CRIT_STEPS).enumerate() {
+                t.row(vec![
+                    i.to_string(),
+                    s.name.clone(),
+                    s.tid.to_string(),
+                    s.ts.to_string(),
+                    s.dur.to_string(),
+                ]);
+            }
+            text.push_str(&t.render());
+            if path.len() > CRIT_STEPS {
+                text.push_str(&format!("... {} more steps\n", path.len() - CRIT_STEPS));
+            }
+            fields.push(("critical_path_len", Json::num(path.len() as f64)));
+        }
+
+        let cost = sub.cost_events(*pid);
+        if !cost.is_empty() {
+            let ledger = CostLedger::from_cost_events(cost);
+            section(
+                &mut text,
+                &format!("{name}: cost ledger (top {LEDGER_TOP} by NFE)"),
+            );
+            text.push_str(&ledger.table(LEDGER_TOP).render());
+            let hist = ledger.streak_hist();
+            if !hist.is_empty() {
+                let parts: Vec<String> =
+                    hist.iter().map(|(l, n)| format!("{n}x len {l}")).collect();
+                text.push_str(&format!("reject streaks: {}\n", parts.join(", ")));
+            }
+            fields.push(("cost", ledger.to_json()));
+        }
+
+        if let Some(reg) = view.registry(*pid) {
+            let (counters, hists) = registry_tables(reg)?;
+            if counters.row_count() > 0 {
+                section(&mut text, &format!("{name}: counters"));
+                text.push_str(&counters.render());
+            }
+            if hists.row_count() > 0 {
+                section(&mut text, &format!("{name}: histogram quantiles"));
+                text.push_str(&hists.render());
+            }
+            fields.push(("registry", reg.clone()));
+        }
+        proc_json.push(Json::obj(fields));
+    }
+    json_sections.push(("per_process", Json::Arr(proc_json)));
+
+    let doc = ReportDoc { text, json: Json::obj(json_sections) };
+    let mut text = doc.text;
+    text.push_str(&format!("\nreport hash: {:016x}\n", {
+        let probe = ReportDoc { text: text.clone(), json: Json::Null };
+        probe.hash()
+    }));
+    Ok(ReportDoc { text, json: doc.json })
+}
+
+/// Render the diff of two traces' span rollups (`a − b` in ticks).
+pub fn trace_diff_report(
+    a: &TraceView,
+    label_a: &str,
+    b: &TraceView,
+    label_b: &str,
+) -> ReportDoc {
+    let rows = diff(a, b);
+    let mut text = String::new();
+    section(&mut text, &format!("span diff: {label_a} vs {label_b}"));
+    let mut t = Table::new(&["span", "count_a", "count_b", "ticks_a", "ticks_b", "delta"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.count_a.to_string(),
+            r.count_b.to_string(),
+            r.total_a.to_string(),
+            r.total_b.to_string(),
+            format!("{:+}", r.delta()),
+        ]);
+    }
+    text.push_str(&t.render());
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("count_a", Json::num(r.count_a as f64)),
+                    ("count_b", Json::num(r.count_b as f64)),
+                    ("ticks_a", Json::num(r.total_a as f64)),
+                    ("ticks_b", Json::num(r.total_b as f64)),
+                    ("delta", Json::num(r.delta() as f64)),
+                ])
+            })
+            .collect(),
+    );
+    ReportDoc { text, json }
+}
+
+/// Render the per-class SLO report.
+pub fn slo_report(slo: &SloTracker) -> ReportDoc {
+    let mut text = String::new();
+    section(&mut text, "serving SLO (deadline-miss budgets, step ticks)");
+    text.push_str(&slo.table().render());
+    ReportDoc { text, json: slo.to_json() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Counter, Hist, Recorder, TraceDoc};
+
+    fn serve_like_trace() -> String {
+        let mut rec = Recorder::enabled();
+        rec.span("request", 2, 0, 5, [("nfe", 20.0), ("miss", 0.0)]);
+        rec.span("traj", 2, 1, 4, [("nfe", 20.0), ("rejected", 1.0)]);
+        rec.instant("reject", 2, 0, [("err", 3.0), ("h", 0.5)]);
+        rec.instant("accept", 2, 1, [("err", 0.5), ("h", 0.25)]);
+        rec.counter("queue_depth", 1, 1.0);
+        rec.inc(Counter::Retired, 1);
+        rec.observe(Hist::LatencySteps, 5.0);
+        let mut doc = TraceDoc::new();
+        doc.add_process(0, "serve/toy", &rec);
+        doc.to_ndjson()
+    }
+
+    #[test]
+    fn trace_report_renders_every_section_deterministically() {
+        let v = TraceView::parse(&serve_like_trace()).unwrap();
+        let doc = trace_report(&v).unwrap();
+        for needle in [
+            "== processes ==",
+            "span rollup",
+            "critical path",
+            "cost ledger",
+            "reject streaks: 1x len 1",
+            "counters",
+            "histogram quantiles",
+            "report hash:",
+        ] {
+            assert!(doc.text.contains(needle), "missing {needle:?} in:\n{}", doc.text);
+        }
+        assert!(!doc.text.contains('\u{1b}'), "report must be ANSI-free");
+        let again = trace_report(&TraceView::parse(&serve_like_trace()).unwrap()).unwrap();
+        assert_eq!(doc.text, again.text);
+        assert_eq!(doc.hash(), again.hash());
+        assert_eq!(doc.json.to_string(), again.json.to_string());
+        // The JSON twin carries the ledger.
+        let per_proc = doc.json.req("per_process").unwrap().as_arr().unwrap();
+        let cost = per_proc[0].req("cost").unwrap();
+        assert_eq!(cost.req("nfe").unwrap().as_f64(), Some(20.0));
+    }
+
+    #[test]
+    fn diff_report_names_what_it_compares() {
+        let v = TraceView::parse(&serve_like_trace()).unwrap();
+        let doc = trace_diff_report(&v, "t1.ndjson", &v, "t4.ndjson");
+        assert!(doc.text.contains("t1.ndjson vs t4.ndjson"), "{}", doc.text);
+        let rows = doc.json.as_arr().unwrap();
+        assert!(rows.iter().all(|r| r.req("delta").unwrap().as_f64() == Some(0.0)));
+    }
+
+    #[test]
+    fn slo_report_round_trips_to_json() {
+        let mut slo = SloTracker::standard();
+        slo.record("realtime", 3, true);
+        let doc = slo_report(&slo);
+        assert!(doc.text.contains("realtime"));
+        let rows = doc.json.as_arr().unwrap();
+        assert_eq!(rows[0].req("missed").unwrap().as_f64(), Some(1.0));
+    }
+}

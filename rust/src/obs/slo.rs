@@ -1,0 +1,305 @@
+//! Serving SLOs over deterministic time: per-tolerance-class deadline-miss
+//! budgets with burn-rate windows measured in engine step ticks.
+//!
+//! Wall-clock SLOs don't replay; step-tick SLOs do.  Every retirement is
+//! scored against its class's error budget (`miss_budget` = the tolerated
+//! deadline-miss fraction) both cumulatively and inside tumbling windows
+//! of `window_ticks` engine steps.  The **burn rate** of a window is its
+//! miss rate divided by the budget — burn 1.0 spends the budget exactly,
+//! burn 4.0 exhausts a four-window allowance in one window (the standard
+//! fast-burn alerting framing, with logical steps standing in for hours).
+//! Because ticks are deterministic, a burn-rate regression reproduces
+//! bit-identically at any `TAYNODE_THREADS`, so the SLO table is CI-
+//! diffable like every other report in this crate.
+//!
+//! ```
+//! use taynode::obs::slo::SloTracker;
+//! let mut slo = SloTracker::standard();
+//! for tick in 0..100 {
+//!     slo.record("realtime", tick, tick % 25 == 0); // 4% misses
+//! }
+//! let c = slo.class("realtime").unwrap();
+//! assert_eq!((c.done, c.missed), (100, 4));
+//! // 4% of a 5% budget: burning, but within budget.
+//! let burn = slo.worst_burn("realtime").unwrap();
+//! assert!(burn > 0.75 && burn < 1.0);
+//! # assert!(slo.class("precise").unwrap().done == 0);
+//! ```
+
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// One class's SLO: tolerated deadline-miss fraction and the tumbling
+/// burn-window width in engine step ticks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloPolicy {
+    pub class: &'static str,
+    pub miss_budget: f64,
+    pub window_ticks: u64,
+}
+
+/// The default budgets for the three serving tolerance classes: the
+/// tighter the solver tolerance, the longer the deadline and the less
+/// tolerated a miss.
+pub const DEFAULT_POLICIES: [SloPolicy; 3] = [
+    SloPolicy { class: "realtime", miss_budget: 0.05, window_ticks: 256 },
+    SloPolicy { class: "standard", miss_budget: 0.01, window_ticks: 512 },
+    SloPolicy { class: "precise", miss_budget: 0.001, window_ticks: 1024 },
+];
+
+/// One tumbling window's tallies.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloWindow {
+    /// Window index (`done_tick / window_ticks`).
+    pub idx: u64,
+    pub done: u64,
+    pub missed: u64,
+}
+
+impl SloWindow {
+    pub fn miss_rate(&self) -> f64 {
+        if self.done == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.done as f64
+        }
+    }
+}
+
+/// One class's accumulated state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloClass {
+    pub policy: SloPolicy,
+    pub done: u64,
+    pub missed: u64,
+    /// Tumbling windows with at least one retirement, ascending index.
+    pub windows: Vec<SloWindow>,
+}
+
+impl SloClass {
+    fn new(policy: SloPolicy) -> SloClass {
+        SloClass { policy, done: 0, missed: 0, windows: Vec::new() }
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.done == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.done as f64
+        }
+    }
+
+    /// Miss rate ÷ budget: > 1.0 means this class is out of budget.
+    pub fn burn(&self) -> f64 {
+        self.miss_rate() / self.policy.miss_budget
+    }
+
+    /// The worst per-window burn rate (`None` before any retirement).
+    pub fn worst_window_burn(&self) -> Option<f64> {
+        self.windows
+            .iter()
+            .map(|w| w.miss_rate() / self.policy.miss_budget)
+            .fold(None, |acc, b| Some(acc.map_or(b, |a: f64| a.max(b))))
+    }
+}
+
+/// The per-class SLO tracker the serving engine feeds on every
+/// retirement.  Deterministic by construction: state is a pure fold over
+/// `(class, done_tick, miss)` triples, and the engine emits those in
+/// retirement order, which is itself thread-count independent.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloTracker {
+    pub classes: Vec<SloClass>,
+}
+
+impl SloTracker {
+    /// A tracker over [`DEFAULT_POLICIES`].
+    pub fn standard() -> SloTracker {
+        SloTracker::with_policies(DEFAULT_POLICIES.to_vec())
+    }
+
+    pub fn with_policies(policies: Vec<SloPolicy>) -> SloTracker {
+        SloTracker {
+            classes: policies.into_iter().map(SloClass::new).collect(),
+        }
+    }
+
+    pub fn class(&self, name: &str) -> Option<&SloClass> {
+        self.classes.iter().find(|c| c.policy.class == name)
+    }
+
+    /// Score one retirement: `done_tick` is the engine step at which the
+    /// request retired.  Unknown classes are ignored (a tracker only
+    /// budgets the classes it was configured with).
+    pub fn record(&mut self, class: &str, done_tick: u64, miss: bool) {
+        let Some(c) = self.classes.iter_mut().find(|c| c.policy.class == class) else {
+            return;
+        };
+        c.done += 1;
+        c.missed += miss as u64;
+        let idx = done_tick / c.policy.window_ticks.max(1);
+        match c.windows.iter().position(|w| w.idx == idx) {
+            Some(p) => {
+                c.windows[p].done += 1;
+                c.windows[p].missed += miss as u64;
+            }
+            None => {
+                c.windows.push(SloWindow { idx, done: 1, missed: miss as u64 });
+                c.windows.sort_by_key(|w| w.idx);
+            }
+        }
+    }
+
+    /// Worst per-window burn for `class` (`None` for an unknown class or
+    /// one with no retirements yet).
+    pub fn worst_burn(&self, class: &str) -> Option<f64> {
+        self.class(class).and_then(SloClass::worst_window_burn)
+    }
+
+    /// Merge another tracker (same policies) — window tallies sum by
+    /// index, so sharded drains fold to the same state as a serial one.
+    pub fn absorb(&mut self, other: &SloTracker) {
+        for oc in &other.classes {
+            let Some(c) = self
+                .classes
+                .iter_mut()
+                .find(|c| c.policy.class == oc.policy.class)
+            else {
+                continue;
+            };
+            c.done += oc.done;
+            c.missed += oc.missed;
+            for ow in &oc.windows {
+                match c.windows.iter().position(|w| w.idx == ow.idx) {
+                    Some(p) => {
+                        c.windows[p].done += ow.done;
+                        c.windows[p].missed += ow.missed;
+                    }
+                    None => {
+                        c.windows.push(*ow);
+                        c.windows.sort_by_key(|w| w.idx);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The printable per-class table (all configured classes, even idle
+    /// ones, so reports keep a fixed shape).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "class", "done", "missed", "miss_rate", "budget", "burn", "worst_window", "windows",
+        ]);
+        for c in &self.classes {
+            t.row(vec![
+                c.policy.class.to_string(),
+                c.done.to_string(),
+                c.missed.to_string(),
+                format!("{:.4}", c.miss_rate()),
+                format!("{}", c.policy.miss_budget),
+                format!("{:.3}", c.burn()),
+                c.worst_window_burn()
+                    .map_or("-".to_string(), |b| format!("{b:.3}")),
+                c.windows.len().to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Canonical JSON export, one object per configured class.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.classes
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("class", Json::str(c.policy.class)),
+                        ("miss_budget", Json::num(c.policy.miss_budget)),
+                        ("window_ticks", Json::num(c.policy.window_ticks as f64)),
+                        ("done", Json::num(c.done as f64)),
+                        ("missed", Json::num(c.missed as f64)),
+                        ("miss_rate", Json::num(c.miss_rate())),
+                        ("burn", Json::num(c.burn())),
+                        (
+                            "worst_window_burn",
+                            c.worst_window_burn().map_or(Json::Null, Json::num),
+                        ),
+                        (
+                            "windows",
+                            Json::Arr(
+                                c.windows
+                                    .iter()
+                                    .map(|w| {
+                                        Json::arr_f64(&[
+                                            w.idx as f64,
+                                            w.done as f64,
+                                            w.missed as f64,
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_and_windows_tally() {
+        let mut slo = SloTracker::standard();
+        // realtime: 10 requests in window 0, 2 miss; 10 in window 1, 0 miss.
+        for i in 0..10 {
+            slo.record("realtime", i, i < 2);
+        }
+        for i in 256..266 {
+            slo.record("realtime", i, false);
+        }
+        slo.record("unknown-class", 0, true); // ignored
+        let c = slo.class("realtime").unwrap();
+        assert_eq!((c.done, c.missed), (20, 2));
+        assert!((c.miss_rate() - 0.1).abs() < 1e-12);
+        assert!((c.burn() - 2.0).abs() < 1e-12); // 10% of a 5% budget
+        assert_eq!(c.windows.len(), 2);
+        assert_eq!(c.windows[0], SloWindow { idx: 0, done: 10, missed: 2 });
+        // Worst window burned 0.2/0.05 = 4×.
+        assert!((slo.worst_burn("realtime").unwrap() - 4.0).abs() < 1e-12);
+        assert_eq!(slo.worst_burn("precise"), None);
+        assert_eq!(slo.worst_burn("no-such"), None);
+    }
+
+    #[test]
+    fn absorb_equals_serial_fold() {
+        let feed = |slo: &mut SloTracker, ticks: std::ops::Range<u64>| {
+            for t in ticks {
+                slo.record("standard", t, t % 7 == 0);
+                slo.record("precise", t * 3, false);
+            }
+        };
+        let mut serial = SloTracker::standard();
+        feed(&mut serial, 0..600);
+        let mut a = SloTracker::standard();
+        feed(&mut a, 0..300);
+        let mut b = SloTracker::standard();
+        feed(&mut b, 300..600);
+        a.absorb(&b);
+        assert_eq!(a, serial);
+    }
+
+    #[test]
+    fn report_shape_is_fixed_and_json_canonical() {
+        let slo = SloTracker::standard();
+        assert_eq!(slo.table().row_count(), 3); // idle classes still listed
+        let j = slo.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].str_of("class").unwrap(), "realtime");
+        assert!(matches!(rows[0].req("worst_window_burn").unwrap(), Json::Null));
+        assert_eq!(j.to_string(), slo.clone().to_json().to_string());
+    }
+}

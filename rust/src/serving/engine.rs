@@ -26,7 +26,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
-use crate::obs::{Counter, Hist, Recorder};
+use crate::obs::{Counter, Hist, Recorder, SloTracker};
 use crate::solvers::batch::{BatchDynamics, BatchStepper, Retired};
 use crate::solvers::{AdaptiveOpts, SolveStats, Tableau};
 
@@ -132,6 +132,10 @@ pub struct ServingEngine<F: BatchDynamics> {
     step_no: u64,
     busy_steps: u64,
     active_row_steps: u64,
+    /// Optional per-class SLO scoring, fed on the retirement path.  Boxed
+    /// and off by default for the same zero-cost-off reason as the
+    /// recorder.
+    slo: Option<Box<SloTracker>>,
 }
 
 impl<F: BatchDynamics> ServingEngine<F> {
@@ -151,6 +155,7 @@ impl<F: BatchDynamics> ServingEngine<F> {
             step_no: 0,
             busy_steps: 0,
             active_row_steps: 0,
+            slo: None,
         }
     }
 
@@ -171,6 +176,19 @@ impl<F: BatchDynamics> ServingEngine<F> {
     /// Take the recorder out, leaving telemetry off.
     pub fn take_recorder(&mut self) -> Recorder {
         self.stepper.take_recorder()
+    }
+
+    /// Turn on per-class SLO scoring: every retirement is tallied against
+    /// its tolerance class's deadline-miss budget, in tumbling windows of
+    /// engine steps (see [`crate::obs::slo`]).  Independent of the
+    /// recorder — SLOs need no event stream.
+    pub fn enable_slo(&mut self, slo: SloTracker) {
+        self.slo = Some(Box::new(slo));
+    }
+
+    /// Take the SLO tracker out, leaving scoring off.
+    pub fn take_slo(&mut self) -> Option<SloTracker> {
+        self.slo.take().map(|b| *b)
     }
 
     /// Per-trajectory state dimension.
@@ -339,6 +357,9 @@ impl<F: BatchDynamics> ServingEngine<F> {
                 done_step: self.step_no,
                 deadline_miss,
             };
+            if let Some(slo) = &mut self.slo {
+                slo.record(m.class.name, self.step_no, deadline_miss);
+            }
             let rec = self.stepper.recorder_mut();
             if rec.is_on() {
                 let latency = o.done_step - o.admit_step;
@@ -346,11 +367,14 @@ impl<F: BatchDynamics> ServingEngine<F> {
                 if deadline_miss {
                     rec.inc(Counter::DeadlineMiss, 1);
                 }
+                // The span covers [admit, done] inclusive — one tick per
+                // engine step the request was live — so the stepper's
+                // `traj` span (ending at done + 1) nests inside it.
                 rec.span(
                     "request",
                     o.id,
                     o.admit_step,
-                    latency.max(1),
+                    latency + 1,
                     [("nfe", o.stats.nfe as f64), ("miss", if deadline_miss { 1.0 } else { 0.0 })],
                 );
             }
@@ -481,6 +505,31 @@ mod tests {
         assert_eq!(out[0].admit_step, out[0].done_step);
         assert_eq!(out[0].t, 0.0);
         assert!(eng.is_idle());
+    }
+
+    #[test]
+    fn slo_tracker_scores_retirements_per_class() {
+        let tb = tableau::dopri5();
+        let mut eng = ServingEngine::new(Spiral, &tb, 2, 0.0, 1.0);
+        eng.enable_slo(SloTracker::standard());
+        // A zero-step "realtime" deadline retires dead on arrival as a
+        // deterministic miss; the standard request finishes comfortably.
+        let dead = ToleranceClass { name: "realtime", deadline_steps: 0, ..REALTIME };
+        eng.submit(0, dead, vec![0.3, -0.1]).unwrap();
+        eng.submit(1, STANDARD, vec![0.2, 0.4]).unwrap();
+        let mut guard = 0;
+        while !eng.is_idle() {
+            guard += 1;
+            assert!(guard < 10_000);
+            eng.step();
+        }
+        let slo = eng.take_slo().unwrap();
+        let rt = slo.class("realtime").unwrap();
+        assert_eq!((rt.done, rt.missed), (1, 1));
+        let st = slo.class("standard").unwrap();
+        assert_eq!((st.done, st.missed), (1, 0));
+        assert!(slo.worst_burn("realtime").unwrap() > 1.0, "budget blown");
+        assert!(eng.take_slo().is_none(), "take leaves scoring off");
     }
 
     #[test]

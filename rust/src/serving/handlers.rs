@@ -18,7 +18,7 @@ use crate::autodiff::div::Divergence;
 use crate::coordinator::evaluator::latent_nll;
 use crate::data::synth_mnist;
 use crate::nn::{Cnf, Mlp};
-use crate::obs::Recorder;
+use crate::obs::{Recorder, SloTracker};
 use crate::serving::arrivals::PoissonArrivals;
 use crate::serving::engine::{AdmissionPolicy, ServeOutcome, ServingEngine, ToleranceClass};
 use crate::serving::wire::{ServeRequest, ServeResponse};
@@ -159,6 +159,29 @@ impl<F: BatchDynamics> ServeHost<F> {
         self.models
             .iter_mut()
             .map(|m| (m.name.clone(), m.engine.take_recorder()))
+            .collect()
+    }
+
+    /// Turn on per-class SLO scoring on every hosted engine, each with the
+    /// default budgets (see [`ServingEngine::enable_slo`]).
+    pub fn enable_slo(&mut self) {
+        for m in &mut self.models {
+            m.engine.enable_slo(SloTracker::standard());
+        }
+    }
+
+    /// Take every engine's SLO tracker as `(model name, tracker)` in
+    /// declaration order; engines that never had scoring on contribute an
+    /// empty tracker so the report shape stays fixed.
+    pub fn take_slos(&mut self) -> Vec<(String, SloTracker)> {
+        self.models
+            .iter_mut()
+            .map(|m| {
+                (
+                    m.name.clone(),
+                    m.engine.take_slo().unwrap_or_else(SloTracker::standard),
+                )
+            })
             .collect()
     }
 
@@ -412,6 +435,41 @@ pub fn run_poisson_traced_pooled(
     (trace, recs)
 }
 
+/// [`run_poisson`] with per-class SLO scoring on: returns the trace plus
+/// each model's SLO tracker in declaration order.  Scoring only reads
+/// the retirement stream, so the trace is bit-identical to the unscored
+/// run's.
+pub fn run_poisson_slo(
+    seed: u64,
+    capacity: usize,
+    rate: f64,
+    total: u64,
+) -> (ServeTrace, Vec<(String, SloTracker)>) {
+    let mut host = demo_host(seed, capacity);
+    host.enable_slo();
+    let trace = drive_poisson(&mut host, seed, rate, total);
+    let slos = host.take_slos();
+    (trace, slos)
+}
+
+/// [`run_poisson_slo`] with pooled model evaluation — the SLO fold runs
+/// in the serial engine loop over a retirement stream that is itself
+/// thread-count independent, so the trackers are bit-identical to the
+/// serial drive's at any thread count (D5 proof below).
+pub fn run_poisson_slo_pooled(
+    pool: &Pool,
+    seed: u64,
+    capacity: usize,
+    rate: f64,
+    total: u64,
+) -> (ServeTrace, Vec<(String, SloTracker)>) {
+    let mut host = demo_host_with(seed, capacity, |d| PooledEval::new(pool, d));
+    host.enable_slo();
+    let trace = drive_poisson(&mut host, seed, rate, total);
+    let slos = host.take_slos();
+    (trace, slos)
+}
+
 /// The drain-to-stragglers baseline: identical load, but requests are
 /// only admitted into an empty active set.  The serving bench asserts the
 /// continuous drive's occupancy strictly beats this at equal load.
@@ -496,6 +554,29 @@ mod tests {
                 assert_eq!(sr.events(), pr.events(), "model={sn} threads={threads}");
                 assert_eq!(sr.registry(), pr.registry(), "model={sn} threads={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn run_poisson_slo_pooled_matches_serial_trackers_bitwise() {
+        // The D5 proof for `run_poisson_slo_pooled`, and the scoring
+        // no-perturbation guarantee: SLOs on, the drive still equals the
+        // unscored `run_poisson`, and every class's windowed tallies are
+        // identical across TAYNODE_THREADS ∈ {1, 2, 4}.
+        let unscored = run_poisson(41, 8, 3.0, 30);
+        let (serial, sslos) = run_poisson_slo(41, 8, 3.0, 30);
+        assert_eq!(unscored, serial, "SLO scoring must not perturb the drive");
+        assert_eq!(sslos.len(), 3);
+        let scored: u64 = sslos
+            .iter()
+            .map(|(_, s)| s.classes.iter().map(|c| c.done).sum::<u64>())
+            .sum();
+        assert_eq!(scored, 30, "every retirement must be scored exactly once");
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let (pooled, pslos) = run_poisson_slo_pooled(&pool, 41, 8, 3.0, 30);
+            assert_eq!(serial, pooled, "threads={threads}");
+            assert_eq!(sslos, pslos, "threads={threads}");
         }
     }
 

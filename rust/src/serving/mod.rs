@@ -39,7 +39,7 @@ pub use engine::{
 };
 pub use handlers::{
     demo_host, demo_host_with, drive_poisson, run_poisson, run_poisson_drain,
-    run_poisson_pooled, run_poisson_traced, run_poisson_traced_pooled, trace_hash,
-    RequestGen, ServeDynamics, ServeHost, ServeTrace,
+    run_poisson_pooled, run_poisson_slo, run_poisson_slo_pooled, run_poisson_traced,
+    run_poisson_traced_pooled, trace_hash, RequestGen, ServeDynamics, ServeHost, ServeTrace,
 };
 pub use wire::{DeWire, SerWire, ServeRequest, ServeResponse};

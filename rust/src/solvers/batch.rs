@@ -1025,6 +1025,18 @@ impl<F: BatchDynamics> BatchStepper<F> {
                 if recording {
                     rec.observe(Hist::StepSize, hs.abs());
                     rec.observe(Hist::ErrNorm, err);
+                    // Per-attempt cost attribution (obs::cost): one instant
+                    // per accept on the trajectory's own track, timestamped
+                    // with the row's own attempt index — chunking-
+                    // independent, so `absorb_by_track` canonicalizes the
+                    // pooled stream (see `record_retired`).
+                    let attempt = (ws.stats[s].accepted + ws.stats[s].rejected - 1) as u64;
+                    rec.instant(
+                        "accept",
+                        ws.idx[s] as u64,
+                        attempt,
+                        [("err", err as f64), ("h", hs.abs() as f64)],
+                    );
                 }
                 if tbf.fsal {
                     // per-row FSAL: k_last at the accepted point becomes k0
@@ -1044,6 +1056,13 @@ impl<F: BatchDynamics> BatchStepper<F> {
                 ws.stats[s].rejected += 1;
                 if recording {
                     rec.observe(Hist::ErrNorm, err);
+                    let attempt = (ws.stats[s].accepted + ws.stats[s].rejected - 1) as u64;
+                    rec.instant(
+                        "reject",
+                        ws.idx[s] as u64,
+                        attempt,
+                        [("err", err as f64), ("h", hs.abs() as f64)],
+                    );
                 }
                 let factor = stage::reject_factor(&ws.opts[s], inv_order, err);
                 ws.h[s] = hs.abs() * factor.clamp(ws.opts[s].factor_min, 1.0);
@@ -1085,18 +1104,26 @@ impl<F: BatchDynamics> BatchStepper<F> {
 /// count.  Attempt counts are chunking-independent — every attempt
 /// advances each active row exactly once — so the recorded stream is
 /// identical however the pooled drivers group rows into chunks.
+///
+/// The span is anchored so it *ends* at the recorder's current tick: under
+/// an externally-clocked driver (the serving engine sets ticks to its step
+/// number) a trajectory's span covers exactly the engine steps it was
+/// active on and nests inside the engine's `request` span; in a plain
+/// solve the clock stays at zero and the span starts at tick 0 as before.
 fn record_retired(rec: &mut Recorder, out: &[Retired]) {
     if !rec.is_on() {
         return;
     }
+    let now = rec.now_ticks();
     for r in out {
         rec.inc(Counter::Retired, 1);
         rec.absorb_stats(&r.stats);
         let steps = (r.stats.accepted + r.stats.rejected) as u64;
+        let ts = (now + 1).saturating_sub(steps.max(1));
         rec.span(
             "traj",
             r.id as u64,
-            0,
+            ts,
             steps,
             [("nfe", r.stats.nfe as f64), ("rejected", r.stats.rejected as f64)],
         );

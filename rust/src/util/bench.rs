@@ -72,25 +72,37 @@ impl Table {
         self.rows.len()
     }
 
-    pub fn print(&self) {
+    /// The fixed-width text `print` writes, as a string with a trailing
+    /// newline — the deterministic-report path (`repro report` / `repro
+    /// slo`) captures tables instead of printing them, so rendering must
+    /// not touch stdout.
+    pub fn render(&self) -> String {
         let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {
             for (i, c) in r.iter().enumerate() {
                 w[i] = w[i].max(c.len());
             }
         }
-        let line = |cells: &[String]| {
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
             let mut s = String::new();
             for (i, c) in cells.iter().enumerate() {
                 s.push_str(&format!("{:>width$}  ", c, width = w[i]));
             }
-            println!("{}", s.trim_end());
+            out.push_str(s.trim_end());
+            out.push('\n');
         };
-        line(&self.headers);
-        println!("{}", "-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+        line(&self.headers, &mut out);
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+        out.push('\n');
         for r in &self.rows {
-            line(r);
+            line(r, &mut out);
         }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
     }
 }
 
@@ -114,7 +126,25 @@ pub fn json_path_arg() -> Option<String> {
 /// if it already holds a JSON object, replaces key `section` with `value`,
 /// and writes the whole object back — so several bench binaries can
 /// accumulate sections in one machine-readable file.
+///
+/// Object-shaped sections are stamped with a `provenance` record (git
+/// commit from the `GIT_COMMIT` env `make bench-json` exports, worker
+/// count from `TAYNODE_THREADS`) so `repro perfdiff` can name what two
+/// reports actually compare.  Scalar sections pass through unstamped.
 pub fn merge_bench_json(path: &str, section: &str, value: Json) {
+    let value = match value {
+        Json::Obj(mut m) => {
+            m.insert(
+                "provenance".to_string(),
+                Json::obj(vec![
+                    ("git_commit", Json::str(super::cli::git_commit())),
+                    ("threads", Json::num(super::pool::Pool::from_env().threads() as f64)),
+                ]),
+            );
+            Json::Obj(m)
+        }
+        v => v,
+    };
     let existing = std::fs::read_to_string(path).ok();
     let mut root = existing
         .as_deref()
@@ -160,6 +190,31 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn render_is_print_shaped_and_deterministic() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.ends_with('\n'));
+        assert_eq!(s.lines().count(), 4, "{s:?}"); // header, rule, 2 rows
+        assert!(s.lines().next().unwrap().contains("name"));
+        assert_eq!(s, t.render(), "rendering must be a pure function");
+    }
+
+    #[test]
+    fn merge_bench_json_stamps_provenance_on_object_sections() {
+        let path = std::env::temp_dir().join("taynode_bench_prov_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        merge_bench_json(&path, "s", Json::obj(vec![("x", Json::num(1.0))]));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let prov = j.req("s").unwrap().req("provenance").unwrap();
+        assert!(prov.get("git_commit").is_some());
+        assert!(prov.req("threads").unwrap().as_f64().unwrap() >= 1.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

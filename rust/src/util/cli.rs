@@ -93,6 +93,19 @@ impl Args {
     }
 }
 
+/// The build/run provenance stamp: the `GIT_COMMIT` environment variable
+/// `make bench-json` exports (`git rev-parse --short HEAD`), or
+/// `"unknown"` outside make.  Lives here because `util/cli.rs` is a
+/// sanctioned nondeterminism door (lint rule D3) — benches and reports
+/// read provenance through this one accessor instead of touching the
+/// environment themselves.
+pub fn git_commit() -> String {
+    std::env::var("GIT_COMMIT")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +134,12 @@ mod tests {
         assert!(a.f32_or("bad", 1.0).is_err());
         assert_eq!(a.f32_or("missing", 2.5).unwrap(), 2.5);
         assert!(a.require("absent").is_err());
+    }
+
+    #[test]
+    fn git_commit_always_yields_a_stamp() {
+        // Set or not, the accessor never returns an empty provenance.
+        assert!(!git_commit().is_empty());
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Acceptance tests for the deterministic telemetry layer: same-seed
 //! traces must serialize to byte-identical Chrome-Trace NDJSON at
 //! `TAYNODE_THREADS` ∈ {1, 2, 4} for the pooled adaptive solve, the native
-//! train step, and the serving drive — and the exported NDJSON must
-//! round-trip through the strict JSON parser.
+//! train step, and the serving drive — the exported NDJSON must
+//! round-trip through the strict JSON parser, and the `repro report`
+//! rendering over each trace must be byte-identical too.
 
 use taynode::coordinator::NativeTrainer;
 use taynode::nn::Mlp;
+use taynode::obs::analyze::TraceView;
+use taynode::obs::report::trace_report;
 use taynode::obs::trace::parse_ndjson;
 use taynode::obs::{Recorder, TraceDoc};
 use taynode::serving::{run_poisson_traced, run_poisson_traced_pooled};
@@ -16,6 +19,13 @@ use taynode::util::pool::Pool;
 use taynode::util::rng::Pcg;
 
 const B: usize = 48;
+
+/// Render the `repro report` text for an exported trace — the end-to-end
+/// path the CLI takes (strict parse, then deterministic rendering).
+fn report_text(ndjson: &str) -> String {
+    let view = TraceView::parse(ndjson).expect("exported trace must parse");
+    trace_report(&view).expect("report must render").text
+}
 
 fn solve_inputs() -> (Mlp, Vec<f32>) {
     let mlp = Mlp::new(2, &[8], true, 5);
@@ -52,10 +62,13 @@ fn solve_adaptive_batch_traced_pooled_ndjson_bit_identical_across_threads() {
 
     let (base, base_hash) = export(1);
     assert!(base.lines().count() > B, "expected per-trajectory records");
+    let base_report = report_text(&base);
+    assert!(base_report.contains("cost ledger"), "solve trace must attribute cost");
     for threads in [2usize, 4] {
         let (ndjson, hash) = export(threads);
         assert_eq!(ndjson, base, "threads={threads}");
         assert_eq!(hash, base_hash, "threads={threads}");
+        assert_eq!(report_text(&ndjson), base_report, "report threads={threads}");
     }
 }
 
@@ -79,10 +92,12 @@ fn native_train_step_trace_bit_identical_across_threads() {
         (doc.to_ndjson(), doc.hash())
     };
     let (base, base_hash) = export(1);
+    let base_report = report_text(&base);
     for threads in [2usize, 4] {
         let (ndjson, hash) = export(threads);
         assert_eq!(ndjson, base, "threads={threads}");
         assert_eq!(hash, base_hash, "threads={threads}");
+        assert_eq!(report_text(&ndjson), base_report, "report threads={threads}");
     }
 }
 
@@ -97,16 +112,66 @@ fn serve_trace_ndjson_bit_identical_across_threads_and_round_trips() {
     };
     let (_, srecs) = run_poisson_traced(17, 6, 2.5, 24);
     let (base, base_hash) = export(&srecs);
+    let base_report = report_text(&base);
     for threads in [1usize, 2, 4] {
         let pool = Pool::new(threads);
         let (_, precs) = run_poisson_traced_pooled(&pool, 17, 6, 2.5, 24);
         let (ndjson, hash) = export(&precs);
         assert_eq!(ndjson, base, "threads={threads}");
         assert_eq!(hash, base_hash, "threads={threads}");
+        assert_eq!(report_text(&ndjson), base_report, "report threads={threads}");
     }
     // Every exported line is strict, canonical JSON.
     let parsed = parse_ndjson(&base).expect("trace must round-trip");
     assert_eq!(parsed.len(), base.lines().count());
+}
+
+#[test]
+fn trace_view_rejects_adversarial_traces_naming_lines() {
+    // An `E` with no open `B` on its lane: rejected, naming the E's line.
+    let orphan_end = concat!(
+        r#"{"args":{"name":"x"},"name":"process_name","ph":"M","pid":0,"tid":0}"#,
+        "\n",
+        r#"{"args":{},"name":"step","ph":"E","pid":0,"tid":3,"ts":7}"#,
+        "\n",
+    );
+    let err = TraceView::parse(orphan_end).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ndjson line 2"), "{msg}");
+    assert!(msg.contains("no open begin"), "{msg}");
+
+    // A `B` left unclosed at end of input: rejected, naming the B's line.
+    let unclosed = concat!(
+        r#"{"args":{},"name":"step","ph":"B","pid":0,"tid":0,"ts":1}"#,
+        "\n",
+    );
+    let err = TraceView::parse(unclosed).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ndjson line 1"), "{msg}");
+    assert!(msg.contains("never closed"), "{msg}");
+
+    // Two `process_name` records for one pid: rejected at the second.
+    let dup = concat!(
+        r#"{"args":{"name":"a"},"name":"process_name","ph":"M","pid":4,"tid":0}"#,
+        "\n",
+        r#"{"args":{"name":"b"},"name":"process_name","ph":"M","pid":4,"tid":0}"#,
+        "\n",
+    );
+    let err = TraceView::parse(dup).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ndjson line 2"), "{msg}");
+    assert!(msg.contains("duplicate process_name"), "{msg}");
+
+    // An unknown phase letter: rejected, named.
+    let unknown = r#"{"args":{},"name":"z","ph":"Q","pid":0,"tid":0,"ts":0}"#;
+    let err = TraceView::parse(unknown).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ndjson line 1"), "{msg}");
+    assert!(msg.contains("unknown trace phase"), "{msg}");
+
+    // A negative timestamp: rejected (fields must be finite and >= 0).
+    let negative = r#"{"args":{},"dur":1,"name":"s","ph":"X","pid":0,"tid":0,"ts":-3}"#;
+    assert!(TraceView::parse(negative).is_err());
 }
 
 #[test]
